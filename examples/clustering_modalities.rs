@@ -1,0 +1,50 @@
+//! Domain example: online time-series clustering across the seven sensory
+//! modalities of Table II, with per-modality diagnostics (assignment
+//! distribution, extended metrics) — the workload the paper's introduction
+//! motivates for edge NSPUs.
+//!
+//! Run: `cargo run --release --example clustering_modalities [--pjrt]`
+
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::config::presets::paper_configs;
+use tnngen::coordinator::{Coordinator, SimBackend};
+use tnngen::data::load_benchmark;
+use tnngen::report::{f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let (backend, coord) = if use_pjrt {
+        (
+            SimBackend::Pjrt,
+            Coordinator::with_artifacts("artifacts".as_ref())?,
+        )
+    } else {
+        (SimBackend::Native, Coordinator::native())
+    };
+    let pipe = TnnClustering { epochs: 4, seed: 42, n_per_split: 60 };
+
+    let mut t = Table::new(&[
+        "Benchmark", "Modality", "pxq", "RI TNN", "RI kmeans", "RI DTCR*", "ARI", "NMI",
+        "purity", "no-fire",
+    ]);
+    for cfg in paper_configs() {
+        let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
+        let r = coord.run_clustering(&cfg, &ds, &pipe, backend)?;
+        t.row(&[
+            r.benchmark.clone(),
+            r.modality.clone(),
+            cfg.tag(),
+            f3(r.ri_tnn),
+            f3(r.ri_kmeans),
+            f3(r.ri_dtcr),
+            f3(r.ari_tnn),
+            f3(r.nmi_tnn),
+            f3(r.purity_tnn),
+            format!("{:.0}%", 100.0 * r.no_fire_frac),
+        ]);
+        eprintln!("done: {} ({})", r.benchmark, cfg.tag());
+    }
+    println!("\nOnline unsupervised clustering across sensory modalities (backend {:?}):", backend);
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Domain example: design-space exploration (paper §II-A — "swift design
+//! space exploration ... to develop optimized TNN models").
+//!
+//! Sweeps the TNN hyper-parameter space for one benchmark with the fast
+//! native simulator (in parallel), ranks by clustering quality, then runs
+//! the hardware flow for the best point to show its silicon cost.
+//!
+//! Run: `cargo run --release --example design_explorer [benchmark]`
+
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::config::presets::paper_configs;
+use tnngen::coordinator::explorer::{explore, SweepSpace};
+use tnngen::data::load_benchmark;
+use tnngen::eda::{run_flow, tnn7, FlowOpts};
+use tnngen::report::{f2, f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "ECG200".to_string());
+    let base = paper_configs()
+        .into_iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {name}"))?;
+    let pipe = TnnClustering { epochs: 4, seed: 42, n_per_split: 40 };
+    let ds = load_benchmark(&base.name, base.p, base.q, pipe.n_per_split, pipe.seed);
+
+    let space = SweepSpace {
+        theta_frac: vec![0.15, 0.2, 0.3, 0.4],
+        sparse_cutoff: vec![0.5, 0.6, 0.65, 0.7],
+        ..Default::default()
+    };
+    println!(
+        "exploring {} points for {} ({})...",
+        space.configs(&base).len(),
+        base.name,
+        base.tag()
+    );
+    let points = explore(&base, &ds, &space, &pipe);
+
+    let mut t = Table::new(&["rank", "theta_frac", "cutoff", "RI TNN", "RI/kmeans", "no-fire"]);
+    for (i, p) in points.iter().take(10).enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            f2(p.config.params.theta_frac as f64),
+            f2(p.config.params.sparse_cutoff as f64),
+            f3(p.report.ri_tnn),
+            f3(p.report.tnn_norm),
+            f3(p.report.no_fire_frac),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let best = &points[0];
+    println!("\nrunning the TNN7 hardware flow for the best configuration...");
+    let flow = run_flow(&best.config, &tnn7(), &FlowOpts::default())?;
+    println!(
+        "best point silicon cost: {:.1} um2 die, {:.3} uW leakage, {:.1} ns latency",
+        flow.die_area_um2, flow.leakage_uw, flow.latency_ns
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Domain example: the forecasting feature (paper §III-D) — predict
+//! post-layout silicon metrics for arbitrary column sizes WITHOUT running
+//! the EDA flow, after a one-time training sweep.
+//!
+//! Run: `cargo run --release --example forecast_demo`
+
+use tnngen::config::presets::{paper_configs, PAPER_AREA_FIT, PAPER_LEAK_FIT};
+use tnngen::coordinator::Coordinator;
+use tnngen::eda::{run_flow, tnn7, FlowOpts};
+use tnngen::report::experiments::forecast_sweep;
+use tnngen::report::{f2, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::native();
+    println!("training the forecaster on a sweep of TNN7 flow runs...");
+    let fc = coord.train_forecaster(&forecast_sweep(false), &tnn7(), &FlowOpts::default())?;
+    println!(
+        "fit: Area = {:.3}*syn + {:.2} (R2 {:.4})   [paper: {}*syn + {}]",
+        fc.area_fit.0, fc.area_fit.1, fc.area_fit.2, PAPER_AREA_FIT.0, PAPER_AREA_FIT.1
+    );
+    println!(
+        "fit: Leak = {:.5}*syn + {:.4} (R2 {:.4})  [paper: {}*syn + {}]\n",
+        fc.leak_fit.0, fc.leak_fit.1, fc.leak_fit.2, PAPER_LEAK_FIT.0, PAPER_LEAK_FIT.1
+    );
+
+    // Validate the forecast against an actual flow for two paper designs.
+    let mut t = Table::new(&[
+        "Design", "syn", "FC area", "actual", "err", "FC leak (uW)", "actual", "err",
+    ]);
+    for cfg in paper_configs() {
+        if ![130usize, 304].contains(&cfg.synapse_count()) {
+            continue;
+        }
+        let actual = run_flow(&cfg, &tnn7(), &FlowOpts::default())?;
+        let f = fc.predict(cfg.synapse_count());
+        let (ae, le) = fc.errors(&actual);
+        t.row(&[
+            cfg.name.clone(),
+            cfg.synapse_count().to_string(),
+            f2(f.area_um2),
+            f2(actual.die_area_um2),
+            pct(ae),
+            format!("{:.3}", f.leakage_uw),
+            format!("{:.3}", actual.leakage_uw),
+            pct(le),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\ninstant forecasts (no EDA run):");
+    for syn in [500usize, 2000, 6750, 20000] {
+        let f = fc.predict(syn);
+        println!(
+            "  {syn:>6} synapses -> {:>10.1} um2 ({:.4} mm2), {:>8.2} uW leakage",
+            f.area_um2,
+            f.area_um2 / 1e6,
+            f.leakage_uw
+        );
+    }
+    Ok(())
+}

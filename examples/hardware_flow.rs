@@ -1,0 +1,81 @@
+//! Domain example: the hardware-generation path in isolation — generate
+//! RTL for one Table-II design, cross-validate it gate-level against the
+//! functional simulator, then push it through all three library flows and
+//! print a silicon summary plus the layout density map.
+//!
+//! Run: `cargo run --release --example hardware_flow [tag]`
+
+use tnngen::config::presets::by_tag;
+use tnngen::data::generate;
+use tnngen::eda::{all_libraries, place, run_flow, synthesize, tnn7, FlowOpts, PlaceOpts};
+use tnngen::report::experiments::layout_ascii;
+use tnngen::report::{f1, f2, Table};
+use tnngen::rtl::{generate_column, GateSim};
+use tnngen::sim::CycleSim;
+
+fn main() -> anyhow::Result<()> {
+    let tag = std::env::args().nth(1).unwrap_or_else(|| "65x2".to_string());
+    let cfg = by_tag(&tag).ok_or_else(|| anyhow::anyhow!("unknown tag {tag}"))?;
+    println!("hardware flow for {} ({}, {} synapses)\n", cfg.name, tag, cfg.synapse_count());
+
+    // --- RTL generation + gate-level cross-validation ----------------------
+    let rtl = generate_column(&cfg)?;
+    println!(
+        "generated RTL: {} gates, {} flops",
+        rtl.netlist.gates.len(),
+        rtl.netlist.num_flops()
+    );
+    // Validate 5 samples gate-level vs the functional simulator (Xcelium's
+    // role in the paper's flow).
+    let small = tnngen::config::ColumnConfig::new("xcheck", "synthetic", 10.min(cfg.p), cfg.q.min(4));
+    let small_rtl = generate_column(&small)?;
+    let mut gsim = GateSim::new(&small_rtl.netlist).unwrap();
+    let w_fp: Vec<Vec<u64>> = (0..small.q)
+        .map(|j| (0..small.p).map(|i| ((j * 13 + i * 7) % 57) as u64).collect())
+        .collect();
+    small_rtl.load_weights(&mut gsim, &w_fp);
+    let fsim = CycleSim::from_weights(
+        small.clone(),
+        w_fp.iter().map(|r| r.iter().map(|&u| u as f32 / 8.0).collect()).collect(),
+    );
+    let ds = generate("ECG200", small.p, small.q, 5, 3);
+    for (i, x) in ds.train.iter().enumerate() {
+        let s = fsim.encode(x);
+        let want = fsim.infer(x);
+        let (gw, gy) = small_rtl.run_sample(&mut gsim, &s, false);
+        assert_eq!((gw, &gy), (want.winner, &want.y), "RTL sim mismatch at {i}");
+    }
+    println!("gate-level RTL simulation matches the functional simulator (5/5 samples)\n");
+
+    // --- flows across libraries ---------------------------------------------
+    let mut t = Table::new(&[
+        "Library", "die (um2)", "leakage (uW)", "total (mW)", "fmax (MHz)", "latency (ns)",
+        "instances", "P&R (s)",
+    ]);
+    for lib in all_libraries() {
+        let r = run_flow(&cfg, &lib, &FlowOpts::default())?;
+        t.row(&[
+            r.library.clone(),
+            f1(r.die_area_um2),
+            format!("{:.3}", r.leakage_uw),
+            format!("{:.4}", r.power.total_mw()),
+            f1(r.timing.fmax_mhz),
+            f2(r.latency_ns),
+            r.instances.to_string(),
+            f2(r.runtimes.pnr_s()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- layout --------------------------------------------------------------
+    let d = synthesize(&rtl.netlist, &tnn7());
+    let p = place(&d, &PlaceOpts::default());
+    println!(
+        "\nTNN7 layout ({} instances on {:.0}x{:.0} um):",
+        d.instances.len(),
+        p.die_w_um,
+        p.die_h_um
+    );
+    println!("{}", layout_ascii(&p, 56));
+    Ok(())
+}

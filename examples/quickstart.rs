@@ -1,0 +1,78 @@
+//! Quickstart: the full TNNGen loop on one small design.
+//!
+//! 1. simulate a TNN column on synthetic ECG data (PJRT artifacts if built,
+//!    native otherwise) and report clustering quality;
+//! 2. generate its RTL;
+//! 3. run the hardware flow on TNN7 and print the silicon metrics;
+//! 4. forecast the metrics of a larger design without running the flow.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::config::ColumnConfig;
+use tnngen::coordinator::{Coordinator, SimBackend};
+use tnngen::data::load_benchmark;
+use tnngen::eda::{run_flow, tnn7, FlowOpts};
+use tnngen::forecast::Forecaster;
+use tnngen::rtl::generate_column;
+
+fn main() -> anyhow::Result<()> {
+    // A small column: 48 synapses/neuron, 4 neurons (clusters).
+    let cfg = ColumnConfig::new("SmallTest", "synthetic", 48, 4);
+    println!("design: {} ({} synapses)\n", cfg.tag(), cfg.synapse_count());
+
+    // --- 1. functional simulation + clustering ---------------------------
+    let (backend, coord) = match Coordinator::with_artifacts("artifacts".as_ref()) {
+        Ok(c) => {
+            println!("using PJRT artifacts (JAX/Pallas request path)");
+            (SimBackend::Pjrt, c)
+        }
+        Err(_) => {
+            println!("artifacts not built; using the native simulator");
+            (SimBackend::Native, Coordinator::native())
+        }
+    };
+    let pipe = TnnClustering { epochs: 4, seed: 42, n_per_split: 40 };
+    let ds = load_benchmark("Beef", cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
+    let r = coord.run_clustering(&cfg, &ds, &pipe, backend)?;
+    println!(
+        "clustering: RI(TNN) = {:.3}, RI(k-means) = {:.3}, normalized = {:.3}\n",
+        r.ri_tnn, r.ri_kmeans, r.tnn_norm
+    );
+
+    // --- 2. RTL generation ------------------------------------------------
+    let rtl = generate_column(&cfg)?;
+    println!(
+        "rtl: {} gates, {} flops (structural Verilog via `tnngen generate-rtl {}`)\n",
+        rtl.netlist.gates.len(),
+        rtl.netlist.num_flops(),
+        cfg.tag()
+    );
+
+    // --- 3. hardware flow on TNN7 ------------------------------------------
+    let flow = run_flow(&cfg, &tnn7(), &FlowOpts::default())?;
+    println!(
+        "flow (TNN7): {:.1} um2 die, {:.3} uW leakage, {:.1} ns latency, fmax {:.0} MHz",
+        flow.die_area_um2, flow.leakage_uw, flow.latency_ns, flow.timing.fmax_mhz
+    );
+    println!(
+        "flow runtimes: synth {:.2}s + P&R {:.2}s\n",
+        flow.runtimes.synthesis_s,
+        flow.runtimes.pnr_s()
+    );
+
+    // --- 4. forecasting ------------------------------------------------------
+    let sweep = [(16usize, 2usize), (32, 2), (48, 2), (64, 2), (48, 4)];
+    let native = Coordinator::native();
+    let fc: Forecaster = native.train_forecaster(&sweep, &tnn7(), &FlowOpts::default())?;
+    let big = fc.predict(6750);
+    println!(
+        "forecast for a 6750-synapse column (no EDA run): {:.0} um2, {:.1} uW leakage",
+        big.area_um2, big.leakage_uw
+    );
+    println!(
+        "fit: Area = {:.3}*syn + {:.1}  (paper: 5.56*syn - 94.9)",
+        fc.area_fit.0, fc.area_fit.1
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! End-to-end driver: reproduce every table and figure of the paper in one
+//! run and record the outcome (the EXPERIMENTS.md source of truth).
+//!
+//! Exercises all three layers on a real small workload: the L1 Pallas
+//! kernels + L2 JAX model execute through the PJRT artifacts for Table II
+//! (falling back to the native simulator when artifacts are absent), and
+//! the L3 hardware generator/EDA substrate regenerates Tables III-V and
+//! Figs 2-4.
+//!
+//! Run: `cargo run --release --example reproduce_paper [--fast]`
+
+use std::time::Instant;
+
+use tnngen::coordinator::{Coordinator, SimBackend};
+use tnngen::report::experiments::{
+    fig2, fig3, largest_column_summary, run_paper_flows, table2, table3, table4, table5_fig4,
+    Effort,
+};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let effort = if fast { Effort::fast() } else { Effort::full() };
+    let t0 = Instant::now();
+    let mut log = String::new();
+    let mut emit = |s: &str| {
+        println!("{s}");
+        log.push_str(s);
+        log.push('\n');
+    };
+
+    emit(&format!(
+        "TNNGen reproduction run ({} mode)\n",
+        if fast { "fast" } else { "full" }
+    ));
+
+    // Table II via the PJRT request path when artifacts exist.
+    let (backend, coord) = match Coordinator::with_artifacts("artifacts".as_ref()) {
+        Ok(c) => (SimBackend::Pjrt, c),
+        Err(e) => {
+            emit(&format!("(artifacts unavailable: {e}; Table II uses the native backend)"));
+            (SimBackend::Native, Coordinator::native())
+        }
+    };
+    emit(&table2(effort, backend, &coord)?);
+
+    // Hardware tables share one set of flow runs.
+    let flows = run_paper_flows(effort)?;
+    emit(&table3(&flows, effort)?);
+    emit(&table4(&flows, effort)?);
+    if let Some(s) = largest_column_summary(&flows) {
+        emit(&s);
+    }
+    emit(&fig2(effort)?);
+    emit(&fig3(effort)?);
+    emit(&table5_fig4(&flows, effort)?);
+
+    emit(&format!("total wall-clock: {:.1} s", t0.elapsed().as_secs_f64()));
+    let path = tnngen::report::save_report("reproduce_paper.txt", &log)?;
+    println!("\nfull log saved to {}", path.display());
+    Ok(())
+}

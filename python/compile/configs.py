@@ -1,0 +1,116 @@
+"""Column configurations and TNN hyper-parameters (shared L1/L2 contract).
+
+The seven (p, q) column configurations mirror Table II of the TNNGen paper:
+p = synapses per neuron (== UCR series length), q = neurons (== #classes).
+The same constants are mirrored on the Rust side in `rust/src/config/presets.rs`;
+`python/tests/test_aot.py` checks the generated manifest keeps them in sync.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class TnnParams:
+    """Hyper-parameters of a single-column TNN (paper §II-A, refs [2],[7])."""
+
+    # Temporal encoding resolution: spike times live in [0, T). 3-bit per [7].
+    T: int = 8
+    # Response window: output spike times live in [0, T_R]; T_R == "no spike".
+    T_R: int = 32
+    # 3-bit synaptic weights per the [7] microarchitecture.
+    w_max: int = 7
+    # Threshold as a fraction of p * w_max (resolved per-config by `theta`).
+    # Tuned by the calibration sweep recorded in EXPERIMENTS.md §TableII-tuning.
+    theta_frac: float = 0.2
+    # Expected-value STDP step sizes (deterministic form of [7]'s stochastic
+    # rules). All three are exact in 3 fractional bits so the fixed-point
+    # gate-level RTL (scale 1/8) reproduces the f32 simulator bit-for-bit.
+    mu_capture: float = 1.0
+    mu_backoff: float = 1.0
+    mu_search: float = 0.125
+    # Sparse-encoding cutoff: normalized inputs below this do not spike
+    # (the on-cell code of ref [2]); 0.0 = dense. Sparsity is what lets the
+    # STDP search/backoff rules discriminate cluster templates.
+    sparse_cutoff: float = 0.6
+    # Response function: "rnl" (ramp-no-leak), "snl" (step-no-leak), "lif".
+    response: str = "rnl"
+    # LIF decay factor per time unit (only used when response == "lif").
+    lif_decay: float = 0.9
+    # WTA tie-breaking: "low" (lowest index) or "high".
+    wta_tie: str = "low"
+
+    def theta(self, p: int) -> float:
+        """Firing threshold for a column with p synapses per neuron."""
+        return max(1.0, self.theta_frac * p * self.w_max)
+
+
+@dataclass(frozen=True)
+class ColumnConfig:
+    """One (p, q) column design targeted at a UCR benchmark/modality."""
+
+    name: str          # UCR benchmark name
+    modality: str      # sensory modality (Table II)
+    p: int             # synapses per neuron == series length
+    q: int             # neurons == clusters
+    params: TnnParams = field(default_factory=TnnParams)
+
+    @property
+    def synapse_count(self) -> int:
+        return self.p * self.q
+
+    @property
+    def tag(self) -> str:
+        return f"{self.p}x{self.q}"
+
+    @property
+    def p_pad(self) -> int:
+        """p padded to the MXU lane multiple (128) for the Pallas matmul."""
+        return pad_to(self.p, 128)
+
+    @property
+    def q_pad(self) -> int:
+        """q padded to the sublane multiple (8)."""
+        return pad_to(self.q, 8)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["p_pad"], d["q_pad"] = self.p_pad, self.q_pad
+        d["synapse_count"] = self.synapse_count
+        d["theta"] = self.params.theta(self.p)
+        return d
+
+
+def pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# Training-chunk length for the scan-based `tnn_train_chunk` artifact.
+TRAIN_CHUNK = 32
+# Batch size of the `tnn_infer_batch` artifact.
+INFER_BATCH = 64
+
+# Table II of the paper: seven representative UCR column designs.
+PAPER_CONFIGS = [
+    ColumnConfig("SonyAIBORobotSurface2", "Accelerometer", 65, 2),
+    ColumnConfig("ECG200", "ECG", 96, 2),
+    ColumnConfig("Wafer", "Fabrication process", 152, 2),
+    ColumnConfig("ToeSegmentation2", "Motion sensor", 343, 2),
+    ColumnConfig("Lightning2", "Optical + RF sensor", 637, 2),
+    ColumnConfig("Beef", "Food spectrograph", 470, 5),
+    ColumnConfig("WordSynonyms", "1D word outlines", 270, 25),
+]
+
+# Small configs for tests and the quickstart example.
+TEST_CONFIGS = [
+    ColumnConfig("TinyTest", "synthetic", 16, 2),
+    ColumnConfig("SmallTest", "synthetic", 48, 4),
+]
+
+ALL_CONFIGS = TEST_CONFIGS + PAPER_CONFIGS
+
+
+def by_tag(tag: str) -> ColumnConfig:
+    for c in ALL_CONFIGS:
+        if c.tag == tag:
+            return c
+    raise KeyError(f"no column config with tag {tag}")

@@ -1,0 +1,39 @@
+"""Temporal (intensity-to-latency) encoding of time-series windows.
+
+Larger signal value -> earlier spike, following the direct encoding used by the
+TNNGen functional simulator (paper §II-A; clustering method of ref [2]).
+"""
+
+import jax.numpy as jnp
+
+
+def minmax_normalize(x: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Per-window min-max normalization to [0, 1]."""
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    return (x - lo) / jnp.maximum(hi - lo, eps)
+
+
+def encode_spike_times(x: jnp.ndarray, T: int, T_R: int = 32,
+                       cutoff: float = 0.0) -> jnp.ndarray:
+    """Encode a window into integer spike times: [0, T-1] or T_R (no spike).
+
+    x: [p] float window. s_i = round((1 - x_hat_i) * (T-1)); inputs whose
+    normalized value falls below `cutoff` produce NO spike (T_R sentinel) —
+    the sparse on-cell code of ref [2]. Sparsity gives the STDP
+    search/backoff rules their discriminative power.
+    """
+    xh = minmax_normalize(x)
+    s = jnp.round((1.0 - xh) * (T - 1)).astype(jnp.int32)
+    return jnp.where(xh < cutoff, jnp.int32(T_R), s)
+
+
+def pad_spike_times(s: jnp.ndarray, p_pad: int, T_R: int) -> jnp.ndarray:
+    """Pad spike times to p_pad with the 'never spikes in-window' sentinel T_R.
+
+    Padding with T_R makes padded synapses contribute exactly zero to every
+    response function (step/ramp/LIF all evaluate to 0 for t - s < 0, and the
+    response window stops at T_R - 1 < T_R).
+    """
+    pad = jnp.full((p_pad - s.shape[0],), T_R, dtype=jnp.int32)
+    return jnp.concatenate([s, pad])

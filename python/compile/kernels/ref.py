@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for the Pallas kernels (the CORE correctness reference).
+
+Everything here is straight-line jax.numpy with no Pallas, kept deliberately
+simple: the Pallas kernels in `response.py` / `stdp.py` / `wta.py` must match
+these functions bit-for-bit (f32) on all shapes. The Rust native simulator
+(`rust/src/sim/`) and the gate-level RTL simulator implement the same contract.
+"""
+
+import jax.numpy as jnp
+
+
+def response_basis(s: jnp.ndarray, T_R: int, response: str = "rnl",
+                   lif_decay: float = 0.9) -> jnp.ndarray:
+    """Response basis S[p, T_R] from spike times s[p] (int32).
+
+    snl: S[i,t] = 1                 if t >= s_i else 0   (step-no-leak)
+    rnl: S[i,t] = t - s_i           if t >= s_i else 0   (ramp-no-leak)
+    lif: S[i,t] = decay^(t - s_i)   if t >= s_i else 0   (leaky integrate & fire)
+    """
+    t = jnp.arange(T_R, dtype=jnp.float32)[None, :]          # [1, T_R]
+    d = t - s.astype(jnp.float32)[:, None]                    # [p, T_R]
+    on = (d >= 0.0).astype(jnp.float32)
+    if response == "snl":
+        return on
+    if response == "rnl":
+        return on * d
+    if response == "lif":
+        return on * jnp.power(lif_decay, jnp.maximum(d, 0.0))
+    raise ValueError(f"unknown response function {response!r}")
+
+
+def potentials_ref(W: jnp.ndarray, s: jnp.ndarray, T_R: int,
+                   response: str = "rnl", lif_decay: float = 0.9) -> jnp.ndarray:
+    """Membrane potentials V[q, T_R] = W[q, p] @ S[p, T_R]."""
+    S = response_basis(s, T_R, response, lif_decay)
+    return W @ S
+
+
+def first_crossing(V: jnp.ndarray, theta: float, T_R: int) -> jnp.ndarray:
+    """Output spike times y[q]: first t with V[j, t] >= theta, else T_R.
+
+    Works for non-monotone potentials (LIF) as well: argmax of the boolean
+    crossing mask returns the first True.
+    """
+    crossed = V >= theta                                      # [q, T_R]
+    any_cross = jnp.any(crossed, axis=1)
+    first = jnp.argmax(crossed, axis=1).astype(jnp.int32)
+    return jnp.where(any_cross, first, jnp.int32(T_R))
+
+
+def output_times_ref(W, s, theta, T_R, response="rnl", lif_decay=0.9):
+    """Full response path: spike times in -> output spike times out."""
+    V = potentials_ref(W, s, T_R, response, lif_decay)
+    return first_crossing(V, theta, T_R)
+
+
+def wta_ref(y: jnp.ndarray, T_R: int, tie: str = "low"):
+    """1-winner-take-all over output spike times y[q].
+
+    Returns (winner, gated) where winner is the arg-min spike time (int32, -1
+    when no neuron fired) and gated[q] is the inhibited output spike vector:
+    the winner keeps its spike time, all other neurons are set to T_R.
+    """
+    if tie == "high":
+        # argmin with highest-index tie-break: argmin over reversed array.
+        q = y.shape[0]
+        rev = y[::-1]
+        winner = (q - 1 - jnp.argmin(rev)).astype(jnp.int32)
+    else:
+        winner = jnp.argmin(y).astype(jnp.int32)
+    fired = y[winner] < T_R
+    winner = jnp.where(fired, winner, jnp.int32(-1))
+    idx = jnp.arange(y.shape[0], dtype=jnp.int32)
+    gated = jnp.where((idx == winner) & fired, y, jnp.int32(T_R))
+    return winner, gated
+
+
+def stdp_ref(W, s, y_gated, T, T_R, w_max,
+             mu_capture, mu_backoff, mu_search):
+    """Unsupervised expected-value STDP (deterministic form of [7]'s rules).
+
+    W:        [q, p] weights in [0, w_max]
+    s:        [p]    input spike times (int32; >= T means "no input spike")
+    y_gated:  [q]    WTA-gated output spike times (T_R means "no output spike")
+
+    Rules per synapse (i -> j):
+      in & out & s_i <= y_j : w += mu_capture           (capture)
+      in & out & s_i >  y_j : w -= mu_backoff           (back-off)
+      in & !out             : w += mu_search            (search)
+      !in & out             : w -= mu_backoff
+    Result clamped to [0, w_max].
+    """
+    s_in = s[None, :].astype(jnp.int32)                       # [1, p]
+    y_out = y_gated[:, None].astype(jnp.int32)                # [q, 1]
+    has_in = s_in < T
+    has_out = y_out < T_R
+    capture = has_in & has_out & (s_in <= y_out)
+    backoff = (has_in & has_out & (s_in > y_out)) | (~has_in & has_out)
+    search = has_in & ~has_out
+    dw = (capture * mu_capture - backoff * mu_backoff + search * mu_search)
+    return jnp.clip(W + dw, 0.0, float(w_max)).astype(jnp.float32)

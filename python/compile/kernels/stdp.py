@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: expected-value STDP weight update (elementwise, VPU).
+
+Grid: (q_tiles, p_tiles) over the padded [q_pad, p_pad] weight matrix; each
+step updates one [TQ, TP] VMEM tile. The WTA-gated output spike times y[q]
+and the row-activity mask (1 for real neurons, 0 for padding) ride along as
+[TQ]-blocks; spike times as [TP]-blocks. Purely elementwise -> VPU-bound;
+VMEM per step = 2*TQ*TP + TP + 2*TQ floats ~= 8.6 KiB.
+
+The row mask keeps padded neurons dead: without it the `search` rule
+(in-spike & no-out-spike -> w += mu_search) would slowly grow padding weights
+until a phantom neuron wins the WTA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .response import TQ, TP
+
+
+def _stdp_kernel(w_ref, s_ref, y_ref, m_ref, o_ref, *,
+                 T, T_R, w_max, mu_capture, mu_backoff, mu_search):
+    w = w_ref[...]                                    # [TQ, TP]
+    s = s_ref[...][None, :]                           # [1, TP] int32
+    y = y_ref[...][:, None]                           # [TQ, 1] int32
+    mask = m_ref[...][:, None].astype(jnp.float32)    # [TQ, 1]
+    has_in = s < T
+    has_out = y < T_R
+    capture = has_in & has_out & (s <= y)
+    backoff = (has_in & has_out & (s > y)) | (~has_in & has_out)
+    search = has_in & ~has_out
+    dw = (capture * mu_capture - backoff * mu_backoff + search * mu_search)
+    o_ref[...] = jnp.clip(w + dw * mask, 0.0, float(w_max)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "T", "T_R", "w_max", "mu_capture", "mu_backoff", "mu_search"))
+def stdp_update(W, s, y_gated, row_mask, *, T, T_R, w_max,
+                mu_capture, mu_backoff, mu_search):
+    """One STDP step on padded weights.
+
+    W        [q_pad, p_pad] f32, s [p_pad] i32, y_gated [q_pad] i32,
+    row_mask [q_pad] i32 (1 = real neuron, 0 = padding).
+    """
+    q_pad, p_pad = W.shape
+    assert q_pad % TQ == 0 and p_pad % TP == 0
+    grid = (q_pad // TQ, p_pad // TP)
+    kernel = functools.partial(
+        _stdp_kernel, T=T, T_R=T_R, w_max=w_max, mu_capture=mu_capture,
+        mu_backoff=mu_backoff, mu_search=mu_search)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TQ, TP), lambda iq, ip: (iq, ip)),   # W
+            pl.BlockSpec((TP,), lambda iq, ip: (ip,)),         # s
+            pl.BlockSpec((TQ,), lambda iq, ip: (iq,)),         # y_gated
+            pl.BlockSpec((TQ,), lambda iq, ip: (iq,)),         # row mask
+        ],
+        out_specs=pl.BlockSpec((TQ, TP), lambda iq, ip: (iq, ip)),
+        out_shape=jax.ShapeDtypeStruct((q_pad, p_pad), jnp.float32),
+        interpret=True,
+    )(W, s, y_gated, row_mask)

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: 1-winner-take-all over output spike times.
+
+q is tiny (<= 32 padded) so the whole vector fits one VMEM block; the kernel
+computes the arg-min with lowest-index tie-break plus the WTA-inhibited
+("gated") output spike vector in a single pass. Padded neurons never fire
+(zero weights -> y = T_R) so they cannot win against any real firing neuron;
+when *nothing* fires the winner is reported as -1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wta_kernel(y_ref, w_ref, g_ref, *, T_R, tie):
+    y = y_ref[...]                                     # [q_pad] i32
+    q = y.shape[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (q,), 0)
+    # Lexicographic key: spike time first, then index (low or high tie-break).
+    tie_key = idx if tie == "low" else (q - 1 - idx)
+    # Key fits comfortably in int32: y <= T_R (32) and q <= 32.
+    key = y * q + tie_key
+    best = jnp.min(key)
+    winner = (best % q) if tie == "low" else (q - 1 - best % q)
+    winner = winner.astype(jnp.int32)
+    fired = (best // q) < T_R
+    winner = jnp.where(fired, winner, jnp.int32(-1))
+    w_ref[0] = winner
+    g_ref[...] = jnp.where((idx == winner) & fired, y, jnp.int32(T_R))
+
+
+@functools.partial(jax.jit, static_argnames=("T_R", "tie"))
+def wta(y: jnp.ndarray, *, T_R: int = 32, tie: str = "low"):
+    """Returns (winner [1] i32, gated [q_pad] i32)."""
+    (q_pad,) = y.shape
+    kernel = functools.partial(_wta_kernel, T_R=T_R, tie=tie)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+        ),
+        interpret=True,
+    )(y)

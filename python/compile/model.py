@@ -1,0 +1,186 @@
+"""L2: the TNN column model in JAX, calling the L1 Pallas kernels.
+
+This is the build-time model that `aot.py` lowers to HLO text; the Rust
+coordinator executes the lowered artifacts via PJRT and never imports Python.
+
+Exported computations (per column config):
+  tnn_infer        (W, x)  -> (winner, y_times)
+  tnn_step         (W, x)  -> (W', winner, y_times)      one online STDP step
+  tnn_infer_batch  (W, X)  -> winners[B]                 vmapped inference
+  tnn_train_chunk  (W, X)  -> W'                         lax.scan of B steps
+
+A multi-layer simulator (`multilayer_infer`) mirrors the paper's §II-A claim
+that the functional simulator supports arbitrary layer/column stacking; it is
+exercised by pytest but not AOT-exported (the paper's evaluation is all
+single-column).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ColumnConfig
+from .encoding import encode_spike_times, pad_spike_times
+from .kernels import ref
+from .kernels.response import potentials
+from .kernels.stdp import stdp_update
+from .kernels.wta import wta
+
+
+def row_mask(cfg: ColumnConfig) -> jnp.ndarray:
+    """[q_pad] int32 mask: 1 for real neurons, 0 for padding."""
+    idx = jnp.arange(cfg.q_pad, dtype=jnp.int32)
+    return (idx < cfg.q).astype(jnp.int32)
+
+
+def col_mask(cfg: ColumnConfig) -> jnp.ndarray:
+    """[p_pad] int32 mask: 1 for real synapses, 0 for padding."""
+    idx = jnp.arange(cfg.p_pad, dtype=jnp.int32)
+    return (idx < cfg.p).astype(jnp.int32)
+
+
+def init_weights(cfg: ColumnConfig, seed: int = 0) -> jnp.ndarray:
+    """Initial padded weights: w_max/2 + jitter for real cells, 0 for padding.
+
+    The jitter breaks the WTA symmetry between identically-initialized
+    neurons; without it every sample would be captured by neuron 0. Padded
+    rows AND columns must start at exactly zero (the STDP rules then keep
+    them at zero — see the padding-invariant tests).
+    """
+    key = jax.random.PRNGKey(seed)
+    w0 = cfg.params.w_max / 2.0
+    jitter = jax.random.uniform(key, (cfg.q_pad, cfg.p_pad),
+                                minval=-0.5, maxval=0.5)
+    W = (w0 + jitter) * row_mask(cfg)[:, None] * col_mask(cfg)[None, :]
+    return W.astype(jnp.float32)
+
+
+def encode(cfg: ColumnConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Raw window x[p] -> padded spike times [p_pad]."""
+    s = encode_spike_times(x, cfg.params.T, cfg.params.T_R,
+                           cfg.params.sparse_cutoff)
+    return pad_spike_times(s, cfg.p_pad, cfg.params.T_R)
+
+
+def response(cfg: ColumnConfig, W: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Output spike times y[q_pad] via the Pallas potentials kernel."""
+    pr = cfg.params
+    V = potentials(W, s, T_R=pr.T_R, response=pr.response,
+                   lif_decay=pr.lif_decay)
+    return ref.first_crossing(V, pr.theta(cfg.p), pr.T_R)
+
+
+def tnn_infer(cfg: ColumnConfig, W: jnp.ndarray, x: jnp.ndarray):
+    """(winner [1] i32, y_times [q_pad] i32) for one window."""
+    pr = cfg.params
+    s = encode(cfg, x)
+    y = response(cfg, W, s)
+    winner, _ = wta(y, T_R=pr.T_R, tie=pr.wta_tie)
+    return winner, y
+
+
+def tnn_step(cfg: ColumnConfig, W: jnp.ndarray, x: jnp.ndarray):
+    """One online learning step: infer + WTA-gated STDP update."""
+    pr = cfg.params
+    s = encode(cfg, x)
+    y = response(cfg, W, s)
+    winner, gated = wta(y, T_R=pr.T_R, tie=pr.wta_tie)
+    W2 = stdp_update(W, s, gated, row_mask(cfg),
+                     T=pr.T, T_R=pr.T_R, w_max=pr.w_max,
+                     mu_capture=pr.mu_capture, mu_backoff=pr.mu_backoff,
+                     mu_search=pr.mu_search)
+    return W2, winner, y
+
+
+def tnn_infer_batch(cfg: ColumnConfig, W: jnp.ndarray, X: jnp.ndarray):
+    """winners[B] i32 for a batch of windows X[B, p] (shared weights)."""
+    def one(x):
+        winner, _ = tnn_infer(cfg, W, x)
+        return winner[0]
+    return jax.vmap(one)(X)
+
+
+def tnn_train_chunk(cfg: ColumnConfig, W: jnp.ndarray, X: jnp.ndarray):
+    """Sequential online STDP over a chunk X[B, p]; returns updated weights.
+
+    lax.scan keeps the chunk a single XLA dispatch — the L2 optimization that
+    removes per-sample host round-trips from the Rust training loop.
+    """
+    def step(W, x):
+        W2, _, _ = tnn_step(cfg, W, x)
+        return W2, jnp.int32(0)
+    W2, _ = jax.lax.scan(step, W, X)
+    return W2
+
+
+def tnn_step_supervised(cfg: ColumnConfig, W: jnp.ndarray, x: jnp.ndarray,
+                        label: int):
+    """One SUPERVISED STDP step (paper §II-A: supervised & unsupervised).
+
+    Teacher forcing, mirroring `CycleSim::step_supervised` in Rust: the
+    labeled neuron is treated as the firing output (capture); wrongly firing
+    neurons get a gated time of -1 so all their in-spiking synapses back
+    off; silent non-labeled neurons are untouched.
+    """
+    pr = cfg.params
+    s = encode(cfg, x)
+    y = response(cfg, W, s)
+    winner, _ = wta(y, T_R=pr.T_R, tie=pr.wta_tie)
+    idx = jnp.arange(cfg.q_pad, dtype=jnp.int32)
+    is_label = idx == label
+    fired = y < pr.T_R
+    gated = jnp.where(
+        is_label,
+        jnp.minimum(y, pr.T_R - 1),
+        jnp.where(fired & (idx < cfg.q), jnp.int32(-1), jnp.int32(pr.T_R)),
+    )
+    W2 = stdp_update(W, s, gated, row_mask(cfg),
+                     T=pr.T, T_R=pr.T_R, w_max=pr.w_max,
+                     mu_capture=pr.mu_capture, mu_backoff=pr.mu_backoff,
+                     mu_search=pr.mu_search)
+    return W2, winner, y
+
+
+# ---------------------------------------------------------------------------
+# Multi-layer simulator support (paper §II-A: arbitrary layers/columns).
+# ---------------------------------------------------------------------------
+
+def multilayer_infer(cfgs, Ws, x):
+    """Stack of columns: layer k's output spike times feed layer k+1.
+
+    cfgs: list of ColumnConfig with cfgs[k+1].p == cfgs[k].q.
+    Layer outputs (spike times, early = strong) are converted back to an
+    intensity vector for the next layer's encoder. Returns the last layer's
+    (winner, y_times).
+    """
+    h = x
+    winner, y = None, None
+    for cfg, W in zip(cfgs, Ws):
+        winner, y = tnn_infer(cfg, W, h)
+        h = (cfg.params.T_R - y[: cfg.q].astype(jnp.float32)) / cfg.params.T_R
+    return winner, y
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) versions of the exported computations, for pytest.
+# ---------------------------------------------------------------------------
+
+def tnn_step_ref(cfg: ColumnConfig, W, x):
+    pr = cfg.params
+    s = encode(cfg, x)
+    y = ref.output_times_ref(W, s, pr.theta(cfg.p), pr.T_R,
+                             pr.response, pr.lif_decay)
+    winner, gated = ref.wta_ref(y, pr.T_R, pr.wta_tie)
+    mask = row_mask(cfg)[:, None].astype(jnp.float32)
+    W_upd = ref.stdp_ref(W, s, gated, pr.T, pr.T_R, pr.w_max,
+                         pr.mu_capture, pr.mu_backoff, pr.mu_search)
+    W2 = W + (W_upd - W) * mask
+    return W2, jnp.reshape(winner, (1,)), y
+
+
+def tnn_infer_ref(cfg: ColumnConfig, W, x):
+    pr = cfg.params
+    s = encode(cfg, x)
+    y = ref.output_times_ref(W, s, pr.theta(cfg.p), pr.T_R,
+                             pr.response, pr.lif_decay)
+    winner, _ = ref.wta_ref(y, pr.T_R, pr.wta_tie)
+    return jnp.reshape(winner, (1,)), y

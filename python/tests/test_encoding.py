@@ -1,0 +1,52 @@
+"""Temporal encoding tests."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.encoding import encode_spike_times, minmax_normalize, pad_spike_times
+
+
+def test_spike_times_in_window():
+    x = jnp.asarray(np.random.RandomState(0).randn(50).astype(np.float32))
+    s = np.asarray(encode_spike_times(x, 8))
+    assert s.min() >= 0 and s.max() <= 7
+    assert s.dtype == np.int32
+
+
+def test_larger_value_spikes_earlier():
+    x = jnp.asarray([0.0, 0.25, 0.5, 0.75, 1.0], dtype=jnp.float32)
+    s = np.asarray(encode_spike_times(x, 8))
+    assert list(s) == sorted(s, reverse=True)
+    assert s[-1] == 0 and s[0] == 7
+
+
+def test_extremes_map_to_window_edges():
+    x = jnp.asarray([3.0, -1.0], dtype=jnp.float32)
+    s = np.asarray(encode_spike_times(x, 8))
+    assert s[0] == 0 and s[1] == 7
+
+
+def test_constant_window_does_not_nan():
+    x = jnp.ones((10,), dtype=jnp.float32) * 4.2
+    s = np.asarray(encode_spike_times(x, 8))
+    assert np.all((0 <= s) & (s <= 7))
+
+
+def test_minmax_normalize_range():
+    x = jnp.asarray(np.random.RandomState(1).randn(100).astype(np.float32))
+    xh = np.asarray(minmax_normalize(x))
+    assert abs(xh.min()) < 1e-6 and abs(xh.max() - 1.0) < 1e-6
+
+
+def test_pad_spike_times_sentinel():
+    s = jnp.asarray([1, 2, 3], dtype=jnp.int32)
+    sp = np.asarray(pad_spike_times(s, 8, 32))
+    assert sp.tolist() == [1, 2, 3, 32, 32, 32, 32, 32]
+
+
+def test_encoding_invariant_to_affine_scale():
+    """Min-max normalization makes encoding invariant to a*x + b (a > 0)."""
+    x = jnp.asarray(np.random.RandomState(2).rand(30).astype(np.float32))
+    s1 = np.asarray(encode_spike_times(x, 8))
+    s2 = np.asarray(encode_spike_times(3.5 * x + 11.0, 8))
+    np.testing.assert_array_equal(s1, s2)

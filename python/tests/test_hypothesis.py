@@ -1,0 +1,71 @@
+"""Hypothesis sweeps: Pallas kernels vs ref.py across shapes/values/params."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.response import potentials
+from compile.kernels.stdp import stdp_update
+from compile.kernels.wta import wta
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def padded_column(draw):
+    q_tiles = draw(st.integers(1, 4))
+    p_tiles = draw(st.integers(1, 5))
+    q_pad, p_pad = 8 * q_tiles, 128 * p_tiles
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    W = rng.uniform(0.0, 7.0, size=(q_pad, p_pad)).astype(np.float32)
+    # Mix in-window spikes, late spikes and the padding sentinel.
+    s = rng.choice([0, 1, 3, 5, 7, 12, 32],
+                   size=(p_pad,)).astype(np.int32)
+    return jnp.asarray(W), jnp.asarray(s)
+
+
+@given(padded_column(), st.sampled_from(["rnl", "snl", "lif"]),
+       st.sampled_from([0.5, 0.8, 0.9, 0.99]))
+@settings(**SETTINGS)
+def test_potentials_sweep(col, response, decay):
+    W, s = col
+    got = potentials(W, s, T_R=32, response=response, lif_decay=decay)
+    want = ref.potentials_ref(W, s, 32, response, decay)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@given(padded_column(), st.integers(0, 2**31 - 1),
+       st.floats(0.01, 2.0), st.floats(0.01, 2.0), st.floats(0.0, 0.5))
+@settings(**SETTINGS)
+def test_stdp_sweep(col, seed, mu_c, mu_b, mu_s):
+    W, s = col
+    q_pad = W.shape[0]
+    rng = np.random.RandomState(seed)
+    y = jnp.asarray(rng.randint(0, 33, size=(q_pad,)).astype(np.int32))
+    mask = jnp.asarray(rng.randint(0, 2, size=(q_pad,)).astype(np.int32))
+    got = stdp_update(W, s, y, mask, T=8, T_R=32, w_max=7,
+                      mu_capture=mu_c, mu_backoff=mu_b, mu_search=mu_s)
+    full = ref.stdp_ref(W, s, y, 8, 32, 7, mu_c, mu_b, mu_s)
+    want = W + (full - W) * mask[:, None].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.min(got)) >= 0.0 and float(jnp.max(got)) <= 7.0
+
+
+@given(st.lists(st.integers(0, 32), min_size=8, max_size=32),
+       st.sampled_from(["low", "high"]))
+@settings(**SETTINGS)
+def test_wta_sweep(times, tie):
+    # Pad to a multiple of 8 with the no-spike sentinel.
+    while len(times) % 8:
+        times.append(32)
+    y = jnp.asarray(np.asarray(times, dtype=np.int32))
+    winner, gated = wta(y, T_R=32, tie=tie)
+    w_ref, g_ref = ref.wta_ref(y, 32, tie)
+    assert int(winner[0]) == int(w_ref)
+    np.testing.assert_array_equal(np.asarray(gated), np.asarray(g_ref))
+    # Invariant: at most one surviving spike after inhibition.
+    assert int(np.sum(np.asarray(gated) < 32)) <= 1

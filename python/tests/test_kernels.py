@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp ref.py oracle — the CORE correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.response import TP, TQ, potentials
+from compile.kernels.stdp import stdp_update
+from compile.kernels.wta import wta
+
+RNG = np.random.RandomState(1234)
+
+
+def rand_inputs(q_pad, p_pad, T=8, T_R=32, seed=0):
+    rng = np.random.RandomState(seed)
+    W = rng.uniform(0.0, 7.0, size=(q_pad, p_pad)).astype(np.float32)
+    s = rng.randint(0, T, size=(p_pad,)).astype(np.int32)
+    return jnp.asarray(W), jnp.asarray(s)
+
+
+@pytest.mark.parametrize("q_pad,p_pad", [(8, 128), (8, 256), (16, 128),
+                                         (32, 384), (8, 640)])
+@pytest.mark.parametrize("response", ["rnl", "snl", "lif"])
+def test_potentials_matches_ref(q_pad, p_pad, response):
+    W, s = rand_inputs(q_pad, p_pad, seed=q_pad + p_pad)
+    got = potentials(W, s, T_R=32, response=response, lif_decay=0.9)
+    want = ref.potentials_ref(W, s, 32, response, 0.9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_potentials_padded_synapses_contribute_zero():
+    """Spike time >= T_R (the padding sentinel) must add nothing."""
+    W, s = rand_inputs(8, 256, seed=7)
+    s_padded = s.at[128:].set(32)            # second tile = all padding
+    W_zero_tail = W.at[:, 128:].set(0.0)
+    got = potentials(W, s_padded, T_R=32)
+    want = potentials(W_zero_tail, s_padded, T_R=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_potentials_rnl_monotone_in_t():
+    W, s = rand_inputs(8, 128, seed=3)
+    V = np.asarray(potentials(W, s, T_R=32, response="rnl"))
+    assert np.all(np.diff(V, axis=1) >= -1e-5)
+
+
+def test_potentials_snl_bounded_by_weight_sum():
+    W, s = rand_inputs(8, 128, seed=4)
+    V = np.asarray(potentials(W, s, T_R=32, response="snl"))
+    assert np.all(V <= np.asarray(W).sum(axis=1, keepdims=True) + 1e-3)
+
+
+@pytest.mark.parametrize("grid", [(8, 128), (16, 256), (8, 384)])
+def test_stdp_matches_ref(grid):
+    q_pad, p_pad = grid
+    W, s = rand_inputs(q_pad, p_pad, seed=11)
+    rng = np.random.RandomState(5)
+    y = jnp.asarray(rng.randint(0, 33, size=(q_pad,)).astype(np.int32))
+    mask = jnp.asarray((np.arange(q_pad) < q_pad - 2).astype(np.int32))
+    got = stdp_update(W, s, y, mask, T=8, T_R=32, w_max=7,
+                      mu_capture=1.0, mu_backoff=1.0, mu_search=0.125)
+    want_full = ref.stdp_ref(W, s, y, 8, 32, 7, 1.0, 1.0, 0.125)
+    want = W + (want_full - W) * mask[:, None].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_stdp_clamps_to_range():
+    W = jnp.full((8, 128), 6.9, dtype=jnp.float32)
+    s = jnp.zeros((128,), dtype=jnp.int32)
+    y = jnp.full((8,), 5, dtype=jnp.int32)      # all capture
+    mask = jnp.ones((8,), dtype=jnp.int32)
+    W2 = stdp_update(W, s, y, mask, T=8, T_R=32, w_max=7,
+                     mu_capture=1.0, mu_backoff=0.5, mu_search=0.1)
+    assert float(jnp.max(W2)) <= 7.0
+    W3 = stdp_update(jnp.zeros_like(W), s + 32, y, mask, T=8, T_R=32, w_max=7,
+                     mu_capture=1.0, mu_backoff=0.5, mu_search=0.1)
+    assert float(jnp.min(W3)) >= 0.0
+
+
+def test_stdp_masked_rows_unchanged():
+    W, s = rand_inputs(16, 128, seed=21)
+    y = jnp.full((16,), 3, dtype=jnp.int32)
+    mask = jnp.zeros((16,), dtype=jnp.int32)
+    W2 = stdp_update(W, s, y, mask, T=8, T_R=32, w_max=7,
+                     mu_capture=1.0, mu_backoff=1.0, mu_search=0.125)
+    np.testing.assert_array_equal(np.asarray(W2), np.asarray(W))
+
+
+@pytest.mark.parametrize("tie", ["low", "high"])
+def test_wta_matches_ref(tie):
+    for seed in range(20):
+        rng = np.random.RandomState(seed)
+        q = int(rng.choice([8, 16, 32]))
+        y = jnp.asarray(rng.randint(0, 33, size=(q,)).astype(np.int32))
+        winner, gated = wta(y, T_R=32, tie=tie)
+        w_ref, g_ref = ref.wta_ref(y, 32, tie)
+        assert int(winner[0]) == int(w_ref), (seed, y)
+        np.testing.assert_array_equal(np.asarray(gated), np.asarray(g_ref))
+
+
+def test_wta_tie_break_low():
+    y = jnp.asarray([5, 3, 3, 9, 3, 32, 32, 32], dtype=jnp.int32)
+    winner, gated = wta(y, T_R=32, tie="low")
+    assert int(winner[0]) == 1
+    assert np.asarray(gated).tolist() == [32, 3, 32, 32, 32, 32, 32, 32]
+
+
+def test_wta_tie_break_high():
+    y = jnp.asarray([5, 3, 3, 9, 3, 32, 32, 32], dtype=jnp.int32)
+    winner, _ = wta(y, T_R=32, tie="high")
+    assert int(winner[0]) == 4
+
+
+def test_wta_no_fire_reports_minus_one():
+    y = jnp.full((8,), 32, dtype=jnp.int32)
+    winner, gated = wta(y, T_R=32, tie="low")
+    assert int(winner[0]) == -1
+    assert np.all(np.asarray(gated) == 32)
+
+
+def test_first_crossing_sentinel():
+    V = jnp.zeros((4, 32), dtype=jnp.float32)
+    y = ref.first_crossing(V, 1.0, 32)
+    assert np.all(np.asarray(y) == 32)
+
+
+def test_first_crossing_exact_threshold_counts():
+    V = jnp.broadcast_to(jnp.arange(32, dtype=jnp.float32), (2, 32))
+    y = ref.first_crossing(V, 5.0, 32)
+    assert np.asarray(y).tolist() == [5, 5]
+
+
+def test_tile_constants_are_mxu_aligned():
+    assert TP == 128 and TQ % 8 == 0

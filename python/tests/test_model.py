@@ -1,0 +1,164 @@
+"""L2 model tests: exported computations vs pure-jnp references, invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ALL_CONFIGS, TEST_CONFIGS, ColumnConfig, TnnParams
+
+CFG = TEST_CONFIGS[0]           # 16x2
+CFG2 = TEST_CONFIGS[1]          # 48x4
+
+
+def rand_window(p, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).rand(p).astype(np.float32))
+
+
+@pytest.mark.parametrize("cfg", TEST_CONFIGS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_step_matches_ref(cfg, seed):
+    W = model.init_weights(cfg, seed)
+    x = rand_window(cfg.p, seed)
+    W2, winner, y = model.tnn_step(cfg, W, x)
+    W2r, wr, yr = model.tnn_step_ref(cfg, W, x)
+    assert int(winner[0]) == int(wr[0])
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_allclose(np.asarray(W2), np.asarray(W2r),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", TEST_CONFIGS)
+def test_infer_matches_ref(cfg):
+    W = model.init_weights(cfg, 3)
+    x = rand_window(cfg.p, 9)
+    winner, y = model.tnn_infer(cfg, W, x)
+    wr, yr = model.tnn_infer_ref(cfg, W, x)
+    assert int(winner[0]) == int(wr[0])
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_infer_batch_consistent_with_single():
+    W = model.init_weights(CFG, 1)
+    X = jnp.stack([rand_window(CFG.p, s) for s in range(6)])
+    batch = model.tnn_infer_batch(CFG, W, X)
+    singles = [int(model.tnn_infer(CFG, W, X[i])[0][0]) for i in range(6)]
+    assert np.asarray(batch).tolist() == singles
+
+
+def test_train_chunk_equals_sequential_steps():
+    W = model.init_weights(CFG2, 2)
+    X = jnp.stack([rand_window(CFG2.p, 100 + s) for s in range(5)])
+    Wc = model.tnn_train_chunk(CFG2, W, X)
+    Ws = W
+    for i in range(5):
+        Ws, _, _ = model.tnn_step(CFG2, Ws, X[i])
+    np.testing.assert_allclose(np.asarray(Wc), np.asarray(Ws),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_padded_rows_stay_zero_through_training():
+    W = model.init_weights(CFG, 0)
+    assert np.all(np.asarray(W)[CFG.q:] == 0.0)
+    X = jnp.stack([rand_window(CFG.p, s) for s in range(20)])
+    W2 = model.tnn_train_chunk(CFG, W, X)
+    assert np.all(np.asarray(W2)[CFG.q:] == 0.0), \
+        "padding neurons must never learn"
+
+
+def test_padded_cols_stay_zero_through_training():
+    W = model.init_weights(CFG, 0)
+    X = jnp.stack([rand_window(CFG.p, s) for s in range(20)])
+    W2 = model.tnn_train_chunk(CFG, W, X)
+    assert np.all(np.asarray(W2)[:, CFG.p:] == 0.0), \
+        "padding synapses must never learn"
+
+
+def test_weights_bounded_through_training():
+    W = model.init_weights(CFG2, 5)
+    X = jnp.stack([rand_window(CFG2.p, s) for s in range(32)])
+    W2 = model.tnn_train_chunk(CFG2, W, X)
+    arr = np.asarray(W2)
+    assert arr.min() >= 0.0 and arr.max() <= CFG2.params.w_max
+
+
+def test_winner_in_valid_range():
+    for seed in range(10):
+        W = model.init_weights(CFG2, seed)
+        x = rand_window(CFG2.p, seed)
+        winner, _ = model.tnn_infer(CFG2, W, x)
+        assert -1 <= int(winner[0]) < CFG2.q
+
+
+def test_learning_specializes_neurons():
+    """After STDP on two well-separated prototypes, the column should map
+    them to different neurons (the basic clustering mechanism of ref [2])."""
+    cfg = CFG
+    rng = np.random.RandomState(0)
+    proto_a = np.sin(np.linspace(0, 3 * np.pi, cfg.p))
+    proto_b = np.concatenate([np.ones(cfg.p // 2), np.zeros(cfg.p - cfg.p // 2)])
+    X = []
+    for i in range(40):
+        base = proto_a if i % 2 == 0 else proto_b
+        X.append(base + rng.randn(cfg.p) * 0.05)
+    X = jnp.asarray(np.asarray(X, dtype=np.float32))
+    W = model.init_weights(cfg, 7)
+    for start in range(0, 40, 8):
+        W = model.tnn_train_chunk(cfg, W, X[start:start + 8])
+    wa, _ = model.tnn_infer(cfg, W, X[0])
+    wb, _ = model.tnn_infer(cfg, W, X[1])
+    assert int(wa[0]) != int(wb[0]), "prototypes should map to distinct neurons"
+
+
+def test_multilayer_shapes_and_range():
+    l1 = ColumnConfig("L1", "synthetic", 16, 8)
+    l2 = ColumnConfig("L2", "synthetic", 8, 2)
+    Ws = [model.init_weights(l1, 0), model.init_weights(l2, 1)]
+    winner, y = model.multilayer_infer([l1, l2], Ws, rand_window(16, 0))
+    assert y.shape == (l2.q_pad,)
+    assert -1 <= int(winner[0]) < l2.q
+
+
+@pytest.mark.parametrize("response", ["snl", "rnl", "lif"])
+def test_all_response_functions_run(response):
+    cfg = ColumnConfig("R", "synthetic", 16, 2,
+                       TnnParams(response=response, theta_frac=0.1))
+    W = model.init_weights(cfg, 0)
+    W2, winner, y = model.tnn_step(cfg, W, rand_window(16, 3))
+    assert W2.shape == W.shape and y.shape == (cfg.q_pad,)
+
+
+def test_supervised_step_teaches_labeled_neuron():
+    """Supervised STDP (paper §II-A) forces the labeled neuron to win."""
+    cfg = CFG2  # 48x4
+    rng = np.random.RandomState(3)
+    xa = jnp.asarray(np.sin(np.linspace(0, 3 * np.pi, cfg.p)).astype(np.float32))
+    xb = jnp.asarray(
+        np.concatenate([np.ones(cfg.p // 2), np.zeros(cfg.p - cfg.p // 2)])
+        .astype(np.float32))
+    W = model.init_weights(cfg, 5)
+    for _ in range(30):
+        W, _, _ = model.tnn_step_supervised(cfg, W, xa, 1)
+        W, _, _ = model.tnn_step_supervised(cfg, W, xb, 3)
+    wa, _ = model.tnn_infer(cfg, W, xa)
+    wb, _ = model.tnn_infer(cfg, W, xb)
+    assert int(wa[0]) == 1
+    assert int(wb[0]) == 3
+    del rng
+
+
+def test_supervised_step_keeps_padding_and_bounds():
+    cfg = CFG
+    W = model.init_weights(cfg, 2)
+    x = rand_window(cfg.p, 8)
+    W2, _, _ = model.tnn_step_supervised(cfg, W, x, 0)
+    arr = np.asarray(W2)
+    assert arr.min() >= 0.0 and arr.max() <= cfg.params.w_max
+    assert np.all(arr[cfg.q:] == 0.0)
+
+
+def test_paper_configs_padding_invariants():
+    for cfg in ALL_CONFIGS:
+        assert cfg.p_pad % 128 == 0 and cfg.q_pad % 8 == 0
+        assert cfg.p_pad >= cfg.p and cfg.q_pad >= cfg.q
+        assert cfg.p_pad - cfg.p < 128 and cfg.q_pad - cfg.q < 8

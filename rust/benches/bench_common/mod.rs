@@ -1,0 +1,35 @@
+//! Shared bench-harness helpers (offline substitute for criterion):
+//! statistical timing plus the paper-table regeneration entry points.
+//!
+//! Every bench binary prints the corresponding paper table/figure rows so
+//! `cargo bench | tee bench_output.txt` records the full reproduction.
+
+use tnngen::report::experiments::Effort;
+use tnngen::util::stats::{mean, median, stddev};
+use tnngen::util::timer::time_iters;
+
+/// Effort selection: `TNNGEN_BENCH_FAST=1` trims to the three smallest
+/// designs (useful for smoke runs); default reproduces every row.
+pub fn bench_effort() -> Effort {
+    if std::env::var("TNNGEN_BENCH_FAST").ok().as_deref() == Some("1") {
+        Effort::fast()
+    } else {
+        Effort::full()
+    }
+}
+
+/// Time a closure `iters` times and print a criterion-style summary line.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, f: F) {
+    let samples = time_iters(iters, f);
+    println!(
+        "bench {name:<40} median {:>10.3} ms  mean {:>10.3} ms  sd {:>8.3} ms  n={}",
+        median(&samples) * 1e3,
+        mean(&samples) * 1e3,
+        stddev(&samples) * 1e3,
+        samples.len()
+    );
+}
+
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate Fig 2 (computation latency; three columns on a shared
+//! floorplan + the largest column) with ASCII layout plots.
+
+mod bench_common;
+
+use bench_common::{banner, bench_effort};
+use tnngen::config::presets::by_tag;
+use tnngen::eda::{place, synthesize, tnn7, PlaceOpts};
+use tnngen::report::experiments::{fig2, layout_ascii};
+use tnngen::rtl::generate_column;
+
+fn main() {
+    let effort = bench_effort();
+    banner("Fig 2 — computation latencies on a shared floorplan (TNN7)");
+    println!("{}", fig2(effort).unwrap());
+
+    banner("layouts (placement density maps, TNN7)");
+    for tag in ["65x2", "96x2", "152x2"] {
+        let cfg = by_tag(tag).unwrap();
+        let rtl = generate_column(&cfg).unwrap();
+        let d = synthesize(&rtl.netlist, &tnn7());
+        let p = place(&d, &PlaceOpts::default());
+        println!(
+            "{tag}: {} instances on {:.0}x{:.0} um",
+            d.instances.len(),
+            p.die_w_um,
+            p.die_h_um
+        );
+        println!("{}", layout_ascii(&p, 48));
+    }
+}

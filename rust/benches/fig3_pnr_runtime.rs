@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig 3 (place-and-route runtime, ASAP7 vs TNN7, vs
+//! column size) and the §III-C synthesis/full-flow speedup claims. All
+//! numbers are measured wall-clock of this machine's flow stages.
+
+mod bench_common;
+
+use bench_common::{banner, bench_effort};
+use tnngen::report::experiments::fig3;
+
+fn main() {
+    let effort = bench_effort();
+    banner("Fig 3 — P&R runtime: ASAP7 vs TNN7 (measured wall-clock)");
+    println!("{}", fig3(effort).unwrap());
+}

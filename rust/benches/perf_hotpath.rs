@@ -1,0 +1,87 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization pass
+//! (EXPERIMENTS.md). Per-layer: native response path, gate-level sim
+//! throughput, SA placement move rate, synthesis optimization rate, and
+//! PJRT dispatch cost.
+
+mod bench_common;
+
+use bench_common::{banner, bench};
+use tnngen::config::presets::by_tag;
+use tnngen::config::ColumnConfig;
+use tnngen::coordinator::{Coordinator, SimBackend};
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::data::load_benchmark;
+use tnngen::eda::synthesis::{optimize, SynthStats};
+use tnngen::eda::{place, synthesize, tnn7, PlaceOpts};
+use tnngen::rtl::{generate_column, GateSim};
+use tnngen::sim::CycleSim;
+use tnngen::util::Rng;
+
+fn main() {
+    banner("L3 perf: native functional simulator");
+    let cfg = by_tag("96x2").unwrap();
+    let mut sim = CycleSim::new(cfg.clone(), 1);
+    let mut rng = Rng::new(9);
+    let xs: Vec<Vec<f32>> = (0..120)
+        .map(|_| (0..96).map(|_| rng.f32()).collect())
+        .collect();
+    bench("native step x120 (96x2)", 10, || {
+        for x in &xs {
+            sim.step(x);
+        }
+    });
+    bench("native infer x120 (96x2)", 10, || {
+        for x in &xs {
+            let _ = sim.infer(x);
+        }
+    });
+
+    banner("L3 perf: event-driven vs cycle-accurate response");
+    let s_enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+    bench("cycle-accurate response x120", 10, || {
+        for s in &s_enc {
+            let _ = sim.response(s);
+        }
+    });
+    let theta = sim.config.theta();
+    let params = sim.config.params;
+    bench("event-driven response x120", 10, || {
+        for s in &s_enc {
+            let _ = tnngen::sim::event::event_driven(&sim.weights, s, theta, &params);
+        }
+    });
+
+    banner("L3 perf: gate-level simulator");
+    let small = ColumnConfig::new("perf", "synthetic", 12, 2);
+    let rtl = generate_column(&small).unwrap();
+    let mut gsim = GateSim::new(&rtl.netlist).unwrap();
+    rtl.load_weights(&mut gsim, &vec![vec![28u64; 12]; 2]);
+    let spikes: Vec<i32> = (0..12).map(|i| (i % 8) as i32).collect();
+    bench("gate-level sample (12x2 column)", 10, || {
+        let _ = rtl.run_sample(&mut gsim, &spikes, true);
+    });
+
+    banner("L3 perf: synthesis optimization + SA placement");
+    let cfg_hw = by_tag("65x2").unwrap();
+    let rtl_hw = generate_column(&cfg_hw).unwrap();
+    bench("synthesis optimize (65x2 ASAP7 fabric)", 3, || {
+        let mut stats = SynthStats::default();
+        let _ = optimize(&rtl_hw.netlist, &mut stats);
+    });
+    let design = synthesize(&rtl_hw.netlist, &tnn7());
+    bench("SA placement (65x2 TNN7)", 3, || {
+        let _ = place(&design, &PlaceOpts::default());
+    });
+
+    banner("L1/L2 perf: PJRT dispatch (requires artifacts)");
+    if let Ok(coord) = Coordinator::with_artifacts(std::path::Path::new("artifacts")) {
+        let cfg2 = by_tag("96x2").unwrap();
+        let ds = load_benchmark(&cfg2.name, cfg2.p, cfg2.q, 32, 42);
+        let pipe = TnnClustering { epochs: 1, seed: 42, n_per_split: 32 };
+        bench("pjrt epoch 64 samples (96x2)", 3, || {
+            let _ = coord.run_clustering(&cfg2, &ds, &pipe, SimBackend::Pjrt).unwrap();
+        });
+    } else {
+        println!("artifacts not built; skipping PJRT microbench");
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate Table II (time-series clustering rand index) and time
+//! the clustering hot path on both backends.
+
+mod bench_common;
+
+use bench_common::{banner, bench, bench_effort};
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::config::presets::by_tag;
+use tnngen::coordinator::{Coordinator, SimBackend};
+use tnngen::data::load_benchmark;
+use tnngen::report::experiments::table2;
+
+fn main() {
+    let effort = bench_effort();
+    banner("Table II — clustering (PJRT backend when artifacts exist)");
+    let (backend, coord) = match Coordinator::with_artifacts(std::path::Path::new("artifacts")) {
+        Ok(c) => (SimBackend::Pjrt, c),
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); falling back to native backend");
+            (SimBackend::Native, Coordinator::native())
+        }
+    };
+    match table2(effort, backend, &coord) {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("PJRT table2 failed ({e}); retrying native");
+            let coord = Coordinator::native();
+            println!("{}", table2(effort, SimBackend::Native, &coord).unwrap());
+        }
+    }
+
+    banner("clustering hot-path timings (ECG200, 120 samples)");
+    let cfg = by_tag("96x2").unwrap();
+    let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, 60, 42);
+    let pipe = TnnClustering { epochs: 1, seed: 42, n_per_split: 60 };
+    let native_coord = Coordinator::native();
+    bench("native train+infer epoch (96x2)", 5, || {
+        let _ = native_coord
+            .run_clustering(&cfg, &ds, &pipe, SimBackend::Native)
+            .unwrap();
+    });
+    if backend == SimBackend::Pjrt {
+        bench("pjrt train+infer epoch (96x2)", 3, || {
+            let _ = coord.run_clustering(&cfg, &ds, &pipe, SimBackend::Pjrt).unwrap();
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Table III (post-P&R leakage power, 7 designs x 3
+//! libraries) and time a representative flow.
+
+mod bench_common;
+
+use bench_common::{banner, bench, bench_effort};
+use tnngen::config::presets::by_tag;
+use tnngen::eda::{asap7, run_flow, FlowOpts};
+use tnngen::report::experiments::{run_paper_flows, table3};
+
+fn main() {
+    let effort = bench_effort();
+    banner("Table III — post-place-and-route leakage power");
+    let flows = run_paper_flows(effort).expect("flows");
+    println!("{}", table3(&flows, effort).unwrap());
+
+    banner("flow timing (ASAP7, 96x2)");
+    let cfg = by_tag("96x2").unwrap();
+    bench("full flow ASAP7 96x2", 3, || {
+        let _ = run_flow(&cfg, &asap7(), &FlowOpts::default()).unwrap();
+    });
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Table IV (post-P&R die area) plus the §III-B
+//! largest-column summary (die mm^2 / total power / latency).
+
+mod bench_common;
+
+use bench_common::{banner, bench_effort};
+use tnngen::report::experiments::{largest_column_summary, run_paper_flows, table4};
+
+fn main() {
+    let effort = bench_effort();
+    banner("Table IV — post-place-and-route die area");
+    let flows = run_paper_flows(effort).expect("flows");
+    println!("{}", table4(&flows, effort).unwrap());
+    if let Some(s) = largest_column_summary(&flows) {
+        println!("{s}");
+    }
+}

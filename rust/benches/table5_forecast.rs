@@ -1,0 +1,14 @@
+//! Bench: regenerate Table V + Fig 4 (area/leakage forecasting from
+//! synapse count: trained regression, predictions, per-design errors).
+
+mod bench_common;
+
+use bench_common::{banner, bench_effort};
+use tnngen::report::experiments::{run_paper_flows, table5_fig4};
+
+fn main() {
+    let effort = bench_effort();
+    banner("Table V + Fig 4 — post-P&R forecasting (TNN7)");
+    let flows = run_paper_flows(effort).expect("flows");
+    println!("{}", table5_fig4(&flows, effort).unwrap());
+}

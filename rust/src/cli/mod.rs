@@ -1,0 +1,113 @@
+//! Hand-rolled CLI argument parser (offline substitute for `clap`):
+//! subcommands with positional args and `--flag[=value]` options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(cmd) = iter.next() {
+            if cmd.starts_with('-') {
+                bail!("expected a subcommand before flags, got {cmd}");
+            }
+            args.command = cmd;
+        }
+        while let Some(a) = iter.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("empty flag");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(flag.to_string(), v);
+                } else {
+                    args.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = parse(&["simulate", "ECG200", "extra"]);
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.positional, vec!["ECG200", "extra"]);
+    }
+
+    #[test]
+    fn parses_flags_with_and_without_values() {
+        let a = parse(&["flow", "--lib", "TNN7", "--fast", "--epochs=8"]);
+        assert_eq!(a.flag("lib"), Some("TNN7"));
+        assert!(a.flag_bool("fast"));
+        assert_eq!(a.flag_usize("epochs", 4).unwrap(), 8);
+        assert_eq!(a.flag_usize("missing", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn rejects_leading_flag() {
+        assert!(Args::parse(["--oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn flag_after_flag_without_value() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag_bool("a"));
+        assert_eq!(a.flag("b"), Some("v"));
+    }
+}

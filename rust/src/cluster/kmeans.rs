@@ -1,0 +1,186 @@
+//! k-means (Lloyd's algorithm with k-means++ seeding) — the baseline Table
+//! II normalizes against.
+
+use crate::util::linalg::dist2;
+use crate::util::Rng;
+
+/// Result of one k-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    pub assignments: Vec<usize>,
+    pub centroids: Vec<Vec<f64>>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// k-means++ initial centroids.
+fn seed_centroids(xs: &[Vec<f64>], k: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(xs[rng.below(xs.len())].clone());
+    let mut d2: Vec<f64> = xs.iter().map(|x| dist2(x, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(xs.len())
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = 0;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.push(xs[next].clone());
+        for (i, x) in xs.iter().enumerate() {
+            d2[i] = d2[i].min(dist2(x, centroids.last().unwrap()));
+        }
+    }
+    centroids
+}
+
+/// Run k-means once with a given seed.
+pub fn kmeans_once(xs: &[Vec<f64>], k: usize, max_iter: usize, seed: u64) -> KmeansResult {
+    assert!(!xs.is_empty() && k >= 1);
+    let k = k.min(xs.len());
+    let dim = xs[0].len();
+    let mut rng = Rng::new(seed);
+    let mut centroids = seed_centroids(xs, k, &mut rng);
+    let mut assignments = vec![0usize; xs.len()];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        let mut changed = false;
+        for (i, x) in xs.iter().enumerate() {
+            let (mut best_j, mut best) = (0usize, f64::INFINITY);
+            for (j, c) in centroids.iter().enumerate() {
+                let d = dist2(x, c);
+                if d < best {
+                    best = d;
+                    best_j = j;
+                }
+            }
+            if assignments[i] != best_j {
+                assignments[i] = best_j;
+                changed = true;
+            }
+        }
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (x, &a) in xs.iter().zip(&assignments) {
+            counts[a] += 1;
+            for (s, &v) in sums[a].iter_mut().zip(x) {
+                *s += v;
+            }
+        }
+        for j in 0..k {
+            if counts[j] == 0 {
+                // Re-seed empty cluster at the farthest point.
+                let far = xs
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        dist2(a, &centroids[assignments[0]])
+                            .partial_cmp(&dist2(b, &centroids[assignments[0]]))
+                            .unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                centroids[j] = xs[far].clone();
+                continue;
+            }
+            for (c, s) in centroids[j].iter_mut().zip(&sums[j]) {
+                *c = s / counts[j] as f64;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let inertia = xs
+        .iter()
+        .zip(&assignments)
+        .map(|(x, &a)| dist2(x, &centroids[a]))
+        .sum();
+    KmeansResult { assignments, centroids, inertia, iterations }
+}
+
+/// Best of `restarts` runs by inertia (the usual protocol).
+pub fn kmeans(xs: &[Vec<f64>], k: usize, restarts: usize, seed: u64) -> KmeansResult {
+    (0..restarts.max(1))
+        .map(|r| kmeans_once(xs, k, 100, seed.wrapping_add(r as u64)))
+        .min_by(|a, b| a.inertia.partial_cmp(&b.inertia).unwrap())
+        .unwrap()
+}
+
+/// Convenience: f32 series to f64 rows.
+pub fn to_f64_rows(xs: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    xs.iter()
+        .map(|x| x.iter().map(|&v| v as f64).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::metrics::rand_index;
+
+    fn blobs(n_per: usize, centers: &[(f64, f64)], spread: f64, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (c, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                xs.push(vec![cx + rng.normal() * spread, cy + rng.normal() * spread]);
+                ys.push(c);
+            }
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let (xs, ys) = blobs(30, &[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 0.5, 3);
+        let res = kmeans(&xs, 3, 5, 42);
+        assert!(rand_index(&res.assignments, &ys) > 0.99);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let (xs, _) = blobs(30, &[(0.0, 0.0), (8.0, 8.0)], 1.0, 5);
+        let i1 = kmeans(&xs, 1, 3, 1).inertia;
+        let i2 = kmeans(&xs, 2, 3, 1).inertia;
+        let i4 = kmeans(&xs, 4, 3, 1).inertia;
+        assert!(i2 < i1);
+        assert!(i4 <= i2 + 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (xs, _) = blobs(20, &[(0.0, 0.0), (5.0, 5.0)], 0.8, 9);
+        let a = kmeans(&xs, 2, 3, 7).assignments;
+        let b = kmeans(&xs, 2, 3, 7).assignments;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let res = kmeans(&xs, 10, 1, 0);
+        assert_eq!(res.assignments.len(), 2);
+    }
+
+    #[test]
+    fn assignments_match_nearest_centroid() {
+        let (xs, _) = blobs(15, &[(0.0, 0.0), (6.0, 0.0)], 0.4, 13);
+        let res = kmeans(&xs, 2, 3, 2);
+        for (x, &a) in xs.iter().zip(&res.assignments) {
+            for (j, c) in res.centroids.iter().enumerate() {
+                assert!(dist2(x, &res.centroids[a]) <= dist2(x, c) + 1e-9, "{j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Clustering evaluation metrics. Rand index is the paper's headline metric
+//! (Table II, following ref [2]); ARI/NMI/purity/macro-F1 are provided for
+//! the extended reports.
+
+use std::collections::BTreeMap;
+
+/// Contingency table between two labelings.
+fn contingency(a: &[usize], b: &[usize]) -> (Vec<Vec<usize>>, Vec<usize>, Vec<usize>) {
+    assert_eq!(a.len(), b.len(), "labelings must align");
+    let ka = a.iter().max().map_or(0, |m| m + 1);
+    let kb = b.iter().max().map_or(0, |m| m + 1);
+    let mut table = vec![vec![0usize; kb]; ka];
+    for (&x, &y) in a.iter().zip(b) {
+        table[x][y] += 1;
+    }
+    let rows: Vec<usize> = table.iter().map(|r| r.iter().sum()).collect();
+    let cols: Vec<usize> = (0..kb).map(|j| table.iter().map(|r| r[j]).sum()).collect();
+    (table, rows, cols)
+}
+
+fn choose2(n: usize) -> f64 {
+    (n as f64) * (n as f64 - 1.0) / 2.0
+}
+
+/// Rand index in [0, 1]: fraction of sample pairs on which the two
+/// labelings agree (same-cluster vs different-cluster).
+pub fn rand_index(a: &[usize], b: &[usize]) -> f64 {
+    let n = a.len();
+    assert!(n >= 2, "rand index needs >= 2 samples");
+    let (table, rows, cols) = contingency(a, b);
+    let sum_ij: f64 = table.iter().flatten().map(|&c| choose2(c)).sum();
+    let sum_a: f64 = rows.iter().map(|&c| choose2(c)).sum();
+    let sum_b: f64 = cols.iter().map(|&c| choose2(c)).sum();
+    let total = choose2(n);
+    // RI = (agreements) / (pairs): pairs together in both + apart in both.
+    (total + 2.0 * sum_ij - sum_a - sum_b) / total
+}
+
+/// Adjusted Rand index (chance-corrected, can be negative).
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    let n = a.len();
+    assert!(n >= 2);
+    let (table, rows, cols) = contingency(a, b);
+    let sum_ij: f64 = table.iter().flatten().map(|&c| choose2(c)).sum();
+    let sum_a: f64 = rows.iter().map(|&c| choose2(c)).sum();
+    let sum_b: f64 = cols.iter().map(|&c| choose2(c)).sum();
+    let total = choose2(n);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return if (sum_ij - expected).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Normalized mutual information (arithmetic normalization).
+pub fn nmi(a: &[usize], b: &[usize]) -> f64 {
+    let n = a.len() as f64;
+    let (table, rows, cols) = contingency(a, b);
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &c) in row.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let pij = c as f64 / n;
+            let pi = rows[i] as f64 / n;
+            let pj = cols[j] as f64 / n;
+            mi += pij * (pij / (pi * pj)).ln();
+        }
+    }
+    let h = |marg: &[usize]| -> f64 {
+        marg.iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let (ha, hb) = (h(&rows), h(&cols));
+    if ha == 0.0 && hb == 0.0 {
+        return 1.0;
+    }
+    if ha == 0.0 || hb == 0.0 {
+        return 0.0;
+    }
+    (mi / (0.5 * (ha + hb))).clamp(0.0, 1.0)
+}
+
+/// Purity: each predicted cluster votes for its majority true class.
+pub fn purity(pred: &[usize], truth: &[usize]) -> f64 {
+    let (table, _, _) = contingency(pred, truth);
+    let n = pred.len() as f64;
+    table.iter().map(|row| *row.iter().max().unwrap_or(&0) as f64).sum::<f64>() / n
+}
+
+/// Macro-averaged F1 after optimal-greedy cluster->class matching.
+pub fn f1_macro(pred: &[usize], truth: &[usize]) -> f64 {
+    let (table, rows, cols) = contingency(pred, truth);
+    let kb = cols.len();
+    // Greedy match each predicted cluster to its best class.
+    let mut f1s = vec![0.0f64; kb];
+    let mut seen = vec![false; kb];
+    for (i, row) in table.iter().enumerate() {
+        let (mut best_j, mut best) = (usize::MAX, 0.0);
+        for (j, &c) in row.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let precision = c as f64 / rows[i] as f64;
+            let recall = c as f64 / cols[j] as f64;
+            let f1 = 2.0 * precision * recall / (precision + recall);
+            if f1 > best {
+                best = f1;
+                best_j = j;
+            }
+        }
+        if best_j != usize::MAX && best > f1s[best_j] {
+            f1s[best_j] = best;
+            seen[best_j] = true;
+        }
+    }
+    let k_used = seen.iter().filter(|&&s| s).count().max(1);
+    let _ = k_used;
+    f1s.iter().sum::<f64>() / kb as f64
+}
+
+/// Relabel predictions so cluster ids are contiguous 0..k-1 (handles the
+/// -1 "no winner" TNN output by giving it its own cluster id).
+pub fn compact_labels(pred: &[i32]) -> Vec<usize> {
+    let mut map = BTreeMap::new();
+    pred.iter()
+        .map(|&p| {
+            let next = map.len();
+            *map.entry(p).or_insert(next)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rand_index_perfect_and_permuted() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(rand_index(&a, &a), 1.0);
+        let b = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        assert_eq!(rand_index(&a, &b), 1.0);
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn rand_index_known_value() {
+        // Classic textbook example.
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 2, 2];
+        // pairs: C(6,2)=15; agreements: a-pairs together in both: (0,1),(3,4)?
+        // compute directly: RI = (TP+TN)/15.
+        let ri = rand_index(&a, &b);
+        let mut agree = 0.0;
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                if (a[i] == a[j]) == (b[i] == b[j]) {
+                    agree += 1.0;
+                }
+            }
+        }
+        assert!((ri - agree / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_is_near_zero() {
+        let mut rng = crate::util::Rng::new(314);
+        let a: Vec<usize> = (0..400).map(|_| rng.below(4)).collect();
+        let b: Vec<usize> = (0..400).map(|_| rng.below(4)).collect();
+        assert!(adjusted_rand_index(&a, &b).abs() < 0.1);
+    }
+
+    #[test]
+    fn nmi_bounds() {
+        let a = vec![0, 0, 1, 1];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        let indep = vec![0, 1, 0, 1];
+        let one = vec![0, 0, 1, 1];
+        assert!(nmi(&one, &indep) < 0.01);
+    }
+
+    #[test]
+    fn purity_majority() {
+        let pred = vec![0, 0, 0, 1, 1, 1];
+        let truth = vec![0, 0, 1, 1, 1, 1];
+        assert!((purity(&pred, &truth) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_perfect() {
+        let a = vec![0, 0, 1, 1];
+        assert!((f1_macro(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compact_labels_handles_no_winner() {
+        let pred = vec![-1, 0, 3, 0, -1];
+        assert_eq!(compact_labels(&pred), vec![0, 1, 2, 1, 0]);
+    }
+
+    #[test]
+    fn symmetry_of_pair_metrics() {
+        let a = vec![0, 1, 1, 2, 0, 2, 1];
+        let b = vec![1, 1, 0, 2, 2, 0, 0];
+        assert!((rand_index(&a, &b) - rand_index(&b, &a)).abs() < 1e-12);
+        assert!((adjusted_rand_index(&a, &b) - adjusted_rand_index(&b, &a)).abs() < 1e-12);
+        assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Clustering: evaluation metrics, the k-means baseline (the paper's
+//! normalizer), the DTCR-proxy comparator, and the TNN clustering pipeline
+//! that drives the PJRT artifacts (Table II).
+
+pub mod dtcr_proxy;
+pub mod kmeans;
+pub mod metrics;
+pub mod pipeline;
+
+pub use kmeans::kmeans;
+pub use metrics::{adjusted_rand_index, f1_macro, nmi, purity, rand_index};
+pub use pipeline::{ClusteringReport, TnnClustering};

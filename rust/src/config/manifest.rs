@@ -1,0 +1,232 @@
+//! AOT artifact manifest: parses `artifacts/manifest.toml` written by
+//! `python -m compile.aot` and exposes typed metadata for the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use super::toml::{self, Value};
+use super::{ColumnConfig, Response, TnnParams};
+
+/// Which exported computation an artifact holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (W, x) -> (W', winner, y)
+    Step,
+    /// (W, x) -> (winner, y)
+    Infer,
+    /// (W, X[B,p]) -> winners[B]
+    InferBatch,
+    /// (W, X[C,p]) -> W'
+    TrainChunk,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "step" => Some(Self::Step),
+            "infer" => Some(Self::Infer),
+            "infer_batch" => Some(Self::InferBatch),
+            "train_chunk" => Some(Self::TrainChunk),
+            _ => None,
+        }
+    }
+}
+
+/// Metadata for one HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub config: ColumnConfig,
+    pub p_pad: usize,
+    pub q_pad: usize,
+    pub theta: f32,
+    pub infer_batch: usize,
+    pub train_chunk: usize,
+}
+
+/// The parsed manifest: artifact name -> metadata.
+#[derive(Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn need<'a>(
+    map: &'a BTreeMap<String, Value>,
+    section: &str,
+    key: &str,
+) -> anyhow::Result<&'a Value> {
+    map.get(key)
+        .with_context(|| format!("manifest [{section}] missing key {key}"))
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.toml`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let doc = toml::parse(text).context("parsing manifest.toml")?;
+        let mut artifacts = BTreeMap::new();
+        for (section, map) in &doc.sections {
+            if section.is_empty() {
+                continue;
+            }
+            let s = section.as_str();
+            let get_int = |key: &str| -> anyhow::Result<i64> {
+                need(map, s, key)?
+                    .as_int()
+                    .with_context(|| format!("[{s}] {key}: expected integer"))
+            };
+            let get_f = |key: &str| -> anyhow::Result<f64> {
+                need(map, s, key)?
+                    .as_float()
+                    .with_context(|| format!("[{s}] {key}: expected float"))
+            };
+            let get_s = |key: &str| -> anyhow::Result<String> {
+                Ok(need(map, s, key)?
+                    .as_str()
+                    .with_context(|| format!("[{s}] {key}: expected string"))?
+                    .to_string())
+            };
+
+            let kind_s = get_s("kind")?;
+            let Some(kind) = ArtifactKind::parse(&kind_s) else {
+                bail!("[{s}] unknown artifact kind {kind_s:?}");
+            };
+            let response_s = get_s("response")?;
+            let Some(response) = Response::parse(&response_s) else {
+                bail!("[{s}] unknown response {response_s:?}");
+            };
+            let params = TnnParams {
+                t: get_int("T")? as i32,
+                t_r: get_int("T_R")? as i32,
+                w_max: get_int("w_max")? as i32,
+                mu_capture: get_f("mu_capture")? as f32,
+                mu_backoff: get_f("mu_backoff")? as f32,
+                mu_search: get_f("mu_search")? as f32,
+                sparse_cutoff: get_f("sparse_cutoff")? as f32,
+                response,
+                ..TnnParams::default()
+            };
+            let config = ColumnConfig {
+                name: get_s("benchmark")?,
+                modality: get_s("modality")?,
+                p: get_int("p")? as usize,
+                q: get_int("q")? as usize,
+                params,
+            };
+            let meta = ArtifactMeta {
+                name: section.clone(),
+                file: dir.join(get_s("file")?),
+                kind,
+                p_pad: get_int("p_pad")? as usize,
+                q_pad: get_int("q_pad")? as usize,
+                theta: get_f("theta")? as f32,
+                infer_batch: get_int("infer_batch")? as usize,
+                train_chunk: get_int("train_chunk")? as usize,
+                config,
+            };
+            // Sanity: manifest padding must match our own padding rule.
+            if meta.p_pad != meta.config.p_pad() || meta.q_pad != meta.config.q_pad() {
+                bail!(
+                    "[{s}] padding mismatch: manifest ({}, {}) vs rust rule ({}, {}) — \
+                     python/compile/configs.py and rust/src/config are out of sync",
+                    meta.p_pad,
+                    meta.q_pad,
+                    meta.config.p_pad(),
+                    meta.config.q_pad()
+                );
+            }
+            artifacts.insert(section.clone(), meta);
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the artifact of `kind` for a column tag like "65x2".
+    pub fn find(&self, kind: ArtifactKind, tag: &str) -> Option<&ArtifactMeta> {
+        let prefix = match kind {
+            ArtifactKind::Step => "tnn_step_",
+            ArtifactKind::Infer => "tnn_infer_",
+            ArtifactKind::InferBatch => "tnn_infer_batch_",
+            ArtifactKind::TrainChunk => "tnn_train_chunk_",
+        };
+        self.artifacts.get(&format!("{prefix}{tag}"))
+    }
+
+    pub fn tags(&self) -> Vec<String> {
+        let mut tags: Vec<String> = self
+            .artifacts
+            .values()
+            .map(|m| m.config.tag())
+            .collect();
+        tags.sort();
+        tags.dedup();
+        tags
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[tnn_step_16x2]
+file = "tnn_step_16x2.hlo.txt"
+kind = "step"
+benchmark = "TinyTest"
+modality = "synthetic"
+p = 16
+q = 2
+p_pad = 128
+q_pad = 8
+synapse_count = 32
+T = 8
+T_R = 32
+w_max = 7
+theta = 56.0
+mu_capture = 1.0
+mu_backoff = 1.0
+mu_search = 0.125
+sparse_cutoff = 0.6
+response = "rnl"
+infer_batch = 64
+train_chunk = 32
+"#;
+
+    #[test]
+    fn parses_sample_entry() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        let a = m.find(ArtifactKind::Step, "16x2").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Step);
+        assert_eq!(a.config.p, 16);
+        assert_eq!(a.config.q, 2);
+        assert_eq!(a.p_pad, 128);
+        assert_eq!(a.theta, 56.0);
+        assert_eq!(a.config.params.mu_search, 0.125);
+        assert!(a.file.ends_with("tnn_step_16x2.hlo.txt"));
+        assert_eq!(m.tags(), vec!["16x2".to_string()]);
+    }
+
+    #[test]
+    fn padding_mismatch_is_rejected() {
+        let bad = SAMPLE.replace("p_pad = 128", "p_pad = 64");
+        let err = ArtifactManifest::parse(&bad, Path::new("/tmp")).unwrap_err();
+        assert!(err.to_string().contains("padding mismatch"), "{err}");
+    }
+
+    #[test]
+    fn missing_key_is_reported_with_section() {
+        let bad = SAMPLE.replace("theta = 56.0\n", "");
+        let err = ArtifactManifest::parse(&bad, Path::new("/tmp")).unwrap_err();
+        assert!(err.to_string().contains("theta"), "{err}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Design configuration: column specs, TNN hyper-parameters, the seven
+//! Table-II presets, artifact-manifest parsing, and user config files.
+//!
+//! The constants here mirror `python/compile/configs.py`; the integration
+//! tests cross-check them against the generated `artifacts/manifest.toml`.
+
+pub mod manifest;
+pub mod presets;
+pub mod toml;
+
+pub use manifest::{ArtifactKind, ArtifactManifest, ArtifactMeta};
+pub use presets::{paper_configs, test_configs, all_configs, by_tag};
+
+/// Response-function family of the neuron model (paper §II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Response {
+    /// Step-no-leak: each arrived spike adds its weight once.
+    Snl,
+    /// Ramp-no-leak: each arrived spike adds its weight per time unit.
+    Rnl,
+    /// Leaky integrate-and-fire (geometric decay per time unit).
+    Lif,
+}
+
+impl Response {
+    pub fn parse(s: &str) -> Option<Response> {
+        match s {
+            "snl" => Some(Response::Snl),
+            "rnl" => Some(Response::Rnl),
+            "lif" => Some(Response::Lif),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Response::Snl => "snl",
+            Response::Rnl => "rnl",
+            Response::Lif => "lif",
+        }
+    }
+}
+
+/// WTA tie-breaking policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieBreak {
+    Low,
+    High,
+}
+
+/// TNN hyper-parameters (must stay in sync with `TnnParams` in Python).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TnnParams {
+    /// Encoding window: input spike times in [0, T).
+    pub t: i32,
+    /// Response window: output spike times in [0, T_R]; T_R == "no spike".
+    pub t_r: i32,
+    /// Maximum (3-bit) synaptic weight.
+    pub w_max: i32,
+    /// Threshold as a fraction of p * w_max.
+    pub theta_frac: f32,
+    pub mu_capture: f32,
+    pub mu_backoff: f32,
+    pub mu_search: f32,
+    pub response: Response,
+    pub lif_decay: f32,
+    pub tie: TieBreak,
+    /// Sparse-encoding cutoff: normalized inputs below this produce no
+    /// spike (0.0 = dense code). See `sim::encode::encode_window`.
+    pub sparse_cutoff: f32,
+}
+
+impl Default for TnnParams {
+    fn default() -> Self {
+        TnnParams {
+            t: 8,
+            t_r: 32,
+            w_max: 7,
+            theta_frac: 0.2,
+            mu_capture: 1.0,
+            mu_backoff: 1.0,
+            mu_search: 0.125,
+            response: Response::Rnl,
+            lif_decay: 0.9,
+            tie: TieBreak::Low,
+            sparse_cutoff: 0.6,
+        }
+    }
+}
+
+impl TnnParams {
+    /// Firing threshold for a column with `p` synapses per neuron.
+    pub fn theta(&self, p: usize) -> f32 {
+        (self.theta_frac * p as f32 * self.w_max as f32).max(1.0)
+    }
+}
+
+/// One (p, q) column design targeted at a UCR benchmark/modality.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnConfig {
+    pub name: String,
+    pub modality: String,
+    /// Synapses per neuron == series length.
+    pub p: usize,
+    /// Neurons == clusters.
+    pub q: usize,
+    pub params: TnnParams,
+}
+
+impl ColumnConfig {
+    pub fn new(name: &str, modality: &str, p: usize, q: usize) -> Self {
+        ColumnConfig {
+            name: name.to_string(),
+            modality: modality.to_string(),
+            p,
+            q,
+            params: TnnParams::default(),
+        }
+    }
+
+    pub fn synapse_count(&self) -> usize {
+        self.p * self.q
+    }
+
+    pub fn tag(&self) -> String {
+        format!("{}x{}", self.p, self.q)
+    }
+
+    /// p padded to the MXU lane multiple (128), as in the Pallas kernel.
+    pub fn p_pad(&self) -> usize {
+        pad_to(self.p, 128)
+    }
+
+    /// q padded to the f32 sublane multiple (8).
+    pub fn q_pad(&self) -> usize {
+        pad_to(self.q, 8)
+    }
+
+    pub fn theta(&self) -> f32 {
+        self.params.theta(self.p)
+    }
+}
+
+pub fn pad_to(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_matches_python() {
+        assert_eq!(pad_to(65, 128), 128);
+        assert_eq!(pad_to(128, 128), 128);
+        assert_eq!(pad_to(129, 128), 256);
+        assert_eq!(pad_to(270, 128), 384);
+        assert_eq!(pad_to(2, 8), 8);
+        assert_eq!(pad_to(25, 8), 32);
+    }
+
+    #[test]
+    fn theta_matches_python_default() {
+        let p = TnnParams::default();
+        assert_eq!(p.theta(65), 0.2f32 * 65.0 * 7.0);
+        assert_eq!(p.theta(0), 1.0);
+    }
+
+    #[test]
+    fn tag_format() {
+        let c = ColumnConfig::new("ECG200", "ECG", 96, 2);
+        assert_eq!(c.tag(), "96x2");
+        assert_eq!(c.synapse_count(), 192);
+        assert_eq!(c.p_pad(), 128);
+        assert_eq!(c.q_pad(), 8);
+    }
+
+    #[test]
+    fn response_parse_roundtrip() {
+        for r in [Response::Snl, Response::Rnl, Response::Lif] {
+            assert_eq!(Response::parse(r.name()), Some(r));
+        }
+        assert_eq!(Response::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,116 @@
+//! The seven representative UCR column designs of Table II, plus the small
+//! test configs. Mirrors `PAPER_CONFIGS` / `TEST_CONFIGS` in
+//! `python/compile/configs.py`.
+
+use super::ColumnConfig;
+
+/// Table II of the paper: seven single-column designs across modalities.
+pub fn paper_configs() -> Vec<ColumnConfig> {
+    vec![
+        ColumnConfig::new("SonyAIBORobotSurface2", "Accelerometer", 65, 2),
+        ColumnConfig::new("ECG200", "ECG", 96, 2),
+        ColumnConfig::new("Wafer", "Fabrication process", 152, 2),
+        ColumnConfig::new("ToeSegmentation2", "Motion sensor", 343, 2),
+        ColumnConfig::new("Lightning2", "Optical + RF sensor", 637, 2),
+        ColumnConfig::new("Beef", "Food spectrograph", 470, 5),
+        ColumnConfig::new("WordSynonyms", "1D word outlines", 270, 25),
+    ]
+}
+
+/// Small configs used by tests and the quickstart example.
+pub fn test_configs() -> Vec<ColumnConfig> {
+    vec![
+        ColumnConfig::new("TinyTest", "synthetic", 16, 2),
+        ColumnConfig::new("SmallTest", "synthetic", 48, 4),
+    ]
+}
+
+pub fn all_configs() -> Vec<ColumnConfig> {
+    let mut v = test_configs();
+    v.extend(paper_configs());
+    v
+}
+
+/// Look up a config by its `{p}x{q}` tag.
+pub fn by_tag(tag: &str) -> Option<ColumnConfig> {
+    all_configs().into_iter().find(|c| c.tag() == tag)
+}
+
+/// Reference clustering numbers from Table II (rand index, normalized to
+/// k-means): (benchmark, DTCR, TNN). Used by the Table-2 bench harness to
+/// print paper-vs-measured.
+pub const TABLE2_PAPER: [(&str, f64, f64); 7] = [
+    ("SonyAIBORobotSurface2", 0.8354, 0.6066),
+    ("ECG200", 0.6648, 0.6648),
+    ("Wafer", 0.7338, 0.555),
+    ("ToeSegmentation2", 0.8286, 0.6683),
+    ("Lightning2", 0.5913, 0.577),
+    ("Beef", 0.8046, 0.731),
+    ("WordSynonyms", 0.8984, 0.8473),
+];
+
+/// Table III (leakage) paper values: (benchmark, synapses, FreePDK45 mW,
+/// ASAP7 uW, TNN7 uW).
+pub const TABLE3_PAPER: [(&str, usize, f64, f64, f64); 7] = [
+    ("SonyAIBORobotSurface2", 130, 0.299, 0.961, 0.57),
+    ("ECG200", 192, 0.442, 1.41, 0.84),
+    ("Wafer", 304, 0.717, 2.26, 1.34),
+    ("ToeSegmentation2", 686, 1.59, 5.09, 3.14),
+    ("Lightning2", 1274, 2.95, 9.81, 5.84),
+    ("Beef", 2350, 5.452, 17.4, 11.06),
+    ("WordSynonyms", 6750, 15.66, 46.69, 31.13),
+];
+
+/// Table IV (die area, um^2): (benchmark, synapses, FreePDK45, ASAP7, TNN7).
+pub const TABLE4_PAPER: [(&str, usize, f64, f64, f64); 7] = [
+    ("SonyAIBORobotSurface2", 130, 14284.466, 1028.67, 692.06),
+    ("ECG200", 192, 21036.08, 1513.05, 1015.8),
+    ("Wafer", 304, 33868.98, 2394.01, 1608.52),
+    ("ToeSegmentation2", 686, 75654.82, 5388.72, 3682.63),
+    ("Lightning2", 1274, 140502.84, 10184.45, 6860.68),
+    ("Beef", 2350, 259167.4, 18298.1, 12634.83),
+    ("WordSynonyms", 6750, 744422.4, 51158.20, 35303.88),
+];
+
+/// Fig 2 computation latencies (ns): three small columns on one floorplan
+/// plus the largest column.
+pub const FIG2_PAPER: [(&str, f64); 4] = [
+    ("65x2", 79.2),
+    ("96x2", 93.36),
+    ("152x2", 98.4),
+    ("270x25", 180.0),
+];
+
+/// Table V forecast regression coefficients reported by the paper (TNN7).
+pub const PAPER_AREA_FIT: (f64, f64) = (5.56, -94.9);
+pub const PAPER_LEAK_FIT: (f64, f64) = (0.00541, -0.725);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_paper_configs_with_table_synapse_counts() {
+        let cfgs = paper_configs();
+        assert_eq!(cfgs.len(), 7);
+        let syn: Vec<usize> = cfgs.iter().map(|c| c.synapse_count()).collect();
+        assert_eq!(syn, vec![130, 192, 304, 686, 1274, 2350, 6750]);
+    }
+
+    #[test]
+    fn by_tag_finds_all() {
+        for c in all_configs() {
+            let found = by_tag(&c.tag()).unwrap();
+            assert_eq!(found.name, c.name);
+        }
+        assert!(by_tag("999x9").is_none());
+    }
+
+    #[test]
+    fn paper_tables_are_consistent() {
+        for ((n3, s3, ..), (n4, s4, ..)) in TABLE3_PAPER.iter().zip(TABLE4_PAPER.iter()) {
+            assert_eq!(n3, n4);
+            assert_eq!(s3, s4);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supports the subset used by TNNGen config files and the AOT manifest:
+//! `[section]` headers, `key = value` with string / integer / float / bool
+//! values, `#` comments, and blank lines. Arrays of scalars (`[1, 2, 3]`)
+//! are supported for sweep configs. No nested tables, no multi-line strings.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: ordered sections, each an ordered key->value map.
+/// Keys before any `[section]` land in the "" (root) section.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub sections: Vec<(String, BTreeMap<String, Value>)>,
+}
+
+impl Document {
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, Value>> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, m)| m)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.section(section).and_then(|m| m.get(key))
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum TomlError {
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError::Parse { line, msg: msg.into() }
+}
+
+pub fn parse(text: &str) -> Result<Document, TomlError> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.sections.push((current.clone(), BTreeMap::new()));
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            current = name.to_string();
+            if doc.section(&current).is_none() {
+                doc.sections.push((current.clone(), BTreeMap::new()));
+            }
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, format!("expected `key = value`, got {line:?}")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let section = doc
+            .sections
+            .iter_mut()
+            .find(|(n, _)| *n == current)
+            .expect("current section exists");
+        section.1.insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // trailing comma
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+# top comment
+title = "tnngen"   # trailing comment
+[design]
+p = 65
+q = 2
+theta = 227.5
+tnn7 = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("tnngen"));
+        assert_eq!(doc.get("design", "p").unwrap().as_int(), Some(65));
+        assert_eq!(doc.get("design", "theta").unwrap().as_float(), Some(227.5));
+        assert_eq!(doc.get("design", "tnn7").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("sizes = [130, 304, 6750]\nnames = [\"a\", \"b\"]").unwrap();
+        let sizes = doc.get("", "sizes").unwrap().as_array().unwrap();
+        assert_eq!(sizes.iter().filter_map(|v| v.as_int()).collect::<Vec<_>>(), vec![130, 304, 6750]);
+        let names = doc.get("", "names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_section_merges() {
+        let doc = parse("[a]\nx = 1\n[a]\ny = 2").unwrap();
+        let a = doc.section("a").unwrap();
+        assert_eq!(a.len(), 2);
+    }
+}

@@ -1,0 +1,103 @@
+//! Design-space exploration (paper §II-A: "swift design space exploration"):
+//! sweep TNN hyper-parameters with the fast native simulator, score each
+//! point by clustering quality, and rank.
+
+use crate::cluster::pipeline::{ClusteringReport, TnnClustering};
+use crate::config::ColumnConfig;
+use crate::data::Dataset;
+
+use super::jobs::parallel_map;
+
+/// One axis of the sweep.
+#[derive(Debug, Clone)]
+pub struct SweepSpace {
+    pub theta_frac: Vec<f32>,
+    pub sparse_cutoff: Vec<f32>,
+    pub mu_capture: Vec<f32>,
+    pub mu_backoff: Vec<f32>,
+    pub mu_search: Vec<f32>,
+}
+
+impl Default for SweepSpace {
+    fn default() -> Self {
+        SweepSpace {
+            theta_frac: vec![0.15, 0.2, 0.3],
+            sparse_cutoff: vec![0.5, 0.6, 0.7],
+            mu_capture: vec![1.0],
+            mu_backoff: vec![1.0],
+            mu_search: vec![0.125],
+        }
+    }
+}
+
+impl SweepSpace {
+    /// Materialize the cartesian product as configs derived from `base`.
+    pub fn configs(&self, base: &ColumnConfig) -> Vec<ColumnConfig> {
+        let mut out = Vec::new();
+        for &tf in &self.theta_frac {
+            for &cut in &self.sparse_cutoff {
+                for &mc in &self.mu_capture {
+                    for &mb in &self.mu_backoff {
+                        for &ms in &self.mu_search {
+                            let mut c = base.clone();
+                            c.params.theta_frac = tf;
+                            c.params.sparse_cutoff = cut;
+                            c.params.mu_capture = mc;
+                            c.params.mu_backoff = mb;
+                            c.params.mu_search = ms;
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One explored point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub config: ColumnConfig,
+    pub report: ClusteringReport,
+}
+
+/// Run the sweep in parallel on the native simulator and return points
+/// sorted by TNN rand index, best first.
+pub fn explore(base: &ColumnConfig, ds: &Dataset, space: &SweepSpace, pipe: &TnnClustering) -> Vec<SweepPoint> {
+    let configs = space.configs(base);
+    let mut points: Vec<SweepPoint> = parallel_map(configs, |cfg| {
+        let report = pipe.run_native(&cfg, ds);
+        SweepPoint { config: cfg, report }
+    });
+    points.sort_by(|a, b| b.report.ri_tnn.partial_cmp(&a.report.ri_tnn).unwrap());
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generate;
+
+    #[test]
+    fn sweep_space_cartesian_size() {
+        let s = SweepSpace::default();
+        let base = ColumnConfig::new("S", "synthetic", 8, 2);
+        assert_eq!(s.configs(&base).len(), 3 * 3);
+    }
+
+    #[test]
+    fn explore_ranks_best_first() {
+        let base = ColumnConfig::new("X", "synthetic", 16, 2);
+        let ds = generate("ECG200", 16, 2, 20, 3);
+        let space = SweepSpace {
+            theta_frac: vec![0.2, 0.4],
+            sparse_cutoff: vec![0.6],
+            ..Default::default()
+        };
+        let pipe = TnnClustering { epochs: 2, seed: 1, n_per_split: 20 };
+        let points = explore(&base, &ds, &space, &pipe);
+        assert_eq!(points.len(), 2);
+        assert!(points[0].report.ri_tnn >= points[1].report.ri_tnn);
+    }
+}

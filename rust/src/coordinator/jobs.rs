@@ -1,0 +1,79 @@
+//! Minimal std::thread worker pool (offline substitute for tokio/rayon):
+//! order-preserving parallel map over CPU-bound jobs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Parallel map preserving input order. `f` runs on worker threads; the
+/// number of workers is min(jobs, available_parallelism).
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: Arc<Mutex<Vec<(usize, T)>>> =
+        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let f = &f;
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((idx, item)) => {
+                        let r = f(item);
+                        if tx.send((idx, r)).is_err() {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (idx, r) in rx {
+            out[idx] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker died")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect(), |i: i32| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavy_jobs_complete() {
+        let out = parallel_map((0..8).collect(), |i: u64| {
+            (0..200_000u64).fold(i, |a, b| a.wrapping_add(b))
+        });
+        assert_eq!(out.len(), 8);
+    }
+}

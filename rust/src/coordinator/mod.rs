@@ -1,0 +1,203 @@
+//! TNNGen coordinator: the L3 orchestration layer tying the functional
+//! simulator (PJRT artifacts / native sim), the hardware generator and the
+//! EDA flow into single design runs, multi-design campaigns (with a
+//! std::thread worker pool) and design-space exploration.
+
+pub mod explorer;
+pub mod jobs;
+
+use anyhow::Result;
+
+use crate::cluster::pipeline::{ClusteringReport, TnnClustering};
+use crate::config::{ArtifactManifest, ColumnConfig};
+use crate::data::{load_benchmark, Dataset};
+use crate::eda::{run_flow, CellLibrary, FlowOpts, FlowReport};
+use crate::forecast::Forecaster;
+use crate::runtime::Engine;
+
+/// How the functional simulation is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimBackend {
+    /// PJRT artifacts (the request path: JAX/Pallas-lowered HLO).
+    Pjrt,
+    /// Native Rust cycle-accurate simulator.
+    Native,
+}
+
+/// Everything TNNGen produces for one design.
+#[derive(Debug, Clone)]
+pub struct DesignRun {
+    pub config: ColumnConfig,
+    pub clustering: Option<ClusteringReport>,
+    /// One flow report per requested library.
+    pub flows: Vec<FlowReport>,
+}
+
+/// Coordinator options for a campaign.
+pub struct Campaign {
+    pub clustering: Option<TnnClustering>,
+    pub backend: SimBackend,
+    pub libraries: Vec<CellLibrary>,
+    pub flow_opts: FlowOpts,
+    /// Samples per split for synthetic data.
+    pub n_per_split: usize,
+    pub data_seed: u64,
+}
+
+impl Default for Campaign {
+    fn default() -> Self {
+        Campaign {
+            clustering: Some(TnnClustering::default()),
+            backend: SimBackend::Native,
+            libraries: crate::eda::all_libraries(),
+            flow_opts: FlowOpts::default(),
+            n_per_split: 60,
+            data_seed: 42,
+        }
+    }
+}
+
+/// The TNNGen coordinator.
+pub struct Coordinator {
+    engine: Option<Engine>,
+    manifest: Option<ArtifactManifest>,
+}
+
+impl Coordinator {
+    /// Native-only coordinator (no PJRT needed).
+    pub fn native() -> Self {
+        Coordinator { engine: None, manifest: None }
+    }
+
+    /// Coordinator with the PJRT engine + artifact manifest loaded.
+    pub fn with_artifacts(artifact_dir: &std::path::Path) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        Ok(Coordinator { engine: Some(engine), manifest: Some(manifest) })
+    }
+
+    pub fn dataset(&self, cfg: &ColumnConfig, campaign: &Campaign) -> Dataset {
+        load_benchmark(&cfg.name, cfg.p, cfg.q, campaign.n_per_split, campaign.data_seed)
+    }
+
+    /// Functional-simulation + clustering evaluation for one design.
+    pub fn run_clustering(
+        &self,
+        cfg: &ColumnConfig,
+        ds: &Dataset,
+        pipe: &TnnClustering,
+        backend: SimBackend,
+    ) -> Result<ClusteringReport> {
+        match backend {
+            SimBackend::Native => Ok(pipe.run_native(cfg, ds)),
+            SimBackend::Pjrt => {
+                let engine = self
+                    .engine
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("PJRT engine not initialized"))?;
+                let manifest = self
+                    .manifest
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("artifact manifest not loaded"))?;
+                pipe.run_pjrt(engine, manifest, cfg, ds)
+            }
+        }
+    }
+
+    /// Full TNNGen run for one design: functional sim + hardware flow on
+    /// every requested library.
+    pub fn run_design(&self, cfg: &ColumnConfig, campaign: &Campaign) -> Result<DesignRun> {
+        let clustering = match &campaign.clustering {
+            Some(pipe) => {
+                let ds = self.dataset(cfg, campaign);
+                Some(self.run_clustering(cfg, &ds, pipe, campaign.backend)?)
+            }
+            None => None,
+        };
+        let mut flows = Vec::new();
+        for lib in &campaign.libraries {
+            flows.push(run_flow(cfg, lib, &campaign.flow_opts)?);
+        }
+        Ok(DesignRun { config: cfg.clone(), clustering, flows })
+    }
+
+    /// Run a campaign over several designs in parallel (hardware flows are
+    /// CPU-bound and independent; PJRT clustering stays on the caller
+    /// thread because the engine is not Sync).
+    pub fn run_campaign(&self, configs: &[ColumnConfig], campaign: &Campaign) -> Result<Vec<DesignRun>> {
+        if campaign.backend == SimBackend::Pjrt {
+            // Sequential: the PJRT client is single-threaded here.
+            return configs.iter().map(|c| self.run_design(c, campaign)).collect();
+        }
+        let results = jobs::parallel_map(configs.to_vec(), |cfg| {
+            let coord = Coordinator::native();
+            coord.run_design(&cfg, campaign)
+        });
+        results.into_iter().collect()
+    }
+
+    /// Train a forecaster on a sweep of flow runs for `lib` (paper §III-D).
+    pub fn train_forecaster(
+        &self,
+        sizes: &[(usize, usize)],
+        lib: &CellLibrary,
+        opts: &FlowOpts,
+    ) -> Result<Forecaster> {
+        let reports: Result<Vec<FlowReport>> = sizes
+            .iter()
+            .map(|&(p, q)| {
+                let cfg = ColumnConfig::new(&format!("sweep_{p}x{q}"), "sweep", p, q);
+                run_flow(&cfg, lib, opts)
+            })
+            .collect();
+        Forecaster::train(&reports?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eda::asap7;
+
+    #[test]
+    fn native_design_run_end_to_end() {
+        let coord = Coordinator::native();
+        let cfg = ColumnConfig::new("CoordTest", "synthetic", 8, 2);
+        let campaign = Campaign {
+            libraries: vec![asap7()],
+            n_per_split: 20,
+            clustering: Some(TnnClustering { epochs: 2, seed: 1, n_per_split: 20 }),
+            ..Default::default()
+        };
+        let run = coord.run_design(&cfg, &campaign).unwrap();
+        assert!(run.clustering.is_some());
+        assert_eq!(run.flows.len(), 1);
+        assert!(run.flows[0].die_area_um2 > 0.0);
+    }
+
+    #[test]
+    fn campaign_runs_multiple_designs() {
+        let coord = Coordinator::native();
+        let cfgs = vec![
+            ColumnConfig::new("A", "synthetic", 6, 2),
+            ColumnConfig::new("B", "synthetic", 10, 2),
+        ];
+        let campaign = Campaign {
+            libraries: vec![asap7()],
+            clustering: None,
+            ..Default::default()
+        };
+        let runs = coord.run_campaign(&cfgs, &campaign).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert!(runs[0].flows[0].synapse_count < runs[1].flows[0].synapse_count);
+    }
+
+    #[test]
+    fn forecaster_training_through_coordinator() {
+        let coord = Coordinator::native();
+        let fc = coord
+            .train_forecaster(&[(8, 2), (16, 2), (24, 2)], &asap7(), &FlowOpts::default())
+            .unwrap();
+        assert!(fc.area_fit.0 > 0.0);
+    }
+}

@@ -1,0 +1,327 @@
+//! Seeded synthetic generators for the seven UCR sensory modalities.
+//!
+//! Each generator produces per-class prototype signals with intra-class
+//! variation (noise, amplitude/phase jitter, time warping) so that
+//! clustering is non-trivial but learnable — the role the real UCR sets
+//! play in Table II. Class structure is what matters for the rand-index
+//! comparison; the waveform families follow each benchmark's modality.
+
+use crate::util::Rng;
+
+use super::Dataset;
+
+/// Sensory modality families (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Modality {
+    /// SonyAIBORobotSurface2: robot accelerometer — piecewise oscillations.
+    Accelerometer,
+    /// ECG200: PQRST-like pulse trains.
+    Ecg,
+    /// Wafer: fabrication-process traces — plateaus with step changes.
+    Wafer,
+    /// ToeSegmentation2: gait motion — bursts over baseline.
+    Motion,
+    /// Lightning2: optical/RF transients — sharp attack, slow decay.
+    Lightning,
+    /// Beef: food spectrographs — smooth multi-peak spectra.
+    Spectrograph,
+    /// WordSynonyms: 1D word outlines — smooth closed contours.
+    WordOutline,
+}
+
+/// Map a benchmark name to its modality (defaults to Accelerometer).
+pub fn generator_for(name: &str) -> Modality {
+    match name {
+        "SonyAIBORobotSurface2" => Modality::Accelerometer,
+        "ECG200" => Modality::Ecg,
+        "Wafer" => Modality::Wafer,
+        "ToeSegmentation2" => Modality::Motion,
+        "Lightning2" => Modality::Lightning,
+        "Beef" => Modality::Spectrograph,
+        "WordSynonyms" => Modality::WordOutline,
+        _ => Modality::Accelerometer,
+    }
+}
+
+/// Class prototype, built ONCE per (dataset seed, class) from a
+/// class-seeded RNG: all samples of a class share this waveform and differ
+/// only by the per-sample corruption. This is what makes the synthetic sets
+/// clusterable at all (within-class distance << across-class distance).
+fn prototype(modality: Modality, class: usize, rng: &mut Rng, len: usize) -> Vec<f32> {
+    let n = len;
+    let mut out = vec![0.0f32; n];
+    let tau = |i: usize| i as f64 / n as f64;
+    match modality {
+        Modality::Accelerometer => {
+            // Surface-dependent vibration: class sets base frequency + AM.
+            let f = 3.0 + 2.5 * class as f64 + rng.range_f64(-0.2, 0.2);
+            let am = 0.5 + 0.4 * class as f64;
+            let ph = rng.range_f64(0.0, std::f64::consts::TAU);
+            for (i, o) in out.iter_mut().enumerate() {
+                let t = tau(i);
+                let carrier = (std::f64::consts::TAU * f * t + ph).sin();
+                let env = 1.0 + am * (std::f64::consts::TAU * 1.5 * t).sin();
+                *o = (carrier * env) as f32;
+            }
+        }
+        Modality::Ecg => {
+            // One heartbeat per window; class changes R amplitude, T-wave and
+            // baseline sag (normal vs ischemia-like, per ECG200's framing).
+            let r_amp = 2.2 - 0.9 * class as f64;
+            let t_amp = 0.45 + 0.35 * class as f64;
+            let sag = 0.25 * class as f64;
+            let r_pos = 0.3 + rng.range_f64(-0.03, 0.03);
+            for (i, o) in out.iter_mut().enumerate() {
+                let t = tau(i);
+                let g = |c: f64, w: f64, a: f64| a * (-((t - c) * (t - c)) / (2.0 * w * w)).exp();
+                let mut v = g(r_pos, 0.012, r_amp); // R
+                v += g(r_pos - 0.045, 0.02, -0.35); // Q
+                v += g(r_pos + 0.05, 0.025, -0.4 - 0.2 * class as f64); // S
+                v += g(r_pos - 0.12, 0.035, 0.25); // P
+                v += g(r_pos + 0.28, 0.06, t_amp); // T
+                v -= sag * (std::f64::consts::PI * t).sin();
+                *o = v as f32;
+            }
+        }
+        Modality::Wafer => {
+            // Process trace: plateaus with class-dependent step schedule.
+            let steps = 4 + class * 2;
+            let mut level = rng.range_f64(-0.5, 0.5);
+            let mut edges: Vec<usize> = (0..steps).map(|_| rng.below(n)).collect();
+            edges.sort_unstable();
+            let mut e = 0usize;
+            for (i, o) in out.iter_mut().enumerate() {
+                while e < edges.len() && i >= edges[e] {
+                    level += if class == 0 {
+                        rng.range_f64(-1.0, 1.0)
+                    } else {
+                        // Faulty process: larger, biased excursions.
+                        rng.range_f64(-0.4, 2.0)
+                    };
+                    e += 1;
+                }
+                *o = level as f32;
+            }
+        }
+        Modality::Motion => {
+            // Gait: periodic bursts; class changes duty cycle and asymmetry.
+            let period = 0.25 - 0.08 * class as f64;
+            let duty = 0.3 + 0.25 * class as f64;
+            let ph = rng.range_f64(0.0, period);
+            for (i, o) in out.iter_mut().enumerate() {
+                let t = (tau(i) + ph) % period / period;
+                let burst = if t < duty {
+                    (std::f64::consts::PI * t / duty).sin().powi(2)
+                } else {
+                    0.0
+                };
+                *o = (burst * (1.0 + 0.3 * class as f64)) as f32;
+            }
+        }
+        Modality::Lightning => {
+            // Transient: sharp attack, exponential decay; class sets the
+            // number of strokes (single vs multi-stroke flashes).
+            let strokes = 1 + class * 2;
+            let mut centers: Vec<f64> = (0..strokes).map(|_| rng.range_f64(0.1, 0.8)).collect();
+            centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (i, o) in out.iter_mut().enumerate() {
+                let t = tau(i);
+                let mut v = 0.0;
+                for &c in &centers {
+                    if t >= c {
+                        v += ((t - c) * -14.0).exp() * (1.0 - 0.25 * class as f64);
+                    }
+                }
+                *o = v as f32;
+            }
+        }
+        Modality::Spectrograph => {
+            // Spectra: smooth mixture of Gaussian absorption peaks whose
+            // positions shift with class (cut/adulteration level).
+            let peaks = 5;
+            for k in 0..peaks {
+                let c = (k as f64 + 0.5) / peaks as f64 + 0.04 * class as f64
+                    + rng.range_f64(-0.01, 0.01);
+                let a = 0.5 + 0.5 * ((class + k) % 3) as f64;
+                let w = 0.035 + 0.005 * k as f64;
+                for (i, o) in out.iter_mut().enumerate() {
+                    let t = tau(i);
+                    *o += (a * (-((t - c) * (t - c)) / (2.0 * w * w)).exp()) as f32;
+                }
+            }
+        }
+        Modality::WordOutline => {
+            // Word outlines: band-limited closed contour from a few Fourier
+            // components; coefficients are a deterministic function of class.
+            let mut crng = Rng::new(0x5730u64 ^ (class as u64).wrapping_mul(0x9E37));
+            let harmonics = 6;
+            let coef: Vec<(f64, f64)> = (0..harmonics)
+                .map(|h| {
+                    let a = crng.range_f64(-1.0, 1.0) / (1.0 + h as f64);
+                    let b = crng.range_f64(0.0, std::f64::consts::TAU);
+                    (a, b)
+                })
+                .collect();
+            let ph = rng.range_f64(-0.02, 0.02);
+            for (i, o) in out.iter_mut().enumerate() {
+                let t = tau(i) + ph;
+                let mut v = 0.0;
+                for (h, &(a, b)) in coef.iter().enumerate() {
+                    v += a * (std::f64::consts::TAU * (h + 1) as f64 * t + b).cos();
+                }
+                *o = v as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Small random time warp + additive noise (intra-class variation).
+fn corrupt(x: &[f32], rng: &mut Rng, noise: f64, warp: f64) -> Vec<f32> {
+    let n = x.len();
+    let shift = rng.range_f64(-warp, warp) * n as f64;
+    let stretch = 1.0 + rng.range_f64(-warp, warp);
+    (0..n)
+        .map(|i| {
+            let src = (i as f64 * stretch + shift).rem_euclid(n as f64);
+            let lo = src.floor() as usize % n;
+            let hi = (lo + 1) % n;
+            let frac = (src - src.floor()) as f32;
+            let v = x[lo] * (1.0 - frac) + x[hi] * frac;
+            v + (rng.normal() * noise) as f32
+        })
+        .collect()
+}
+
+/// Generate a synthetic dataset with `n_per_split` samples in each of
+/// train/test, class-balanced, shuffled deterministically by `seed`.
+pub fn generate(name: &str, len: usize, classes: usize, n_per_split: usize, seed: u64) -> Dataset {
+    let modality = generator_for(name);
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    // Per-modality difficulty: noise/warp chosen so TNN clustering is
+    // imperfect but informative (Table II band).
+    let (noise, warp) = match modality {
+        Modality::Accelerometer => (0.35, 0.06),
+        Modality::Ecg => (0.18, 0.02),
+        Modality::Wafer => (0.30, 0.04),
+        Modality::Motion => (0.25, 0.05),
+        Modality::Lightning => (0.12, 0.05),
+        Modality::Spectrograph => (0.10, 0.015),
+        Modality::WordOutline => (0.08, 0.01),
+    };
+    // Build each class prototype once from a class-seeded stream.
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|c| {
+            let mut crng = Rng::new(seed ^ 0xC1A5 ^ (c as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            prototype(modality, c, &mut crng, len)
+        })
+        .collect();
+    let make_split = |rng: &mut Rng, n: usize| {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % classes;
+            xs.push(corrupt(&protos[class], rng, noise, warp));
+            ys.push(class);
+        }
+        // Deterministic shuffle so classes are interleaved for online STDP.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let xs2 = order.iter().map(|&i| xs[i].clone()).collect();
+        let ys2 = order.iter().map(|&i| ys[i]).collect();
+        (xs2, ys2)
+    };
+    let (train, train_labels) = make_split(&mut rng, n_per_split);
+    let (test, test_labels) = make_split(&mut rng, n_per_split);
+    Dataset {
+        name: name.to_string(),
+        len,
+        classes,
+        train,
+        train_labels,
+        test,
+        test_labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::dist2;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = generate("ECG200", 96, 2, 40, 7);
+        let b = generate("ECG200", 96, 2, 40, 7);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test_labels, b.test_labels);
+    }
+
+    #[test]
+    fn generate_valid_for_all_benchmarks() {
+        for (name, len, classes) in [
+            ("SonyAIBORobotSurface2", 65usize, 2usize),
+            ("ECG200", 96, 2),
+            ("Wafer", 152, 2),
+            ("ToeSegmentation2", 343, 2),
+            ("Lightning2", 637, 2),
+            ("Beef", 470, 5),
+            ("WordSynonyms", 270, 25),
+        ] {
+            let ds = generate(name, len, classes, 2 * classes.max(10), 3);
+            ds.validate().unwrap();
+            assert_eq!(ds.len, len);
+            assert_eq!(ds.classes, classes);
+            // Class balance within one sample.
+            let mut counts = vec![0usize; classes];
+            for &l in &ds.train_labels {
+                counts[l] += 1;
+            }
+            assert!(counts.iter().all(|&c| c > 0), "{name}: empty class");
+        }
+    }
+
+    #[test]
+    fn classes_are_separated_in_signal_space() {
+        // Same-class pairs should be closer on average than cross-class
+        // pairs; otherwise clustering is impossible by construction.
+        for name in ["ECG200", "Beef", "WordSynonyms"] {
+            let (len, classes) = match name {
+                "ECG200" => (96, 2),
+                "Beef" => (470, 5),
+                _ => (270, 25),
+            };
+            let ds = generate(name, len, classes, 6 * classes, 11);
+            let (xs, ys) = ds.all();
+            let xs: Vec<Vec<f64>> = xs
+                .iter()
+                .map(|x| x.iter().map(|&v| v as f64).collect())
+                .collect();
+            let (mut within, mut wn, mut across, mut an) = (0.0, 0, 0.0, 0);
+            for i in 0..xs.len() {
+                for j in (i + 1)..xs.len() {
+                    let d = dist2(&xs[i], &xs[j]);
+                    if ys[i] == ys[j] {
+                        within += d;
+                        wn += 1;
+                    } else {
+                        across += d;
+                        an += 1;
+                    }
+                }
+            }
+            let (within, across) = (within / wn as f64, across / an as f64);
+            assert!(
+                across > within * 1.15,
+                "{name}: across {across:.3} vs within {within:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate("Wafer", 152, 2, 10, 1);
+        let b = generate("Wafer", 152, 2, 10, 2);
+        assert_ne!(a.train, b.train);
+    }
+}

@@ -1,0 +1,62 @@
+//! Time-series data substrate.
+//!
+//! The paper evaluates on seven UCR-archive datasets. The archive is not
+//! redistributable inside this image, so [`generators`] synthesizes
+//! class-structured series per sensory modality with the exact (length,
+//! #classes) of each Table-II benchmark (see DESIGN.md substitution table).
+//! If real UCR `.tsv` files are present under `data/ucr/<Name>/`, [`ucr`]
+//! loads them instead and the synthetic path is bypassed.
+
+pub mod generators;
+pub mod ucr;
+
+pub use generators::{generate, generator_for, Modality};
+
+/// A labeled time-series dataset (train/test split in UCR style).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Series length (p of the column).
+    pub len: usize,
+    /// Number of classes (q of the column).
+    pub classes: usize,
+    pub train: Vec<Vec<f32>>,
+    pub train_labels: Vec<usize>,
+    pub test: Vec<Vec<f32>>,
+    pub test_labels: Vec<usize>,
+}
+
+impl Dataset {
+    /// All samples (train + test) and labels, as the clustering task sees
+    /// them (unsupervised: splits are merged, following ref [2]).
+    pub fn all(&self) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut xs = self.train.clone();
+        xs.extend(self.test.iter().cloned());
+        let mut ys = self.train_labels.clone();
+        ys.extend(self.test_labels.iter().cloned());
+        (xs, ys)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(self.train.len() == self.train_labels.len(), "train size mismatch");
+        ensure!(self.test.len() == self.test_labels.len(), "test size mismatch");
+        for x in self.train.iter().chain(self.test.iter()) {
+            ensure!(x.len() == self.len, "series length mismatch");
+            ensure!(x.iter().all(|v| v.is_finite()), "non-finite sample");
+        }
+        for &l in self.train_labels.iter().chain(self.test_labels.iter()) {
+            ensure!(l < self.classes, "label {} out of range", l);
+        }
+        Ok(())
+    }
+}
+
+/// Load the dataset for a benchmark: real UCR files when available, the
+/// seeded synthetic generator otherwise.
+pub fn load_benchmark(name: &str, len: usize, classes: usize, n_per_split: usize, seed: u64) -> Dataset {
+    if let Ok(ds) = ucr::load_ucr_dir(std::path::Path::new("data/ucr"), name) {
+        return ds;
+    }
+    generate(name, len, classes, n_per_split, seed)
+}

@@ -1,0 +1,138 @@
+//! Loader for real UCR-archive files (2018 layout): tab-separated values,
+//! first column = class label, one series per row, files named
+//! `<Name>_TRAIN.tsv` / `<Name>_TEST.tsv` under `data/ucr/<Name>/`.
+//!
+//! Entirely optional: when the files are absent (this image has no UCR
+//! archive) the synthetic generators are used instead.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Parse one UCR tsv split into (series, raw labels).
+pub fn parse_tsv(text: &str) -> Result<(Vec<Vec<f32>>, Vec<i64>)> {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let label: i64 = fields
+            .next()
+            .context("empty row")?
+            .parse()
+            .or_else(|_| -> Result<i64, std::num::ParseFloatError> {
+                // Some UCR sets store labels as floats ("1.0").
+                Ok(line.split_whitespace().next().unwrap().parse::<f64>()? as i64)
+            })
+            .with_context(|| format!("row {}: bad label", idx + 1))?;
+        let series: Vec<f32> = fields
+            .map(|f| f.parse::<f32>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("row {}: bad value", idx + 1))?;
+        if series.is_empty() {
+            bail!("row {}: no values", idx + 1);
+        }
+        xs.push(series);
+        ys.push(label);
+    }
+    if xs.is_empty() {
+        bail!("empty tsv");
+    }
+    let len = xs[0].len();
+    if xs.iter().any(|x| x.len() != len) {
+        bail!("ragged series lengths");
+    }
+    Ok((xs, ys))
+}
+
+/// Remap arbitrary integer labels (UCR uses 1..k, sometimes -1/1) to 0..k-1.
+pub fn normalize_labels(raw: &[i64]) -> (Vec<usize>, usize) {
+    let mut map = BTreeMap::new();
+    for &l in raw {
+        let next = map.len();
+        map.entry(l).or_insert(next);
+    }
+    (raw.iter().map(|l| map[l]).collect(), map.len())
+}
+
+/// Load `<root>/<name>/<name>_TRAIN.tsv` + `_TEST.tsv`.
+pub fn load_ucr_dir(root: &Path, name: &str) -> Result<Dataset> {
+    let dir = root.join(name);
+    let train_text = std::fs::read_to_string(dir.join(format!("{name}_TRAIN.tsv")))
+        .with_context(|| format!("no UCR train file for {name}"))?;
+    let test_text = std::fs::read_to_string(dir.join(format!("{name}_TEST.tsv")))
+        .with_context(|| format!("no UCR test file for {name}"))?;
+    let (train, train_raw) = parse_tsv(&train_text)?;
+    let (test, test_raw) = parse_tsv(&test_text)?;
+    if train[0].len() != test[0].len() {
+        bail!("train/test length mismatch");
+    }
+    let mut all_raw = train_raw.clone();
+    all_raw.extend(&test_raw);
+    let (all_labels, classes) = normalize_labels(&all_raw);
+    let (train_labels, test_labels) = (
+        all_labels[..train_raw.len()].to_vec(),
+        all_labels[train_raw.len()..].to_vec(),
+    );
+    let ds = Dataset {
+        name: name.to_string(),
+        len: train[0].len(),
+        classes,
+        train,
+        train_labels,
+        test,
+        test_labels,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tsv_basic() {
+        let (xs, ys) = parse_tsv("1\t0.5\t0.25\n-1\t1.0\t2.0\n").unwrap();
+        assert_eq!(xs, vec![vec![0.5, 0.25], vec![1.0, 2.0]]);
+        assert_eq!(ys, vec![1, -1]);
+    }
+
+    #[test]
+    fn parse_tsv_rejects_ragged() {
+        assert!(parse_tsv("1\t0.5\n1\t0.5\t0.7\n").is_err());
+        assert!(parse_tsv("").is_err());
+    }
+
+    #[test]
+    fn normalize_labels_compacts() {
+        let (labels, k) = normalize_labels(&[5, -1, 5, 7, -1]);
+        assert_eq!(k, 3);
+        assert_eq!(labels, vec![0, 1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(load_ucr_dir(Path::new("/nonexistent"), "ECG200").is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempdir() {
+        let dir = std::env::temp_dir().join("tnngen_ucr_test").join("Toy");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("Toy_TRAIN.tsv"), "1\t0.1\t0.2\n2\t0.3\t0.4\n").unwrap();
+        std::fs::write(dir.join("Toy_TEST.tsv"), "2\t0.5\t0.6\n").unwrap();
+        let ds = load_ucr_dir(dir.parent().unwrap(), "Toy").unwrap();
+        assert_eq!(ds.len, 2);
+        assert_eq!(ds.classes, 2);
+        assert_eq!(ds.train_labels, vec![0, 1]);
+        assert_eq!(ds.test_labels, vec![1]);
+        std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+    }
+}

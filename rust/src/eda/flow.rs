@@ -1,0 +1,167 @@
+//! Flow orchestration: RTL -> synthesis -> placement -> routing -> STA ->
+//! power, with per-stage wall-clock measurement (the data behind Fig 3 and
+//! the §III-C runtime claims).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ColumnConfig;
+use crate::rtl::{generate_column_silicon, ColumnRtl};
+
+use super::library::CellLibrary;
+use super::placement::{place, PlaceOpts, Placement};
+use super::power::{self, PowerReport, DEFAULT_ACTIVITY};
+use super::routing::{route, RoutingResult};
+use super::sta::{analyze as sta_analyze, computation_latency_ns, TimingReport};
+use super::synthesis::{synthesize, MappedDesign};
+
+/// Per-stage wall-clock runtimes (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct StageRuntimes {
+    pub rtl_gen_s: f64,
+    pub synthesis_s: f64,
+    pub placement_s: f64,
+    pub routing_s: f64,
+    pub sta_s: f64,
+    pub power_s: f64,
+}
+
+impl StageRuntimes {
+    /// Place-and-route runtime (the Fig-3 metric).
+    pub fn pnr_s(&self) -> f64 {
+        self.placement_s + self.routing_s
+    }
+    /// Full hardware process flow (the §III-C -47% metric).
+    pub fn full_flow_s(&self) -> f64 {
+        self.synthesis_s + self.pnr_s() + self.sta_s + self.power_s
+    }
+}
+
+/// Complete post-layout report for one (design, library) flow run.
+#[derive(Debug, Clone)]
+pub struct FlowReport {
+    pub design: String,
+    pub tag: String,
+    pub library: String,
+    pub synapse_count: usize,
+    pub gates_in: usize,
+    pub instances: usize,
+    pub macro_instances: usize,
+    /// Post-layout die area (um^2) — the Table-IV metric.
+    pub die_area_um2: f64,
+    pub cell_area_um2: f64,
+    /// Post-layout leakage — the Table-III metric.
+    pub leakage_uw: f64,
+    pub power: PowerReport,
+    pub timing: TimingReport,
+    /// Per-sample computation latency (ns) — the Fig-2 metric.
+    pub latency_ns: f64,
+    pub wirelength_um: f64,
+    pub runtimes: StageRuntimes,
+}
+
+/// Flow options.
+#[derive(Debug, Clone, Default)]
+pub struct FlowOpts {
+    pub place: PlaceOpts,
+    /// Override the operating frequency for power (default: fmax).
+    pub freq_mhz: Option<f64>,
+    pub activity: Option<f64>,
+}
+
+/// Run the full hardware flow for one column config on one library.
+pub fn run_flow(cfg: &ColumnConfig, lib: &CellLibrary, opts: &FlowOpts) -> Result<FlowReport> {
+    let t0 = Instant::now();
+    let rtl = generate_column_silicon(cfg)?;
+    let rtl_gen_s = t0.elapsed().as_secs_f64();
+    run_flow_on_rtl(&rtl, lib, opts, rtl_gen_s)
+}
+
+/// Run the flow on pre-generated RTL (lets benches reuse the netlist).
+pub fn run_flow_on_rtl(
+    rtl: &ColumnRtl,
+    lib: &CellLibrary,
+    opts: &FlowOpts,
+    rtl_gen_s: f64,
+) -> Result<FlowReport> {
+    let cfg = &rtl.config;
+
+    let t = Instant::now();
+    let design: MappedDesign = synthesize(&rtl.netlist, lib);
+    let synthesis_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let placement: Placement = place(&design, &opts.place);
+    let placement_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let routing: RoutingResult = route(&design, &placement);
+    let routing_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let timing = sta_analyze(&design, lib, &routing)?;
+    let sta_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let freq = opts.freq_mhz.unwrap_or(timing.fmax_mhz);
+    let activity = opts.activity.unwrap_or(DEFAULT_ACTIVITY);
+    let power = power::analyze(&design, lib, &routing, freq, activity);
+    let power_s = t.elapsed().as_secs_f64();
+
+    let latency_ns = computation_latency_ns(timing.clock_period_ps, cfg.params.t_r);
+
+    Ok(FlowReport {
+        design: cfg.name.clone(),
+        tag: cfg.tag(),
+        library: lib.name.clone(),
+        synapse_count: cfg.synapse_count(),
+        gates_in: design.stats.gates_in,
+        instances: design.instances.len(),
+        macro_instances: design.stats.macro_instances,
+        die_area_um2: placement.die_area_um2,
+        cell_area_um2: placement.cell_area_um2,
+        leakage_uw: power.leakage_uw(),
+        power,
+        timing,
+        latency_ns,
+        wirelength_um: routing.wirelength_um,
+        runtimes: StageRuntimes {
+            rtl_gen_s,
+            synthesis_s,
+            placement_s,
+            routing_s,
+            sta_s,
+            power_s,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ColumnConfig;
+    use crate::eda::cells::{asap7, tnn7};
+
+    #[test]
+    fn flow_produces_complete_report() {
+        let cfg = ColumnConfig::new("FlowTest", "synthetic", 8, 2);
+        let r = run_flow(&cfg, &asap7(), &FlowOpts::default()).unwrap();
+        assert_eq!(r.synapse_count, 16);
+        assert!(r.die_area_um2 > 0.0);
+        assert!(r.leakage_uw > 0.0);
+        assert!(r.latency_ns > 0.0);
+        assert!(r.runtimes.full_flow_s() > 0.0);
+    }
+
+    #[test]
+    fn tnn7_flow_beats_asap7_on_area_leakage_and_instances() {
+        let cfg = ColumnConfig::new("FlowCmp", "synthetic", 12, 2);
+        let a = run_flow(&cfg, &asap7(), &FlowOpts::default()).unwrap();
+        let t = run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap();
+        assert!(t.die_area_um2 < a.die_area_um2);
+        assert!(t.leakage_uw < a.leakage_uw);
+        assert!(t.instances < a.instances);
+        assert!(t.macro_instances > 0);
+    }
+}

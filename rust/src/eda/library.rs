@@ -1,0 +1,163 @@
+//! Cell-library model: the Liberty-file abstraction the synthesis, STA,
+//! power and placement stages consume.
+//!
+//! Three libraries mirror the paper's Table I support matrix: FreePDK45
+//! (45 nm bulk), ASAP7 (7 nm FinFET predictive) and TNN7 (ASAP7 plus the
+//! custom TNN macro suite of ref [8]). Per-cell constants are calibrated to
+//! published PDK geometry and to the per-synapse aggregates implied by the
+//! paper's Tables III/IV — see DESIGN.md §Calibration.
+
+use std::collections::HashMap;
+
+use crate::rtl::GateKind;
+
+/// Timing/power/geometry model for one standard cell or macro.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub name: String,
+    /// Die area in um^2.
+    pub area_um2: f64,
+    /// Leakage power in nW.
+    pub leakage_nw: f64,
+    /// Intrinsic propagation delay in ps.
+    pub delay_ps: f64,
+    /// Input capacitance in fF (per pin).
+    pub input_cap_ff: f64,
+    /// Switching energy per output toggle in fJ.
+    pub switch_energy_fj: f64,
+    /// Generic gates this cell implements (1 for std cells, >1 for macros).
+    pub gate_equivalents: usize,
+}
+
+/// Technology node parameters shared by all cells of a library.
+#[derive(Debug, Clone)]
+pub struct TechParams {
+    /// Standard-cell row height in um.
+    pub row_height_um: f64,
+    /// Wire resistance-capacitance delay per um of routed wire, in ps/um.
+    pub wire_delay_ps_per_um: f64,
+    /// Routed-wirelength capacitance in fF/um (dynamic power).
+    pub wire_cap_ff_per_um: f64,
+    /// Target placement utilization (0..1).
+    pub utilization: f64,
+    /// Supply voltage (V).
+    pub vdd: f64,
+}
+
+/// A cell library (FreePDK45 / ASAP7 / TNN7).
+#[derive(Debug, Clone)]
+pub struct CellLibrary {
+    pub name: String,
+    pub node_nm: u32,
+    pub tech: TechParams,
+    /// Mapping from generic gate kind to the chosen std cell.
+    std_cells: HashMap<GateKind, Cell>,
+    /// Macro cells (TNN7), looked up by macro name.
+    macros: HashMap<String, Cell>,
+}
+
+impl CellLibrary {
+    pub fn new(name: &str, node_nm: u32, tech: TechParams) -> Self {
+        CellLibrary {
+            name: name.to_string(),
+            node_nm,
+            tech,
+            std_cells: HashMap::new(),
+            macros: HashMap::new(),
+        }
+    }
+
+    pub fn add_std_cell(&mut self, kind: GateKind, cell: Cell) {
+        self.std_cells.insert(kind, cell);
+    }
+
+    pub fn add_macro(&mut self, cell: Cell) {
+        self.macros.insert(cell.name.clone(), cell);
+    }
+
+    pub fn std_cell(&self, kind: GateKind) -> &Cell {
+        self.std_cells
+            .get(&kind)
+            .unwrap_or_else(|| panic!("{}: no cell for {kind:?}", self.name))
+    }
+
+    pub fn macro_cell(&self, name: &str) -> Option<&Cell> {
+        self.macros.get(name)
+    }
+
+    pub fn has_macros(&self) -> bool {
+        !self.macros.is_empty()
+    }
+
+    pub fn macro_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.macros.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cells::{asap7, freepdk45, tnn7};
+    use super::*;
+
+    #[test]
+    fn all_generic_gates_have_cells() {
+        for lib in [freepdk45(), asap7(), tnn7()] {
+            for kind in [
+                GateKind::Const0,
+                GateKind::Const1,
+                GateKind::Buf,
+                GateKind::Inv,
+                GateKind::And2,
+                GateKind::Nand2,
+                GateKind::Or2,
+                GateKind::Nor2,
+                GateKind::Xor2,
+                GateKind::Xnor2,
+                GateKind::Mux2,
+                GateKind::Dff,
+            ] {
+                let c = lib.std_cell(kind);
+                assert!(c.area_um2 > 0.0, "{}: {kind:?}", lib.name);
+                assert!(c.leakage_nw > 0.0);
+                assert!(c.delay_ps > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn node_scaling_is_sane() {
+        let (f, a) = (freepdk45(), asap7());
+        // 45 nm cells are much larger and leak much more than 7 nm cells.
+        let k = GateKind::Nand2;
+        assert!(f.std_cell(k).area_um2 > 8.0 * a.std_cell(k).area_um2);
+        assert!(f.std_cell(k).leakage_nw > 20.0 * a.std_cell(k).leakage_nw);
+    }
+
+    #[test]
+    fn tnn7_shares_asap7_std_cells_and_adds_macros() {
+        let (a, t) = (asap7(), tnn7());
+        assert_eq!(
+            a.std_cell(GateKind::Dff).area_um2,
+            t.std_cell(GateKind::Dff).area_um2
+        );
+        assert!(!a.has_macros());
+        assert!(t.has_macros());
+        assert!(t.macro_cell("tnn7_synapse_rnl_stdp").is_some());
+        assert!(t.macro_cell("tnn7_adder8").is_some());
+        assert!(t.macro_cell("tnn7_wta4").is_some());
+    }
+
+    #[test]
+    fn macro_beats_equivalent_std_cells() {
+        // The whole point of TNN7 (ref [8]): a macro is smaller and leaks
+        // less than the std cells it replaces.
+        let t = tnn7();
+        let syn = t.macro_cell("tnn7_synapse_rnl_stdp").unwrap();
+        // Compare against the approx GE count of a synapse in NAND2 units.
+        let nand = t.std_cell(GateKind::Nand2);
+        let equiv_area = syn.gate_equivalents as f64 * nand.area_um2;
+        assert!(syn.area_um2 < 0.8 * equiv_area, "macro not smaller");
+    }
+}

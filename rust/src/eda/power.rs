@@ -1,0 +1,136 @@
+//! Power analysis: leakage (Tables III) and total power (leakage + dynamic,
+//! reported for the largest column as in §III-B).
+//!
+//! Leakage = sum of per-cell leakage. Dynamic = activity-weighted cell
+//! switching energy + routed-wire capacitance charging at the operating
+//! frequency (V^2 term folded into the per-library energy constants).
+
+use super::library::CellLibrary;
+use super::routing::RoutingResult;
+use super::synthesis::MappedDesign;
+
+#[derive(Debug, Clone)]
+pub struct PowerReport {
+    pub leakage_nw: f64,
+    pub dynamic_nw: f64,
+    pub total_nw: f64,
+    /// Operating frequency used for the dynamic estimate (MHz).
+    pub freq_mhz: f64,
+    pub activity: f64,
+}
+
+impl PowerReport {
+    pub fn leakage_uw(&self) -> f64 {
+        self.leakage_nw / 1e3
+    }
+    pub fn leakage_mw(&self) -> f64 {
+        self.leakage_nw / 1e6
+    }
+    pub fn total_mw(&self) -> f64 {
+        self.total_nw / 1e6
+    }
+}
+
+/// Default switching activity for TNN columns: spikes are sparse, but the
+/// membrane accumulators and the adder tree toggle every response cycle;
+/// calibrated to the paper's §III-B total-power report for the largest
+/// column (0.067 mW at ~180 ns/sample).
+pub const DEFAULT_ACTIVITY: f64 = 0.20;
+
+pub fn analyze(
+    d: &MappedDesign,
+    lib: &CellLibrary,
+    routing: &RoutingResult,
+    freq_mhz: f64,
+    activity: f64,
+) -> PowerReport {
+    let leakage_nw: f64 = d.leakage_nw();
+
+    // Cell switching energy per cycle.
+    let cell_energy_fj: f64 = d
+        .instances
+        .iter()
+        .map(|i| d.cells[i.cell].switch_energy_fj)
+        .sum();
+    // Wire charging energy per cycle: C * V^2 (C from routed wirelength).
+    let cap_ff = routing.wirelength_um * lib.tech.wire_cap_ff_per_um;
+    let wire_energy_fj = cap_ff * lib.tech.vdd * lib.tech.vdd;
+    // P = alpha * E * f ; fJ * MHz = nW.
+    let dynamic_nw = activity * (cell_energy_fj + wire_energy_fj) * freq_mhz / 1000.0;
+
+    PowerReport {
+        leakage_nw,
+        dynamic_nw,
+        total_nw: leakage_nw + dynamic_nw,
+        freq_mhz,
+        activity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ColumnConfig;
+    use crate::eda::cells::{asap7, freepdk45, tnn7};
+    use crate::eda::placement::{place, PlaceOpts};
+    use crate::eda::routing::route;
+    use crate::eda::synthesis::synthesize;
+    use crate::rtl::generate_column;
+
+    fn powered(lib: &CellLibrary) -> PowerReport {
+        let cfg = ColumnConfig::new("PowTest", "synthetic", 8, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let d = synthesize(&rtl.netlist, lib);
+        let p = place(&d, &PlaceOpts::default());
+        let r = route(&d, &p);
+        analyze(&d, lib, &r, 200.0, DEFAULT_ACTIVITY)
+    }
+
+    #[test]
+    fn total_is_leak_plus_dynamic() {
+        let p = powered(&asap7());
+        assert!((p.total_nw - (p.leakage_nw + p.dynamic_nw)).abs() < 1e-9);
+        assert!(p.dynamic_nw > 0.0);
+    }
+
+    #[test]
+    fn leakage_45nm_much_higher_than_7nm() {
+        let f = powered(&freepdk45());
+        let a = powered(&asap7());
+        assert!(f.leakage_nw > 50.0 * a.leakage_nw);
+    }
+
+    #[test]
+    fn tnn7_leaks_less_than_asap7() {
+        let a = powered(&asap7());
+        let t = powered(&tnn7());
+        assert!(t.leakage_nw < a.leakage_nw);
+    }
+
+    #[test]
+    fn dynamic_scales_with_frequency() {
+        let cfg = ColumnConfig::new("PowTest2", "synthetic", 8, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let lib = asap7();
+        let d = synthesize(&rtl.netlist, &lib);
+        let p = place(&d, &PlaceOpts::default());
+        let r = route(&d, &p);
+        let p1 = analyze(&d, &lib, &r, 100.0, 0.1);
+        let p2 = analyze(&d, &lib, &r, 200.0, 0.1);
+        assert!((p2.dynamic_nw / p1.dynamic_nw - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let p = PowerReport {
+            leakage_nw: 1_500_000.0,
+            dynamic_nw: 0.0,
+            total_nw: 1_500_000.0,
+            freq_mhz: 1.0,
+            activity: 0.1,
+        };
+        assert!((p.leakage_uw() - 1500.0).abs() < 1e-9);
+        assert!((p.leakage_mw() - 1.5).abs() < 1e-9);
+        assert!((p.total_mw() - 1.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,242 @@
+//! Static timing analysis: longest combinational path over the mapped,
+//! placed and routed design; the clock period and Fig-2 computation
+//! latencies derive from it.
+//!
+//! Arrival-time propagation in topological order over the instance graph
+//! (flops/macro-sequentials are cut points), with per-net wire delay =
+//! routed net length * the library's ps/um constant, split across sinks.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::library::CellLibrary;
+use super::placement::build_pin_nets;
+use super::routing::RoutingResult;
+use super::synthesis::MappedDesign;
+
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// Longest register-to-register (or port-to-port) path, ps.
+    pub critical_path_ps: f64,
+    /// Suggested clock period (critical path + setup/clock margin), ps.
+    pub clock_period_ps: f64,
+    /// Achievable frequency, MHz.
+    pub fmax_mhz: f64,
+    /// Instance names along the critical path (driver order).
+    pub critical_path: Vec<String>,
+    /// Levels of logic on the critical path.
+    pub depth: usize,
+}
+
+/// Fraction of the period reserved for clock skew + setup (Innovus default
+/// margins are of this order).
+const MARGIN: f64 = 1.10;
+
+pub fn analyze(d: &MappedDesign, lib: &CellLibrary, routing: &RoutingResult) -> Result<TimingReport> {
+    // Per-net wire delay: routed length * ps/um.
+    let nets = build_pin_nets(d);
+    let mut net_delay: HashMap<usize, f64> = HashMap::new(); // keyed by net id? build mapping
+    // build_pin_nets drops net ids; rebuild id mapping here.
+    let mut net_ids: Vec<usize> = Vec::new();
+    {
+        let mut pin_nets: Vec<Vec<usize>> = vec![Vec::new(); d.num_nets];
+        for (ii, inst) in d.instances.iter().enumerate() {
+            for &n in inst.inputs.iter().chain(inst.outputs.iter()) {
+                let v = &mut pin_nets[n];
+                if v.last() != Some(&ii) {
+                    v.push(ii);
+                }
+            }
+        }
+        for (nid, v) in pin_nets.iter().enumerate() {
+            if v.len() >= 2 && v.len() <= super::placement::GLOBAL_NET_PINS {
+                net_ids.push(nid);
+            }
+        }
+    }
+    if net_ids.len() != nets.len() || nets.len() != routing.net_hpwl_um.len() {
+        bail!("net bookkeeping mismatch");
+    }
+    for (k, &nid) in net_ids.iter().enumerate() {
+        // Direct-route (HPWL) wire delay: critical nets get priority routes.
+        net_delay.insert(nid, routing.net_hpwl_um[k] * lib.tech.wire_delay_ps_per_um);
+    }
+
+    // driver instance per net.
+    let mut driver: Vec<Option<usize>> = vec![None; d.num_nets];
+    for (ii, inst) in d.instances.iter().enumerate() {
+        for &o in &inst.outputs {
+            driver[o] = Some(ii);
+        }
+    }
+
+    // Topological order over combinational instances (seq = cut points).
+    let mut state = vec![0u8; d.instances.len()];
+    let mut order: Vec<usize> = Vec::with_capacity(d.instances.len());
+    for start in 0..d.instances.len() {
+        if state[start] != 0 || d.instances[start].is_seq {
+            continue;
+        }
+        let mut stack = vec![(start, 0usize)];
+        state[start] = 1;
+        while let Some(&mut (ii, ref mut child)) = stack.last_mut() {
+            let inst = &d.instances[ii];
+            if *child < inst.inputs.len() {
+                let net = inst.inputs[*child];
+                *child += 1;
+                if let Some(pg) = driver[net] {
+                    if !d.instances[pg].is_seq {
+                        match state[pg] {
+                            0 => {
+                                state[pg] = 1;
+                                stack.push((pg, 0));
+                            }
+                            1 => bail!("combinational cycle at {}", d.instances[pg].name),
+                            _ => {}
+                        }
+                    }
+                }
+            } else {
+                state[ii] = 2;
+                order.push(ii);
+                stack.pop();
+            }
+        }
+    }
+
+    // Arrival times per net: seq outputs and primary inputs start at 0
+    // (clk-to-q folded into the flop cell delay at the sink side).
+    let mut arrival: Vec<f64> = vec![0.0; d.num_nets];
+    let mut from: Vec<Option<usize>> = vec![None; d.num_nets];
+    for &ii in &order {
+        let inst = &d.instances[ii];
+        let cell = d.cell_of(inst);
+        let in_arr = inst
+            .inputs
+            .iter()
+            .map(|&n| arrival[n])
+            .fold(0.0f64, f64::max);
+        let worst_in = inst
+            .inputs
+            .iter()
+            .max_by(|&&a, &&b| arrival[a].partial_cmp(&arrival[b]).unwrap())
+            .copied();
+        for &o in &inst.outputs {
+            let wire = net_delay.get(&o).copied().unwrap_or(0.0);
+            let t = in_arr + cell.delay_ps + wire;
+            if t > arrival[o] {
+                arrival[o] = t;
+                from[o] = worst_in;
+            }
+        }
+        let _ = worst_in;
+    }
+
+    // Critical endpoint: max arrival at any sequential input or primary out.
+    let mut crit_net = None;
+    let mut crit = 0.0f64;
+    for inst in &d.instances {
+        if inst.is_seq {
+            for &n in &inst.inputs {
+                if arrival[n] > crit {
+                    crit = arrival[n];
+                    crit_net = Some(n);
+                }
+            }
+        }
+    }
+    for &n in &d.primary_outputs {
+        if arrival[n] > crit {
+            crit = arrival[n];
+            crit_net = Some(n);
+        }
+    }
+    // Add one flop delay (clk-to-q + setup) to the path.
+    let flop_overhead = lib.std_cell(crate::rtl::GateKind::Dff).delay_ps;
+    let critical_path_ps = crit + flop_overhead;
+
+    // Trace the path back for the report.
+    let mut path = Vec::new();
+    let mut cur = crit_net;
+    let mut depth = 0;
+    while let Some(n) = cur {
+        if let Some(di) = driver[n] {
+            path.push(d.instances[di].name.clone());
+            depth += 1;
+            if path.len() > 10_000 {
+                break;
+            }
+        }
+        cur = from[n];
+    }
+    path.reverse();
+
+    let clock_period_ps = critical_path_ps * MARGIN;
+    Ok(TimingReport {
+        critical_path_ps,
+        clock_period_ps,
+        fmax_mhz: 1.0e6 / clock_period_ps,
+        critical_path: path,
+        depth,
+    })
+}
+
+/// Computation latency for one inference sample (Fig 2): cycles * period.
+pub fn computation_latency_ns(period_ps: f64, t_r: i32) -> f64 {
+    let cycles = crate::rtl::column::cycles_per_sample(t_r) as f64;
+    cycles * period_ps / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ColumnConfig;
+    use crate::eda::cells::{asap7, freepdk45};
+    use crate::eda::placement::{place, PlaceOpts};
+    use crate::eda::routing::route;
+    use crate::eda::synthesis::synthesize;
+    use crate::rtl::generate_column;
+
+    fn timed(lib: &CellLibrary, p: usize) -> TimingReport {
+        let cfg = ColumnConfig::new("StaTest", "synthetic", p, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let d = synthesize(&rtl.netlist, lib);
+        let pl = place(&d, &PlaceOpts::default());
+        let r = route(&d, &pl);
+        analyze(&d, lib, &r).unwrap()
+    }
+
+    #[test]
+    fn critical_path_positive_and_traced() {
+        let t = timed(&asap7(), 6);
+        assert!(t.critical_path_ps > 50.0);
+        assert!(!t.critical_path.is_empty());
+        assert!(t.fmax_mhz > 1.0);
+    }
+
+    #[test]
+    fn period_has_margin() {
+        let t = timed(&asap7(), 6);
+        assert!(t.clock_period_ps > t.critical_path_ps);
+    }
+
+    #[test]
+    fn bigger_column_is_slower() {
+        let small = timed(&asap7(), 4);
+        let large = timed(&asap7(), 16);
+        assert!(large.critical_path_ps > small.critical_path_ps);
+    }
+
+    #[test]
+    fn node_45nm_slower_than_7nm() {
+        let a = timed(&asap7(), 6);
+        let f = timed(&freepdk45(), 6);
+        assert!(f.critical_path_ps > 1.5 * a.critical_path_ps);
+    }
+
+    #[test]
+    fn latency_formula() {
+        assert!((computation_latency_ns(1000.0, 32) - 34.0).abs() < 1e-9);
+    }
+}

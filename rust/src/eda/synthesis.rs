@@ -1,0 +1,767 @@
+//! Logic synthesis (the Genus substitute): generic-gate optimization
+//! (constant folding, common-subexpression elimination, dead-code removal)
+//! followed by technology mapping onto a cell library, including TNN7 macro
+//! mapping.
+//!
+//! The TNN7 flow reproduces the ref-[8] synthesis-speedup mechanism
+//! faithfully: recognized TNN hierarchy groups (synapse units, neuron adder
+//! trees, WTA, input interface) are collapsed into pre-optimized hard
+//! macros FIRST, so the expensive gate-level optimization only runs over
+//! the small residual fabric — that is where the ~3x synthesis-runtime
+//! advantage comes from, and our measured stage runtimes show the same
+//! shape (Fig 3 bench).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::rtl::netlist::{Gate, GateKind, NetId, Netlist};
+
+use super::library::{Cell, CellLibrary};
+
+/// One mapped instance (std cell or macro).
+#[derive(Debug, Clone)]
+pub struct MappedInstance {
+    pub name: String,
+    /// Index into `MappedDesign::cells`.
+    pub cell: usize,
+    pub inputs: Vec<NetId>,
+    pub outputs: Vec<NetId>,
+    pub is_seq: bool,
+    pub is_macro: bool,
+}
+
+/// Synthesis statistics (reported by the benches and the CLI).
+#[derive(Debug, Clone, Default)]
+pub struct SynthStats {
+    pub gates_in: usize,
+    pub gates_optimized: usize,
+    pub const_folded: usize,
+    pub cse_merged: usize,
+    pub dce_removed: usize,
+    pub std_instances: usize,
+    pub macro_instances: usize,
+    pub runtime_s: f64,
+}
+
+/// A technology-mapped design: the synthesis output consumed by placement,
+/// routing, STA and power analysis.
+#[derive(Debug, Clone)]
+pub struct MappedDesign {
+    pub name: String,
+    pub library: String,
+    /// Distinct cells used (instances index into this table).
+    pub cells: Vec<Cell>,
+    pub instances: Vec<MappedInstance>,
+    pub num_nets: usize,
+    pub primary_inputs: Vec<NetId>,
+    pub primary_outputs: Vec<NetId>,
+    pub stats: SynthStats,
+}
+
+impl MappedDesign {
+    pub fn area_um2(&self) -> f64 {
+        self.instances.iter().map(|i| self.cells[i.cell].area_um2).sum()
+    }
+    pub fn leakage_nw(&self) -> f64 {
+        self.instances.iter().map(|i| self.cells[i.cell].leakage_nw).sum()
+    }
+    pub fn cell_of(&self, inst: &MappedInstance) -> &Cell {
+        &self.cells[inst.cell]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic-gate optimization
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum NetVal {
+    Unknown,
+    Const(bool),
+    Alias(NetId),
+}
+
+fn resolve(vals: &[NetVal], mut n: NetId) -> (NetId, Option<bool>) {
+    loop {
+        match vals[n] {
+            NetVal::Const(b) => return (n, Some(b)),
+            NetVal::Alias(a) => n = a,
+            NetVal::Unknown => return (n, None),
+        }
+    }
+}
+
+/// One round of constant folding + aliasing. Returns #gates simplified.
+fn const_fold_round(n: &mut Netlist, vals: &mut Vec<NetVal>) -> usize {
+    let mut changed = 0;
+    for gi in 0..n.gates.len() {
+        let g = &n.gates[gi];
+        if g.kind == GateKind::Dff {
+            continue;
+        }
+        // Resolve inputs through the alias map.
+        let resolved: Vec<(NetId, Option<bool>)> =
+            g.inputs.iter().map(|&i| resolve(vals, i)).collect();
+        let out = g.output;
+        if matches!(vals[out], NetVal::Const(_) | NetVal::Alias(_)) {
+            continue; // already simplified
+        }
+        let set_const = |vals: &mut Vec<NetVal>, b: bool| {
+            vals[out] = NetVal::Const(b);
+        };
+        let set_alias = |vals: &mut Vec<NetVal>, a: NetId| {
+            if a != out {
+                vals[out] = NetVal::Alias(a);
+            }
+        };
+        let before = vals[out];
+        match g.kind {
+            GateKind::Const0 => set_const(vals, false),
+            GateKind::Const1 => set_const(vals, true),
+            GateKind::Buf => match resolved[0] {
+                (_, Some(b)) => set_const(vals, b),
+                (a, None) => set_alias(vals, a),
+            },
+            GateKind::Inv => {
+                if let (_, Some(b)) = resolved[0] {
+                    set_const(vals, !b);
+                }
+            }
+            GateKind::And2 | GateKind::Nand2 => {
+                let inv = g.kind == GateKind::Nand2;
+                match (resolved[0], resolved[1]) {
+                    ((_, Some(a)), (_, Some(b))) => set_const(vals, (a & b) ^ inv),
+                    ((_, Some(false)), _) | (_, (_, Some(false))) => set_const(vals, inv),
+                    ((a, None), (_, Some(true))) | ((_, Some(true)), (a, None)) => {
+                        if inv {
+                            n.gates[gi] = Gate {
+                                kind: GateKind::Inv,
+                                name: n.gates[gi].name.clone(),
+                                inputs: vec![a],
+                                output: out,
+                            };
+                            changed += 1;
+                            continue;
+                        } else {
+                            set_alias(vals, a);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            GateKind::Or2 | GateKind::Nor2 => {
+                let inv = g.kind == GateKind::Nor2;
+                match (resolved[0], resolved[1]) {
+                    ((_, Some(a)), (_, Some(b))) => set_const(vals, (a | b) ^ inv),
+                    ((_, Some(true)), _) | (_, (_, Some(true))) => set_const(vals, true ^ inv),
+                    ((a, None), (_, Some(false))) | ((_, Some(false)), (a, None)) => {
+                        if inv {
+                            n.gates[gi] = Gate {
+                                kind: GateKind::Inv,
+                                name: n.gates[gi].name.clone(),
+                                inputs: vec![a],
+                                output: out,
+                            };
+                            changed += 1;
+                            continue;
+                        } else {
+                            set_alias(vals, a);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            GateKind::Xor2 | GateKind::Xnor2 => {
+                let inv = g.kind == GateKind::Xnor2;
+                match (resolved[0], resolved[1]) {
+                    ((_, Some(a)), (_, Some(b))) => set_const(vals, (a ^ b) ^ inv),
+                    ((a, None), (_, Some(c))) | ((_, Some(c)), (a, None)) => {
+                        // x ^ 0 = x ; x ^ 1 = !x (and the xnor duals).
+                        if c ^ inv {
+                            n.gates[gi] = Gate {
+                                kind: GateKind::Inv,
+                                name: n.gates[gi].name.clone(),
+                                inputs: vec![a],
+                                output: out,
+                            };
+                            changed += 1;
+                            continue;
+                        } else {
+                            set_alias(vals, a);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            GateKind::Mux2 => match resolved[0] {
+                (_, Some(sel)) => {
+                    let pick = if sel { resolved[2] } else { resolved[1] };
+                    match pick {
+                        (_, Some(b)) => set_const(vals, b),
+                        (a, None) => set_alias(vals, a),
+                    }
+                }
+                _ => {
+                    // mux(s, a, a) = a
+                    if resolved[1].0 == resolved[2].0 && resolved[1].1.is_none() {
+                        set_alias(vals, resolved[1].0);
+                    }
+                }
+            },
+            GateKind::Dff => unreachable!(),
+        }
+        if matches!(before, NetVal::Unknown)
+            && matches!(vals[out], NetVal::Const(_) | NetVal::Alias(_))
+        {
+            changed += 1;
+        }
+    }
+    changed
+}
+
+/// Rebuild the netlist after folding: drop simplified gates, rewrite inputs,
+/// and materialize Const/Buf drivers for primary outputs that simplified.
+fn rebuild(n: &Netlist, vals: &[NetVal]) -> Netlist {
+    let mut out = Netlist::new(&n.name);
+    out.num_nets = n.num_nets;
+    out.inputs = n.inputs.clone();
+    out.outputs = n.outputs.clone();
+    for g in &n.gates {
+        if !matches!(vals[g.output], NetVal::Unknown) {
+            continue; // replaced by const/alias
+        }
+        let inputs = g
+            .inputs
+            .iter()
+            .map(|&i| {
+                let (net, c) = resolve(vals, i);
+                match c {
+                    Some(_) => net, // keep pointing at the const net
+                    None => net,
+                }
+            })
+            .collect();
+        out.gates.push(Gate { kind: g.kind, name: g.name.clone(), inputs, output: g.output });
+    }
+    // Const nets that are still referenced need a driver.
+    let mut referenced: Vec<bool> = vec![false; n.num_nets];
+    for g in &out.gates {
+        for &i in &g.inputs {
+            referenced[i] = true;
+        }
+    }
+    for p in &out.outputs {
+        for &b in &p.bits {
+            referenced[b] = true;
+        }
+    }
+    let driven: std::collections::HashSet<NetId> = out
+        .gates
+        .iter()
+        .map(|g| g.output)
+        .chain(out.inputs.iter().flat_map(|p| p.bits.iter().copied()))
+        .collect();
+    for net in 0..n.num_nets {
+        if !referenced[net] || driven.contains(&net) {
+            continue;
+        }
+        match vals[net] {
+            NetVal::Const(b) => {
+                let kind = if b { GateKind::Const1 } else { GateKind::Const0 };
+                out.gates.push(Gate {
+                    kind,
+                    name: format!("fold_const_{net}"),
+                    inputs: vec![],
+                    output: net,
+                });
+            }
+            NetVal::Alias(_) => {
+                let (src, c) = resolve(vals, net);
+                match c {
+                    Some(b) => {
+                        let kind = if b { GateKind::Const1 } else { GateKind::Const0 };
+                        out.gates.push(Gate {
+                            kind,
+                            name: format!("fold_const_{net}"),
+                            inputs: vec![],
+                            output: net,
+                        });
+                    }
+                    None => out.gates.push(Gate {
+                        kind: GateKind::Buf,
+                        name: format!("fold_alias_{net}"),
+                        inputs: vec![src],
+                        output: net,
+                    }),
+                }
+            }
+            NetVal::Unknown => {}
+        }
+    }
+    out
+}
+
+/// Structural hashing: merge gates with identical (kind, inputs).
+fn cse(n: &mut Netlist) -> usize {
+    let mut table: HashMap<(GateKind, Vec<NetId>), NetId> = HashMap::new();
+    let mut alias: HashMap<NetId, NetId> = HashMap::new();
+    let mut kept = Vec::with_capacity(n.gates.len());
+    let mut merged = 0;
+    for g in n.gates.drain(..) {
+        if g.kind == GateKind::Dff {
+            kept.push(g);
+            continue;
+        }
+        let mut key_inputs: Vec<NetId> =
+            g.inputs.iter().map(|i| *alias.get(i).unwrap_or(i)).collect();
+        let commutative = matches!(
+            g.kind,
+            GateKind::And2
+                | GateKind::Nand2
+                | GateKind::Or2
+                | GateKind::Nor2
+                | GateKind::Xor2
+                | GateKind::Xnor2
+        );
+        if commutative {
+            key_inputs.sort_unstable();
+        }
+        let key = (g.kind, key_inputs);
+        match table.get(&key) {
+            Some(&existing) => {
+                alias.insert(g.output, existing);
+                merged += 1;
+            }
+            None => {
+                table.insert(key, g.output);
+                kept.push(g);
+            }
+        }
+    }
+    for g in &mut kept {
+        for i in g.inputs.iter_mut() {
+            if let Some(&a) = alias.get(i) {
+                *i = a;
+            }
+        }
+    }
+    // Primary outputs that were merged away need buf drivers.
+    let driven: std::collections::HashSet<NetId> = kept
+        .iter()
+        .map(|g| g.output)
+        .chain(n.inputs.iter().flat_map(|p| p.bits.iter().copied()))
+        .collect();
+    for p in n.outputs.clone() {
+        for &b in &p.bits {
+            if !driven.contains(&b) {
+                if let Some(&src) = alias.get(&b) {
+                    kept.push(Gate {
+                        kind: GateKind::Buf,
+                        name: format!("cse_alias_{b}"),
+                        inputs: vec![src],
+                        output: b,
+                    });
+                }
+            }
+        }
+    }
+    n.gates = kept;
+    merged
+}
+
+/// Dead-code elimination: drop gates not reachable from any primary output.
+fn dce(n: &mut Netlist) -> usize {
+    let mut needed_nets: Vec<bool> = vec![false; n.num_nets];
+    for p in &n.outputs {
+        for &b in &p.bits {
+            needed_nets[b] = true;
+        }
+    }
+    let by_output: HashMap<NetId, usize> =
+        n.gates.iter().enumerate().map(|(gi, g)| (g.output, gi)).collect();
+    let mut needed_gates = vec![false; n.gates.len()];
+    let mut stack: Vec<usize> = n
+        .gates
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| needed_nets[g.output])
+        .map(|(gi, _)| gi)
+        .collect();
+    for &gi in &stack {
+        needed_gates[gi] = true;
+    }
+    while let Some(gi) = stack.pop() {
+        for &i in &n.gates[gi].inputs {
+            if !needed_nets[i] {
+                needed_nets[i] = true;
+            }
+            if let Some(&pg) = by_output.get(&i) {
+                if !needed_gates[pg] {
+                    needed_gates[pg] = true;
+                    stack.push(pg);
+                }
+            }
+        }
+    }
+    let before = n.gates.len();
+    let mut keep_iter = needed_gates.into_iter();
+    n.gates.retain(|_| keep_iter.next().unwrap());
+    before - n.gates.len()
+}
+
+/// Full generic-gate optimization to fixpoint.
+pub fn optimize(n: &Netlist, stats: &mut SynthStats) -> Netlist {
+    let mut cur = n.clone();
+    for _round in 0..10 {
+        // Fold to a fixpoint on the alias map BEFORE paying for a netlist
+        // rebuild: constants discovered late in one sweep are visible to
+        // earlier gates only on the next sweep, but sweeps over the alias
+        // map are much cheaper than rebuilds (§Perf: 224 ms -> see
+        // EXPERIMENTS.md for the 65x2 fabric).
+        let mut vals = vec![NetVal::Unknown; cur.num_nets];
+        let mut folded = 0;
+        loop {
+            let f = const_fold_round(&mut cur, &mut vals);
+            folded += f;
+            if f == 0 {
+                break;
+            }
+        }
+        stats.const_folded += folded;
+        cur = rebuild(&cur, &vals);
+        let merged = cse(&mut cur);
+        stats.cse_merged += merged;
+        let removed = dce(&mut cur);
+        stats.dce_removed += removed;
+        if folded + merged + removed == 0 {
+            break;
+        }
+    }
+    stats.gates_optimized = cur.gates.len();
+    cur
+}
+
+// ---------------------------------------------------------------------------
+// Technology mapping
+// ---------------------------------------------------------------------------
+
+fn intern_cell(cells: &mut Vec<Cell>, index: &mut HashMap<String, usize>, c: &Cell) -> usize {
+    if let Some(&i) = index.get(&c.name) {
+        return i;
+    }
+    cells.push(c.clone());
+    index.insert(c.name.clone(), cells.len() - 1);
+    cells.len() - 1
+}
+
+fn map_std(
+    n: &Netlist,
+    lib: &CellLibrary,
+    cells: &mut Vec<Cell>,
+    index: &mut HashMap<String, usize>,
+    instances: &mut Vec<MappedInstance>,
+) {
+    for g in &n.gates {
+        let c = lib.std_cell(g.kind);
+        let ci = intern_cell(cells, index, c);
+        instances.push(MappedInstance {
+            name: g.name.clone(),
+            cell: ci,
+            inputs: g.inputs.clone(),
+            outputs: vec![g.output],
+            is_seq: g.kind.is_sequential(),
+            is_macro: false,
+        });
+    }
+}
+
+/// Classify a hierarchy-group prefix into a TNN7 macro name.
+fn macro_for_group(prefix: &str) -> Option<&'static str> {
+    let last = prefix.rsplit('/').next().unwrap_or(prefix);
+    if last.starts_with("syn") {
+        Some("tnn7_synapse_rnl_stdp")
+    } else if last == "tree" {
+        Some("tnn7_adder8")
+    } else if last == "wta" {
+        Some("tnn7_wta4")
+    } else if last.starts_with("enc") {
+        Some("tnn7_encoder")
+    } else {
+        None
+    }
+}
+
+/// Precomputed connectivity for fast group-boundary extraction: per net,
+/// how many gates consume it and whether it is a primary output.
+struct BoundaryIndex {
+    consumer_count: Vec<u32>,
+    is_primary_out: Vec<bool>,
+}
+
+impl BoundaryIndex {
+    fn build(n: &Netlist) -> Self {
+        let mut consumer_count = vec![0u32; n.num_nets];
+        for g in &n.gates {
+            for &i in &g.inputs {
+                consumer_count[i] += 1;
+            }
+        }
+        let mut is_primary_out = vec![false; n.num_nets];
+        for p in &n.outputs {
+            for &b in &p.bits {
+                is_primary_out[b] = true;
+            }
+        }
+        BoundaryIndex { consumer_count, is_primary_out }
+    }
+}
+
+/// Boundary nets of a gate group: (external inputs, outputs used outside).
+/// O(group size * fanin) thanks to the precomputed index — the naive
+/// all-gates scan was quadratic over the whole design (see §Perf).
+fn group_boundary(
+    n: &Netlist,
+    group: &[usize],
+    idx: &BoundaryIndex,
+) -> (Vec<NetId>, Vec<NetId>) {
+    let produced: std::collections::HashSet<NetId> =
+        group.iter().map(|&gi| n.gates[gi].output).collect();
+    // Count how many consumers of each produced net are INSIDE the group.
+    let mut inside_consumers: std::collections::HashMap<NetId, u32> =
+        std::collections::HashMap::new();
+    let mut ins: Vec<NetId> = Vec::new();
+    let mut seen_in: std::collections::HashSet<NetId> = std::collections::HashSet::new();
+    for &gi in group {
+        for &i in &n.gates[gi].inputs {
+            if produced.contains(&i) {
+                *inside_consumers.entry(i).or_insert(0) += 1;
+            } else if seen_in.insert(i) {
+                ins.push(i);
+            }
+        }
+    }
+    let mut outs: Vec<NetId> = Vec::new();
+    for &gi in group {
+        let net = n.gates[gi].output;
+        let inside = inside_consumers.get(&net).copied().unwrap_or(0);
+        if idx.consumer_count[net] > inside || idx.is_primary_out[net] {
+            outs.push(net);
+        }
+    }
+    (ins, outs)
+}
+
+/// Map onto a library. For macro libraries (TNN7) the recognized hierarchy
+/// groups become macro instances first and only the residual fabric is
+/// optimized; for pure std-cell libraries the whole netlist is optimized
+/// then 1:1 mapped.
+pub fn synthesize(netlist: &Netlist, lib: &CellLibrary) -> MappedDesign {
+    let t0 = Instant::now();
+    let mut stats = SynthStats { gates_in: netlist.gates.len(), ..Default::default() };
+    let mut cells = Vec::new();
+    let mut index = HashMap::new();
+    let mut instances = Vec::new();
+
+    if lib.has_macros() {
+        // Group at hierarchy depth 2 ("n3/syn17", "n3/tree", "enc5", "wta").
+        let mut groups = netlist.groups_at_depth(2);
+        let depth1 = netlist.groups_at_depth(1);
+        for (k, v) in depth1 {
+            // wta and enc groups live at depth 1.
+            if macro_for_group(&k).is_some() && !groups.contains_key(&k) {
+                groups.insert(k, v);
+            }
+        }
+        let bidx = BoundaryIndex::build(netlist);
+        let mut absorbed: Vec<bool> = vec![false; netlist.gates.len()];
+        let mut keys: Vec<String> = groups.keys().cloned().collect();
+        keys.sort();
+        for key in keys {
+            let Some(macro_name) = macro_for_group(&key) else { continue };
+            let group = &groups[&key];
+            let mc = lib.macro_cell(macro_name).expect("macro exists").clone();
+            // Number of macro instances needed to absorb the group.
+            let count = group.len().div_ceil(mc.gate_equivalents).max(1);
+            let chunk = group.len().div_ceil(count);
+            for (k2, part) in group.chunks(chunk).enumerate() {
+                let (ins, outs) = group_boundary(netlist, part, &bidx);
+                let has_seq = part.iter().any(|&gi| netlist.gates[gi].kind.is_sequential());
+                let ci = intern_cell(&mut cells, &mut index, &mc);
+                instances.push(MappedInstance {
+                    name: format!("{key}/{}_{k2}", mc.name),
+                    cell: ci,
+                    inputs: ins,
+                    outputs: outs,
+                    is_seq: has_seq,
+                    is_macro: true,
+                });
+                stats.macro_instances += 1;
+            }
+            for &gi in group {
+                absorbed[gi] = true;
+            }
+        }
+        // Residual fabric: everything not absorbed, optimized as a
+        // sub-netlist with pseudo-boundaries.
+        let mut residual = Netlist::new(&format!("{}_residual", netlist.name));
+        residual.num_nets = netlist.num_nets;
+        residual.inputs = netlist.inputs.clone();
+        residual.outputs = netlist.outputs.clone();
+        for (gi, g) in netlist.gates.iter().enumerate() {
+            if !absorbed[gi] {
+                residual.gates.push(g.clone());
+            }
+        }
+        // Macro boundary nets become pseudo inputs/outputs of the residual.
+        let mut pseudo_in: Vec<NetId> = Vec::new();
+        let mut pseudo_out: Vec<NetId> = Vec::new();
+        for inst in &instances {
+            pseudo_in.extend(inst.outputs.iter().copied());
+            pseudo_out.extend(inst.inputs.iter().copied());
+        }
+        residual.add_input("__macro_outs", pseudo_in);
+        residual.add_output("__macro_ins", pseudo_out);
+        let optimized = optimize(&residual, &mut stats);
+        map_std(&optimized, lib, &mut cells, &mut index, &mut instances);
+    } else {
+        let optimized = optimize(netlist, &mut stats);
+        map_std(&optimized, lib, &mut cells, &mut index, &mut instances);
+    }
+
+    stats.std_instances = instances.iter().filter(|i| !i.is_macro).count();
+    stats.runtime_s = t0.elapsed().as_secs_f64();
+    MappedDesign {
+        name: netlist.name.clone(),
+        library: lib.name.clone(),
+        cells,
+        instances,
+        num_nets: netlist.num_nets,
+        primary_inputs: netlist.inputs.iter().flat_map(|p| p.bits.iter().copied()).collect(),
+        primary_outputs: netlist.outputs.iter().flat_map(|p| p.bits.iter().copied()).collect(),
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ColumnConfig;
+    use crate::eda::cells::{asap7, tnn7};
+    use crate::rtl::builder::Builder;
+    use crate::rtl::generate_column;
+
+    fn opt_roundtrip(n: &Netlist) -> Netlist {
+        let mut stats = SynthStats::default();
+        optimize(n, &mut stats)
+    }
+
+    #[test]
+    fn const_folding_collapses_constant_logic() {
+        let mut n = Netlist::new("cf");
+        let a = n.new_net();
+        n.add_input("a", vec![a]);
+        let mut b = Builder::new(&mut n);
+        let one = b.one();
+        let x = b.and(a, one); // = a
+        let zero = b.zero();
+        let y = b.or(x, zero); // = a
+        let z = b.xor(y, one); // = !a
+        n.add_output("z", vec![z]);
+        let opt = opt_roundtrip(&n);
+        // Everything should fold down to a single inverter (plus possibly a
+        // buf for the output alias).
+        assert!(opt.gates.len() <= 2, "{} gates left", opt.gates.len());
+        assert!(opt.gates.iter().any(|g| g.kind == GateKind::Inv));
+    }
+
+    #[test]
+    fn cse_merges_duplicate_gates() {
+        let mut n = Netlist::new("cse");
+        let a = n.new_net();
+        let b_ = n.new_net();
+        n.add_input("a", vec![a]);
+        n.add_input("b", vec![b_]);
+        let mut b = Builder::new(&mut n);
+        let x1 = b.and(a, b_);
+        let x2 = b.and(b_, a); // commutative duplicate
+        let y = b.or(x1, x2); // or(x, x) -> mux? stays, but inputs merge
+        n.add_output("y", vec![y]);
+        let opt = opt_roundtrip(&n);
+        let ands = opt.gates.iter().filter(|g| g.kind == GateKind::And2).count();
+        assert_eq!(ands, 1);
+    }
+
+    #[test]
+    fn dce_drops_unused_logic() {
+        let mut n = Netlist::new("dce");
+        let a = n.new_net();
+        n.add_input("a", vec![a]);
+        let mut b = Builder::new(&mut n);
+        let used = b.not(a);
+        let _unused = b.and(a, used);
+        n.add_output("o", vec![used]);
+        let opt = opt_roundtrip(&n);
+        assert_eq!(opt.gates.len(), 1);
+    }
+
+    #[test]
+    fn optimization_preserves_column_behavior() {
+        // The optimized netlist must simulate identically to the original.
+        let cfg = ColumnConfig::new("OptTest", "synthetic", 6, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let opt = opt_roundtrip(&rtl.netlist);
+        assert!(opt.gates.len() < rtl.netlist.gates.len(), "opt should shrink");
+        opt.validate().unwrap();
+        let opt_rtl = crate::rtl::ColumnRtl {
+            netlist: opt,
+            config: rtl.config.clone(),
+            theta_fp: rtl.theta_fp,
+            v_bits: rtl.v_bits,
+            winner_bits: rtl.winner_bits,
+        };
+        let mut sim_a = crate::rtl::GateSim::new(&rtl.netlist).unwrap();
+        let mut sim_b = crate::rtl::GateSim::new(&opt_rtl.netlist).unwrap();
+        let w = vec![vec![20u64, 8, 40, 0, 56, 16], vec![4, 28, 12, 44, 36, 24]];
+        rtl.load_weights(&mut sim_a, &w);
+        opt_rtl.load_weights(&mut sim_b, &w);
+        for step in 0..10 {
+            let s: Vec<i32> = (0..6).map(|i| ((step * 3 + i * 5) % 9) as i32).collect();
+            let (wa, ya) = rtl.run_sample(&mut sim_a, &s, true);
+            let (wb, yb) = opt_rtl.run_sample(&mut sim_b, &s, true);
+            assert_eq!((wa, &ya), (wb, &yb), "step {step}");
+            assert_eq!(rtl.read_weights(&sim_a), opt_rtl.read_weights(&sim_b));
+        }
+    }
+
+    #[test]
+    fn asap7_mapping_covers_all_gates() {
+        let cfg = ColumnConfig::new("MapTest", "synthetic", 8, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let design = synthesize(&rtl.netlist, &asap7());
+        assert_eq!(design.stats.macro_instances, 0);
+        assert!(design.stats.std_instances > 0);
+        assert!(design.area_um2() > 0.0);
+        assert!(design.stats.gates_optimized < design.stats.gates_in);
+    }
+
+    #[test]
+    fn tnn7_mapping_uses_macros_and_shrinks() {
+        let cfg = ColumnConfig::new("MacroTest", "synthetic", 8, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let asap = synthesize(&rtl.netlist, &asap7());
+        let tnn = synthesize(&rtl.netlist, &tnn7());
+        assert!(tnn.stats.macro_instances >= 8 * 2, "one macro per synapse at least");
+        assert!(tnn.instances.len() < asap.instances.len() / 2);
+        assert!(tnn.area_um2() < asap.area_um2());
+        assert!(tnn.leakage_nw() < asap.leakage_nw());
+    }
+
+    #[test]
+    fn macro_groups_classified() {
+        assert_eq!(macro_for_group("n3/syn17"), Some("tnn7_synapse_rnl_stdp"));
+        assert_eq!(macro_for_group("n0/tree"), Some("tnn7_adder8"));
+        assert_eq!(macro_for_group("wta"), Some("tnn7_wta4"));
+        assert_eq!(macro_for_group("enc5"), Some("tnn7_encoder"));
+        assert_eq!(macro_for_group("seq"), None);
+    }
+}

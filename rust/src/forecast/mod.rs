@@ -1,0 +1,135 @@
+//! Forecasting (paper §III-D): linear-regression prediction of post-layout
+//! die area and leakage power from synapse count, trained on TNNGen flow
+//! runs — lets users without EDA access estimate silicon metrics without
+//! running the hardware flow.
+//!
+//! The paper's published TNN7 fit: `Area = 5.56*syn - 94.9`,
+//! `Leakage = 0.00541*syn - 0.725`; our model is trained the same way (on
+//! a sweep of flow runs with varying column sizes) and the Table-V bench
+//! reports forecast errors per design.
+
+use crate::eda::FlowReport;
+use crate::util::stats::{linear_fit, rel_err_pct};
+
+/// A trained (area, leakage) forecaster for one library.
+#[derive(Debug, Clone)]
+pub struct Forecaster {
+    pub library: String,
+    /// Area fit: area_um2 = a * synapses + b, plus fit quality.
+    pub area_fit: (f64, f64, f64),
+    /// Leakage fit: leakage_uw = a * synapses + b.
+    pub leak_fit: (f64, f64, f64),
+    /// Training points (synapse count, area, leakage) for reporting.
+    pub points: Vec<(usize, f64, f64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Forecast {
+    pub synapse_count: usize,
+    pub area_um2: f64,
+    pub leakage_uw: f64,
+}
+
+impl Forecaster {
+    /// Train from a set of flow reports (all from the same library).
+    pub fn train(reports: &[FlowReport]) -> anyhow::Result<Self> {
+        use anyhow::ensure;
+        ensure!(reports.len() >= 2, "need at least two flow runs to fit");
+        let library = reports[0].library.clone();
+        ensure!(
+            reports.iter().all(|r| r.library == library),
+            "mixed libraries in training set"
+        );
+        let xs: Vec<f64> = reports.iter().map(|r| r.synapse_count as f64).collect();
+        let areas: Vec<f64> = reports.iter().map(|r| r.die_area_um2).collect();
+        let leaks: Vec<f64> = reports.iter().map(|r| r.leakage_uw).collect();
+        Ok(Forecaster {
+            library,
+            area_fit: linear_fit(&xs, &areas),
+            leak_fit: linear_fit(&xs, &leaks),
+            points: reports
+                .iter()
+                .map(|r| (r.synapse_count, r.die_area_um2, r.leakage_uw))
+                .collect(),
+        })
+    }
+
+    /// Predict silicon metrics for a synapse count, without any EDA run.
+    pub fn predict(&self, synapse_count: usize) -> Forecast {
+        let x = synapse_count as f64;
+        Forecast {
+            synapse_count,
+            area_um2: self.area_fit.0 * x + self.area_fit.1,
+            leakage_uw: self.leak_fit.0 * x + self.leak_fit.1,
+        }
+    }
+
+    /// Forecast errors vs an actual flow run: (area %err, leakage %err).
+    pub fn errors(&self, actual: &FlowReport) -> (f64, f64) {
+        let f = self.predict(actual.synapse_count);
+        (
+            rel_err_pct(f.area_um2, actual.die_area_um2),
+            rel_err_pct(f.leakage_uw, actual.leakage_uw),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ColumnConfig;
+    use crate::eda::{run_flow, tnn7, FlowOpts};
+
+    fn reports(sizes: &[(usize, usize)]) -> Vec<FlowReport> {
+        sizes
+            .iter()
+            .map(|&(p, q)| {
+                let cfg = ColumnConfig::new(&format!("fc{p}x{q}"), "synthetic", p, q);
+                run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fit_is_roughly_linear_in_synapses() {
+        let rs = reports(&[(8, 2), (16, 2), (24, 2), (16, 4)]);
+        let fc = Forecaster::train(&rs).unwrap();
+        // Slope positive, good fit quality on near-linear data.
+        assert!(fc.area_fit.0 > 0.0);
+        assert!(fc.leak_fit.0 > 0.0);
+        assert!(fc.area_fit.2 > 0.9, "area R2 {}", fc.area_fit.2);
+    }
+
+    #[test]
+    fn predict_interpolates_training_points() {
+        let rs = reports(&[(8, 2), (16, 2), (32, 2)]);
+        let fc = Forecaster::train(&rs).unwrap();
+        for r in &rs {
+            let (ae, _) = fc.errors(r);
+            assert!(ae.abs() < 25.0, "area err {ae}% for {}", r.synapse_count);
+        }
+    }
+
+    #[test]
+    fn train_rejects_mixed_or_tiny_sets() {
+        let rs = reports(&[(8, 2)]);
+        assert!(Forecaster::train(&rs).is_err());
+    }
+
+    #[test]
+    fn exact_on_synthetic_linear_data() {
+        // Bypass flows: hand-build reports obeying Area = 5.56x - 94.9.
+        let mut rs = reports(&[(8, 2), (16, 2)]);
+        for (i, r) in rs.iter_mut().enumerate() {
+            r.synapse_count = (i + 1) * 100;
+            r.die_area_um2 = 5.56 * r.synapse_count as f64 - 94.9;
+            r.leakage_uw = 0.00541 * r.synapse_count as f64 - 0.725;
+        }
+        let fc = Forecaster::train(&rs).unwrap();
+        assert!((fc.area_fit.0 - 5.56).abs() < 1e-9);
+        assert!((fc.area_fit.1 + 94.9).abs() < 1e-6);
+        let f = fc.predict(300);
+        assert!((f.area_um2 - (5.56 * 300.0 - 94.9)).abs() < 1e-6);
+        assert!((f.leakage_uw - (0.00541 * 300.0 - 0.725)).abs() < 1e-9);
+    }
+}

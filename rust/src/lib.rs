@@ -1,0 +1,49 @@
+//! # TNNGen — automated design of TNN-based neuromorphic sensory processing units
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of
+//! *TNNGen: Automated Design of Neuromorphic Sensory Processing Units for
+//! Time-Series Clustering* (IEEE TCSII 2024).
+//!
+//! The crate owns the entire design-automation flow the paper describes:
+//!
+//! * [`config`] — column/design specifications, the seven Table-II presets,
+//!   a TOML-subset parser for config files and the AOT artifact manifest.
+//! * [`runtime`] — PJRT CPU client wrapper: loads the HLO-text artifacts
+//!   produced by `python/compile/aot.py` (L2 JAX model calling L1 Pallas
+//!   kernels) and executes them on the request path. Python never runs here.
+//! * [`sim`] — a native-Rust TNN functional simulator implementing the same
+//!   contract as the JAX model; used for cross-validation and fast sweeps.
+//! * [`data`] — synthetic UCR-modality time-series generators (+ optional
+//!   loader for real UCR files) for the seven Table-II benchmarks.
+//! * [`cluster`] — clustering metrics (Rand index, ARI, NMI, purity, F1),
+//!   k-means and the DTCR-proxy baseline, and the TNN clustering pipeline.
+//! * [`rtl`] — the hardware generator: netlist IR, column generators aligned
+//!   with the [7] microarchitecture, structural-Verilog emission, and an
+//!   event-driven gate-level simulator (the Xcelium substitute).
+//! * [`eda`] — the EDA-flow substrate (Genus/Innovus substitute): cell
+//!   libraries (FreePDK45 / ASAP7 / TNN7 + macros), tech mapping, simulated-
+//!   annealing placement, global routing, STA and power analysis.
+//! * [`forecast`] — the paper's forecasting feature: linear-regression
+//!   prediction of post-layout area/leakage from synapse count.
+//! * [`coordinator`] — TNNGen orchestration: end-to-end design runs,
+//!   design-space exploration, multi-design parallelism.
+//! * [`report`] — table/CSV emitters used by the benches and the CLI to
+//!   regenerate every table and figure of the paper.
+//! * [`util`] — PRNG, statistics, linear algebra and property-test helpers
+//!   (offline substitutes for rand/proptest/criterion; see DESIGN.md §3).
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eda;
+pub mod forecast;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, matching the `xla` crate's errors).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,276 @@
+//! `tnngen` — the TNNGen launcher (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   list                          list known column designs
+//!   simulate <tag|name>           clustering run (PJRT artifacts or native)
+//!   generate-rtl <tag>            emit structural Verilog for a column
+//!   flow <tag>                    full hardware flow on one library
+//!   explore <tag|name>            design-space sweep (native simulator)
+//!   forecast [--syn N]            train forecaster + predict without EDA
+//!   reproduce --table N | --fig N | --all
+
+use anyhow::{bail, Context, Result};
+
+use tnngen::cli::Args;
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::config::presets::{all_configs, by_tag};
+use tnngen::config::ColumnConfig;
+use tnngen::coordinator::explorer::{explore, SweepSpace};
+use tnngen::coordinator::{Coordinator, SimBackend};
+use tnngen::data::load_benchmark;
+use tnngen::eda::{all_libraries, run_flow, tnn7, FlowOpts};
+use tnngen::report::experiments::{self, Effort};
+use tnngen::report::{f2, f3, Table};
+use tnngen::rtl::{generate_column, verilog::emit_verilog};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce> [args]
+  simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N]
+  generate-rtl <tag> [--out file.v]
+  flow <tag> [--lib FreePDK45|ASAP7|TNN7] [--layout]
+  explore <tag|name> [--epochs N]
+  forecast [--syn N] [--full]
+  reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]";
+
+fn resolve_config(key: &str) -> Result<ColumnConfig> {
+    if let Some(c) = by_tag(key) {
+        return Ok(c);
+    }
+    all_configs()
+        .into_iter()
+        .find(|c| c.name == key)
+        .with_context(|| format!("unknown design {key:?} (try `tnngen list`)"))
+}
+
+fn backend_of(args: &Args) -> Result<(SimBackend, Coordinator)> {
+    match args.flag_str("backend", "native") {
+        "native" => Ok((SimBackend::Native, Coordinator::native())),
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(args.flag_str("artifacts", "artifacts"));
+            let coord = Coordinator::with_artifacts(&dir)
+                .context("loading PJRT artifacts (run `make artifacts` first)")?;
+            Ok((SimBackend::Pjrt, coord))
+        }
+        other => bail!("unknown backend {other:?}"),
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "list" => {
+            let mut t = Table::new(&["tag", "benchmark", "modality", "p", "q", "synapses"]);
+            for c in all_configs() {
+                t.row(&[
+                    c.tag(),
+                    c.name.clone(),
+                    c.modality.clone(),
+                    c.p.to_string(),
+                    c.q.to_string(),
+                    c.synapse_count().to_string(),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "simulate" => {
+            let key = args.positional.first().context("simulate needs a design tag/name")?;
+            let cfg = resolve_config(key)?;
+            let (backend, coord) = backend_of(args)?;
+            let pipe = TnnClustering {
+                epochs: args.flag_usize("epochs", 4)?,
+                seed: args.flag_u64("seed", 42)?,
+                n_per_split: args.flag_usize("samples", 60)?,
+            };
+            let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
+            let r = coord.run_clustering(&cfg, &ds, &pipe, backend)?;
+            println!(
+                "{} ({}): RI tnn={} kmeans={} dtcr*={} | normalized tnn={} dtcr*={} | ARI={} NMI={} purity={} no-fire={:.1}%",
+                r.benchmark,
+                cfg.tag(),
+                f3(r.ri_tnn),
+                f3(r.ri_kmeans),
+                f3(r.ri_dtcr),
+                f3(r.tnn_norm),
+                f3(r.dtcr_norm),
+                f3(r.ari_tnn),
+                f3(r.nmi_tnn),
+                f3(r.purity_tnn),
+                100.0 * r.no_fire_frac
+            );
+            Ok(())
+        }
+        "generate-rtl" => {
+            let key = args.positional.first().context("generate-rtl needs a design tag")?;
+            let cfg = resolve_config(key)?;
+            let rtl = generate_column(&cfg)?;
+            let v = emit_verilog(&rtl.netlist);
+            let out = args.flag_str("out", "");
+            if out.is_empty() {
+                println!(
+                    "// {} gates={} flops={}\n{}",
+                    rtl.netlist.name,
+                    rtl.netlist.gates.len(),
+                    rtl.netlist.num_flops(),
+                    &v[..v.len().min(2000)]
+                );
+                println!("// (truncated; use --out file.v for the full netlist)");
+            } else {
+                std::fs::write(out, &v)?;
+                println!(
+                    "wrote {out}: {} gates, {} flops",
+                    rtl.netlist.gates.len(),
+                    rtl.netlist.num_flops()
+                );
+            }
+            Ok(())
+        }
+        "flow" => {
+            let key = args.positional.first().context("flow needs a design tag")?;
+            let cfg = resolve_config(key)?;
+            let lib_name = args.flag_str("lib", "TNN7");
+            let lib = all_libraries()
+                .into_iter()
+                .find(|l| l.name == lib_name)
+                .with_context(|| format!("unknown library {lib_name:?}"))?;
+            let r = run_flow(&cfg, &lib, &FlowOpts::default())?;
+            println!(
+                "{} on {}: die {:.1} um2 ({:.4} mm2), leakage {:.3} uW, total {:.3} mW,\n\
+                 fmax {:.0} MHz, latency {:.1} ns, {} instances ({} macros), wirelength {:.0} um",
+                r.tag,
+                r.library,
+                r.die_area_um2,
+                r.die_area_um2 / 1e6,
+                r.leakage_uw,
+                r.power.total_mw(),
+                r.timing.fmax_mhz,
+                r.latency_ns,
+                r.instances,
+                r.macro_instances,
+                r.wirelength_um
+            );
+            println!(
+                "runtimes: rtl {:.2}s synth {:.2}s place {:.2}s route {:.2}s sta {:.2}s (P&R {:.2}s, full {:.2}s)",
+                r.runtimes.rtl_gen_s,
+                r.runtimes.synthesis_s,
+                r.runtimes.placement_s,
+                r.runtimes.routing_s,
+                r.runtimes.sta_s,
+                r.runtimes.pnr_s(),
+                r.runtimes.full_flow_s()
+            );
+            if args.flag_bool("layout") {
+                let rtl = generate_column(&cfg)?;
+                let d = tnngen::eda::synthesize(&rtl.netlist, &lib);
+                let p = tnngen::eda::place(&d, &Default::default());
+                println!("{}", experiments::layout_ascii(&p, 64));
+            }
+            Ok(())
+        }
+        "explore" => {
+            let key = args.positional.first().context("explore needs a design tag/name")?;
+            let cfg = resolve_config(key)?;
+            let pipe = TnnClustering {
+                epochs: args.flag_usize("epochs", 4)?,
+                seed: args.flag_u64("seed", 42)?,
+                n_per_split: args.flag_usize("samples", 40)?,
+            };
+            let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
+            let points = explore(&cfg, &ds, &SweepSpace::default(), &pipe);
+            let mut t = Table::new(&["theta_frac", "cutoff", "RI tnn", "RI/kmeans", "no-fire"]);
+            for p in points.iter().take(args.flag_usize("top", 8)?) {
+                t.row(&[
+                    f2(p.config.params.theta_frac as f64),
+                    f2(p.config.params.sparse_cutoff as f64),
+                    f3(p.report.ri_tnn),
+                    f3(p.report.tnn_norm),
+                    f3(p.report.no_fire_frac),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "forecast" => {
+            let coord = Coordinator::native();
+            let full = args.flag_bool("full");
+            let fc = coord.train_forecaster(
+                &experiments::forecast_sweep(full),
+                &tnn7(),
+                &FlowOpts::default(),
+            )?;
+            println!(
+                "trained on {} TNN7 flows: Area = {:.3}*syn + {:.1} (R2 {:.4}), Leak = {:.5}*syn + {:.3} (R2 {:.4})",
+                fc.points.len(),
+                fc.area_fit.0,
+                fc.area_fit.1,
+                fc.area_fit.2,
+                fc.leak_fit.0,
+                fc.leak_fit.1,
+                fc.leak_fit.2
+            );
+            if let Some(syn) = args.flag("syn") {
+                let syn: usize = syn.parse()?;
+                let f = fc.predict(syn);
+                println!(
+                    "forecast for {syn} synapses: {:.1} um2, {:.3} uW leakage (no EDA run)",
+                    f.area_um2, f.leakage_uw
+                );
+            }
+            Ok(())
+        }
+        "reproduce" => {
+            let effort = if args.flag_bool("fast") { Effort::fast() } else { Effort::full() };
+            let all = args.flag_bool("all");
+            let table = args.flag("table");
+            let fig = args.flag("fig");
+            if !all && table.is_none() && fig.is_none() {
+                bail!("reproduce needs --table N, --fig N or --all");
+            }
+            let want_t = |n: &str| all || table == Some(n);
+            let want_f = |n: &str| all || fig == Some(n);
+            if want_t("2") {
+                let (backend, coord) = backend_of(args)?;
+                println!("{}", experiments::table2(effort, backend, &coord)?);
+            }
+            if want_t("3") || want_t("4") || want_t("5") || want_f("4") {
+                let flows = experiments::run_paper_flows(effort)?;
+                if want_t("3") {
+                    println!("{}", experiments::table3(&flows, effort)?);
+                }
+                if want_t("4") {
+                    println!("{}", experiments::table4(&flows, effort)?);
+                    if let Some(s) = experiments::largest_column_summary(&flows) {
+                        println!("{s}");
+                    }
+                }
+                if want_t("5") || want_f("4") {
+                    println!("{}", experiments::table5_fig4(&flows, effort)?);
+                }
+            }
+            if want_f("2") {
+                println!("{}", experiments::fig2(effort)?);
+            }
+            if want_f("3") {
+                println!("{}", experiments::fig3(effort)?);
+            }
+            Ok(())
+        }
+        "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}

@@ -1,0 +1,444 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! section. Shared by the bench harnesses (`rust/benches/*.rs`) and the
+//! `tnngen reproduce` CLI command; each function returns the rendered
+//! table and writes CSV data under `target/reports/`.
+
+use anyhow::Result;
+
+use crate::cluster::pipeline::TnnClustering;
+use crate::config::presets::{
+    paper_configs, FIG2_PAPER, PAPER_AREA_FIT, PAPER_LEAK_FIT, TABLE2_PAPER, TABLE3_PAPER,
+    TABLE4_PAPER,
+};
+use crate::config::ColumnConfig;
+use crate::coordinator::{Coordinator, SimBackend};
+use crate::data::load_benchmark;
+use crate::eda::{
+    all_libraries, asap7, run_flow, tnn7, FlowOpts, FlowReport, PlaceOpts,
+};
+use crate::forecast::Forecaster;
+use crate::report::{f1, f2, f3, pct, save_report, Table};
+
+/// Experiment effort: `full` reproduces every row; fast mode trims the
+/// largest designs so tests and quick runs stay snappy.
+#[derive(Debug, Clone, Copy)]
+pub struct Effort {
+    pub full: bool,
+    /// Samples per split for clustering data.
+    pub n_per_split: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Effort {
+    pub fn full() -> Self {
+        Effort { full: true, n_per_split: 60, epochs: 4, seed: 42 }
+    }
+    pub fn fast() -> Self {
+        Effort { full: false, n_per_split: 24, epochs: 2, seed: 42 }
+    }
+
+    fn configs(&self) -> Vec<ColumnConfig> {
+        let all = paper_configs();
+        if self.full {
+            all
+        } else {
+            // Fast mode: the three smallest designs.
+            all.into_iter().filter(|c| c.synapse_count() <= 304).collect()
+        }
+    }
+}
+
+/// Table II: clustering rand index (TNN vs DTCR-proxy, normalized to
+/// k-means) for the seven UCR-modality benchmarks.
+pub fn table2(effort: Effort, backend: SimBackend, coord: &Coordinator) -> Result<String> {
+    let mut t = Table::new(&[
+        "UCR Column (pxq)",
+        "Benchmark",
+        "Modality",
+        "RI kmeans",
+        "RI DTCR*",
+        "RI TNN",
+        "DTCR* norm",
+        "TNN norm",
+        "paper DTCR",
+        "paper TNN",
+    ]);
+    let pipe = TnnClustering { epochs: effort.epochs, seed: effort.seed, n_per_split: effort.n_per_split };
+    for cfg in effort.configs() {
+        let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, effort.n_per_split, effort.seed);
+        let r = coord.run_clustering(&cfg, &ds, &pipe, backend)?;
+        let paper = TABLE2_PAPER.iter().find(|(n, _, _)| *n == cfg.name).unwrap();
+        t.row(&[
+            cfg.tag(),
+            cfg.name.clone(),
+            cfg.modality.clone(),
+            f3(r.ri_kmeans),
+            f3(r.ri_dtcr),
+            f3(r.ri_tnn),
+            f3(r.dtcr_norm),
+            f3(r.tnn_norm),
+            f3(paper.1),
+            f3(paper.2),
+        ]);
+    }
+    let rendered = format!(
+        "Table II — time-series clustering (rand index; DTCR* = representation-\n\
+         learning proxy, see DESIGN.md). backend={backend:?}\n{}",
+        t.render()
+    );
+    save_report("table2.csv", &t.to_csv())?;
+    Ok(rendered)
+}
+
+/// Shared flow runner for Tables III/IV (+ §III-B derived claims).
+pub fn run_paper_flows(effort: Effort) -> Result<Vec<FlowReport>> {
+    let mut out = Vec::new();
+    for cfg in effort.configs() {
+        for lib in all_libraries() {
+            let opts = FlowOpts {
+                place: PlaceOpts { moves_per_instance: if effort.full { 8 } else { 4 }, ..Default::default() },
+                ..Default::default()
+            };
+            out.push(run_flow(&cfg, &lib, &opts)?);
+        }
+    }
+    Ok(out)
+}
+
+fn find<'a>(flows: &'a [FlowReport], tag: &str, lib: &str) -> Option<&'a FlowReport> {
+    flows.iter().find(|f| f.tag == tag && f.library == lib)
+}
+
+/// Table III: post-P&R leakage power per design and library.
+pub fn table3(flows: &[FlowReport], effort: Effort) -> Result<String> {
+    let mut t = Table::new(&[
+        "Benchmark",
+        "Synapses",
+        "FreePDK45 (mW)",
+        "paper",
+        "ASAP7 (uW)",
+        "paper",
+        "TNN7 (uW)",
+        "paper",
+    ]);
+    let mut deltas = Vec::new();
+    for cfg in effort.configs() {
+        let tag = cfg.tag();
+        let paper = TABLE3_PAPER.iter().find(|(n, ..)| *n == cfg.name).unwrap();
+        let f45 = find(flows, &tag, "FreePDK45").unwrap();
+        let a7 = find(flows, &tag, "ASAP7").unwrap();
+        let t7 = find(flows, &tag, "TNN7").unwrap();
+        deltas.push(100.0 * (t7.leakage_uw - a7.leakage_uw) / a7.leakage_uw);
+        t.row(&[
+            cfg.name.clone(),
+            cfg.synapse_count().to_string(),
+            f3(f45.leakage_uw / 1000.0),
+            f3(paper.2),
+            f2(a7.leakage_uw),
+            f2(paper.3),
+            f2(t7.leakage_uw),
+            f2(paper.4),
+        ]);
+    }
+    let avg_delta = crate::util::stats::mean(&deltas);
+    let rendered = format!(
+        "Table III — post-place-and-route leakage power\n{}\nTNN7 vs ASAP7 leakage: {:.1}% (paper: -38.6%)\n",
+        t.render(),
+        avg_delta
+    );
+    save_report("table3.csv", &t.to_csv())?;
+    Ok(rendered)
+}
+
+/// Table IV: post-P&R die area per design and library.
+pub fn table4(flows: &[FlowReport], effort: Effort) -> Result<String> {
+    let mut t = Table::new(&[
+        "Benchmark",
+        "Synapses",
+        "FreePDK45 (um2)",
+        "paper",
+        "ASAP7 (um2)",
+        "paper",
+        "TNN7 (um2)",
+        "paper",
+    ]);
+    let mut deltas = Vec::new();
+    for cfg in effort.configs() {
+        let tag = cfg.tag();
+        let paper = TABLE4_PAPER.iter().find(|(n, ..)| *n == cfg.name).unwrap();
+        let f45 = find(flows, &tag, "FreePDK45").unwrap();
+        let a7 = find(flows, &tag, "ASAP7").unwrap();
+        let t7 = find(flows, &tag, "TNN7").unwrap();
+        deltas.push(100.0 * (t7.die_area_um2 - a7.die_area_um2) / a7.die_area_um2);
+        t.row(&[
+            cfg.name.clone(),
+            cfg.synapse_count().to_string(),
+            f1(f45.die_area_um2),
+            f1(paper.2),
+            f1(a7.die_area_um2),
+            f1(paper.3),
+            f1(t7.die_area_um2),
+            f1(paper.4),
+        ]);
+    }
+    let avg_delta = crate::util::stats::mean(&deltas);
+    let rendered = format!(
+        "Table IV — post-place-and-route die area\n{}\nTNN7 vs ASAP7 area: {:.1}% (paper: -32.1%)\n",
+        t.render(),
+        avg_delta
+    );
+    save_report("table4.csv", &t.to_csv())?;
+    Ok(rendered)
+}
+
+/// §III-B largest-column summary (TNN7 die mm^2, total power mW, latency).
+pub fn largest_column_summary(flows: &[FlowReport]) -> Option<String> {
+    let t7 = find(flows, "270x25", "TNN7")?;
+    Some(format!(
+        "Largest column (270x25, TNN7): {:.3} mm^2 die, {:.3} mW total power, {:.1} ns latency\n\
+         (paper: 0.035 mm^2, 0.067 mW, 180 ns)\n",
+        t7.die_area_um2 / 1e6,
+        t7.power.total_mw(),
+        t7.latency_ns
+    ))
+}
+
+/// Fig 2: three small columns on one floorplan + the largest column;
+/// computation latencies, plus ASCII layout density maps.
+pub fn fig2(effort: Effort) -> Result<String> {
+    let lib = tnn7();
+    let mut out = String::new();
+    let mut t = Table::new(&["Column", "Latency (ns)", "paper (ns)", "fmax (MHz)", "die (um2)"]);
+    // Shared floorplan sized for the largest of the three small columns.
+    let small_tags = ["65x2", "96x2", "152x2"];
+    let mut shared_side = 0.0f64;
+    let mut reports = Vec::new();
+    for cfg in paper_configs() {
+        if small_tags.contains(&cfg.tag().as_str()) {
+            let probe = run_flow(&cfg, &lib, &FlowOpts::default())?;
+            shared_side = shared_side.max(probe.die_area_um2.sqrt());
+            reports.push((cfg, probe));
+        }
+    }
+    for (cfg, _probe) in &reports {
+        let opts = FlowOpts {
+            place: PlaceOpts { fixed_die_um: Some(shared_side), ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_flow(cfg, &lib, &opts)?;
+        let paper = FIG2_PAPER.iter().find(|(t2, _)| *t2 == cfg.tag()).unwrap().1;
+        t.row(&[
+            cfg.tag(),
+            f2(r.latency_ns),
+            f2(paper),
+            f1(r.timing.fmax_mhz),
+            f1(r.die_area_um2),
+        ]);
+    }
+    if effort.full {
+        if let Some(cfg) = paper_configs().into_iter().find(|c| c.tag() == "270x25") {
+            let r = run_flow(&cfg, &lib, &FlowOpts::default())?;
+            t.row(&[
+                cfg.tag(),
+                f2(r.latency_ns),
+                f2(180.0),
+                f1(r.timing.fmax_mhz),
+                f1(r.die_area_um2),
+            ]);
+        }
+    }
+    out.push_str(&format!(
+        "Fig 2 — computation latency, three columns on a {:.0}x{:.0} um floorplan (TNN7)\n{}",
+        shared_side,
+        shared_side,
+        t.render()
+    ));
+    save_report("fig2.csv", &t.to_csv())?;
+    Ok(out)
+}
+
+/// Fig 3: place-and-route runtime, ASAP7 vs TNN7, vs column size. Also
+/// reports the §III-C synthesis-speedup and full-flow claims.
+pub fn fig3(effort: Effort) -> Result<String> {
+    let mut t = Table::new(&[
+        "Column",
+        "Synapses",
+        "ASAP7 P&R (s)",
+        "TNN7 P&R (s)",
+        "P&R speedup",
+        "ASAP7 synth (s)",
+        "TNN7 synth (s)",
+        "synth speedup",
+        "full-flow speedup",
+    ]);
+    let mut pnr_gains = Vec::new();
+    let mut last_full_gain = 0.0;
+    for cfg in effort.configs() {
+        let a = run_flow(&cfg, &asap7(), &FlowOpts::default())?;
+        let t7 = run_flow(&cfg, &tnn7(), &FlowOpts::default())?;
+        let pnr_speedup = a.runtimes.pnr_s() / t7.runtimes.pnr_s().max(1e-9);
+        let synth_speedup = a.runtimes.synthesis_s / t7.runtimes.synthesis_s.max(1e-9);
+        let full = a.runtimes.full_flow_s() / t7.runtimes.full_flow_s().max(1e-9);
+        last_full_gain = 100.0 * (1.0 - 1.0 / full);
+        pnr_gains.push(100.0 * (1.0 - 1.0 / pnr_speedup));
+        t.row(&[
+            cfg.tag(),
+            cfg.synapse_count().to_string(),
+            f2(a.runtimes.pnr_s()),
+            f2(t7.runtimes.pnr_s()),
+            f2(pnr_speedup),
+            f2(a.runtimes.synthesis_s),
+            f2(t7.runtimes.synthesis_s),
+            f2(synth_speedup),
+            f2(full),
+        ]);
+    }
+    let rendered = format!(
+        "Fig 3 — Innovus-equivalent P&R runtime, ASAP7 vs TNN7\n{}\n\
+         mean P&R runtime gain with TNN7: {:.1}% (paper: ~32%)\n\
+         largest-design full-flow gain: {:.1}% (paper: ~47%)\n",
+        t.render(),
+        crate::util::stats::mean(&pnr_gains),
+        last_full_gain
+    );
+    save_report("fig3.csv", &t.to_csv())?;
+    Ok(rendered)
+}
+
+/// Training sweep sizes for the forecaster (synapse counts spanning the
+/// paper design range, distinct from the evaluated designs).
+pub fn forecast_sweep(full: bool) -> Vec<(usize, usize)> {
+    if full {
+        vec![
+            (50, 2),
+            (100, 2),
+            (90, 3),
+            (200, 2),
+            (160, 4),
+            (400, 2),
+            (300, 4),
+            (500, 3),
+            (450, 5),
+            (900, 2),
+            (700, 4),
+            (1000, 3),
+        ]
+    } else {
+        vec![(50, 2), (100, 2), (200, 2), (160, 4), (400, 2)]
+    }
+}
+
+/// Table V + Fig 4: forecast post-layout TNN7 area/leakage from synapse
+/// count; report the fit and per-design errors vs actual flows.
+pub fn table5_fig4(flows: &[FlowReport], effort: Effort) -> Result<String> {
+    let coord = Coordinator::native();
+    let fc: Forecaster =
+        coord.train_forecaster(&forecast_sweep(effort.full), &tnn7(), &FlowOpts::default())?;
+    let mut t = Table::new(&[
+        "Benchmark",
+        "Synapses",
+        "FC area (um2)",
+        "area err",
+        "FC leakage (uW)",
+        "leakage err",
+    ]);
+    for cfg in effort.configs() {
+        let Some(actual) = find(flows, &cfg.tag(), "TNN7") else { continue };
+        let f = fc.predict(cfg.synapse_count());
+        let (ae, le) = fc.errors(actual);
+        t.row(&[
+            cfg.name.clone(),
+            cfg.synapse_count().to_string(),
+            f2(f.area_um2),
+            pct(ae),
+            f2(f.leakage_uw),
+            pct(le),
+        ]);
+    }
+    // Fig 4 data: training points + fit lines.
+    let mut fig4 = Table::new(&["synapses", "area_um2", "leakage_uw", "fit_area", "fit_leak"]);
+    for &(syn, area, leak) in &fc.points {
+        let p = fc.predict(syn);
+        fig4.row(&[
+            syn.to_string(),
+            f2(area),
+            f3(leak),
+            f2(p.area_um2),
+            f3(p.leakage_uw),
+        ]);
+    }
+    save_report("table5.csv", &t.to_csv())?;
+    save_report("fig4.csv", &fig4.to_csv())?;
+    Ok(format!(
+        "Table V — forecasted post-P&R TNN7 area/leakage (trained on {} flow runs)\n{}\n\
+         fit: Area = {:.3}*syn + {:.1} (R2={:.4})   [paper: {:.2}*syn + {:.1}]\n\
+         fit: Leak = {:.5}*syn + {:.3} (R2={:.4})  [paper: {:.5}*syn + {:.3}]\n",
+        fc.points.len(),
+        t.render(),
+        fc.area_fit.0,
+        fc.area_fit.1,
+        fc.area_fit.2,
+        PAPER_AREA_FIT.0,
+        PAPER_AREA_FIT.1,
+        fc.leak_fit.0,
+        fc.leak_fit.1,
+        fc.leak_fit.2,
+        PAPER_LEAK_FIT.0,
+        PAPER_LEAK_FIT.1,
+    ))
+}
+
+/// ASCII layout density map (the Fig-2 "layout" visual).
+pub fn layout_ascii(p: &crate::eda::Placement, cols: usize) -> String {
+    let rows = cols / 2;
+    let mut grid = vec![vec![0usize; cols]; rows];
+    for &(x, y) in &p.coords {
+        let cx = ((x as f64 / p.die_w_um) * cols as f64) as usize;
+        let cy = ((y as f64 / p.die_h_um) * rows as f64) as usize;
+        grid[cy.min(rows - 1)][cx.min(cols - 1)] += 1;
+    }
+    let max = grid.iter().flatten().copied().max().unwrap_or(1).max(1);
+    let shades = [' ', '.', ':', '+', '*', '#'];
+    let mut out = String::new();
+    out.push_str(&format!("+{}+\n", "-".repeat(cols)));
+    for row in &grid {
+        out.push('|');
+        for &c in row {
+            let idx = (c * (shades.len() - 1)).div_ceil(max).min(shades.len() - 1);
+            out.push(shades[idx]);
+        }
+        out.push_str("|\n");
+    }
+    out.push_str(&format!("+{}+\n", "-".repeat(cols)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_effort_trims_configs() {
+        assert_eq!(Effort::fast().configs().len(), 3);
+        assert_eq!(Effort::full().configs().len(), 7);
+    }
+
+    #[test]
+    fn forecast_sweep_distinct_from_paper_designs() {
+        let paper: Vec<usize> = paper_configs().iter().map(|c| c.synapse_count()).collect();
+        for (p, q) in forecast_sweep(true) {
+            assert!(!paper.contains(&(p * q)), "{p}x{q} collides with a paper design");
+        }
+    }
+
+    #[test]
+    fn layout_ascii_shape() {
+        let cfg = ColumnConfig::new("L", "synthetic", 6, 2);
+        let rtl = crate::rtl::generate_column(&cfg).unwrap();
+        let d = crate::eda::synthesize(&rtl.netlist, &asap7());
+        let p = crate::eda::place(&d, &PlaceOpts::default());
+        let art = layout_ascii(&p, 40);
+        assert_eq!(art.lines().count(), 22);
+    }
+}

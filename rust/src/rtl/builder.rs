@@ -1,0 +1,343 @@
+//! Bus-level construction helpers over the gate-level netlist IR: adders,
+//! comparators, registers, muxes — the building blocks the column
+//! generators compose. All datapaths are LSB-first unsigned buses.
+
+use super::netlist::{GateKind, NetId, Netlist};
+
+/// Builder wrapping a netlist with a hierarchical name scope.
+pub struct Builder<'a> {
+    pub n: &'a mut Netlist,
+    scope: Vec<String>,
+    fresh: usize,
+    const0: Option<NetId>,
+    const1: Option<NetId>,
+}
+
+impl<'a> Builder<'a> {
+    pub fn new(n: &'a mut Netlist) -> Self {
+        Builder { n, scope: Vec::new(), fresh: 0, const0: None, const1: None }
+    }
+
+    /// Enter a hierarchical scope: all gates created inside get the prefix.
+    pub fn scoped<R>(&mut self, name: &str, f: impl FnOnce(&mut Self) -> R) -> R {
+        self.scope.push(name.to_string());
+        let r = f(self);
+        self.scope.pop();
+        r
+    }
+
+    fn name(&mut self, hint: &str) -> String {
+        self.fresh += 1;
+        let mut path = self.scope.join("/");
+        if !path.is_empty() {
+            path.push('/');
+        }
+        format!("{path}{hint}_{}", self.fresh)
+    }
+
+    pub fn gate(&mut self, kind: GateKind, hint: &str, inputs: Vec<NetId>) -> NetId {
+        let out = self.n.new_net();
+        let name = self.name(hint);
+        self.n.add_gate(kind, &name, inputs, out);
+        out
+    }
+
+    pub fn zero(&mut self) -> NetId {
+        if let Some(z) = self.const0 {
+            return z;
+        }
+        let z = self.gate(GateKind::Const0, "zero", vec![]);
+        self.const0 = Some(z);
+        z
+    }
+
+    pub fn one(&mut self) -> NetId {
+        if let Some(o) = self.const1 {
+            return o;
+        }
+        let o = self.gate(GateKind::Const1, "one", vec![]);
+        self.const1 = Some(o);
+        o
+    }
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.gate(GateKind::Inv, "inv", vec![a])
+    }
+    pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(GateKind::And2, "and", vec![a, b])
+    }
+    pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(GateKind::Or2, "or", vec![a, b])
+    }
+    pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(GateKind::Xor2, "xor", vec![a, b])
+    }
+    pub fn xnor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.gate(GateKind::Xnor2, "xnor", vec![a, b])
+    }
+    /// mux: sel ? b : a
+    pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        self.gate(GateKind::Mux2, "mux", vec![sel, a, b])
+    }
+
+    /// Wide AND/OR reduction (balanced tree).
+    pub fn reduce(&mut self, kind: GateKind, xs: &[NetId]) -> NetId {
+        assert!(!xs.is_empty());
+        let mut layer: Vec<NetId> = xs.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    self.gate(kind, "red", vec![pair[0], pair[1]])
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    /// Constant bus of `width` bits holding `value`.
+    pub fn const_bus(&mut self, value: u64, width: usize) -> Vec<NetId> {
+        (0..width)
+            .map(|b| if (value >> b) & 1 == 1 { self.one() } else { self.zero() })
+            .collect()
+    }
+
+    /// Ripple-carry adder: a + b (+ cin), returns (sum bits, carry-out).
+    pub fn adder(&mut self, a: &[NetId], b: &[NetId], cin: Option<NetId>) -> (Vec<NetId>, NetId) {
+        assert_eq!(a.len(), b.len());
+        let mut carry = match cin {
+            Some(c) => c,
+            None => self.zero(),
+        };
+        let mut sum = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let axb = self.xor(a[i], b[i]);
+            let s = self.xor(axb, carry);
+            let t1 = self.and(axb, carry);
+            let t2 = self.and(a[i], b[i]);
+            carry = self.or(t1, t2);
+            sum.push(s);
+        }
+        (sum, carry)
+    }
+
+    /// a - b as two's complement; returns (diff, borrow) where borrow=1 when
+    /// a < b.
+    pub fn subtractor(&mut self, a: &[NetId], b: &[NetId]) -> (Vec<NetId>, NetId) {
+        let nb: Vec<NetId> = b.iter().map(|&x| self.not(x)).collect();
+        let one = self.one();
+        let (diff, carry) = self.adder(a, &nb, Some(one));
+        let borrow = self.not(carry);
+        (diff, borrow)
+    }
+
+    /// Unsigned comparison a >= b.
+    pub fn ge(&mut self, a: &[NetId], b: &[NetId]) -> NetId {
+        let (_, borrow) = self.subtractor(a, b);
+        self.not(borrow)
+    }
+
+    /// Unsigned comparison a < b.
+    pub fn lt(&mut self, a: &[NetId], b: &[NetId]) -> NetId {
+        let (_, borrow) = self.subtractor(a, b);
+        borrow
+    }
+
+    /// Equality a == b.
+    pub fn eq(&mut self, a: &[NetId], b: &[NetId]) -> NetId {
+        assert_eq!(a.len(), b.len());
+        let bits: Vec<NetId> = a.iter().zip(b).map(|(&x, &y)| self.xnor(x, y)).collect();
+        self.reduce(GateKind::And2, &bits)
+    }
+
+    /// Per-bit mux of two buses.
+    pub fn mux_bus(&mut self, sel: NetId, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.mux(sel, x, y)).collect()
+    }
+
+    /// Register bank: `width` DFFs with shared enable; returns (q bus) and
+    /// takes the d bus. q nets are created by this call (feedback loops are
+    /// fine: create q first via `reg_declare` when needed).
+    pub fn register(&mut self, d: &[NetId], en: NetId) -> Vec<NetId> {
+        d.iter()
+            .map(|&di| self.gate(GateKind::Dff, "ff", vec![di, en]))
+            .collect()
+    }
+
+    /// Pre-declare flop outputs so combinational logic can read them before
+    /// the d inputs exist; complete with `reg_connect`.
+    pub fn reg_declare(&mut self, width: usize) -> Vec<NetId> {
+        self.n.new_bus(width)
+    }
+
+    pub fn reg_connect(&mut self, q: &[NetId], d: &[NetId], en: NetId) {
+        assert_eq!(q.len(), d.len());
+        for (i, (&qi, &di)) in q.iter().zip(d).enumerate() {
+            let name = self.name(&format!("ff{i}"));
+            self.n.add_gate(GateKind::Dff, &name, vec![di, en], qi);
+        }
+    }
+
+    /// value+1 (incrementer), returns (bits, carry-out).
+    pub fn increment(&mut self, a: &[NetId]) -> (Vec<NetId>, NetId) {
+        let mut carry = self.one();
+        let mut out = Vec::with_capacity(a.len());
+        for &bit in a {
+            out.push(self.xor(bit, carry));
+            carry = self.and(bit, carry);
+        }
+        (out, carry)
+    }
+
+    /// Zero-extend a bus to `width`.
+    pub fn extend(&mut self, a: &[NetId], width: usize) -> Vec<NetId> {
+        assert!(width >= a.len());
+        let mut out = a.to_vec();
+        let z = self.zero();
+        out.resize(width, z);
+        out
+    }
+
+    /// Gate every bit of `a` with `en` (AND).
+    pub fn gate_bus(&mut self, a: &[NetId], en: NetId) -> Vec<NetId> {
+        a.iter().map(|&x| self.and(x, en)).collect()
+    }
+
+    /// Balanced adder tree summing `terms` (buses of equal width) with
+    /// bit-growth; returns the sum bus (width + ceil(log2(n)) bits).
+    pub fn adder_tree(&mut self, terms: &[Vec<NetId>]) -> Vec<NetId> {
+        assert!(!terms.is_empty());
+        let mut layer: Vec<Vec<NetId>> = terms.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                if pair.len() == 2 {
+                    let w = pair[0].len().max(pair[1].len());
+                    let a = self.extend(&pair[0], w);
+                    let b = self.extend(&pair[1], w);
+                    let (mut s, c) = self.adder(&a, &b, None);
+                    s.push(c);
+                    next.push(s);
+                } else {
+                    next.push(pair[0].clone());
+                }
+            }
+            layer = next;
+        }
+        layer.pop().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::sim::GateSim;
+
+    /// Evaluate a pure-combinational builder circuit once.
+    fn eval<'a>(n: &'a Netlist, inputs: &[(&str, u64)]) -> GateSim<'a> {
+        let mut sim = GateSim::new(n).unwrap();
+        for (name, v) in inputs {
+            sim.set_input(name, *v);
+        }
+        sim.settle();
+        sim
+    }
+
+    #[test]
+    fn adder_all_small_values() {
+        let mut n = Netlist::new("add4");
+        let a = n.new_bus(4);
+        let b = n.new_bus(4);
+        n.add_input("a", a.clone());
+        n.add_input("b", b.clone());
+        let mut bld = Builder::new(&mut n);
+        let (sum, cout) = bld.adder(&a, &b, None);
+        n.add_output("sum", sum);
+        n.add_output("cout", vec![cout]);
+        n.validate().unwrap();
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                let sim = eval(&n, &[("a", x), ("b", y)]);
+                let got = sim.get_output("sum") | (sim.get_output("cout") << 4);
+                assert_eq!(got, x + y, "{x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn comparators_match_integers() {
+        let mut n = Netlist::new("cmp");
+        let a = n.new_bus(5);
+        let b = n.new_bus(5);
+        n.add_input("a", a.clone());
+        n.add_input("b", b.clone());
+        let mut bld = Builder::new(&mut n);
+        let ge = bld.ge(&a, &b);
+        let lt = bld.lt(&a, &b);
+        let eq = bld.eq(&a, &b);
+        n.add_output("ge", vec![ge]);
+        n.add_output("lt", vec![lt]);
+        n.add_output("eq", vec![eq]);
+        n.validate().unwrap();
+        for x in (0..32u64).step_by(3) {
+            for y in (0..32u64).step_by(5) {
+                let sim = eval(&n, &[("a", x), ("b", y)]);
+                assert_eq!(sim.get_output("ge") == 1, x >= y);
+                assert_eq!(sim.get_output("lt") == 1, x < y);
+                assert_eq!(sim.get_output("eq") == 1, x == y);
+            }
+        }
+    }
+
+    #[test]
+    fn adder_tree_sums_terms() {
+        let mut n = Netlist::new("tree");
+        let buses: Vec<Vec<usize>> = (0..5).map(|_| n.new_bus(3)).collect();
+        for (i, b) in buses.iter().enumerate() {
+            n.add_input(&format!("t{i}"), b.clone());
+        }
+        let mut bld = Builder::new(&mut n);
+        let sum = bld.adder_tree(&buses);
+        n.add_output("sum", sum);
+        n.validate().unwrap();
+        let vals = [7u64, 3, 5, 1, 6];
+        let inputs: Vec<(String, u64)> =
+            vals.iter().enumerate().map(|(i, &v)| (format!("t{i}"), v)).collect();
+        let refs: Vec<(&str, u64)> = inputs.iter().map(|(s, v)| (s.as_str(), *v)).collect();
+        let sim = eval(&n, &refs);
+        assert_eq!(sim.get_output("sum"), vals.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn subtractor_borrow() {
+        let mut n = Netlist::new("sub");
+        let a = n.new_bus(4);
+        let b = n.new_bus(4);
+        n.add_input("a", a.clone());
+        n.add_input("b", b.clone());
+        let mut bld = Builder::new(&mut n);
+        let (diff, borrow) = bld.subtractor(&a, &b);
+        n.add_output("diff", diff);
+        n.add_output("borrow", vec![borrow]);
+        for (x, y) in [(9u64, 4u64), (4, 9), (7, 7)] {
+            let sim = eval(&n, &[("a", x), ("b", y)]);
+            assert_eq!(sim.get_output("borrow") == 1, x < y);
+            assert_eq!(sim.get_output("diff"), (x.wrapping_sub(y)) & 0xF);
+        }
+    }
+
+    #[test]
+    fn scoped_names_nest() {
+        let mut n = Netlist::new("scopes");
+        let a = n.new_net();
+        n.add_input("a", vec![a]);
+        let mut bld = Builder::new(&mut n);
+        let out = bld.scoped("n0", |b| b.scoped("syn1", |b| b.not(a)));
+        n.add_output("o", vec![out]);
+        assert!(n.gates[0].name.starts_with("n0/syn1/inv"));
+    }
+}

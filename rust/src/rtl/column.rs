@@ -1,0 +1,542 @@
+//! TNN column RTL generator, aligned with the [7] microarchitecture:
+//! per-synapse ramp-no-leak response + STDP units, per-neuron adder tree +
+//! threshold, 1-WTA lateral inhibition, and a small FSM sequencer.
+//!
+//! Datapath encoding (matches the functional contract exactly for dyadic
+//! weights):
+//! * weights: 6-bit fixed point in units of 1/8 (0 .. 56 == 0.0 .. 7.0);
+//! * STDP steps: mu_capture = mu_backoff = 8 units (1.0), mu_search = 1
+//!   unit (0.125);
+//! * threshold: theta * 8 (integer because theta = 0.5 * p * 7);
+//! * spike times: 6 bits, T_R = 32 meaning "no spike".
+//!
+//! Per-sample protocol (see `ColumnRtl::run_sample`): pulse `start`, then
+//! clock for T_R + 2 cycles (32 response + 1 STDP + 1 done). The RTL
+//! generator emits ramp-no-leak columns (the configuration evaluated by the
+//! paper); SNL/LIF remain simulator-level options.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ColumnConfig, Response};
+
+use super::builder::Builder;
+use super::netlist::{GateKind, NetId, Netlist};
+use super::sim::GateSim;
+
+/// Number of clock cycles per sample: T_R response + STDP + done.
+pub fn cycles_per_sample(t_r: i32) -> usize {
+    t_r as usize + 2
+}
+
+/// Generated column RTL plus structural metadata.
+pub struct ColumnRtl {
+    pub netlist: Netlist,
+    pub config: ColumnConfig,
+    /// Fixed-point threshold (units of 1/8).
+    pub theta_fp: u64,
+    /// Width of the membrane-potential accumulator.
+    pub v_bits: usize,
+    /// Width of the winner index bus.
+    pub winner_bits: usize,
+}
+
+fn log2_ceil(mut n: u64) -> usize {
+    let mut bits = 0;
+    n = n.saturating_sub(1);
+    while n > 0 {
+        bits += 1;
+        n >>= 1;
+    }
+    bits.max(1)
+}
+
+const WB: usize = 6; // weight bits (units of 1/8)
+const SB: usize = 6; // spike-time bits (0..32)
+const TB: usize = 6; // cycle-counter bits (0..34)
+// STDP deltas in 1/8 fixed point (+8 capture, -8 backoff, +1 search) are
+// wired structurally in the delta-bus construction below.
+const W_MAX_FP: u64 = 56;
+
+/// Generate the gate-level netlist for a column configuration (with the
+/// debug weight read-back port — used by simulation and cross-validation).
+pub fn generate_column(cfg: &ColumnConfig) -> Result<ColumnRtl> {
+    generate_column_opts(cfg, true)
+}
+
+/// Generate without the debug weight read-back buffers (the silicon
+/// configuration used by the EDA flows — a taped-out NSPU exposes winner/
+/// spike outputs only, not 6*p*q weight observation pins).
+pub fn generate_column_silicon(cfg: &ColumnConfig) -> Result<ColumnRtl> {
+    generate_column_opts(cfg, false)
+}
+
+pub fn generate_column_opts(cfg: &ColumnConfig, debug_weights: bool) -> Result<ColumnRtl> {
+    if cfg.params.response != Response::Rnl {
+        bail!("the RTL generator emits ramp-no-leak columns only (got {:?})", cfg.params.response);
+    }
+    let (p, q) = (cfg.p, cfg.q);
+    let t_r = cfg.params.t_r as u64;
+    let theta_fp = (cfg.theta() * 8.0).round() as u64;
+    // V stops accumulating after fire; one extra increment of headroom.
+    let v_max = theta_fp + 2 * W_MAX_FP * p as u64;
+    let v_bits = log2_ceil(v_max + 1) + 1;
+    let winner_bits = log2_ceil(q as u64).max(1);
+
+    let mut n = Netlist::new(&format!("tnn_column_{}", cfg.tag()));
+
+    // ---- ports -----------------------------------------------------------
+    let start = n.new_net();
+    let learn = n.new_net();
+    let load_w = n.new_net();
+    n.add_input("start", vec![start]);
+    n.add_input("learn", vec![learn]);
+    n.add_input("load_w", vec![load_w]);
+    let s_bits: Vec<Vec<NetId>> = (0..p).map(|_| n.new_bus(SB)).collect();
+    n.add_input("s", s_bits.iter().flatten().copied().collect());
+    let w_init: Vec<Vec<Vec<NetId>>> =
+        (0..q).map(|_| (0..p).map(|_| n.new_bus(WB)).collect()).collect();
+    n.add_input(
+        "w_init",
+        w_init.iter().flatten().flatten().copied().collect(),
+    );
+
+    let mut b = Builder::new(&mut n);
+
+    // ---- sequencer -------------------------------------------------------
+    // t counter: 0 .. T_R+1; start clears to 0.
+    let t_q = b.reg_declare(TB);
+    let (t_inc, _) = b.increment(&t_q);
+    let zero_bus = b.const_bus(0, TB);
+    let t_d = b.mux_bus(start, &t_inc, &zero_bus);
+    let done_const = b.const_bus(t_r + 1, TB);
+    let is_done = b.eq(&t_q, &done_const);
+    let not_done = b.not(is_done);
+    let t_en = b.or(start, not_done);
+    b.scoped("seq", |b| b.reg_connect(&t_q, &t_d, t_en));
+    let stdp_const = b.const_bus(t_r, TB);
+    let stdp_phase = b.eq(&t_q, &stdp_const);
+    let response_phase = b.lt(&t_q, &stdp_const);
+
+    // ---- input interface: arrival comparators (shared across neurons) ----
+    let not_start = b.not(start);
+    let mut arrived = Vec::with_capacity(p);
+    let mut has_in = Vec::with_capacity(p);
+    for (i, s_i) in s_bits.iter().enumerate() {
+        b.scoped(&format!("enc{i}"), |b| {
+            let ge = b.ge(&t_q, s_i); // t >= s_i
+            let in_resp = b.and(ge, response_phase);
+            let a = b.and(in_resp, not_start);
+            arrived.push(a);
+            // has_in: s_i < T (upper bits of s zero when s < 8).
+            let t_const = b.const_bus(cfg.params.t as u64, SB);
+            has_in.push(b.lt(s_i, &t_const));
+        });
+    }
+
+    // ---- per-neuron response path ----------------------------------------
+    let theta_bus_proto: Vec<u64> = vec![theta_fp];
+    let _ = theta_bus_proto;
+    let mut fired_latch_all = Vec::with_capacity(q);
+    let mut new_fire_all = Vec::with_capacity(q);
+    let mut y_all: Vec<Vec<NetId>> = Vec::with_capacity(q);
+    let mut w_regs: Vec<Vec<Vec<NetId>>> = Vec::with_capacity(q);
+
+    for j in 0..q {
+        b.scoped(&format!("n{j}"), |b| {
+            // Weight registers (q outputs declared up front for STDP feedback).
+            let mut w_row = Vec::with_capacity(p);
+            for i in 0..p {
+                let wq = b.scoped(&format!("syn{i}"), |b| b.reg_declare(WB));
+                w_row.push(wq);
+            }
+
+            // Response adder tree over arrived-gated weights.
+            let terms: Vec<Vec<NetId>> = (0..p)
+                .map(|i| b.scoped(&format!("syn{i}"), |b| b.gate_bus(&w_row[i], arrived[i])))
+                .collect();
+            let sum = b.scoped("tree", |b| b.adder_tree(&terms));
+
+            // Membrane potential accumulator.
+            let v_q = b.reg_declare(v_bits);
+            let sum_ext = b.extend(&sum, v_bits);
+            let (v_plus, _) = b.adder(&v_q, &sum_ext, None);
+            let vzero = b.const_bus(0, v_bits);
+            let v_d = b.mux_bus(start, &v_plus, &vzero);
+            let theta_bus = b.const_bus(theta_fp, v_bits);
+            let fired_now = b.ge(&v_q, &theta_bus);
+
+            let fired_latch = b.reg_declare(1);
+            let nfl = b.not(fired_latch[0]);
+            let new_fire = b.and(fired_now, nfl);
+            let nf_resp = b.and(new_fire, response_phase);
+            // fired_latch: set on fire, cleared at start.
+            let fl_set = b.or(fired_latch[0], nf_resp);
+            let fl_d = vec![b.and(fl_set, not_start)];
+            let fl_en = b.one();
+            b.scoped("resp", |b| b.reg_connect(&fired_latch, &fl_d, fl_en));
+
+            // V accumulates while not fired (freezes after crossing).
+            let v_en_resp = b.and(response_phase, nfl);
+            let v_en = b.or(start, v_en_resp);
+            b.scoped("resp", |b| b.reg_connect(&v_q, &v_d, v_en));
+
+            // Output spike time y_j: latch t on fire; start resets to T_R.
+            let y_q = b.reg_declare(SB);
+            let tr_bus = b.const_bus(t_r, SB);
+            let t_ext = b.extend(&t_q, SB);
+            let y_d = b.mux_bus(start, &t_ext, &tr_bus);
+            let y_en = b.or(start, nf_resp);
+            b.scoped("resp", |b| b.reg_connect(&y_q, &y_d, y_en));
+
+            fired_latch_all.push(fired_latch[0]);
+            new_fire_all.push(nf_resp);
+            y_all.push(y_q);
+            w_regs.push(w_row);
+        });
+    }
+
+    // ---- WTA: earliest spike, lowest-index tie-break ----------------------
+    let (winner_q, wta_done_q, y_win_q) = b.scoped("wta", |b| {
+        // first_j = new_fire_j & no new_fire with lower index.
+        let mut first = Vec::with_capacity(q);
+        let mut any_lower: Option<NetId> = None;
+        for &nf in &new_fire_all {
+            match any_lower {
+                None => {
+                    first.push(nf);
+                    any_lower = Some(nf);
+                }
+                Some(lower) => {
+                    let nl = b.not(lower);
+                    first.push(b.and(nf, nl));
+                    any_lower = Some(b.or(lower, nf));
+                }
+            }
+        }
+        let any_new = any_lower.unwrap();
+
+        let wta_done_q = b.reg_declare(1);
+        let ndone = b.not(wta_done_q[0]);
+        let we0 = b.and(any_new, ndone);
+        let we = b.and(we0, response_phase);
+
+        // Priority-encoded winner index.
+        let winner_q = b.reg_declare(winner_bits);
+        let mut winner_d = Vec::with_capacity(winner_bits);
+        for bit in 0..winner_bits {
+            let contributors: Vec<NetId> = (0..q)
+                .filter(|j| (j >> bit) & 1 == 1)
+                .map(|j| first[j])
+                .collect();
+            let val = if contributors.is_empty() {
+                b.zero()
+            } else {
+                b.reduce(GateKind::Or2, &contributors)
+            };
+            winner_d.push(val);
+        }
+        let wzero = b.const_bus(0, winner_bits);
+        let winner_dm = b.mux_bus(start, &winner_d, &wzero);
+        let w_en = b.or(start, we);
+        b.reg_connect(&winner_q, &winner_dm, w_en);
+
+        // wta_done: set on first fire, cleared at start.
+        let set = b.or(wta_done_q[0], we);
+        let d = vec![b.and(set, not_start)];
+        let en = b.one();
+        b.reg_connect(&wta_done_q, &d, en);
+
+        // y_win: the winner's spike time (== t at the we cycle).
+        let y_win_q = b.reg_declare(SB);
+        let tr_bus = b.const_bus(t_r, SB);
+        let t_ext = b.extend(&t_q, SB);
+        let yd = b.mux_bus(start, &t_ext, &tr_bus);
+        let yen = b.or(start, we);
+        b.reg_connect(&y_win_q, &yd, yen);
+
+        (winner_q, wta_done_q, y_win_q)
+    });
+
+    // ---- STDP units (one per synapse) --------------------------------------
+    let stdp_learn = b.and(stdp_phase, learn);
+    // s_i <= y_win, shared per input column.
+    let le_all: Vec<NetId> = (0..p)
+        .map(|i| b.scoped(&format!("enc{i}"), |b| b.ge(&y_win_q, &s_bits[i])))
+        .collect();
+
+    for j in 0..q {
+        // is_winner_j = wta_done & (winner == j).
+        let isw = b.scoped(&format!("n{j}"), |b| {
+            let jconst = b.const_bus(j as u64, winner_bits);
+            let eqj = b.eq(&winner_q, &jconst);
+            b.and(eqj, wta_done_q[0])
+        });
+        for i in 0..p {
+            b.scoped(&format!("n{j}"), |b| {
+                b.scoped(&format!("syn{i}"), |b| {
+                    b.scoped("stdp", |b| {
+                        let cap_cond = b.and(has_in[i], le_all[i]);
+                        let capture = b.and(isw, cap_cond);
+                        let ncap = b.not(cap_cond);
+                        let backoff = b.and(isw, ncap);
+                        let nisw = b.not(isw);
+                        let search = b.and(nisw, has_in[i]);
+
+                        // delta (8-bit two's complement):
+                        // capture -> +8, backoff -> -8, search -> +1.
+                        let zero = b.zero();
+                        let bit3 = b.or(capture, backoff);
+                        let delta = vec![
+                            search,   // bit 0
+                            zero,     // 1
+                            zero,     // 2
+                            bit3,     // 3
+                            backoff,  // 4 (sign extension of -8)
+                            backoff,  // 5
+                            backoff,  // 6
+                            backoff,  // 7
+                        ];
+                        let w_ext = b.extend(&w_regs[j][i], 8);
+                        let (sum8, _) = b.adder(&w_ext, &delta, None);
+                        let neg = sum8[7];
+                        let hi = b.const_bus(W_MAX_FP + 1, 8);
+                        let ge_hi0 = b.ge(&sum8, &hi);
+                        let nneg = b.not(neg);
+                        let ovf = b.and(ge_hi0, nneg);
+                        let wmax_bus = b.const_bus(W_MAX_FP, WB);
+                        let clamped_hi = b.mux_bus(ovf, &sum8[..WB], &wmax_bus);
+                        let zero_bus = b.const_bus(0, WB);
+                        let w_next = b.mux_bus(neg, &clamped_hi, &zero_bus);
+                        // load_w wins over the STDP update.
+                        let w_d = b.mux_bus(load_w, &w_next, &w_init[j][i]);
+                        let en0 = b.or(stdp_learn, load_w);
+                        b.reg_connect(&w_regs[j][i], &w_d, en0);
+                    });
+                });
+            });
+        }
+    }
+
+    // ---- outputs -----------------------------------------------------------
+    let done_q = b.reg_declare(1);
+    let dset = b.or(done_q[0], is_done);
+    let dd = vec![b.and(dset, not_start)];
+    let den = b.one();
+    b.scoped("seq", |b| b.reg_connect(&done_q, &dd, den));
+
+    // Buffer outputs so ports have unique drivers.
+    let winner_out = winner_q.iter().map(|&w| b.gate(GateKind::Buf, "out_w", vec![w])).collect();
+    let valid_out = b.gate(GateKind::Buf, "out_v", vec![wta_done_q[0]]);
+    let done_out = b.gate(GateKind::Buf, "out_d", vec![done_q[0]]);
+    let ywin_out: Vec<NetId> = y_win_q.iter().map(|&y| b.gate(GateKind::Buf, "out_yw", vec![y])).collect();
+    let y_out: Vec<NetId> = y_all
+        .iter()
+        .flatten()
+        .map(|&y| b.gate(GateKind::Buf, "out_y", vec![y]))
+        .collect();
+    let w_out: Option<Vec<NetId>> = if debug_weights {
+        Some(
+            w_regs
+                .iter()
+                .flatten()
+                .flatten()
+                .map(|&w| b.gate(GateKind::Buf, "out_wt", vec![w]))
+                .collect(),
+        )
+    } else {
+        None
+    };
+    let t_out: Vec<NetId> = t_q.iter().map(|&t| b.gate(GateKind::Buf, "out_t", vec![t])).collect();
+
+    n.add_output("winner", winner_out);
+    n.add_output("winner_valid", vec![valid_out]);
+    n.add_output("done", vec![done_out]);
+    n.add_output("y_win", ywin_out);
+    n.add_output("y", y_out);
+    if let Some(w_out) = w_out {
+        n.add_output("w", w_out);
+    }
+    n.add_output("t_dbg", t_out);
+
+    n.validate()?;
+    Ok(ColumnRtl { netlist: n, config: cfg.clone(), theta_fp, v_bits, winner_bits })
+}
+
+impl ColumnRtl {
+    /// Drive one sample through a gate simulator: load spike times, pulse
+    /// start, clock T_R + 2 cycles. Returns (winner or -1, y[q]).
+    /// Weights must already be loaded (see `load_weights`).
+    pub fn run_sample(&self, sim: &mut GateSim, s: &[i32], learn: bool) -> (i32, Vec<i32>) {
+        assert_eq!(s.len(), self.config.p);
+        let mut s_packed = 0u64;
+        // Pack per 64-bit chunks: set_input takes one u64, but s is p*6 bits
+        // wide; drive bit-groups via the raw port instead.
+        let _ = &mut s_packed;
+        let bits: Vec<bool> = s
+            .iter()
+            .flat_map(|&si| (0..SB).map(move |b| (si >> b) & 1 == 1))
+            .collect();
+        sim.set_input_bits("s", &bits);
+        sim.set_input("learn", learn as u64);
+        sim.set_input("load_w", 0);
+        sim.set_input("start", 1);
+        sim.settle();
+        sim.clock();
+        sim.set_input("start", 0);
+        sim.settle();
+        for _ in 0..cycles_per_sample(self.config.params.t_r) {
+            sim.clock();
+        }
+        assert_eq!(sim.get_output("done"), 1, "column did not finish");
+        let valid = sim.get_output("winner_valid") == 1;
+        let winner = if valid { sim.get_output("winner") as i32 } else { -1 };
+        let y_bits = sim.get_output_bits("y");
+        let y: Vec<i32> = (0..self.config.q)
+            .map(|j| {
+                (0..SB).fold(0i32, |acc, b| acc | ((y_bits[j * SB + b] as i32) << b))
+            })
+            .collect();
+        (winner, y)
+    }
+
+    /// Load fixed-point weights (units of 1/8) into the weight registers.
+    pub fn load_weights(&self, sim: &mut GateSim, w_fp: &[Vec<u64>]) {
+        assert_eq!(w_fp.len(), self.config.q);
+        let bits: Vec<bool> = w_fp
+            .iter()
+            .flat_map(|row| {
+                assert_eq!(row.len(), self.config.p);
+                row.iter().flat_map(|&w| (0..WB).map(move |b| (w >> b) & 1 == 1))
+            })
+            .collect();
+        sim.set_input_bits("w_init", &bits);
+        sim.set_input("load_w", 1);
+        sim.set_input("start", 0);
+        sim.set_input("learn", 0);
+        sim.settle();
+        sim.clock();
+        sim.set_input("load_w", 0);
+        sim.settle();
+    }
+
+    /// Read back the weight registers (units of 1/8).
+    pub fn read_weights(&self, sim: &GateSim) -> Vec<Vec<u64>> {
+        let bits = sim.get_output_bits("w");
+        (0..self.config.q)
+            .map(|j| {
+                (0..self.config.p)
+                    .map(|i| {
+                        let base = (j * self.config.p + i) * WB;
+                        (0..WB).fold(0u64, |acc, b| acc | ((bits[base + b] as u64) << b))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ColumnConfig, TieBreak, TnnParams};
+    use crate::sim::column::{first_crossing, potentials, stdp_update, wta};
+    use crate::util::Rng;
+
+    fn tiny_cfg(p: usize, q: usize) -> ColumnConfig {
+        ColumnConfig::new("RtlTest", "synthetic", p, q)
+    }
+
+    /// Functional reference on fixed-point weights.
+    fn reference(
+        cfg: &ColumnConfig,
+        w_fp: &[Vec<u64>],
+        s: &[i32],
+        learn: bool,
+    ) -> (i32, Vec<i32>, Vec<Vec<u64>>) {
+        let mut w: Vec<Vec<f32>> = w_fp
+            .iter()
+            .map(|r| r.iter().map(|&u| u as f32 / 8.0).collect())
+            .collect();
+        let params = &cfg.params;
+        let theta = cfg.theta();
+        let y: Vec<i32> = potentials(&w, s, params)
+            .iter()
+            .map(|v| first_crossing(v, theta, params.t_r))
+            .collect();
+        let (winner, gated) = wta(&y, params.t_r, TieBreak::Low);
+        if learn {
+            stdp_update(&mut w, s, &gated, params);
+        }
+        let w_back: Vec<Vec<u64>> = w
+            .iter()
+            .map(|r| r.iter().map(|&f| (f * 8.0).round() as u64).collect())
+            .collect();
+        (winner, y, w_back)
+    }
+
+    #[test]
+    fn generated_column_validates() {
+        let rtl = generate_column(&tiny_cfg(8, 2)).unwrap();
+        rtl.netlist.validate().unwrap();
+        assert!(rtl.netlist.gates.len() > 500);
+        assert!(rtl.netlist.num_flops() > 8 * 2 * WB);
+    }
+
+    #[test]
+    fn rtl_matches_functional_inference_and_stdp() {
+        let cfg = tiny_cfg(8, 2);
+        let rtl = generate_column(&cfg).unwrap();
+        let mut sim = GateSim::new(&rtl.netlist).unwrap();
+        let mut rng = Rng::new(99);
+        let mut w_fp: Vec<Vec<u64>> = (0..cfg.q)
+            .map(|_| (0..cfg.p).map(|_| rng.below(57) as u64).collect())
+            .collect();
+        rtl.load_weights(&mut sim, &w_fp);
+        for step in 0..30 {
+            let s: Vec<i32> = (0..cfg.p).map(|_| rng.range(0, 8) as i32).collect();
+            let learn = step % 3 != 2;
+            let (want_winner, want_y, want_w) = reference(&cfg, &w_fp, &s, learn);
+            let (got_winner, got_y) = rtl.run_sample(&mut sim, &s, learn);
+            assert_eq!(got_winner, want_winner, "step {step} s={s:?}");
+            assert_eq!(got_y, want_y, "step {step}");
+            let got_w = rtl.read_weights(&sim);
+            assert_eq!(got_w, want_w, "step {step}");
+            w_fp = want_w;
+        }
+    }
+
+    #[test]
+    fn rtl_handles_no_fire() {
+        let mut cfg = tiny_cfg(4, 2);
+        // Impossibly high threshold: nothing fires, all synapses search.
+        cfg.params.theta_frac = 100.0;
+        let rtl = generate_column(&cfg).unwrap();
+        let mut sim = GateSim::new(&rtl.netlist).unwrap();
+        let w0 = vec![vec![8u64; 4]; 2];
+        rtl.load_weights(&mut sim, &w0);
+        let (winner, y) = rtl.run_sample(&mut sim, &[0, 1, 2, 3], true);
+        assert_eq!(winner, -1);
+        assert_eq!(y, vec![32, 32]);
+        // search: +1 unit on every in-spike synapse.
+        assert_eq!(rtl.read_weights(&sim), vec![vec![9u64; 4]; 2]);
+    }
+
+    #[test]
+    fn rtl_rejects_non_rnl() {
+        let mut cfg = tiny_cfg(4, 2);
+        cfg.params.response = Response::Lif;
+        assert!(generate_column(&cfg).is_err());
+    }
+
+    #[test]
+    fn weight_clamps_in_rtl() {
+        let cfg = tiny_cfg(2, 1);
+        let rtl = generate_column(&cfg).unwrap();
+        let mut sim = GateSim::new(&rtl.netlist).unwrap();
+        rtl.load_weights(&mut sim, &[vec![56, 0]]);
+        // Both synapses spike at 0 -> neuron fires -> capture on both:
+        // 56 + 8 clamps to 56; 0 + 8 = 8 (capture applies to weight 0 too).
+        let (_w, _y) = rtl.run_sample(&mut sim, &[0, 0], true);
+        assert_eq!(rtl.read_weights(&sim), vec![vec![56u64, 8]]);
+    }
+}

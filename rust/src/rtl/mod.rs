@@ -1,0 +1,14 @@
+//! The hardware generator (PyVerilog/Veriloggen substitute): gate-level
+//! netlist IR, bus-level builder, TNN column generators aligned with the [7]
+//! microarchitecture, a structural-Verilog emitter, and an event-driven
+//! gate-level simulator (the Xcelium substitute).
+
+pub mod builder;
+pub mod column;
+pub mod netlist;
+pub mod sim;
+pub mod verilog;
+
+pub use column::{generate_column, generate_column_opts, generate_column_silicon, ColumnRtl};
+pub use netlist::{Gate, GateKind, NetId, Netlist, Port};
+pub use sim::GateSim;

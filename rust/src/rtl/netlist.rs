@@ -1,0 +1,350 @@
+//! Gate-level netlist IR — the output of the hardware generator and the
+//! input to RTL simulation, synthesis and place-and-route.
+//!
+//! The IR is deliberately structural: primitive gates + D flip-flops wired
+//! by net ids, with hierarchical instance names (`col/neuron0/syn3/add_c1`)
+//! that the TNN7 macro mapper and the reports use to recover structure.
+
+use std::collections::HashMap;
+
+/// Primitive gate kinds (the generic library the generator emits; synthesis
+/// maps these onto FreePDK45/ASAP7/TNN7 cells).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GateKind {
+    Const0,
+    Const1,
+    Buf,
+    Inv,
+    And2,
+    Nand2,
+    Or2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    Mux2, // inputs: [sel, a(sel=0), b(sel=1)]
+    /// Rising-edge D flip-flop with synchronous enable.
+    /// inputs: [d, en]; state initialized to 0.
+    Dff,
+}
+
+impl GateKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GateKind::Const0 => "const0",
+            GateKind::Const1 => "const1",
+            GateKind::Buf => "buf",
+            GateKind::Inv => "inv",
+            GateKind::And2 => "and2",
+            GateKind::Nand2 => "nand2",
+            GateKind::Or2 => "or2",
+            GateKind::Nor2 => "nor2",
+            GateKind::Xor2 => "xor2",
+            GateKind::Xnor2 => "xnor2",
+            GateKind::Mux2 => "mux2",
+            GateKind::Dff => "dff",
+        }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        match self {
+            GateKind::Const0 | GateKind::Const1 => 0,
+            GateKind::Buf | GateKind::Inv => 1,
+            GateKind::Mux2 => 3,
+            GateKind::Dff => 2,
+            _ => 2,
+        }
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        matches!(self, GateKind::Dff)
+    }
+}
+
+/// Net identifier (index into the netlist's net table).
+pub type NetId = usize;
+
+/// One gate instance.
+#[derive(Debug, Clone)]
+pub struct Gate {
+    pub kind: GateKind,
+    /// Hierarchical instance name, e.g. "n0/syn3/stdp/add_s2".
+    pub name: String,
+    pub inputs: Vec<NetId>,
+    pub output: NetId,
+}
+
+/// A named multi-bit port (LSB first).
+#[derive(Debug, Clone)]
+pub struct Port {
+    pub name: String,
+    pub bits: Vec<NetId>,
+}
+
+/// Gate-level netlist.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub name: String,
+    pub num_nets: usize,
+    pub gates: Vec<Gate>,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn new_net(&mut self) -> NetId {
+        let id = self.num_nets;
+        self.num_nets += 1;
+        id
+    }
+
+    pub fn new_bus(&mut self, width: usize) -> Vec<NetId> {
+        (0..width).map(|_| self.new_net()).collect()
+    }
+
+    pub fn add_gate(&mut self, kind: GateKind, name: &str, inputs: Vec<NetId>, output: NetId) {
+        debug_assert_eq!(inputs.len(), kind.num_inputs(), "{name}: arity");
+        self.gates.push(Gate { kind, name: name.to_string(), inputs, output });
+    }
+
+    pub fn add_input(&mut self, name: &str, bits: Vec<NetId>) {
+        self.inputs.push(Port { name: name.to_string(), bits });
+    }
+
+    pub fn add_output(&mut self, name: &str, bits: Vec<NetId>) {
+        self.outputs.push(Port { name: name.to_string(), bits });
+    }
+
+    pub fn find_output(&self, name: &str) -> Option<&Port> {
+        self.outputs.iter().find(|p| p.name == name)
+    }
+
+    pub fn find_input(&self, name: &str) -> Option<&Port> {
+        self.inputs.iter().find(|p| p.name == name)
+    }
+
+    /// Gate count by kind.
+    pub fn histogram(&self) -> HashMap<GateKind, usize> {
+        let mut h = HashMap::new();
+        for g in &self.gates {
+            *h.entry(g.kind).or_insert(0) += 1;
+        }
+        h
+    }
+
+    pub fn num_flops(&self) -> usize {
+        self.gates.iter().filter(|g| g.kind.is_sequential()).count()
+    }
+
+    pub fn num_combinational(&self) -> usize {
+        self.gates.len() - self.num_flops()
+    }
+
+    /// Structural validation:
+    /// * every gate input net is driven by exactly one driver (gate output
+    ///   or primary input);
+    /// * no net has two drivers;
+    /// * every primary output is driven.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::{bail, ensure};
+        let mut drivers = vec![0u8; self.num_nets];
+        for p in &self.inputs {
+            for &b in &p.bits {
+                ensure!(b < self.num_nets, "input {} out of range", p.name);
+                drivers[b] = drivers[b].saturating_add(1);
+            }
+        }
+        for g in &self.gates {
+            ensure!(g.output < self.num_nets, "gate {} output out of range", g.name);
+            drivers[g.output] = drivers[g.output].saturating_add(1);
+        }
+        for (net, &d) in drivers.iter().enumerate() {
+            if d > 1 {
+                bail!("net {net} has {d} drivers");
+            }
+        }
+        for g in &self.gates {
+            ensure!(
+                g.inputs.len() == g.kind.num_inputs(),
+                "gate {} arity {} != {}",
+                g.name,
+                g.inputs.len(),
+                g.kind.num_inputs()
+            );
+            for &i in &g.inputs {
+                ensure!(i < self.num_nets, "gate {} input out of range", g.name);
+                ensure!(drivers[i] == 1, "gate {}: input net {i} undriven", g.name);
+            }
+        }
+        for p in &self.outputs {
+            for &b in &p.bits {
+                ensure!(drivers[b] == 1, "output {} bit undriven", p.name);
+            }
+        }
+        // The combinational subgraph must be acyclic (checked by attempting
+        // a topological levelization).
+        self.levelize()?;
+        Ok(())
+    }
+
+    /// Topological order of combinational gates (flops are cut points).
+    /// Errors on combinational cycles.
+    pub fn levelize(&self) -> anyhow::Result<Vec<usize>> {
+        use anyhow::bail;
+        // net -> producing combinational gate index
+        let mut producer: Vec<Option<usize>> = vec![None; self.num_nets];
+        for (gi, g) in self.gates.iter().enumerate() {
+            if !g.kind.is_sequential() {
+                producer[g.output] = Some(gi);
+            }
+        }
+        let mut state = vec![0u8; self.gates.len()]; // 0=unseen 1=visiting 2=done
+        let mut order = Vec::with_capacity(self.gates.len());
+        // Iterative DFS.
+        for start in 0..self.gates.len() {
+            if state[start] != 0 || self.gates[start].kind.is_sequential() {
+                continue;
+            }
+            let mut stack = vec![(start, 0usize)];
+            state[start] = 1;
+            while let Some(&mut (gi, ref mut child)) = stack.last_mut() {
+                let g = &self.gates[gi];
+                if *child < g.inputs.len() {
+                    let net = g.inputs[*child];
+                    *child += 1;
+                    if let Some(pg) = producer[net] {
+                        match state[pg] {
+                            0 => {
+                                state[pg] = 1;
+                                stack.push((pg, 0));
+                            }
+                            1 => bail!("combinational cycle through gate {}", self.gates[pg].name),
+                            _ => {}
+                        }
+                    }
+                } else {
+                    state[gi] = 2;
+                    order.push(gi);
+                    stack.pop();
+                }
+            }
+        }
+        Ok(order)
+    }
+
+    /// Hierarchy groups: map from instance-path prefix at `depth` segments
+    /// to the gate indices under it (used by the TNN7 macro mapper).
+    pub fn groups_at_depth(&self, depth: usize) -> HashMap<String, Vec<usize>> {
+        let mut groups: HashMap<String, Vec<usize>> = HashMap::new();
+        for (gi, g) in self.gates.iter().enumerate() {
+            let parts: Vec<&str> = g.name.split('/').collect();
+            if parts.len() > depth {
+                let prefix = parts[..depth].join("/");
+                groups.entry(prefix).or_default().push(gi);
+            }
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn half_adder() -> Netlist {
+        let mut n = Netlist::new("ha");
+        let a = n.new_net();
+        let b = n.new_net();
+        let s = n.new_net();
+        let c = n.new_net();
+        n.add_input("a", vec![a]);
+        n.add_input("b", vec![b]);
+        n.add_gate(GateKind::Xor2, "sum", vec![a, b], s);
+        n.add_gate(GateKind::And2, "carry", vec![a, b], c);
+        n.add_output("s", vec![s]);
+        n.add_output("c", vec![c]);
+        n
+    }
+
+    #[test]
+    fn valid_half_adder() {
+        let n = half_adder();
+        n.validate().unwrap();
+        assert_eq!(n.gates.len(), 2);
+        assert_eq!(n.num_flops(), 0);
+    }
+
+    #[test]
+    fn undriven_input_caught() {
+        let mut n = half_adder();
+        let dangling = n.new_net();
+        let out = n.new_net();
+        n.add_gate(GateKind::Inv, "bad", vec![dangling], out);
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn double_driver_caught() {
+        let mut n = half_adder();
+        let s = n.find_output("s").unwrap().bits[0];
+        let a = n.find_input("a").unwrap().bits[0];
+        n.add_gate(GateKind::Buf, "dup", vec![a], s);
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn combinational_cycle_caught() {
+        let mut n = Netlist::new("cyc");
+        let a = n.new_net();
+        let b = n.new_net();
+        n.add_gate(GateKind::Inv, "i1", vec![a], b);
+        n.add_gate(GateKind::Inv, "i2", vec![b], a);
+        assert!(n.levelize().is_err());
+    }
+
+    #[test]
+    fn flops_break_cycles() {
+        let mut n = Netlist::new("seq");
+        let q = n.new_net();
+        let d = n.new_net();
+        let en = n.new_net();
+        n.add_input("en", vec![en]);
+        n.add_gate(GateKind::Inv, "nq", vec![q], d);
+        n.add_gate(GateKind::Dff, "ff", vec![d, en], q);
+        n.add_output("q", vec![q]);
+        n.validate().unwrap();
+    }
+
+    #[test]
+    fn levelize_orders_dependencies() {
+        let mut n = Netlist::new("chain");
+        let a = n.new_net();
+        n.add_input("a", vec![a]);
+        let b = n.new_net();
+        let c = n.new_net();
+        n.add_gate(GateKind::Inv, "g1", vec![a], b);
+        n.add_gate(GateKind::Inv, "g2", vec![b], c);
+        n.add_output("c", vec![c]);
+        let order = n.levelize().unwrap();
+        let pos1 = order.iter().position(|&g| n.gates[g].name == "g1").unwrap();
+        let pos2 = order.iter().position(|&g| n.gates[g].name == "g2").unwrap();
+        assert!(pos1 < pos2);
+    }
+
+    #[test]
+    fn groups_at_depth_splits_hierarchy() {
+        let mut n = Netlist::new("h");
+        let a = n.new_net();
+        n.add_input("a", vec![a]);
+        let x = n.new_net();
+        let y = n.new_net();
+        n.add_gate(GateKind::Inv, "n0/syn0/i", vec![a], x);
+        n.add_gate(GateKind::Inv, "n0/syn1/i", vec![a], y);
+        let g = n.groups_at_depth(2);
+        assert_eq!(g.len(), 2);
+        assert!(g.contains_key("n0/syn0"));
+    }
+}

@@ -1,0 +1,262 @@
+//! Event-driven gate-level simulator — the Xcelium substitute used to
+//! cross-validate generated RTL against the functional simulators.
+//!
+//! Two-phase semantics: `settle()` propagates combinational logic to a fixed
+//! point (levelized order, only re-evaluating gates whose fan-in changed);
+//! `clock()` samples every DFF's (d, en) and updates its q, then settles.
+//! All state is boolean; flops initialize to 0 (the generated columns carry
+//! explicit reset logic).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::netlist::{Gate, GateKind, NetId, Netlist};
+
+pub struct GateSim<'a> {
+    n: &'a Netlist,
+    /// Current value of every net.
+    values: Vec<bool>,
+    /// Topological order of combinational gates.
+    order: Vec<usize>,
+    /// net -> combinational gates reading it (indices into `order` domain).
+    fanout: Vec<Vec<usize>>,
+    /// Dirty flags per gate for incremental settling.
+    dirty: Vec<bool>,
+    /// Indices of sequential gates.
+    flops: Vec<usize>,
+    input_ports: HashMap<String, Vec<NetId>>,
+    output_ports: HashMap<String, Vec<NetId>>,
+    /// Total gate evaluations (perf counter for EXPERIMENTS.md §Perf).
+    pub evals: u64,
+}
+
+impl<'a> GateSim<'a> {
+    pub fn new(n: &'a Netlist) -> Result<Self> {
+        let order = n.levelize().context("netlist has combinational cycles")?;
+        let mut fanout: Vec<Vec<usize>> = vec![Vec::new(); n.num_nets];
+        for (gi, g) in n.gates.iter().enumerate() {
+            if g.kind.is_sequential() {
+                continue;
+            }
+            for &i in &g.inputs {
+                fanout[i].push(gi);
+            }
+        }
+        let flops: Vec<usize> = n
+            .gates
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.kind.is_sequential())
+            .map(|(i, _)| i)
+            .collect();
+        let mut sim = GateSim {
+            values: vec![false; n.num_nets],
+            dirty: vec![true; n.gates.len()],
+            order,
+            fanout,
+            flops,
+            input_ports: n.inputs.iter().map(|p| (p.name.clone(), p.bits.clone())).collect(),
+            output_ports: n.outputs.iter().map(|p| (p.name.clone(), p.bits.clone())).collect(),
+            n,
+            evals: 0,
+        };
+        sim.settle();
+        Ok(sim)
+    }
+
+    fn eval_gate(g: &Gate, values: &[bool]) -> bool {
+        let v = |i: usize| values[g.inputs[i]];
+        match g.kind {
+            GateKind::Const0 => false,
+            GateKind::Const1 => true,
+            GateKind::Buf => v(0),
+            GateKind::Inv => !v(0),
+            GateKind::And2 => v(0) & v(1),
+            GateKind::Nand2 => !(v(0) & v(1)),
+            GateKind::Or2 => v(0) | v(1),
+            GateKind::Nor2 => !(v(0) | v(1)),
+            GateKind::Xor2 => v(0) ^ v(1),
+            GateKind::Xnor2 => !(v(0) ^ v(1)),
+            GateKind::Mux2 => {
+                if v(0) {
+                    v(2)
+                } else {
+                    v(1)
+                }
+            }
+            GateKind::Dff => unreachable!("sequential gate in combinational eval"),
+        }
+    }
+
+    /// Propagate combinational logic to a fixed point (single pass in
+    /// topological order; only dirty gates are evaluated).
+    pub fn settle(&mut self) {
+        for idx in 0..self.order.len() {
+            let gi = self.order[idx];
+            if !self.dirty[gi] {
+                continue;
+            }
+            self.dirty[gi] = false;
+            let g = &self.n.gates[gi];
+            let new = Self::eval_gate(g, &self.values);
+            self.evals += 1;
+            if self.values[g.output] != new {
+                self.values[g.output] = new;
+                for &fo in &self.fanout[g.output] {
+                    self.dirty[fo] = true;
+                }
+            }
+        }
+    }
+
+    fn mark_net_dirty(&mut self, net: NetId) {
+        for k in 0..self.fanout[net].len() {
+            let fo = self.fanout[net][k];
+            self.dirty[fo] = true;
+        }
+    }
+
+    /// Drive an input port with an integer (LSB-first). Call `settle` after.
+    pub fn set_input(&mut self, name: &str, value: u64) {
+        let bits = self.input_ports.get(name).unwrap_or_else(|| panic!("no input port {name}")).clone();
+        for (b, &net) in bits.iter().enumerate() {
+            let v = (value >> b) & 1 == 1;
+            if self.values[net] != v {
+                self.values[net] = v;
+                self.mark_net_dirty(net);
+            }
+        }
+    }
+
+    /// Drive an arbitrarily wide input port bit-by-bit (LSB first).
+    pub fn set_input_bits(&mut self, name: &str, bits: &[bool]) {
+        let nets = self.input_ports.get(name).unwrap_or_else(|| panic!("no input port {name}")).clone();
+        assert_eq!(nets.len(), bits.len(), "port {name} width");
+        for (&net, &v) in nets.iter().zip(bits) {
+            if self.values[net] != v {
+                self.values[net] = v;
+                self.mark_net_dirty(net);
+            }
+        }
+    }
+
+    /// Read an arbitrarily wide output port bit-by-bit (LSB first).
+    pub fn get_output_bits(&self, name: &str) -> Vec<bool> {
+        let nets = self.output_ports.get(name).unwrap_or_else(|| panic!("no output port {name}"));
+        nets.iter().map(|&n| self.values[n]).collect()
+    }
+
+    /// Read an output port as an integer.
+    pub fn get_output(&self, name: &str) -> u64 {
+        let bits = self.output_ports.get(name).unwrap_or_else(|| panic!("no output port {name}"));
+        bits.iter()
+            .enumerate()
+            .fold(0u64, |acc, (b, &net)| acc | ((self.values[net] as u64) << b))
+    }
+
+    /// Read any net (debug).
+    pub fn get_net(&self, net: NetId) -> bool {
+        self.values[net]
+    }
+
+    /// One rising clock edge: sample all flop inputs, update outputs, then
+    /// settle the combinational fabric.
+    pub fn clock(&mut self) {
+        let mut updates: Vec<(NetId, bool)> = Vec::with_capacity(self.flops.len());
+        for &fi in &self.flops {
+            let g = &self.n.gates[fi];
+            let d = self.values[g.inputs[0]];
+            let en = self.values[g.inputs[1]];
+            if en {
+                updates.push((g.output, d));
+            }
+        }
+        for (net, v) in updates {
+            if self.values[net] != v {
+                self.values[net] = v;
+                self.mark_net_dirty(net);
+            }
+        }
+        self.settle();
+    }
+
+    /// Run `n` clock cycles.
+    pub fn run(&mut self, n: usize) {
+        for _ in 0..n {
+            self.clock();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        // 3-bit counter: q <= q + 1 every cycle (enable tied high).
+        let mut n = Netlist::new("cnt");
+        let q = n.new_bus(3);
+        let mut en_net = None;
+        {
+            let mut b = super::super::builder::Builder::new(&mut n);
+            let (d, _) = b.increment(&q);
+            let en = b.one();
+            en_net = Some(en);
+            b.reg_connect(&q, &d, en);
+        }
+        let _ = en_net;
+        n.add_output("q", q);
+        n.validate().unwrap();
+        let mut sim = GateSim::new(&n).unwrap();
+        assert_eq!(sim.get_output("q"), 0);
+        for expect in 1..=10u64 {
+            sim.clock();
+            assert_eq!(sim.get_output("q"), expect % 8);
+        }
+    }
+
+    #[test]
+    fn enable_gates_flop_updates() {
+        let mut n = Netlist::new("en");
+        let d = n.new_net();
+        let en = n.new_net();
+        let q = n.new_net();
+        n.add_input("d", vec![d]);
+        n.add_input("en", vec![en]);
+        n.add_gate(GateKind::Dff, "ff", vec![d, en], q);
+        n.add_output("q", vec![q]);
+        let mut sim = GateSim::new(&n).unwrap();
+        sim.set_input("d", 1);
+        sim.set_input("en", 0);
+        sim.settle();
+        sim.clock();
+        assert_eq!(sim.get_output("q"), 0, "disabled flop must hold");
+        sim.set_input("en", 1);
+        sim.settle();
+        sim.clock();
+        assert_eq!(sim.get_output("q"), 1);
+    }
+
+    #[test]
+    fn incremental_settle_skips_clean_gates() {
+        let mut n = Netlist::new("inc");
+        let a = n.new_net();
+        n.add_input("a", vec![a]);
+        let mut prev = a;
+        for i in 0..100 {
+            let next = n.new_net();
+            n.add_gate(GateKind::Buf, &format!("b{i}"), vec![prev], next);
+            prev = next;
+        }
+        n.add_output("o", vec![prev]);
+        let mut sim = GateSim::new(&n).unwrap();
+        let evals_after_init = sim.evals;
+        sim.settle(); // nothing dirty
+        assert_eq!(sim.evals, evals_after_init);
+        sim.set_input("a", 1);
+        sim.settle();
+        assert_eq!(sim.get_output("o"), 1);
+    }
+}

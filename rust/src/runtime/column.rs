@@ -1,0 +1,173 @@
+//! `TnnColumn`: the request-path handle to one compiled column design.
+//!
+//! Owns the four compiled artifacts of a column (step / infer / infer-batch /
+//! train-chunk), the padded weight state, and the chunking logic that keeps
+//! training an all-XLA affair (one dispatch per chunk, not per sample).
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactKind, ArtifactManifest, ColumnConfig};
+use crate::util::Rng;
+
+use super::engine::{lit_f32, vec_f32, vec_i32, Engine, Executable};
+
+/// Initial padded weights: w_max/2 + jitter on real cells, 0 on padding.
+/// Mirrors `model.init_weights` (values differ — the PRNG is ours — but the
+/// invariants are identical and cross-checked by tests).
+pub fn init_weights(cfg: &ColumnConfig, seed: u64) -> Vec<f32> {
+    let (q_pad, p_pad) = (cfg.q_pad(), cfg.p_pad());
+    let mut rng = Rng::new(seed);
+    let w0 = cfg.params.w_max as f32 / 2.0;
+    let mut w = vec![0.0f32; q_pad * p_pad];
+    for j in 0..cfg.q {
+        for i in 0..cfg.p {
+            w[j * p_pad + i] = w0 + (rng.f32() - 0.5);
+        }
+    }
+    w
+}
+
+/// A column design compiled and ready to serve.
+pub struct TnnColumn {
+    pub config: ColumnConfig,
+    pub p_pad: usize,
+    pub q_pad: usize,
+    infer_batch: usize,
+    train_chunk: usize,
+    step_exe: Executable,
+    infer_exe: Executable,
+    infer_batch_exe: Executable,
+    train_chunk_exe: Executable,
+    /// Padded weight state [q_pad * p_pad], row-major.
+    pub weights: Vec<f32>,
+}
+
+impl TnnColumn {
+    /// Load all four artifacts for `tag` from the manifest and initialize
+    /// weights from `seed`.
+    pub fn load(engine: &Engine, manifest: &ArtifactManifest, tag: &str, seed: u64) -> Result<Self> {
+        let get = |kind: ArtifactKind| -> Result<_> {
+            manifest
+                .find(kind, tag)
+                .with_context(|| format!("manifest has no {kind:?} artifact for {tag}"))
+        };
+        let step_meta = get(ArtifactKind::Step)?;
+        let config = step_meta.config.clone();
+        let step_exe = engine.load(step_meta)?;
+        let infer_exe = engine.load(get(ArtifactKind::Infer)?)?;
+        let infer_batch_meta = get(ArtifactKind::InferBatch)?;
+        let infer_batch_exe = engine.load(infer_batch_meta)?;
+        let chunk_meta = get(ArtifactKind::TrainChunk)?;
+        let train_chunk_exe = engine.load(chunk_meta)?;
+        let weights = init_weights(&config, seed);
+        Ok(TnnColumn {
+            p_pad: step_meta.p_pad,
+            q_pad: step_meta.q_pad,
+            infer_batch: infer_batch_meta.infer_batch,
+            train_chunk: chunk_meta.train_chunk,
+            step_exe,
+            infer_exe,
+            infer_batch_exe,
+            train_chunk_exe,
+            weights,
+            config,
+        })
+    }
+
+    fn weights_lit(&self) -> Result<xla::Literal> {
+        lit_f32(&self.weights, &[self.q_pad as i64, self.p_pad as i64])
+    }
+
+    fn check_window(&self, x: &[f32]) -> Result<()> {
+        if x.len() != self.config.p {
+            bail!("window length {} != p {}", x.len(), self.config.p);
+        }
+        Ok(())
+    }
+
+    /// One online STDP learning step; updates the weight state and returns
+    /// (winner, output spike times [q]).
+    pub fn step(&mut self, x: &[f32]) -> Result<(i32, Vec<i32>)> {
+        self.check_window(x)?;
+        let out = self
+            .step_exe
+            .run(&[self.weights_lit()?, lit_f32(x, &[x.len() as i64])?])?;
+        if out.len() != 3 {
+            bail!("step artifact returned {} outputs, want 3", out.len());
+        }
+        self.weights = vec_f32(&out[0])?;
+        let winner = vec_i32(&out[1])?[0];
+        let y = vec_i32(&out[2])?;
+        Ok((winner, y[..self.config.q].to_vec()))
+    }
+
+    /// Inference for one window: (winner, output spike times [q]).
+    pub fn infer(&self, x: &[f32]) -> Result<(i32, Vec<i32>)> {
+        self.check_window(x)?;
+        let out = self
+            .infer_exe
+            .run(&[self.weights_lit()?, lit_f32(x, &[x.len() as i64])?])?;
+        if out.len() != 2 {
+            bail!("infer artifact returned {} outputs, want 2", out.len());
+        }
+        let winner = vec_i32(&out[0])?[0];
+        let y = vec_i32(&out[1])?;
+        Ok((winner, y[..self.config.q].to_vec()))
+    }
+
+    /// One training epoch over `xs` (each a p-length window): full chunks go
+    /// through the scan artifact (one dispatch per chunk), the remainder
+    /// through per-sample steps.
+    pub fn train_epoch(&mut self, xs: &[Vec<f32>]) -> Result<()> {
+        let c = self.train_chunk;
+        let p = self.config.p;
+        let full = xs.len() / c;
+        for k in 0..full {
+            let chunk = &xs[k * c..(k + 1) * c];
+            let mut flat = Vec::with_capacity(c * p);
+            for x in chunk {
+                self.check_window(x)?;
+                flat.extend_from_slice(x);
+            }
+            let out = self
+                .train_chunk_exe
+                .run(&[self.weights_lit()?, lit_f32(&flat, &[c as i64, p as i64])?])?;
+            self.weights = vec_f32(&out[0])?;
+        }
+        for x in &xs[full * c..] {
+            self.step(x)?;
+        }
+        Ok(())
+    }
+
+    /// Cluster assignment for every window (batched dispatch).
+    pub fn infer_all(&self, xs: &[Vec<f32>]) -> Result<Vec<i32>> {
+        let b = self.infer_batch;
+        let p = self.config.p;
+        let mut winners = Vec::with_capacity(xs.len());
+        let full = xs.len() / b;
+        for k in 0..full {
+            let batch = &xs[k * b..(k + 1) * b];
+            let mut flat = Vec::with_capacity(b * p);
+            for x in batch {
+                self.check_window(x)?;
+                flat.extend_from_slice(x);
+            }
+            let out = self
+                .infer_batch_exe
+                .run(&[self.weights_lit()?, lit_f32(&flat, &[b as i64, p as i64])?])?;
+            winners.extend(vec_i32(&out[0])?);
+        }
+        for x in &xs[full * b..] {
+            winners.push(self.infer(x)?.0);
+        }
+        Ok(winners)
+    }
+
+    /// Real (unpadded) weight matrix rows, for inspection/export.
+    pub fn weight_rows(&self) -> Vec<Vec<f32>> {
+        (0..self.config.q)
+            .map(|j| self.weights[j * self.p_pad..j * self.p_pad + self.config.p].to_vec())
+            .collect()
+    }
+}

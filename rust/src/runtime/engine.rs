@@ -1,0 +1,92 @@
+//! PJRT CPU client wrapper: HLO text -> compiled executable -> typed I/O.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ArtifactMeta;
+
+/// Shared PJRT CPU client. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Engine {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Load + compile an artifact described by manifest metadata.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<Executable> {
+        self.load_hlo(&meta.file)
+    }
+}
+
+/// A compiled PJRT executable with typed execute helpers.
+///
+/// All exported computations were lowered with `return_tuple=True`, so the
+/// single output is a tuple literal that `run` flattens.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = out.to_tuple().context("untupling result")?;
+        Ok(parts)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("lit_f32: {} elements for shape {dims:?}", data.len());
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a Vec<f32> from a literal.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a Vec<i32> from a literal.
+pub fn vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}

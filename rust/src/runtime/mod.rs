@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the Python AOT
+//! path and executes them on the request path. This module is the only place
+//! in the crate that talks to the `xla` crate; Python never runs at runtime.
+
+pub mod column;
+pub mod engine;
+
+pub use column::TnnColumn;
+pub use engine::{Engine, Executable};

@@ -1,0 +1,87 @@
+//! Temporal encoding — mirrors `python/compile/encoding.py` bit-for-bit.
+
+/// Round-half-to-even on f32, matching `jnp.round` (and IEEE 754
+/// roundTiesToEven), which differs from Rust's `f32::round` on *.5 values.
+pub fn round_half_even(x: f32) -> f32 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+/// Per-window min-max normalization followed by intensity-to-latency
+/// encoding: s_i = round_half_even((1 - x_hat_i) * (T - 1)).
+///
+/// Inputs below `cutoff` (after normalization) produce NO spike (`t_r`
+/// sentinel): the sparse on-cell code of ref [2]. Sparsity is what gives the
+/// STDP search/backoff rules their discriminative power — with a dense code
+/// every synapse spikes every sample and all templates collapse onto pure
+/// timing, which destroys clustering (see EXPERIMENTS.md §TableII-tuning).
+pub fn encode_window(x: &[f32], t: i32, t_r: i32, cutoff: f32) -> Vec<i32> {
+    let lo = x.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-9);
+    x.iter()
+        .map(|&v| {
+            let xh = (v - lo) / span;
+            if xh < cutoff {
+                t_r
+            } else {
+                round_half_even((1.0 - xh) * (t - 1) as f32) as i32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_even_matches_ieee() {
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(3.5), 4.0);
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.4), 2.0);
+        assert_eq!(round_half_even(2.6), 3.0);
+    }
+
+    #[test]
+    fn encode_bounds_and_ordering() {
+        let s = encode_window(&[0.0, 0.25, 0.5, 0.75, 1.0], 8, 32, 0.0);
+        assert_eq!(s, vec![7, 5, 4, 2, 0]);
+    }
+
+    #[test]
+    fn constant_window_is_finite() {
+        let s = encode_window(&[4.2; 10], 8, 32, 0.0);
+        assert!(s.iter().all(|&v| (0..8).contains(&v)));
+    }
+
+    #[test]
+    fn scale_invariance_exact_for_powers_of_two() {
+        // Power-of-two scaling is exact in f32, so encoding is bit-identical.
+        // (General affine shifts are invariant only up to f32 rounding at
+        // round-to-even ties, which is also true of the JAX encoder.)
+        let x: Vec<f32> = (0..30).map(|i| ((i * 37) % 13) as f32 / 13.0).collect();
+        let x2: Vec<f32> = x.iter().map(|v| 4.0 * v).collect();
+        assert_eq!(encode_window(&x, 8, 32, 0.0), encode_window(&x2, 8, 32, 0.0));
+    }
+
+    #[test]
+    fn affine_invariance_within_one_step() {
+        let x: Vec<f32> = (0..30).map(|i| ((i * 37) % 13) as f32 / 13.0).collect();
+        let x2: Vec<f32> = x.iter().map(|v| 3.5 * v + 11.0).collect();
+        for (a, b) in encode_window(&x, 8, 32, 0.0).iter().zip(encode_window(&x2, 8, 32, 0.0)) {
+            assert!((a - b).abs() <= 1, "{a} vs {b}");
+        }
+    }
+}

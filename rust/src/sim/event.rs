@@ -1,0 +1,202 @@
+//! Event-driven response evaluation (paper §II-A: the simulator "dynamically
+//! switches to an event-driven approach in time windows where spikes are
+//! absent").
+//!
+//! Instead of sweeping all T_R time steps, the engine walks the sorted input
+//! spike events and solves the threshold crossing analytically inside each
+//! inter-event window:
+//!
+//! * SNL — potential is piecewise-constant; it can only cross at an event.
+//! * RNL — potential is piecewise-linear with slope = sum of arrived
+//!   weights; the crossing time inside a window is ceil((theta - V)/slope).
+//! * LIF — potential decays between events; within a window the potential is
+//!   maximal at the window start, so it crosses there or never.
+//!
+//! Must agree exactly with the cycle-accurate engine (`column::potentials` +
+//! `first_crossing`); `rust/tests/properties.rs` property-tests this.
+
+use crate::config::{Response, TnnParams};
+
+/// Output spike time for ONE neuron with weights `w[p]` and spike times
+/// `s[p]`, by event walking. Returns first integer t with V(t) >= theta,
+/// else T_R.
+pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams) -> i32 {
+    let t_r = params.t_r;
+    // Gather in-window events sorted by time (spike times are small ints, so
+    // counting-sort over [0, T_R) keeps this O(p + T)).
+    let mut by_time: Vec<Vec<usize>> = vec![Vec::new(); t_r as usize];
+    for (i, &si) in s.iter().enumerate() {
+        if (0..t_r).contains(&si) {
+            by_time[si as usize].push(i);
+        }
+    }
+
+    match params.response {
+        Response::Snl => {
+            let mut v = 0.0f32;
+            for t in 0..t_r {
+                for &i in &by_time[t as usize] {
+                    v += w[i];
+                }
+                if v >= theta {
+                    return t;
+                }
+            }
+            t_r
+        }
+        Response::Rnl => {
+            // V(t) = sum_{arrived i} w_i * (t - s_i); between events the
+            // slope is constant, so solve the linear crossing in each window.
+            let mut arrived_w = 0.0f64; // slope
+            let mut v = 0.0f64;
+            let mut last_event = 0i32;
+            let event_times: Vec<i32> = (0..t_r).filter(|&t| !by_time[t as usize].is_empty()).collect();
+            for (k, &te) in event_times.iter().enumerate() {
+                // Window [last_event, te): slope `arrived_w`, start value `v`.
+                if arrived_w > 0.0 && v < theta as f64 {
+                    let need = (theta as f64 - v) / arrived_w;
+                    let tc = last_event as f64 + need;
+                    let tc_int = tc.ceil() as i32;
+                    if tc_int < te {
+                        return tc_int;
+                    }
+                } else if v >= theta as f64 {
+                    return last_event;
+                }
+                // Advance to the event.
+                v += arrived_w * (te - last_event) as f64;
+                for &i in &by_time[te as usize] {
+                    arrived_w += w[i] as f64;
+                }
+                last_event = te;
+                let _ = k;
+            }
+            // Tail window [last_event, T_R).
+            if v >= theta as f64 {
+                return last_event;
+            }
+            if arrived_w > 0.0 {
+                let need = (theta as f64 - v) / arrived_w;
+                let tc_int = (last_event as f64 + need).ceil() as i32;
+                if tc_int < t_r {
+                    return tc_int;
+                }
+            }
+            t_r
+        }
+        Response::Lif => {
+            // Between events the potential only decays (weights are >= 0),
+            // so check at each event time; the maximum within a window is at
+            // its start.
+            let mut v = 0.0f64;
+            let mut last = 0i32;
+            for t in 0..t_r {
+                if by_time[t as usize].is_empty() {
+                    continue;
+                }
+                v *= (params.lif_decay as f64).powi(t - last);
+                for &i in &by_time[t as usize] {
+                    v += w[i] as f64;
+                }
+                last = t;
+                if v >= theta as f64 {
+                    return t;
+                }
+            }
+            t_r
+        }
+    }
+}
+
+/// Event-driven response for a whole column.
+pub fn event_driven(w: &[Vec<f32>], s: &[i32], theta: f32, params: &TnnParams) -> Vec<i32> {
+    w.iter().map(|row| neuron_output_event(row, s, theta, params)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TnnParams;
+    use crate::sim::column::{first_crossing, potentials};
+    use crate::util::Rng;
+
+    fn agree(params: &TnnParams, w: &[Vec<f32>], s: &[i32], theta: f32) {
+        let cyc: Vec<i32> = potentials(w, s, params)
+            .iter()
+            .map(|v| first_crossing(v, theta, params.t_r))
+            .collect();
+        let evt = event_driven(w, s, theta, params);
+        assert_eq!(cyc, evt, "response={:?} theta={theta} s={s:?}", params.response);
+    }
+
+    /// Dyadic (1/8-step) weights and 1/4-step thresholds keep all arithmetic
+    /// exact in both f32 and f64, so the engines must agree bit-for-bit
+    /// regardless of summation order.
+    fn dyadic_w(rng: &mut Rng, q: usize, p: usize) -> Vec<Vec<f32>> {
+        (0..q)
+            .map(|_| (0..p).map(|_| rng.below(57) as f32 * 0.125).collect())
+            .collect()
+    }
+
+    #[test]
+    fn rnl_agrees_with_cycle_accurate() {
+        let params = TnnParams::default();
+        let mut rng = Rng::new(42);
+        for _ in 0..300 {
+            let p = rng.below(20) + 1;
+            let w = dyadic_w(&mut rng, 2, p);
+            let s: Vec<i32> = (0..p).map(|_| rng.range(0, 12) as i32).collect();
+            let theta = rng.below(240) as f32 * 0.25 + 1.0;
+            agree(&params, &w, &s, theta);
+        }
+    }
+
+    #[test]
+    fn snl_agrees_with_cycle_accurate() {
+        let mut params = TnnParams::default();
+        params.response = Response::Snl;
+        let mut rng = Rng::new(7);
+        for _ in 0..300 {
+            let p = rng.below(16) + 1;
+            let w = dyadic_w(&mut rng, 3, p);
+            let s: Vec<i32> = (0..p).map(|_| rng.range(0, 33) as i32).collect();
+            let theta = rng.below(80) as f32 * 0.25 + 0.5;
+            agree(&params, &w, &s, theta);
+        }
+    }
+
+    #[test]
+    fn lif_agrees_with_cycle_accurate_away_from_boundary() {
+        // LIF sums are not exactly representable, so f32 (cycle) and f64
+        // (event) can straddle the threshold when V ~= theta; skip those
+        // knife-edge cases and require agreement everywhere else.
+        let mut params = TnnParams::default();
+        params.response = Response::Lif;
+        params.lif_decay = 0.5;
+        let mut rng = Rng::new(11);
+        let mut checked = 0;
+        for _ in 0..300 {
+            let p = rng.below(16) + 1;
+            let w = dyadic_w(&mut rng, 3, p);
+            let s: Vec<i32> = (0..p).map(|_| rng.range(0, 33) as i32).collect();
+            let theta = rng.below(80) as f32 * 0.25 + 0.5;
+            let near_boundary = potentials(&w, &s, &params)
+                .iter()
+                .flatten()
+                .any(|&v| (v - theta).abs() < 1e-3);
+            if near_boundary {
+                continue;
+            }
+            agree(&params, &w, &s, theta);
+            checked += 1;
+        }
+        assert!(checked > 200, "too many skipped cases: {checked}");
+    }
+
+    #[test]
+    fn no_spikes_never_fires() {
+        let params = TnnParams::default();
+        let y = neuron_output_event(&[3.0, 3.0], &[32, 32], 1.0, &params);
+        assert_eq!(y, params.t_r);
+    }
+}

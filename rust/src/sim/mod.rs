@@ -1,0 +1,23 @@
+//! Native-Rust TNN functional simulator.
+//!
+//! Implements exactly the same contract as the JAX/Pallas model (encode ->
+//! response -> WTA -> STDP) and is cross-validated against the PJRT
+//! artifacts by the integration tests. Two temporal engines are provided,
+//! mirroring the paper's §II-A description of the TNNGen simulator:
+//!
+//! * [`column::cycle`] — cycle-accurate: sweeps every time step t in
+//!   [0, T_R), the direct-implementation semantics of [7].
+//! * [`event::event_driven`] — event-driven: jumps between input-spike
+//!   events and solves the (piecewise-linear / piecewise-constant) potential
+//!   crossing in closed form, skipping spike-free windows.
+//!
+//! Both engines must agree exactly; `rust/tests/properties.rs` checks this.
+
+pub mod column;
+pub mod encode;
+pub mod event;
+pub mod multilayer;
+
+pub use column::{first_crossing, potentials, stdp_update, wta, CycleSim, StepOutput};
+pub use encode::encode_window;
+pub use multilayer::MultiLayerSim;

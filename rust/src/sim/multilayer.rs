@@ -1,0 +1,118 @@
+//! Multi-layer TNN simulation (paper §II-A: "large multi-layer TNNs with an
+//! arbitrary number of layers and columns per layer with configurable
+//! inter-layer connectivity"). Mirrors `model.multilayer_infer` in Python.
+
+use crate::config::ColumnConfig;
+
+use super::column::{CycleSim, StepOutput};
+
+/// A stack of columns: layer k's output spike vector feeds layer k+1's
+/// encoder (spike times converted back to intensities, early = strong).
+pub struct MultiLayerSim {
+    pub layers: Vec<CycleSim>,
+}
+
+impl MultiLayerSim {
+    /// Build from configs; requires cfgs[k+1].p == cfgs[k].q.
+    pub fn new(cfgs: &[ColumnConfig], seed: u64) -> anyhow::Result<Self> {
+        use anyhow::ensure;
+        ensure!(!cfgs.is_empty(), "need at least one layer");
+        for w in cfgs.windows(2) {
+            ensure!(
+                w[1].p == w[0].q,
+                "layer shape mismatch: {}x{} -> {}x{}",
+                w[0].p, w[0].q, w[1].p, w[1].q
+            );
+        }
+        Ok(MultiLayerSim {
+            layers: cfgs
+                .iter()
+                .enumerate()
+                .map(|(k, c)| CycleSim::new(c.clone(), seed.wrapping_add(k as u64)))
+                .collect(),
+        })
+    }
+
+    /// Spike-time vector -> intensity vector for the next layer's encoder.
+    fn to_intensity(y: &[i32], t_r: i32) -> Vec<f32> {
+        y.iter().map(|&t| (t_r - t) as f32 / t_r as f32).collect()
+    }
+
+    /// Feed-forward inference; returns the last layer's output.
+    pub fn infer(&self, x: &[f32]) -> StepOutput {
+        let mut h = x.to_vec();
+        let mut out = StepOutput { winner: -1, y: Vec::new() };
+        for layer in &self.layers {
+            out = layer.infer(&h);
+            h = Self::to_intensity(&out.y, layer.config.params.t_r);
+        }
+        out
+    }
+
+    /// Greedy layer-wise online STDP: each layer learns on its own input
+    /// (the standard TNN multi-layer training recipe of ref [16]).
+    pub fn step(&mut self, x: &[f32]) -> StepOutput {
+        let mut h = x.to_vec();
+        let mut out = StepOutput { winner: -1, y: Vec::new() };
+        for layer in &mut self.layers {
+            out = layer.step(&h);
+            h = Self::to_intensity(&out.y, layer.config.params.t_r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stack() -> MultiLayerSim {
+        let l1 = ColumnConfig::new("L1", "synthetic", 16, 8);
+        let l2 = ColumnConfig::new("L2", "synthetic", 8, 2);
+        MultiLayerSim::new(&[l1, l2], 7).unwrap()
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let l1 = ColumnConfig::new("L1", "synthetic", 16, 4);
+        let l2 = ColumnConfig::new("L2", "synthetic", 8, 2);
+        assert!(MultiLayerSim::new(&[l1, l2], 0).is_err());
+        assert!(MultiLayerSim::new(&[], 0).is_err());
+    }
+
+    #[test]
+    fn infer_produces_last_layer_output() {
+        let ml = stack();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let out = ml.infer(&x);
+        assert_eq!(out.y.len(), 2);
+        assert!((-1..2).contains(&out.winner));
+    }
+
+    #[test]
+    fn step_updates_all_layers() {
+        let mut ml = stack();
+        let before: Vec<Vec<Vec<f32>>> = ml.layers.iter().map(|l| l.weights.clone()).collect();
+        let x: Vec<f32> = (0..16).map(|i| ((i * i) as f32 * 0.31).cos()).collect();
+        for _ in 0..10 {
+            ml.step(&x);
+        }
+        for (k, layer) in ml.layers.iter().enumerate() {
+            assert_ne!(layer.weights, before[k], "layer {k} did not learn");
+        }
+    }
+
+    #[test]
+    fn supervised_mode_teaches_labeled_neuron() {
+        let cfg = ColumnConfig::new("Sup", "synthetic", 16, 4);
+        let mut sim = CycleSim::new(cfg, 3);
+        let xa: Vec<f32> = (0..16).map(|i| (i as f32 * 0.9).sin()).collect();
+        let xb: Vec<f32> = (0..16).map(|i| if i < 8 { 1.0 } else { 0.0 }).collect();
+        for _ in 0..30 {
+            sim.step_supervised(&xa, 1);
+            sim.step_supervised(&xb, 3);
+        }
+        assert_eq!(sim.infer(&xa).winner, 1, "labeled neuron should win A");
+        assert_eq!(sim.infer(&xb).winner, 3, "labeled neuron should win B");
+    }
+}

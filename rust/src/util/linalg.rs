@@ -1,0 +1,195 @@
+//! Minimal dense linear algebra used by the DTCR-proxy (PCA via power
+//! iteration) and the native simulator. Row-major `Matrix` over f64.
+
+use crate::util::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows_data: &[Vec<f64>]) -> Self {
+        let rows = rows_data.len();
+        let cols = if rows == 0 { 0 } else { rows_data[0].len() };
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in rows_data {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// self^T * self (Gram matrix of columns), [cols x cols].
+    pub fn gram(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.cols {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in 0..self.cols {
+                    g.data[i * self.cols + j] += ri * row[j];
+                }
+            }
+        }
+        g
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            out[r] = dot(self.row(r), v);
+        }
+        out
+    }
+
+    /// Center columns to zero mean (in place); returns the column means.
+    pub fn center_columns(&mut self) -> Vec<f64> {
+        let mut means = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                means[c] += self.get(r, c);
+            }
+        }
+        for m in &mut means {
+            *m /= self.rows as f64;
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = self.get(r, c) - means[c];
+                self.set(r, c, v);
+            }
+        }
+        means
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn normalize(a: &mut [f64]) {
+    let n = norm(a);
+    if n > 0.0 {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = x - y;
+            d * d
+        })
+        .sum()
+}
+
+/// Top-k eigenvectors of a symmetric PSD matrix by power iteration with
+/// deflation. Returns (eigenvalues, eigenvectors as rows), descending.
+pub fn top_eigs(sym: &Matrix, k: usize, iters: usize, seed: u64) -> (Vec<f64>, Matrix) {
+    assert_eq!(sym.rows, sym.cols);
+    let n = sym.rows;
+    let k = k.min(n);
+    let mut rng = Rng::new(seed);
+    let mut vals = Vec::with_capacity(k);
+    let mut vecs = Matrix::zeros(k, n);
+    let mut deflated = sym.clone();
+    for e in 0..k {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        for _ in 0..iters {
+            let mut w = deflated.matvec(&v);
+            normalize(&mut w);
+            v = w;
+        }
+        let lambda = dot(&deflated.matvec(&v), &v);
+        vals.push(lambda.max(0.0));
+        for (c, &x) in v.iter().enumerate() {
+            vecs.set(e, c, x);
+        }
+        // Deflate: A <- A - lambda v v^T
+        for i in 0..n {
+            for j in 0..n {
+                let d = deflated.get(i, j) - lambda * v[i] * v[j];
+                deflated.set(i, j, d);
+            }
+        }
+    }
+    (vals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_of_identity_like() {
+        let m = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let g = m.gram();
+        assert_eq!(g.get(0, 0), 1.0);
+        assert_eq!(g.get(1, 1), 4.0);
+        assert_eq!(g.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn center_columns_zeroes_means() {
+        let mut m = Matrix::from_rows(&[vec![1.0, 10.0], vec![3.0, 20.0]]);
+        m.center_columns();
+        assert!((m.get(0, 0) + 1.0).abs() < 1e-12);
+        assert!((m.get(0, 1) + 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant_eig() {
+        // Symmetric with eigenvalues 3 and 1 (eigvecs [1,1]/sqrt2, [1,-1]/sqrt2).
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, vecs) = top_eigs(&a, 2, 200, 42);
+        assert!((vals[0] - 3.0).abs() < 1e-6, "{vals:?}");
+        assert!((vals[1] - 1.0).abs() < 1e-6, "{vals:?}");
+        let v0 = vecs.row(0);
+        assert!((v0[0].abs() - v0[1].abs()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dist2_basic() {
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Utility substrate: PRNG, statistics, linear algebra, timers, and the
+//! in-repo property-testing helper (offline substitutes for the `rand`,
+//! `proptest` and `criterion` crates — see DESIGN.md §3).
+
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,76 @@
+//! Wall-clock timing helpers for the flow-runtime measurements (Fig 3) and
+//! the in-repo bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named laps.
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record the time since the previous lap under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Run `f` `iters` times, returning per-iteration seconds (sorted ascending).
+pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> Vec<f64> {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.total() >= sw.laps()[0].1);
+    }
+
+    #[test]
+    fn time_iters_returns_sorted() {
+        let xs = time_iters(5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(xs.len(), 5);
+        assert!(xs.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

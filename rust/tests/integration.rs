@@ -1,0 +1,232 @@
+//! Cross-module integration tests: config/manifest sync, functional-sim
+//! consistency across the three implementations, RTL-vs-functional
+//! equivalence on a trained column, EDA-flow calibration against the
+//! paper's tables, and the full coordinator path.
+
+use std::path::Path;
+
+use tnngen::config::presets::{paper_configs, TABLE3_PAPER, TABLE4_PAPER};
+use tnngen::config::{ArtifactManifest, ColumnConfig};
+use tnngen::coordinator::{Campaign, Coordinator};
+use tnngen::data::generate;
+use tnngen::eda::{all_libraries, asap7, run_flow, tnn7, FlowOpts};
+use tnngen::rtl::{generate_column, GateSim};
+use tnngen::sim::CycleSim;
+use tnngen::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Config <-> artifact-manifest synchronization
+// ---------------------------------------------------------------------------
+
+#[test]
+fn manifest_matches_rust_presets() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.toml").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = ArtifactManifest::load(dir).unwrap();
+    for cfg in paper_configs() {
+        for kind in [
+            tnngen::config::ArtifactKind::Step,
+            tnngen::config::ArtifactKind::Infer,
+            tnngen::config::ArtifactKind::InferBatch,
+            tnngen::config::ArtifactKind::TrainChunk,
+        ] {
+            let meta = m
+                .find(kind, &cfg.tag())
+                .unwrap_or_else(|| panic!("{}: missing {kind:?}", cfg.tag()));
+            assert_eq!(meta.config.p, cfg.p);
+            assert_eq!(meta.config.q, cfg.q);
+            // Python and Rust hyper-parameters must be identical.
+            assert_eq!(meta.config.params, cfg.params, "{}", cfg.tag());
+            assert!((meta.theta - cfg.theta()).abs() < 1e-4);
+            assert!(meta.file.exists(), "{} artifact file missing", meta.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RTL vs functional simulator on a *trained* column
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gate_level_rtl_reproduces_trained_column_inference() {
+    // Train a small column natively, quantize to 3.3 fixed point, load into
+    // the gate-level netlist, and require identical winners/spike times.
+    let cfg = ColumnConfig::new("RtlXcheck", "synthetic", 12, 2);
+    let ds = generate("ECG200", 12, 2, 30, 9);
+    let mut sim = CycleSim::new(cfg.clone(), 4);
+    let (xs, _) = ds.all();
+    for _ in 0..2 {
+        sim.train_epoch(&xs);
+    }
+    // Quantize trained weights to hardware fixed point.
+    let w_fp: Vec<Vec<u64>> = sim
+        .weights
+        .iter()
+        .map(|row| row.iter().map(|&w| (w * 8.0).round() as u64).collect())
+        .collect();
+    let quantized: Vec<Vec<f32>> = w_fp
+        .iter()
+        .map(|row| row.iter().map(|&u| u as f32 / 8.0).collect())
+        .collect();
+    let fsim = CycleSim::from_weights(cfg.clone(), quantized);
+
+    let rtl = generate_column(&cfg).unwrap();
+    let mut gsim = GateSim::new(&rtl.netlist).unwrap();
+    rtl.load_weights(&mut gsim, &w_fp);
+
+    for (i, x) in xs.iter().take(20).enumerate() {
+        let s = fsim.encode(x);
+        let want = fsim.infer(x);
+        let (got_winner, got_y) = rtl.run_sample(&mut gsim, &s, false);
+        assert_eq!(got_winner, want.winner, "sample {i}");
+        assert_eq!(got_y, want.y, "sample {i}");
+    }
+}
+
+#[test]
+fn gate_level_rtl_learns_like_functional_sim() {
+    // Run STDP *in hardware* and compare the weight trajectory.
+    let cfg = ColumnConfig::new("RtlLearn", "synthetic", 8, 2);
+    let w0: Vec<Vec<u64>> = vec![
+        vec![28, 36, 20, 44, 28, 12, 52, 28],
+        vec![36, 20, 44, 28, 12, 52, 28, 36],
+    ];
+    let mut fsim = CycleSim::from_weights(
+        cfg.clone(),
+        w0.iter()
+            .map(|r| r.iter().map(|&u| u as f32 / 8.0).collect())
+            .collect(),
+    );
+    let rtl = generate_column(&cfg).unwrap();
+    let mut gsim = GateSim::new(&rtl.netlist).unwrap();
+    rtl.load_weights(&mut gsim, &w0);
+    let mut rng = Rng::new(31);
+    for step in 0..25 {
+        let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+        let s = fsim.encode(&x);
+        let want = fsim.step(&x);
+        let (gw, gy) = rtl.run_sample(&mut gsim, &s, true);
+        assert_eq!((gw, &gy), (want.winner, &want.y), "step {step}");
+        let got_w = rtl.read_weights(&gsim);
+        for (j, row) in got_w.iter().enumerate() {
+            for (i, &u) in row.iter().enumerate() {
+                let f = (fsim.weights[j][i] * 8.0).round() as u64;
+                assert_eq!(u, f, "step {step} w[{j}][{i}]");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EDA calibration against the paper's tables (acceptance band: DESIGN.md)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flow_calibration_matches_paper_tables_for_small_designs() {
+    for (i, cfg) in paper_configs().into_iter().enumerate() {
+        if cfg.synapse_count() > 200 {
+            continue; // bigger designs exercised by the benches
+        }
+        for lib in all_libraries() {
+            let r = run_flow(&cfg, &lib, &FlowOpts::default()).unwrap();
+            let (paper_area, paper_leak_uw) = match lib.name.as_str() {
+                "FreePDK45" => (TABLE4_PAPER[i].2, TABLE3_PAPER[i].2 * 1000.0),
+                "ASAP7" => (TABLE4_PAPER[i].3, TABLE3_PAPER[i].3),
+                _ => (TABLE4_PAPER[i].4, TABLE3_PAPER[i].4),
+            };
+            let area_err = (r.die_area_um2 - paper_area) / paper_area;
+            let leak_err = (r.leakage_uw - paper_leak_uw) / paper_leak_uw;
+            assert!(
+                area_err.abs() < 0.15,
+                "{} {}: area {:.1} vs paper {:.1} ({:+.1}%)",
+                cfg.tag(),
+                lib.name,
+                r.die_area_um2,
+                paper_area,
+                100.0 * area_err
+            );
+            assert!(
+                leak_err.abs() < 0.15,
+                "{} {}: leakage {:.3} vs paper {:.3} ({:+.1}%)",
+                cfg.tag(),
+                lib.name,
+                r.leakage_uw,
+                paper_leak_uw,
+                100.0 * leak_err
+            );
+        }
+    }
+}
+
+#[test]
+fn tnn7_advantage_matches_paper_deltas() {
+    // Paper: TNN7 vs ASAP7 = -32.1% area, -38.6% leakage (+-5pp accepted).
+    let cfg = paper_configs().into_iter().find(|c| c.tag() == "96x2").unwrap();
+    let a = run_flow(&cfg, &asap7(), &FlowOpts::default()).unwrap();
+    let t = run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap();
+    let area_delta = 100.0 * (t.die_area_um2 - a.die_area_um2) / a.die_area_um2;
+    let leak_delta = 100.0 * (t.leakage_uw - a.leakage_uw) / a.leakage_uw;
+    assert!((-40.0..=-25.0).contains(&area_delta), "area delta {area_delta:.1}%");
+    assert!((-46.0..=-31.0).contains(&leak_delta), "leak delta {leak_delta:.1}%");
+}
+
+#[test]
+fn latency_in_paper_band_for_small_columns() {
+    // Fig 2: 65x2 -> 79.2 ns on TNN7; accept +-35% (see DESIGN.md).
+    let cfg = paper_configs().into_iter().find(|c| c.tag() == "65x2").unwrap();
+    let r = run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap();
+    assert!(
+        (50.0..=110.0).contains(&r.latency_ns),
+        "latency {:.1} ns out of band",
+        r.latency_ns
+    );
+}
+
+#[test]
+fn area_scales_linearly_with_synapse_count() {
+    // The mechanism behind the paper's forecasting feature.
+    let sizes = [(30usize, 2usize), (60, 2), (120, 2)];
+    let mut per_syn = Vec::new();
+    for (p, q) in sizes {
+        let cfg = ColumnConfig::new("lin", "synthetic", p, q);
+        let r = run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap();
+        per_syn.push(r.die_area_um2 / (p * q) as f64);
+    }
+    let spread = (per_syn.iter().cloned().fold(f64::MIN, f64::max)
+        - per_syn.iter().cloned().fold(f64::MAX, f64::min))
+        / per_syn[1];
+    assert!(spread < 0.25, "per-synapse area not stable: {per_syn:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_full_design_run() {
+    let coord = Coordinator::native();
+    let cfg = ColumnConfig::new("ECG200", "ECG", 32, 2);
+    let campaign = Campaign {
+        libraries: vec![asap7(), tnn7()],
+        n_per_split: 30,
+        ..Default::default()
+    };
+    let run = coord.run_design(&cfg, &campaign).unwrap();
+    let clus = run.clustering.unwrap();
+    assert!(clus.ri_tnn > 0.45, "RI {}", clus.ri_tnn);
+    assert_eq!(run.flows.len(), 2);
+    assert!(run.flows[1].die_area_um2 < run.flows[0].die_area_um2, "TNN7 smaller");
+}
+
+#[test]
+fn verilog_export_of_paper_design_is_wellformed() {
+    let cfg = paper_configs().into_iter().find(|c| c.tag() == "65x2").unwrap();
+    let rtl = generate_column(&cfg).unwrap();
+    let v = tnngen::rtl::verilog::emit_verilog(&rtl.netlist);
+    assert!(v.contains("module tnn_column_65x2"));
+    assert!(v.matches("always @(posedge clk)").count() == rtl.netlist.num_flops());
+    assert!(v.ends_with("endmodule\n"));
+}

@@ -1,0 +1,324 @@
+//! Property-based tests (via the in-repo `util::prop` helper) over the
+//! coordinator-side invariants: clustering metrics, k-means, netlist
+//! optimization equivalence, placement legality, simulator-engine
+//! agreement, encoding, STDP bounds, and the TOML parser.
+
+use tnngen::cluster::metrics::{adjusted_rand_index, nmi, purity, rand_index};
+use tnngen::cluster::kmeans::kmeans;
+use tnngen::config::{toml, TnnParams};
+use tnngen::eda::synthesis::{optimize, SynthStats};
+use tnngen::rtl::netlist::{Gate, GateKind, Netlist};
+use tnngen::rtl::GateSim;
+use tnngen::sim::column::{first_crossing, potentials, stdp_update, wta};
+use tnngen::sim::encode_window;
+use tnngen::sim::event::event_driven;
+use tnngen::util::linalg::dist2;
+use tnngen::util::prop::{check, Gen};
+
+// ---------------------------------------------------------------------------
+// Clustering metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rand_index_symmetric_and_bounded() {
+    check("rand index symmetric/bounded", 120, |g: &mut Gen| {
+        let n = g.size(2, 60);
+        let k = g.size(1, 6).max(1);
+        let a = g.labels(n, k);
+        let b = g.labels(n, k);
+        let r1 = rand_index(&a, &b);
+        let r2 = rand_index(&b, &a);
+        assert!((r1 - r2).abs() < 1e-12);
+        assert!((0.0..=1.0).contains(&r1));
+        assert_eq!(rand_index(&a, &a), 1.0);
+    });
+}
+
+#[test]
+fn prop_metrics_invariant_to_label_permutation() {
+    check("metrics invariant to relabeling", 80, |g: &mut Gen| {
+        let n = g.size(4, 50);
+        let k = g.size(2, 5);
+        let a = g.labels(n, k);
+        let truth = g.labels(n, k);
+        // Permute a's label names.
+        let perm: Vec<usize> = (0..k).map(|i| (i + 1) % k).collect();
+        let a2: Vec<usize> = a.iter().map(|&l| perm[l]).collect();
+        assert!((rand_index(&a, &truth) - rand_index(&a2, &truth)).abs() < 1e-12);
+        assert!((adjusted_rand_index(&a, &truth) - adjusted_rand_index(&a2, &truth)).abs() < 1e-9);
+        assert!((nmi(&a, &truth) - nmi(&a2, &truth)).abs() < 1e-9);
+        assert!((purity(&a, &truth) - purity(&a2, &truth)).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_ari_not_above_one_and_perfect_on_equal() {
+    check("ARI bounds", 80, |g: &mut Gen| {
+        let n = g.size(3, 40);
+        let k = g.size(2, 4);
+        let a = g.labels(n, k);
+        let b = g.labels(n, k);
+        assert!(adjusted_rand_index(&a, &b) <= 1.0 + 1e-12);
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// k-means
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kmeans_assigns_nearest_centroid() {
+    check("kmeans nearest-centroid", 40, |g: &mut Gen| {
+        let n = g.size(6, 40);
+        let dim = g.size(1, 4);
+        let k = g.size(1, 4).min(n);
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| g.vec_f64(dim, -5.0, 5.0)).collect();
+        let res = kmeans(&xs, k, 2, g.rng.next_u64());
+        for (x, &a) in xs.iter().zip(&res.assignments) {
+            for c in &res.centroids {
+                assert!(dist2(x, &res.centroids[a]) <= dist2(x, c) + 1e-9);
+            }
+        }
+        assert!(res.inertia >= 0.0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Synthesis optimization preserves behaviour (random netlists)
+// ---------------------------------------------------------------------------
+
+/// Build a random combinational netlist with some constant injections.
+fn random_netlist(g: &mut Gen) -> Netlist {
+    let n_in = g.size(2, 5);
+    let n_gates = g.size(3, 60);
+    let mut n = Netlist::new("rand");
+    let mut nets: Vec<usize> = (0..n_in).map(|_| n.new_net()).collect();
+    for (i, &b) in nets.clone().iter().enumerate() {
+        n.add_input(&format!("i{i}"), vec![b]);
+    }
+    // Constants to exercise folding.
+    let c0 = n.new_net();
+    n.add_gate(GateKind::Const0, "c0", vec![], c0);
+    let c1 = n.new_net();
+    n.add_gate(GateKind::Const1, "c1", vec![], c1);
+    nets.push(c0);
+    nets.push(c1);
+    let kinds = [
+        GateKind::Buf,
+        GateKind::Inv,
+        GateKind::And2,
+        GateKind::Nand2,
+        GateKind::Or2,
+        GateKind::Nor2,
+        GateKind::Xor2,
+        GateKind::Xnor2,
+        GateKind::Mux2,
+    ];
+    for gi in 0..n_gates {
+        let kind = *g.rng.choose(&kinds);
+        let inputs: Vec<usize> = (0..kind.num_inputs())
+            .map(|_| *g.rng.choose(&nets))
+            .collect();
+        let out = n.new_net();
+        n.add_gate(kind, &format!("g{gi}"), inputs, out);
+        nets.push(out);
+    }
+    // A couple of outputs picked from anywhere.
+    let n_out = g.size(1, 4);
+    for o in 0..n_out {
+        let src = *g.rng.choose(&nets);
+        // Outputs must be driven nets; all in `nets` are driven.
+        n.add_output(&format!("o{o}"), vec![src]);
+    }
+    n
+}
+
+#[test]
+fn prop_optimize_preserves_truth_table() {
+    check("optimize preserves behaviour", 60, |g: &mut Gen| {
+        let n = random_netlist(g);
+        n.validate().expect("random netlist valid");
+        let mut stats = SynthStats::default();
+        let opt = optimize(&n, &mut stats);
+        opt.validate().expect("optimized netlist valid");
+        let n_in = n.inputs.len();
+        let mut sim_a = GateSim::new(&n).unwrap();
+        let mut sim_b = GateSim::new(&opt).unwrap();
+        for _ in 0..16 {
+            let bits: Vec<u64> = (0..n_in).map(|_| g.rng.below(2) as u64).collect();
+            for (i, &b) in bits.iter().enumerate() {
+                sim_a.set_input(&format!("i{i}"), b);
+                sim_b.set_input(&format!("i{i}"), b);
+            }
+            sim_a.settle();
+            sim_b.settle();
+            for p in &n.outputs {
+                let name = &p.name;
+                assert_eq!(
+                    sim_a.get_output(name),
+                    sim_b.get_output(name),
+                    "output {name} diverged for inputs {bits:?}"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Simulator engines agree (cycle-accurate vs event-driven)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_event_driven_matches_cycle_accurate() {
+    check("event == cycle (dyadic)", 100, |g: &mut Gen| {
+        let params = TnnParams::default();
+        let p = g.size(1, 24);
+        let q = g.size(1, 4);
+        let w: Vec<Vec<f32>> = (0..q)
+            .map(|_| (0..p).map(|_| g.rng.below(57) as f32 * 0.125).collect())
+            .collect();
+        let s: Vec<i32> = (0..p).map(|_| g.rng.range(0, 33) as i32).collect();
+        let theta = g.rng.below(400) as f32 * 0.25 + 1.0;
+        let cyc: Vec<i32> = potentials(&w, &s, &params)
+            .iter()
+            .map(|v| first_crossing(v, theta, params.t_r))
+            .collect();
+        let evt = event_driven(&w, &s, theta, &params);
+        assert_eq!(cyc, evt);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Encoding + STDP invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_encode_bounds_and_extremes() {
+    check("encode bounds", 100, |g: &mut Gen| {
+        let p = g.size(2, 200);
+        let x: Vec<f32> = g.vec_f64(p, -100.0, 100.0).iter().map(|&v| v as f32).collect();
+        let s = encode_window(&x, 8, 32, 0.0);
+        assert!(s.iter().all(|&v| (0..8).contains(&v)));
+        // The max element always spikes at t=0, the min at t=7.
+        let imax = (0..p).max_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap()).unwrap();
+        let imin = (0..p).min_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap()).unwrap();
+        assert_eq!(s[imax], 0);
+        assert_eq!(s[imin], 7);
+        // Sparse mode: everything below the cutoff is silenced, max never.
+        let ss = encode_window(&x, 8, 32, 0.6);
+        assert_eq!(ss[imax], 0);
+        assert!(ss.iter().all(|&v| (0..8).contains(&v) || v == 32));
+    });
+}
+
+#[test]
+fn prop_stdp_keeps_weights_in_range_and_masks() {
+    check("stdp bounds", 100, |g: &mut Gen| {
+        let params = TnnParams::default();
+        let p = g.size(1, 40);
+        let q = g.size(1, 5);
+        let mut w: Vec<Vec<f32>> = (0..q)
+            .map(|_| (0..p).map(|_| g.rng.f32() * 7.0).collect())
+            .collect();
+        let s: Vec<i32> = (0..p).map(|_| g.rng.range(0, 33) as i32).collect();
+        let y: Vec<i32> = (0..q).map(|_| g.rng.range(0, 33) as i32).collect();
+        let (_, gated) = wta(&y, params.t_r, params.tie);
+        stdp_update(&mut w, &s, &gated, &params);
+        for row in &w {
+            for &v in row {
+                assert!((0.0..=7.0).contains(&v));
+            }
+        }
+        // At most one neuron had an output spike after WTA.
+        assert!(gated.iter().filter(|&&t| t < params.t_r).count() <= 1);
+    });
+}
+
+#[test]
+fn prop_wta_winner_is_argmin() {
+    check("wta argmin", 150, |g: &mut Gen| {
+        let q = g.size(1, 30);
+        let y: Vec<i32> = (0..q).map(|_| g.rng.range(0, 33) as i32).collect();
+        let (winner, gated) = wta(&y, 32, tnngen::config::TieBreak::Low);
+        let min = *y.iter().min().unwrap();
+        if min >= 32 {
+            assert_eq!(winner, -1);
+        } else {
+            assert_eq!(y[winner as usize], min);
+            // Lowest index among minima.
+            let first = y.iter().position(|&v| v == min).unwrap();
+            assert_eq!(winner as usize, first);
+            assert_eq!(gated[winner as usize], min);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// TOML parser round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_toml_roundtrip_scalars() {
+    check("toml roundtrip", 100, |g: &mut Gen| {
+        let n_keys = g.size(1, 12);
+        let mut text = String::from("[s]\n");
+        let mut expect: Vec<(String, toml::Value)> = Vec::new();
+        for k in 0..n_keys {
+            let key = format!("k{k}");
+            let v = match g.rng.below(4) {
+                0 => toml::Value::Int(g.rng.range(-1_000_000, 1_000_000)),
+                1 => toml::Value::Float((g.rng.range(-1000, 1000) as f64) / 8.0),
+                2 => toml::Value::Bool(g.rng.chance(0.5)),
+                _ => toml::Value::Str(format!("v{}", g.rng.below(100))),
+            };
+            let rendered = match &v {
+                toml::Value::Int(i) => format!("{key} = {i}"),
+                toml::Value::Float(f) => format!("{key} = {f:?}"),
+                toml::Value::Bool(b) => format!("{key} = {b}"),
+                toml::Value::Str(s) => format!("{key} = \"{s}\""),
+                _ => unreachable!(),
+            };
+            text.push_str(&rendered);
+            text.push('\n');
+            expect.push((key, v));
+        }
+        let doc = toml::parse(&text).unwrap();
+        for (key, v) in expect {
+            let got = doc.get("s", &key).unwrap();
+            match (&v, got) {
+                (toml::Value::Float(a), g2) => {
+                    assert!((a - g2.as_float().unwrap()).abs() < 1e-12)
+                }
+                _ => assert_eq!(&v, got),
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Placement legality on random small designs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_placement_legal_and_improving() {
+    check("placement legal", 8, |g: &mut Gen| {
+        let p = g.size(3, 10);
+        let q = g.size(1, 3).max(1);
+        let cfg = tnngen::config::ColumnConfig::new("p", "synthetic", p, q);
+        let rtl = tnngen::rtl::generate_column(&cfg).unwrap();
+        let d = tnngen::eda::synthesize(&rtl.netlist, &tnngen::eda::asap7());
+        let pl = tnngen::eda::place(
+            &d,
+            &tnngen::eda::PlaceOpts { seed: g.rng.next_u64(), moves_per_instance: 4, ..Default::default() },
+        );
+        // Legal: all inside die, no overlaps, HPWL non-negative and improved.
+        let mut seen = std::collections::HashSet::new();
+        for &(x, y) in &pl.coords {
+            assert!(x >= 0.0 && (x as f64) <= pl.die_w_um + 1e-6);
+            assert!(y >= 0.0 && (y as f64) <= pl.die_h_um + 1e-6);
+            assert!(seen.insert((x.to_bits(), y.to_bits())));
+        }
+        assert!(pl.hpwl_um <= pl.initial_hpwl_um);
+    });
+}

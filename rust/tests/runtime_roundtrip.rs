@@ -1,0 +1,154 @@
+//! PJRT round-trip tests: the AOT artifacts (JAX/Pallas lowered to HLO
+//! text) must agree with the native Rust simulator bit-for-bit on dyadic
+//! weights (all arithmetic exact in f32).
+//!
+//! Requires `make artifacts`; tests skip with a notice when absent.
+
+use std::path::Path;
+
+use tnngen::config::presets::by_tag;
+use tnngen::config::ArtifactManifest;
+use tnngen::runtime::{Engine, TnnColumn};
+use tnngen::sim::CycleSim;
+use tnngen::util::Rng;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.toml").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Quantize weights to 1/8 steps so f32 arithmetic is exact in both
+/// implementations (see DESIGN.md functional contract).
+fn quantize(w: &mut [f32]) {
+    for v in w.iter_mut() {
+        *v = (*v * 8.0).round() / 8.0;
+    }
+}
+
+fn load_pair(tag: &str, seed: u64) -> Option<(TnnColumn, CycleSim)> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let manifest = ArtifactManifest::load(dir).expect("manifest parses");
+    let mut column = TnnColumn::load(&engine, &manifest, tag, seed).expect("artifacts load");
+    quantize(&mut column.weights);
+    let cfg = by_tag(tag).unwrap();
+    let mut sim = CycleSim::new(cfg, seed);
+    for row in sim.weights.iter_mut() {
+        quantize(row);
+    }
+    Some((column, sim))
+}
+
+fn rand_window(p: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn pjrt_infer_matches_native_exactly() {
+    let Some((column, sim)) = load_pair("16x2", 11) else { return };
+    let mut rng = Rng::new(5);
+    for i in 0..25 {
+        let x = rand_window(16, &mut rng);
+        let (w_pjrt, y_pjrt) = column.infer(&x).unwrap();
+        let out = sim.infer(&x);
+        assert_eq!(w_pjrt, out.winner, "sample {i}");
+        assert_eq!(y_pjrt, out.y, "sample {i}");
+    }
+}
+
+#[test]
+fn pjrt_step_trajectory_matches_native() {
+    let Some((mut column, mut sim)) = load_pair("16x2", 3) else { return };
+    let mut rng = Rng::new(17);
+    for i in 0..40 {
+        let x = rand_window(16, &mut rng);
+        let (w_pjrt, y_pjrt) = column.step(&x).unwrap();
+        let out = sim.step(&x);
+        assert_eq!((w_pjrt, &y_pjrt), (out.winner, &out.y), "step {i}");
+    }
+    // Weight states must agree exactly after the whole trajectory.
+    let native_rows = &sim.weights;
+    let pjrt_rows = column.weight_rows();
+    for (j, (a, b)) in pjrt_rows.iter().zip(native_rows).enumerate() {
+        assert_eq!(a, b, "weight row {j}");
+    }
+}
+
+#[test]
+fn pjrt_infer_batch_matches_per_sample() {
+    let Some((column, _)) = load_pair("48x4", 9) else { return };
+    let mut rng = Rng::new(23);
+    let xs: Vec<Vec<f32>> = (0..70).map(|_| rand_window(48, &mut rng)).collect();
+    let batch = column.infer_all(&xs).unwrap();
+    for (i, x) in xs.iter().enumerate() {
+        let (w, _) = column.infer(x).unwrap();
+        assert_eq!(batch[i], w, "sample {i}");
+    }
+}
+
+#[test]
+fn pjrt_train_chunk_matches_sequential_steps() {
+    let Some((mut chunked, _)) = load_pair("16x2", 31) else { return };
+    let Some((mut stepped, _)) = load_pair("16x2", 31) else { return };
+    let mut rng = Rng::new(41);
+    // Exactly one chunk (32 samples) so train_epoch uses the scan artifact.
+    let xs: Vec<Vec<f32>> = (0..32).map(|_| rand_window(16, &mut rng)).collect();
+    chunked.train_epoch(&xs).unwrap();
+    for x in &xs {
+        stepped.step(x).unwrap();
+    }
+    assert_eq!(chunked.weights, stepped.weights);
+}
+
+#[test]
+fn pjrt_remainder_paths_cover_partial_batches() {
+    let Some((mut column, mut sim)) = load_pair("16x2", 77) else { return };
+    let mut rng = Rng::new(53);
+    // 35 = one chunk of 32 + remainder of 3 per-sample steps.
+    let xs: Vec<Vec<f32>> = (0..35).map(|_| rand_window(16, &mut rng)).collect();
+    column.train_epoch(&xs).unwrap();
+    for x in &xs {
+        sim.step(x);
+    }
+    let rows = column.weight_rows();
+    for (a, b) in rows.iter().zip(&sim.weights) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn all_nine_configs_have_loadable_step_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let manifest = ArtifactManifest::load(dir).unwrap();
+    let tags = manifest.tags();
+    assert!(tags.len() >= 9, "expected >= 9 configs, got {tags:?}");
+    // Compile the two smallest to keep this test quick; the full set is
+    // exercised by the Table-2 bench.
+    for tag in ["16x2", "48x4"] {
+        let col = TnnColumn::load(&engine, &manifest, tag, 0).unwrap();
+        assert_eq!(col.config.tag(), tag);
+    }
+}
+
+#[test]
+fn padded_weights_stay_zero_through_pjrt_training() {
+    let Some((mut column, _)) = load_pair("16x2", 1) else { return };
+    let mut rng = Rng::new(2);
+    let xs: Vec<Vec<f32>> = (0..32).map(|_| rand_window(16, &mut rng)).collect();
+    column.train_epoch(&xs).unwrap();
+    let (q_pad, p_pad) = (column.q_pad, column.p_pad);
+    let cfg = column.config.clone();
+    for j in 0..q_pad {
+        for i in 0..p_pad {
+            if j >= cfg.q || i >= cfg.p {
+                assert_eq!(column.weights[j * p_pad + i], 0.0, "pad ({j},{i})");
+            }
+        }
+    }
+}
