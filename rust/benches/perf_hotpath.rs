@@ -1,21 +1,34 @@
 //! Bench: hot-path microbenchmarks for the §Perf optimization pass
-//! (EXPERIMENTS.md). Per-layer: native response path, gate-level sim
-//! throughput, SA placement move rate, synthesis optimization rate, and
-//! PJRT dispatch cost.
+//! (EXPERIMENTS.md). Per-layer: native response path, batched-vs-sequential
+//! dataset engine, gate-level sim throughput, SA placement move rate,
+//! synthesis optimization rate, and PJRT dispatch cost.
 
 mod bench_common;
 
 use bench_common::{banner, bench};
 use tnngen::config::presets::by_tag;
 use tnngen::config::ColumnConfig;
+use tnngen::coordinator::explorer::{explore_with_workers, SweepSpace};
+use tnngen::coordinator::jobs::default_workers;
 use tnngen::coordinator::{Coordinator, SimBackend};
 use tnngen::cluster::pipeline::TnnClustering;
-use tnngen::data::load_benchmark;
+use tnngen::data::{load_benchmark, generate};
 use tnngen::eda::synthesis::{optimize, SynthStats};
 use tnngen::eda::{place, synthesize, tnn7, PlaceOpts};
 use tnngen::rtl::{generate_column, GateSim};
-use tnngen::sim::CycleSim;
+use tnngen::sim::{BatchSim, CycleSim};
+use tnngen::util::stats::median;
+use tnngen::util::timer::time_iters;
 use tnngen::util::Rng;
+
+/// Like `bench`, but also returns the median seconds so sections can print
+/// sequential-vs-batched speedup ratios.
+fn bench_median<F: FnMut()>(name: &str, iters: usize, f: F) -> f64 {
+    let samples = time_iters(iters, f);
+    let med = median(&samples);
+    println!("bench {name:<40} median {:>10.3} ms  n={}", med * 1e3, samples.len());
+    med
+}
 
 fn main() {
     banner("L3 perf: native functional simulator");
@@ -47,9 +60,38 @@ fn main() {
     let params = sim.config.params;
     bench("event-driven response x120", 10, || {
         for s in &s_enc {
-            let _ = tnngen::sim::event::event_driven(&sim.weights, s, theta, &params);
+            let _ = tnngen::sim::event::event_driven(&sim.weights, sim.config.p, s, theta, &params);
         }
     });
+
+    banner("L3 perf: batched vs sequential dataset engine (96x2)");
+    println!("workers: {}", default_workers());
+    let frozen = sim.clone();
+    let batch = BatchSim::from_sim(frozen.clone());
+    let t_seq = bench_median("sequential infer x120 (96x2)", 20, || {
+        for x in &xs {
+            let _ = frozen.infer(x);
+        }
+    });
+    let t_bat = bench_median("batched infer x120 (96x2)", 20, || {
+        let _ = batch.infer_winners(&xs);
+    });
+    println!("batched dataset inference speedup: {:.2}x (acceptance floor: 2x)", t_seq / t_bat);
+
+    let sweep_cfg = by_tag("16x2").unwrap();
+    let sweep_ds = generate("ECG200", 16, 2, 40, 3);
+    let sweep_pipe = TnnClustering { epochs: 2, seed: 1, n_per_split: 40 };
+    let space = SweepSpace::default(); // 9 points
+    let cfgs = space.configs(&sweep_cfg);
+    let t_sweep_seq = bench_median("sequential sweep, 9 pts (16x2)", 5, || {
+        for c in &cfgs {
+            let _ = sweep_pipe.run_native_sequential(c, &sweep_ds);
+        }
+    });
+    let t_sweep_bat = bench_median("batched sweep, 9 pts (16x2)", 5, || {
+        let _ = explore_with_workers(&sweep_cfg, &sweep_ds, &space, &sweep_pipe, default_workers());
+    });
+    println!("batched sweep speedup: {:.2}x", t_sweep_seq / t_sweep_bat);
 
     banner("L3 perf: gate-level simulator");
     let small = ColumnConfig::new("perf", "synthetic", 12, 2);

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::config::{ArtifactManifest, ColumnConfig};
 use crate::data::Dataset;
 use crate::runtime::{Engine, TnnColumn};
-use crate::sim::CycleSim;
+use crate::sim::{BatchSim, CycleSim};
 
 use super::dtcr_proxy::dtcr_proxy_cluster;
 use super::kmeans::{kmeans, to_f64_rows};
@@ -105,8 +105,51 @@ impl TnnClustering {
         Ok(self.score(&column.config.clone(), ds, winners, &xs, &truth))
     }
 
-    /// Run via the native cycle-accurate simulator.
+    /// Run via the native simulator on the batched engine: windows are
+    /// encoded once (in parallel) and cached across epochs, training
+    /// replays the cached spike trains, and inference fans out across the
+    /// worker pool. Bit-exact with [`Self::run_native_sequential`] for the
+    /// same seed (pinned by `rust/tests/batch_conformance.rs`).
     pub fn run_native(&self, cfg: &ColumnConfig, ds: &Dataset) -> ClusteringReport {
+        self.run_native_with_workers(cfg, ds, crate::coordinator::jobs::default_workers())
+    }
+
+    /// [`Self::run_native`] with a pinned worker count. Sweeps pass 1 here
+    /// so parallelism lives at the one-design-per-worker level instead of
+    /// oversubscribing with nested pools.
+    pub fn run_native_with_workers(
+        &self,
+        cfg: &ColumnConfig,
+        ds: &Dataset,
+        workers: usize,
+    ) -> ClusteringReport {
+        let mut batch = BatchSim::new(cfg.clone(), self.seed).with_workers(workers);
+        let (xs, truth) = ds.all();
+        let enc = batch.encode_batch(&xs);
+        for _ in 0..self.epochs {
+            batch.train_epoch_encoded(&enc);
+        }
+        let winners = batch.winners_encoded(&enc);
+        self.score(cfg, ds, winners, &xs, &truth)
+    }
+
+    /// [`Self::run_native`] with per-epoch sample shuffling (online STDP is
+    /// order-sensitive; shuffling decorrelates the presentation order from
+    /// the dataset layout). Epoch orders come from child RNG streams split
+    /// from `self.seed`, so the run is reproducible from the seed alone and
+    /// independent of worker count.
+    pub fn run_native_shuffled(&self, cfg: &ColumnConfig, ds: &Dataset) -> ClusteringReport {
+        let mut batch = BatchSim::new(cfg.clone(), self.seed);
+        let (xs, truth) = ds.all();
+        batch.train_epochs_shuffled(&xs, self.epochs, self.seed ^ 0x5487);
+        let winners = batch.infer_winners(&xs);
+        self.score(cfg, ds, winners, &xs, &truth)
+    }
+
+    /// The original per-sample reference path (re-encodes every window on
+    /// every step). Kept as the conformance baseline for the batched engine
+    /// and as the sequential side of the perf_hotpath comparison.
+    pub fn run_native_sequential(&self, cfg: &ColumnConfig, ds: &Dataset) -> ClusteringReport {
         let mut sim = CycleSim::new(cfg.clone(), self.seed);
         let (xs, truth) = ds.all();
         for _ in 0..self.epochs {
@@ -130,6 +173,16 @@ mod tests {
         assert!(report.ri_tnn > 0.5, "RI {}", report.ri_tnn);
         assert!(report.no_fire_frac < 0.5);
         assert!(report.tnn_norm > 0.0);
+    }
+
+    #[test]
+    fn shuffled_run_is_reproducible() {
+        let cfg = ColumnConfig::new("TinyTest", "synthetic", 16, 2);
+        let ds = generate("ECG200", 16, 2, 30, 7);
+        let pipe = TnnClustering { epochs: 3, seed: 5, n_per_split: 30 };
+        let a = pipe.run_native_shuffled(&cfg, &ds);
+        let b = pipe.run_native_shuffled(&cfg, &ds);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

@@ -5,8 +5,9 @@
 use crate::cluster::pipeline::{ClusteringReport, TnnClustering};
 use crate::config::ColumnConfig;
 use crate::data::Dataset;
+use crate::report::Table;
 
-use super::jobs::parallel_map;
+use super::jobs::{default_workers, parallel_map_workers};
 
 /// One axis of the sweep.
 #[derive(Debug, Clone)]
@@ -65,13 +66,75 @@ pub struct SweepPoint {
 /// Run the sweep in parallel on the native simulator and return points
 /// sorted by TNN rand index, best first.
 pub fn explore(base: &ColumnConfig, ds: &Dataset, space: &SweepSpace, pipe: &TnnClustering) -> Vec<SweepPoint> {
+    explore_with_workers(base, ds, space, pipe, default_workers())
+}
+
+/// [`explore`] with a pinned worker count. Each sweep point runs its
+/// pipeline single-threaded (`run_native_with_workers(.., 1)`) so the
+/// parallelism granularity is one design per worker — no nested pools —
+/// and the report is byte-identical for ANY `workers` (order-preserving
+/// map, per-point seeds, stable sort; pinned by
+/// `rust/tests/batch_conformance.rs`).
+pub fn explore_with_workers(
+    base: &ColumnConfig,
+    ds: &Dataset,
+    space: &SweepSpace,
+    pipe: &TnnClustering,
+    workers: usize,
+) -> Vec<SweepPoint> {
     let configs = space.configs(base);
-    let mut points: Vec<SweepPoint> = parallel_map(configs, |cfg| {
-        let report = pipe.run_native(&cfg, ds);
+    let mut points: Vec<SweepPoint> = parallel_map_workers(configs, workers, |cfg| {
+        let report = pipe.run_native_with_workers(&cfg, ds, 1);
         SweepPoint { config: cfg, report }
     });
+    // Stable sort: ties keep cartesian-product order, so ranking is
+    // deterministic too.
     points.sort_by(|a, b| b.report.ri_tnn.partial_cmp(&a.report.ri_tnn).unwrap());
     points
+}
+
+/// Deterministic CSV serialization of a sweep (one line per point, full
+/// float precision via `Display`, escaping via the crate's standard
+/// [`Table::to_csv`]). Byte-identical across runs and worker counts for
+/// the same inputs; the conformance tests compare these strings directly.
+pub fn sweep_csv(points: &[SweepPoint]) -> String {
+    let mut t = Table::new(&[
+        "theta_frac",
+        "sparse_cutoff",
+        "mu_capture",
+        "mu_backoff",
+        "mu_search",
+        "ri_tnn",
+        "ri_kmeans",
+        "ri_dtcr",
+        "tnn_norm",
+        "dtcr_norm",
+        "ari",
+        "nmi",
+        "purity",
+        "no_fire",
+    ]);
+    for pt in points {
+        let p = &pt.config.params;
+        let r = &pt.report;
+        t.row(&[
+            p.theta_frac.to_string(),
+            p.sparse_cutoff.to_string(),
+            p.mu_capture.to_string(),
+            p.mu_backoff.to_string(),
+            p.mu_search.to_string(),
+            r.ri_tnn.to_string(),
+            r.ri_kmeans.to_string(),
+            r.ri_dtcr.to_string(),
+            r.tnn_norm.to_string(),
+            r.dtcr_norm.to_string(),
+            r.ari_tnn.to_string(),
+            r.nmi_tnn.to_string(),
+            r.purity_tnn.to_string(),
+            r.no_fire_frac.to_string(),
+        ]);
+    }
+    t.to_csv()
 }
 
 #[cfg(test)]
@@ -99,5 +162,21 @@ mod tests {
         let points = explore(&base, &ds, &space, &pipe);
         assert_eq!(points.len(), 2);
         assert!(points[0].report.ri_tnn >= points[1].report.ri_tnn);
+    }
+
+    #[test]
+    fn sweep_csv_has_one_line_per_point_plus_header() {
+        let base = ColumnConfig::new("X", "synthetic", 16, 2);
+        let ds = generate("ECG200", 16, 2, 20, 3);
+        let space = SweepSpace {
+            theta_frac: vec![0.2],
+            sparse_cutoff: vec![0.5, 0.7],
+            ..Default::default()
+        };
+        let pipe = TnnClustering { epochs: 1, seed: 1, n_per_split: 20 };
+        let points = explore(&base, &ds, &space, &pipe);
+        let csv = sweep_csv(&points);
+        assert_eq!(csv.lines().count(), 1 + points.len());
+        assert!(csv.starts_with("theta_frac,"));
     }
 }

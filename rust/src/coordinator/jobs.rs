@@ -1,12 +1,42 @@
 //! Minimal std::thread worker pool (offline substitute for tokio/rayon):
-//! order-preserving parallel map over CPU-bound jobs.
+//! order-preserving parallel map over CPU-bound jobs, with explicit
+//! worker-count control, chunking helpers for scratch reuse, and
+//! deterministic per-item RNG splitting.
+//!
+//! Determinism contract: results are returned in input order and any
+//! randomness is derived per ITEM (by splitting a master stream in input
+//! order) rather than per thread-schedule, so every entry point produces
+//! byte-identical output regardless of the worker count. The batch engine
+//! (`sim::batch`), the sweep explorer and the conformance tests all lean on
+//! this.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-/// Parallel map preserving input order. `f` runs on worker threads; the
-/// number of workers is min(jobs, available_parallelism).
+use crate::util::Rng;
+
+/// Number of workers used when the caller does not pin one.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map preserving input order with the default worker count.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync,
+{
+    parallel_map_workers(items, default_workers(), f)
+}
+
+/// Parallel map preserving input order on exactly `workers` threads
+/// (clamped to [1, items.len()]). `workers == 1` runs on the caller thread
+/// with zero pool overhead — useful for nested parallelism, where the outer
+/// level already saturates the machine.
+pub fn parallel_map_workers<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send + 'static,
     R: Send + 'static,
@@ -16,10 +46,7 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n);
+    let workers = workers.max(1).min(n);
     if workers <= 1 {
         return items.into_iter().map(f).collect();
     }
@@ -53,6 +80,42 @@ where
     })
 }
 
+/// Parallel map where every item gets its own deterministic child RNG
+/// stream, split from `seed` in input order BEFORE dispatch. Item i sees
+/// the same stream no matter which thread runs it or how many workers
+/// exist, so randomized parallel phases stay reproducible.
+pub fn parallel_map_rng<T, R, F>(items: Vec<T>, seed: u64, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T, &mut Rng) -> R + Send + Sync,
+{
+    let mut master = Rng::new(seed);
+    let seeded: Vec<(T, Rng)> = items.into_iter().map(|t| (t, master.split())).collect();
+    parallel_map_workers(seeded, workers, move |(t, mut rng)| f(t, &mut rng))
+}
+
+/// Split `0..n` into at most `chunks` contiguous, balanced `(lo, hi)`
+/// ranges (first `n % chunks` ranges get one extra element). Used to give
+/// each worker a run of samples so per-sample scratch buffers amortize.
+pub fn chunk_ranges(n: usize, chunks: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.max(1).min(n);
+    let base = n / chunks;
+    let extra = n % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut lo = 0;
+    for k in 0..chunks {
+        let len = base + usize::from(k < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +138,49 @@ mod tests {
             (0..200_000u64).fold(i, |a, b| a.wrapping_add(b))
         });
         assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let f = |i: i32| i * i - 3;
+        let serial = parallel_map_workers((0..257).collect(), 1, f);
+        for workers in [2, 3, 8, 64] {
+            let par = parallel_map_workers((0..257).collect(), workers, f);
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn rng_streams_are_per_item_not_per_thread() {
+        let draw = |i: usize, rng: &mut Rng| (i, rng.next_u64(), rng.next_u64());
+        let serial = parallel_map_rng((0..40).collect(), 99, 1, draw);
+        for workers in [2, 5, 16] {
+            let par = parallel_map_rng((0..40).collect(), 99, workers, draw);
+            assert_eq!(par, serial, "workers={workers}");
+        }
+        // Streams are actually independent across items.
+        assert_ne!(serial[0].1, serial[1].1);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_balance() {
+        assert_eq!(chunk_ranges(0, 4), vec![]);
+        assert_eq!(chunk_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        let r = chunk_ranges(10, 3);
+        assert_eq!(r, vec![(0, 4), (4, 7), (7, 10)]);
+        for n in [1usize, 7, 100, 121] {
+            for c in [1usize, 2, 5, 13] {
+                let ranges = chunk_ranges(n, c);
+                assert_eq!(ranges.first().unwrap().0, 0);
+                assert_eq!(ranges.last().unwrap().1, n);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
+                let max = sizes.iter().max().unwrap();
+                let min = sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "balanced: {sizes:?}");
+            }
+        }
     }
 }

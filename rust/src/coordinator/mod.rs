@@ -107,10 +107,26 @@ impl Coordinator {
     /// Full TNNGen run for one design: functional sim + hardware flow on
     /// every requested library.
     pub fn run_design(&self, cfg: &ColumnConfig, campaign: &Campaign) -> Result<DesignRun> {
+        self.run_design_with_workers(cfg, campaign, jobs::default_workers())
+    }
+
+    /// [`Self::run_design`] with the native clustering phase pinned to
+    /// `sim_workers` simulation threads. Campaign fan-out passes 1 so the
+    /// parallelism granularity stays one design per worker (no nested
+    /// pools).
+    pub fn run_design_with_workers(
+        &self,
+        cfg: &ColumnConfig,
+        campaign: &Campaign,
+        sim_workers: usize,
+    ) -> Result<DesignRun> {
         let clustering = match &campaign.clustering {
             Some(pipe) => {
                 let ds = self.dataset(cfg, campaign);
-                Some(self.run_clustering(cfg, &ds, pipe, campaign.backend)?)
+                Some(match campaign.backend {
+                    SimBackend::Native => pipe.run_native_with_workers(cfg, &ds, sim_workers),
+                    SimBackend::Pjrt => self.run_clustering(cfg, &ds, pipe, campaign.backend)?,
+                })
             }
             None => None,
         };
@@ -123,7 +139,8 @@ impl Coordinator {
 
     /// Run a campaign over several designs in parallel (hardware flows are
     /// CPU-bound and independent; PJRT clustering stays on the caller
-    /// thread because the engine is not Sync).
+    /// thread because the engine is not Sync). Each design runs its
+    /// simulation single-threaded — one design per worker, no nested pools.
     pub fn run_campaign(&self, configs: &[ColumnConfig], campaign: &Campaign) -> Result<Vec<DesignRun>> {
         if campaign.backend == SimBackend::Pjrt {
             // Sequential: the PJRT client is single-threaded here.
@@ -131,7 +148,7 @@ impl Coordinator {
         }
         let results = jobs::parallel_map(configs.to_vec(), |cfg| {
             let coord = Coordinator::native();
-            coord.run_design(&cfg, campaign)
+            coord.run_design_with_workers(&cfg, campaign, 1)
         });
         results.into_iter().collect()
     }

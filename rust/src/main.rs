@@ -15,7 +15,7 @@ use tnngen::cli::Args;
 use tnngen::cluster::pipeline::TnnClustering;
 use tnngen::config::presets::{all_configs, by_tag};
 use tnngen::config::ColumnConfig;
-use tnngen::coordinator::explorer::{explore, SweepSpace};
+use tnngen::coordinator::explorer::{explore_with_workers, SweepSpace};
 use tnngen::coordinator::{Coordinator, SimBackend};
 use tnngen::data::load_benchmark;
 use tnngen::eda::{all_libraries, run_flow, tnn7, FlowOpts};
@@ -38,12 +38,17 @@ fn main() {
 }
 
 const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce> [args]
-  simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N]
+  simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N] [--sequential|--shuffle]
   generate-rtl <tag> [--out file.v]
   flow <tag> [--lib FreePDK45|ASAP7|TNN7] [--layout]
-  explore <tag|name> [--epochs N]
+  explore <tag|name> [--epochs N] [--workers N] [--csv]
   forecast [--syn N] [--full]
-  reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]";
+  reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]
+
+  simulate --sequential forces the per-sample reference path (the default
+  native path runs the batched parallel engine; both are bit-exact).
+  explore --workers pins the sweep worker count (0 = all cores); reports
+  are byte-identical for any value.";
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -95,7 +100,18 @@ fn dispatch(args: &Args) -> Result<()> {
                 n_per_split: args.flag_usize("samples", 60)?,
             };
             let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
-            let r = coord.run_clustering(&cfg, &ds, &pipe, backend)?;
+            let sequential = args.flag_bool("sequential");
+            let shuffle = args.flag_bool("shuffle");
+            if (sequential || shuffle) && backend != SimBackend::Native {
+                bail!("--sequential/--shuffle apply to the native backend only");
+            }
+            let r = if sequential {
+                pipe.run_native_sequential(&cfg, &ds)
+            } else if shuffle {
+                pipe.run_native_shuffled(&cfg, &ds)
+            } else {
+                coord.run_clustering(&cfg, &ds, &pipe, backend)?
+            };
             println!(
                 "{} ({}): RI tnn={} kmeans={} dtcr*={} | normalized tnn={} dtcr*={} | ARI={} NMI={} purity={} no-fire={:.1}%",
                 r.benchmark,
@@ -188,7 +204,15 @@ fn dispatch(args: &Args) -> Result<()> {
                 n_per_split: args.flag_usize("samples", 40)?,
             };
             let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
-            let points = explore(&cfg, &ds, &SweepSpace::default(), &pipe);
+            let workers = match args.flag_usize("workers", 0)? {
+                0 => tnngen::coordinator::jobs::default_workers(),
+                n => n,
+            };
+            let points = explore_with_workers(&cfg, &ds, &SweepSpace::default(), &pipe, workers);
+            if args.flag_bool("csv") {
+                print!("{}", tnngen::coordinator::explorer::sweep_csv(&points));
+                return Ok(());
+            }
             let mut t = Table::new(&["theta_frac", "cutoff", "RI tnn", "RI/kmeans", "no-fire"]);
             for p in points.iter().take(args.flag_usize("top", 8)?) {
                 t.row(&[

@@ -453,22 +453,22 @@ mod tests {
         s: &[i32],
         learn: bool,
     ) -> (i32, Vec<i32>, Vec<Vec<u64>>) {
-        let mut w: Vec<Vec<f32>> = w_fp
+        let mut w: Vec<f32> = w_fp
             .iter()
-            .map(|r| r.iter().map(|&u| u as f32 / 8.0).collect())
+            .flat_map(|r| r.iter().map(|&u| u as f32 / 8.0))
             .collect();
         let params = &cfg.params;
         let theta = cfg.theta();
-        let y: Vec<i32> = potentials(&w, s, params)
+        let y: Vec<i32> = potentials(&w, cfg.p, s, params)
             .iter()
             .map(|v| first_crossing(v, theta, params.t_r))
             .collect();
         let (winner, gated) = wta(&y, params.t_r, TieBreak::Low);
         if learn {
-            stdp_update(&mut w, s, &gated, params);
+            stdp_update(&mut w, cfg.p, s, &gated, params);
         }
         let w_back: Vec<Vec<u64>> = w
-            .iter()
+            .chunks_exact(cfg.p)
             .map(|r| r.iter().map(|&f| (f * 8.0).round() as u64).collect())
             .collect();
         (winner, y, w_back)

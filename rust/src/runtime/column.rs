@@ -10,19 +10,33 @@ use crate::config::{ArtifactKind, ArtifactManifest, ColumnConfig};
 use crate::util::Rng;
 
 use super::engine::{lit_f32, vec_f32, vec_i32, Engine, Executable};
+// Same offline alias as in `engine.rs` (see runtime/xla_stub.rs).
+use super::xla_stub as xla;
+
+/// Initial real (unpadded) weights, flat row-major `[q * p]`:
+/// w_max/2 + jitter. This is the shared layout and PRNG stream for both
+/// executors — `sim::CycleSim` consumes it directly (stride `p`) and
+/// [`init_weights`] embeds it into the padded PJRT layout (stride `p_pad`),
+/// so the two paths start from bit-identical weights for the same seed.
+pub fn init_weights_flat(cfg: &ColumnConfig, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let w0 = cfg.params.w_max as f32 / 2.0;
+    let mut w = Vec::with_capacity(cfg.q * cfg.p);
+    for _ in 0..cfg.q * cfg.p {
+        w.push(w0 + (rng.f32() - 0.5));
+    }
+    w
+}
 
 /// Initial padded weights: w_max/2 + jitter on real cells, 0 on padding.
 /// Mirrors `model.init_weights` (values differ — the PRNG is ours — but the
 /// invariants are identical and cross-checked by tests).
 pub fn init_weights(cfg: &ColumnConfig, seed: u64) -> Vec<f32> {
     let (q_pad, p_pad) = (cfg.q_pad(), cfg.p_pad());
-    let mut rng = Rng::new(seed);
-    let w0 = cfg.params.w_max as f32 / 2.0;
+    let flat = init_weights_flat(cfg, seed);
     let mut w = vec![0.0f32; q_pad * p_pad];
     for j in 0..cfg.q {
-        for i in 0..cfg.p {
-            w[j * p_pad + i] = w0 + (rng.f32() - 0.5);
-        }
+        w[j * p_pad..j * p_pad + cfg.p].copy_from_slice(&flat[j * cfg.p..(j + 1) * cfg.p]);
     }
     w
 }

@@ -10,6 +10,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::ArtifactMeta;
+// Offline builds cannot resolve the real `xla` crate; the stub exposes the
+// same API with an always-failing client (see runtime/xla_stub.rs). To use
+// real PJRT, add the `xla` dependency and delete this alias.
+use crate::runtime::xla_stub as xla;
 
 /// Shared PJRT CPU client. Cheap to clone (Arc inside).
 #[derive(Clone)]

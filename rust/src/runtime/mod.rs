@@ -1,9 +1,15 @@
 //! PJRT runtime: loads the HLO-text artifacts produced by the Python AOT
 //! path and executes them on the request path. This module is the only place
 //! in the crate that talks to the `xla` crate; Python never runs at runtime.
+//!
+//! In offline builds the `xla` crate is not resolvable, so [`xla_stub`]
+//! supplies an API-identical stand-in whose client constructor fails with a
+//! clear "PJRT unavailable" error; everything else in the crate (native
+//! simulator, RTL, EDA, CLI) is unaffected.
 
 pub mod column;
 pub mod engine;
+pub mod xla_stub;
 
 pub use column::TnnColumn;
 pub use engine::{Engine, Executable};

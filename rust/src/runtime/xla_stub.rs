@@ -1,0 +1,160 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real request path links the `xla` crate against an `xla_extension`
+//! install; that dependency cannot be resolved in offline builds, so
+//! `runtime::engine` and `runtime::column` alias this module as `xla`
+//! instead. The surface mirrors exactly the subset of the real crate the
+//! runtime uses. Every client-side constructor returns
+//! [`Error`]("PJRT unavailable"), which callers surface cleanly — the CLI
+//! and coordinator fall back to the native simulator, and the PJRT
+//! round-trip tests skip when no artifacts are present.
+//!
+//! Restoring the real engine is a three-line change: add the `xla`
+//! dependency to `Cargo.toml` and drop the two alias imports.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error` (a std error, so `anyhow`'s
+/// `.context(..)` and `?` work unchanged at the call sites).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "PJRT unavailable ({what}): tnngen was built without the `xla` crate; \
+         use the native backend, or re-add the dependency (see runtime/xla_stub.rs)"
+    )))
+}
+
+/// Stand-in for `xla::PjRtClient`. `cpu()` always fails, so no value of
+/// this type can ever exist at runtime; the methods exist only to satisfy
+/// the engine's call sites.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Element types a [`Literal`] can be read back as (mirrors the real
+/// crate's `NativeType` bound on `Literal::to_vec`).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal. Construction and reshape work (they are pure host
+/// operations the engine performs before dispatch); device readback fails
+/// like everything else.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data_len: usize,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data_len: data.len(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data_len {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.data_len
+            )));
+        }
+        Ok(Literal { data_len: self.data_len, dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable_with_clear_error() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT unavailable"));
+        assert!(err.to_string().contains("native backend"));
+    }
+
+    #[test]
+    fn literal_shape_bookkeeping_works_host_side() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims, vec![2, 3]);
+        assert!(lit.reshape(&[4, 4]).is_err());
+    }
+
+    #[test]
+    fn readback_is_unavailable() {
+        let lit = Literal::vec1(&[0.0]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+}

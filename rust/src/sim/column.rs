@@ -1,15 +1,21 @@
 //! Cycle-accurate native column simulation (the [7] direct-implementation
 //! semantics): response potentials swept per time step, WTA, STDP.
+//!
+//! Weights are stored as one flat row-major `Vec<f32>` matrix (`q` rows of
+//! `p` synapses, stride `p`) — the same layout `runtime::column`
+//! initializes, minus padding — so the per-sample path, the batched engine
+//! (`sim::batch`) and the PJRT executor all share one representation.
 
 use crate::config::{ColumnConfig, Response, TieBreak, TnnParams};
 
 use super::encode::encode_window;
 
-/// Membrane potentials V[q][t] for real (unpadded) weights W[q][p] and spike
-/// times s[p]. Padded inputs are not needed natively.
-pub fn potentials(w: &[Vec<f32>], s: &[i32], params: &TnnParams) -> Vec<Vec<f32>> {
+/// Membrane potentials V[q][t] for flat row-major weights `w` (stride `p`)
+/// and spike times `s[p]`. Padded inputs are not needed natively.
+pub fn potentials(w: &[f32], p: usize, s: &[i32], params: &TnnParams) -> Vec<Vec<f32>> {
+    debug_assert_eq!(w.len() % p.max(1), 0);
     let t_r = params.t_r as usize;
-    w.iter()
+    w.chunks_exact(p)
         .map(|row| {
             let mut v = vec![0.0f32; t_r];
             for (i, &wi) in row.iter().enumerate() {
@@ -69,10 +75,16 @@ pub fn wta(y: &[i32], t_r: i32, tie: TieBreak) -> (i32, Vec<i32>) {
     (winner, gated)
 }
 
-/// Expected-value STDP update in place — mirrors `ref.stdp_ref`.
-pub fn stdp_update(w: &mut [Vec<f32>], s: &[i32], gated: &[i32], params: &TnnParams) {
+/// Expected-value STDP update in place over flat row-major weights (stride
+/// `p`, one row per entry of `gated`) — mirrors `ref.stdp_ref`.
+///
+/// A gated time of -1 (used by the supervised wrong-fire punishment path in
+/// [`CycleSim::step_supervised`]) sits before every input spike, so every
+/// synapse of that neuron backs off.
+pub fn stdp_update(w: &mut [f32], p: usize, s: &[i32], gated: &[i32], params: &TnnParams) {
+    debug_assert_eq!(w.len(), p * gated.len());
     let (t, t_r, w_max) = (params.t, params.t_r, params.w_max as f32);
-    for (j, row) in w.iter_mut().enumerate() {
+    for (j, row) in w.chunks_exact_mut(p).enumerate() {
         let yj = gated[j];
         let has_out = yj < t_r;
         for (i, wi) in row.iter_mut().enumerate() {
@@ -105,29 +117,49 @@ pub struct StepOutput {
 #[derive(Clone)]
 pub struct CycleSim {
     pub config: ColumnConfig,
-    /// Real (unpadded) weights [q][p].
-    pub weights: Vec<Vec<f32>>,
+    /// Real (unpadded) weights, flat row-major `[q * p]`, stride `p`.
+    pub weights: Vec<f32>,
 }
 
 impl CycleSim {
-    /// Initialize with the same scheme as `runtime::column::init_weights`
-    /// (w_max/2 + jitter from the same seeded PRNG).
+    /// Initialize with the same scheme (and PRNG stream) as
+    /// `runtime::column::init_weights` — the shared flat layout means no
+    /// unpad/repad dance.
     pub fn new(config: ColumnConfig, seed: u64) -> Self {
-        let padded = crate::runtime::column::init_weights(&config, seed);
-        let p_pad = config.p_pad();
-        let weights = (0..config.q)
-            .map(|j| padded[j * p_pad..j * p_pad + config.p].to_vec())
-            .collect();
+        let weights = crate::runtime::column::init_weights_flat(&config, seed);
         CycleSim { config, weights }
     }
 
-    /// Construct directly from a weight matrix (used by RTL cross-checks).
-    pub fn from_weights(config: ColumnConfig, weights: Vec<Vec<f32>>) -> Self {
-        assert_eq!(weights.len(), config.q);
-        for row in &weights {
+    /// Construct from a row-per-neuron weight matrix (used by RTL
+    /// cross-checks).
+    pub fn from_weights(config: ColumnConfig, rows: Vec<Vec<f32>>) -> Self {
+        assert_eq!(rows.len(), config.q);
+        for row in &rows {
             assert_eq!(row.len(), config.p);
         }
+        let weights = rows.concat();
         CycleSim { config, weights }
+    }
+
+    /// Construct directly from flat row-major weights `[q * p]`.
+    pub fn from_flat(config: ColumnConfig, weights: Vec<f32>) -> Self {
+        assert_eq!(weights.len(), config.q * config.p);
+        CycleSim { config, weights }
+    }
+
+    /// Weight row for neuron `j`.
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.weights[j * self.config.p..(j + 1) * self.config.p]
+    }
+
+    /// Single weight accessor.
+    pub fn weight(&self, j: usize, i: usize) -> f32 {
+        self.weights[j * self.config.p + i]
+    }
+
+    /// Copy of the weights as one Vec per neuron (inspection/export).
+    pub fn weight_rows(&self) -> Vec<Vec<f32>> {
+        self.weights.chunks_exact(self.config.p).map(|r| r.to_vec()).collect()
     }
 
     pub fn encode(&self, x: &[f32]) -> Vec<i32> {
@@ -151,9 +183,9 @@ impl CycleSim {
         let theta = self.config.theta();
         match params.response {
             Response::Rnl | Response::Snl => {
-                super::event::event_driven(&self.weights, s, theta, params)
+                super::event::event_driven(&self.weights, self.config.p, s, theta, params)
             }
-            Response::Lif => potentials(&self.weights, s, params)
+            Response::Lif => potentials(&self.weights, self.config.p, s, params)
                 .iter()
                 .map(|v| first_crossing(v, theta, params.t_r))
                 .collect(),
@@ -165,27 +197,37 @@ impl CycleSim {
     pub fn response_cycle_accurate(&self, s: &[i32]) -> Vec<i32> {
         let params = &self.config.params;
         let theta = self.config.theta();
-        potentials(&self.weights, s, params)
+        potentials(&self.weights, self.config.p, s, params)
             .iter()
             .map(|v| first_crossing(v, theta, params.t_r))
             .collect()
     }
 
+    /// Inference for one already-encoded window.
+    pub fn infer_encoded(&self, s: &[i32]) -> StepOutput {
+        let y = self.response(s);
+        let (winner, _) = wta(&y, self.config.params.t_r, self.config.params.tie);
+        StepOutput { winner, y }
+    }
+
     /// Inference for one raw window.
     pub fn infer(&self, x: &[f32]) -> StepOutput {
         let s = self.encode(x);
-        let y = self.response(&s);
-        let (winner, _) = wta(&y, self.config.params.t_r, self.config.params.tie);
+        self.infer_encoded(&s)
+    }
+
+    /// One online STDP learning step on an already-encoded window.
+    pub fn step_encoded(&mut self, s: &[i32]) -> StepOutput {
+        let y = self.response(s);
+        let (winner, gated) = wta(&y, self.config.params.t_r, self.config.params.tie);
+        stdp_update(&mut self.weights, self.config.p, s, &gated, &self.config.params);
         StepOutput { winner, y }
     }
 
     /// One online STDP learning step.
     pub fn step(&mut self, x: &[f32]) -> StepOutput {
         let s = self.encode(x);
-        let y = self.response(&s);
-        let (winner, gated) = wta(&y, self.config.params.t_r, self.config.params.tie);
-        stdp_update(&mut self.weights, &s, &gated, &self.config.params);
-        StepOutput { winner, y }
+        self.step_encoded(&s)
     }
 
     /// One SUPERVISED STDP step (paper §II-A: "STDP learning in both
@@ -193,7 +235,7 @@ impl CycleSim {
     /// * the labeled neuron is treated as the firing output (its own spike
     ///   time if it fired, else the last in-window time) -> capture;
     /// * a *wrongly firing* neuron is punished: its gated time is set
-    ///   before every input spike, so all its in-spiking synapses back off;
+    ///   before every input spike (-1), so all its synapses back off;
     /// * silent non-labeled neurons are left untouched.
     pub fn step_supervised(&mut self, x: &[f32], label: usize) -> StepOutput {
         assert!(label < self.config.q, "label out of range");
@@ -205,10 +247,10 @@ impl CycleSim {
         gated[label] = y[label].min(params.t_r - 1);
         for (j, g) in gated.iter_mut().enumerate() {
             if j != label && y[j] < params.t_r {
-                *g = -1; // fired on the wrong class: backoff all in-spikes
+                *g = -1; // fired on the wrong class: backoff all synapses
             }
         }
-        stdp_update(&mut self.weights, &s, &gated, &params);
+        stdp_update(&mut self.weights, self.config.p, &s, &gated, &params);
         StepOutput { winner, y }
     }
 
@@ -236,9 +278,9 @@ mod tests {
     fn snl_potential_is_running_weight_sum() {
         let mut params = TnnParams::default();
         params.response = Response::Snl;
-        let w = vec![vec![1.0, 2.0, 4.0]];
+        let w = vec![1.0, 2.0, 4.0];
         let s = vec![0, 2, 5];
-        let v = potentials(&w, &s, &params);
+        let v = potentials(&w, 3, &s, &params);
         assert_eq!(v[0][0], 1.0);
         assert_eq!(v[0][1], 1.0);
         assert_eq!(v[0][2], 3.0);
@@ -249,9 +291,9 @@ mod tests {
     #[test]
     fn rnl_potential_ramps() {
         let params = TnnParams::default();
-        let w = vec![vec![2.0]];
+        let w = vec![2.0];
         let s = vec![3];
-        let v = potentials(&w, &s, &params);
+        let v = potentials(&w, 1, &s, &params);
         assert_eq!(v[0][3], 0.0);
         assert_eq!(v[0][4], 2.0);
         assert_eq!(v[0][7], 8.0);
@@ -262,12 +304,24 @@ mod tests {
         let mut params = TnnParams::default();
         params.response = Response::Lif;
         params.lif_decay = 0.5;
-        let w = vec![vec![4.0]];
+        let w = vec![4.0];
         let s = vec![0];
-        let v = potentials(&w, &s, &params);
+        let v = potentials(&w, 1, &s, &params);
         assert_eq!(v[0][0], 4.0);
         assert_eq!(v[0][1], 2.0);
         assert_eq!(v[0][2], 1.0);
+    }
+
+    #[test]
+    fn potentials_multi_row_strides_correctly() {
+        let mut params = TnnParams::default();
+        params.response = Response::Snl;
+        // Two neurons: row 0 = [1, 0], row 1 = [0, 2]; both spikes at t=0.
+        let w = vec![1.0, 0.0, 0.0, 2.0];
+        let v = potentials(&w, 2, &[0, 0], &params);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0][0], 1.0);
+        assert_eq!(v[1][0], 2.0);
     }
 
     #[test]
@@ -288,6 +342,20 @@ mod tests {
     }
 
     #[test]
+    fn wta_tie_high_picks_last_tied_index() {
+        // Minimum 3 appears at indices 0, 2 and 3: High takes the LAST one.
+        let y = vec![3, 5, 3, 3];
+        let (w_hi, g) = wta(&y, 32, TieBreak::High);
+        assert_eq!(w_hi, 3);
+        assert_eq!(g, vec![32, 32, 32, 3]);
+        // All-equal vector: High -> last index, Low -> first.
+        let (w_hi2, _) = wta(&[4, 4], 32, TieBreak::High);
+        assert_eq!(w_hi2, 1);
+        let (w_lo2, _) = wta(&[4, 4], 32, TieBreak::Low);
+        assert_eq!(w_lo2, 0);
+    }
+
+    #[test]
     fn wta_no_fire() {
         let (w, g) = wta(&[32, 32], 32, TieBreak::Low);
         assert_eq!(w, -1);
@@ -301,24 +369,44 @@ mod tests {
         params.mu_backoff = 0.5;
         params.mu_search = 0.25;
         // One neuron with output spike at 4; synapses: early in, late in, no in.
-        let mut w = vec![vec![3.0, 3.0, 3.0]];
-        stdp_update(&mut w, &[2, 6, 30], &[4], &params);
-        assert_eq!(w[0], vec![4.0, 2.5, 2.5]); // capture, backoff, backoff(no-in)
+        let mut w = vec![3.0, 3.0, 3.0];
+        stdp_update(&mut w, 3, &[2, 6, 30], &[4], &params);
+        assert_eq!(w, vec![4.0, 2.5, 2.5]); // capture, backoff, backoff(no-in)
         // No output spike: in-spike synapses search, others unchanged.
-        let mut w2 = vec![vec![3.0, 3.0]];
-        stdp_update(&mut w2, &[2, 30], &[32], &params);
-        assert_eq!(w2[0], vec![3.25, 3.0]);
+        let mut w2 = vec![3.0, 3.0];
+        stdp_update(&mut w2, 2, &[2, 30], &[32], &params);
+        assert_eq!(w2, vec![3.25, 3.0]);
+    }
+
+    #[test]
+    fn stdp_gated_minus_one_backs_off_every_synapse() {
+        // The supervised wrong-fire punishment path gates the neuron at -1:
+        // that time precedes every input spike, so in-spiking synapses hit
+        // the (has_in, has_out, si > yj) backoff branch and silent synapses
+        // hit the (!has_in, has_out) branch — everything backs off.
+        let mut params = TnnParams::default();
+        params.mu_capture = 1.0;
+        params.mu_backoff = 0.5;
+        params.mu_search = 0.25;
+        let mut w = vec![3.0, 3.0, 3.0];
+        // s: early in-spike, late in-spike, no spike (>= t = 8).
+        stdp_update(&mut w, 3, &[0, 7, 30], &[-1], &params);
+        assert_eq!(w, vec![2.5, 2.5, 2.5]);
+        // The punishment clamps at zero like any other backoff.
+        let mut w_low = vec![0.2];
+        stdp_update(&mut w_low, 1, &[0], &[-1], &params);
+        assert_eq!(w_low, vec![0.0]);
     }
 
     #[test]
     fn stdp_clamps() {
         let params = TnnParams::default();
-        let mut w = vec![vec![6.8]];
-        stdp_update(&mut w, &[0], &[4], &params); // capture +1.0 -> clamp 7
-        assert_eq!(w[0][0], 7.0);
-        let mut w = vec![vec![0.3]];
-        stdp_update(&mut w, &[6], &[4], &params); // backoff -1.0 -> clamp 0
-        assert_eq!(w[0][0], 0.0);
+        let mut w = vec![6.8];
+        stdp_update(&mut w, 1, &[0], &[4], &params); // capture +1.0 -> clamp 7
+        assert_eq!(w[0], 7.0);
+        let mut w = vec![0.3];
+        stdp_update(&mut w, 1, &[6], &[4], &params); // backoff -1.0 -> clamp 0
+        assert_eq!(w[0], 0.0);
     }
 
     #[test]
@@ -328,10 +416,8 @@ mod tests {
         for _ in 0..50 {
             sim.step(&x);
         }
-        for row in &sim.weights {
-            for &w in row {
-                assert!((0.0..=7.0).contains(&w));
-            }
+        for &w in &sim.weights {
+            assert!((0.0..=7.0).contains(&w));
         }
     }
 
@@ -344,5 +430,45 @@ mod tests {
         let o2 = sim.infer(&x);
         assert_eq!(o1, o2);
         assert_eq!(sim.weights, before);
+    }
+
+    #[test]
+    fn flat_storage_matches_padded_runtime_init() {
+        // The shared init contract: CycleSim's flat weights are exactly the
+        // real cells of the padded runtime layout, row by row.
+        let cfg = tiny();
+        let sim = CycleSim::new(cfg.clone(), 77);
+        let padded = crate::runtime::column::init_weights(&cfg, 77);
+        let p_pad = cfg.p_pad();
+        for j in 0..cfg.q {
+            assert_eq!(sim.row(j), &padded[j * p_pad..j * p_pad + cfg.p]);
+        }
+    }
+
+    #[test]
+    fn row_accessors_agree() {
+        let sim = CycleSim::new(tiny(), 9);
+        let rows = sim.weight_rows();
+        for j in 0..sim.config.q {
+            assert_eq!(rows[j].as_slice(), sim.row(j));
+            for i in 0..sim.config.p {
+                assert_eq!(sim.weight(j, i), rows[j][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn supervised_punishes_wrong_firing_neuron() {
+        let cfg = ColumnConfig::new("Sup", "synthetic", 8, 2);
+        // Neuron 0 fires easily (strong weights); neuron 1 is the label.
+        let rows = vec![vec![7.0; 8], vec![3.0; 8]];
+        let mut sim = CycleSim::from_weights(cfg, rows);
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let before0 = sim.row(0).to_vec();
+        let out = sim.step_supervised(&x, 1);
+        assert_eq!(out.winner, 0, "setup: neuron 0 should fire first");
+        for (i, &w) in sim.row(0).iter().enumerate() {
+            assert!(w < before0[i], "wrong-firing synapse {i} must back off");
+        }
     }
 }

@@ -12,29 +12,69 @@
 //! * LIF — potential decays between events; within a window the potential is
 //!   maximal at the window start, so it crosses there or never.
 //!
+//! The input-spike event index ([`EventScratch`]) is shared by every neuron
+//! of a column and reusable across samples, so the batched engine
+//! (`sim::batch`) builds it once per sample per worker instead of once per
+//! neuron — same arithmetic, fewer allocations.
+//!
 //! Must agree exactly with the cycle-accurate engine (`column::potentials` +
 //! `first_crossing`); `rust/tests/properties.rs` property-tests this.
 
 use crate::config::{Response, TnnParams};
 
-/// Output spike time for ONE neuron with weights `w[p]` and spike times
-/// `s[p]`, by event walking. Returns first integer t with V(t) >= theta,
-/// else T_R.
-pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams) -> i32 {
-    let t_r = params.t_r;
-    // Gather in-window events sorted by time (spike times are small ints, so
-    // counting-sort over [0, T_R) keeps this O(p + T)).
-    let mut by_time: Vec<Vec<usize>> = vec![Vec::new(); t_r as usize];
-    for (i, &si) in s.iter().enumerate() {
-        if (0..t_r).contains(&si) {
-            by_time[si as usize].push(i);
+/// Input-spike event index for one encoded sample: spikes bucketed by time
+/// (counting sort over [0, T_R)) plus the sorted list of non-empty times.
+/// Reusable across samples via [`EventScratch::load`].
+pub struct EventScratch {
+    /// Synapse indices spiking at each time step.
+    by_time: Vec<Vec<usize>>,
+    /// Times with at least one spike, ascending.
+    event_times: Vec<i32>,
+}
+
+impl EventScratch {
+    pub fn new(t_r: i32) -> Self {
+        EventScratch {
+            by_time: vec![Vec::new(); t_r as usize],
+            event_times: Vec::new(),
         }
+    }
+
+    /// Rebuild the index for spike times `s` (clears the previous sample).
+    pub fn load(&mut self, s: &[i32]) {
+        for bucket in &mut self.by_time {
+            bucket.clear();
+        }
+        self.event_times.clear();
+        let t_r = self.by_time.len() as i32;
+        for (i, &si) in s.iter().enumerate() {
+            if (0..t_r).contains(&si) {
+                self.by_time[si as usize].push(i);
+            }
+        }
+        for t in 0..t_r {
+            if !self.by_time[t as usize].is_empty() {
+                self.event_times.push(t);
+            }
+        }
+    }
+}
+
+/// Output spike time for ONE neuron with weights `w[p]` against a loaded
+/// event index. Returns first integer t with V(t) >= theta, else T_R.
+fn neuron_output_indexed(w: &[f32], scratch: &EventScratch, theta: f32, params: &TnnParams) -> i32 {
+    let t_r = params.t_r;
+    let by_time = &scratch.by_time;
+    if theta <= 0.0 {
+        // Degenerate threshold: V(0) = 0 already crosses, exactly as the
+        // cycle-accurate sweep reports.
+        return 0;
     }
 
     match params.response {
         Response::Snl => {
             let mut v = 0.0f32;
-            for t in 0..t_r {
+            for &t in &scratch.event_times {
                 for &i in &by_time[t as usize] {
                     v += w[i];
                 }
@@ -50,8 +90,7 @@ pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams)
             let mut arrived_w = 0.0f64; // slope
             let mut v = 0.0f64;
             let mut last_event = 0i32;
-            let event_times: Vec<i32> = (0..t_r).filter(|&t| !by_time[t as usize].is_empty()).collect();
-            for (k, &te) in event_times.iter().enumerate() {
+            for &te in &scratch.event_times {
                 // Window [last_event, te): slope `arrived_w`, start value `v`.
                 if arrived_w > 0.0 && v < theta as f64 {
                     let need = (theta as f64 - v) / arrived_w;
@@ -69,7 +108,6 @@ pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams)
                     arrived_w += w[i] as f64;
                 }
                 last_event = te;
-                let _ = k;
             }
             // Tail window [last_event, T_R).
             if v >= theta as f64 {
@@ -90,10 +128,7 @@ pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams)
             // its start.
             let mut v = 0.0f64;
             let mut last = 0i32;
-            for t in 0..t_r {
-                if by_time[t as usize].is_empty() {
-                    continue;
-                }
+            for &t in &scratch.event_times {
                 v *= (params.lif_decay as f64).powi(t - last);
                 for &i in &by_time[t as usize] {
                     v += w[i] as f64;
@@ -108,9 +143,36 @@ pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams)
     }
 }
 
-/// Event-driven response for a whole column.
-pub fn event_driven(w: &[Vec<f32>], s: &[i32], theta: f32, params: &TnnParams) -> Vec<i32> {
-    w.iter().map(|row| neuron_output_event(row, s, theta, params)).collect()
+/// Output spike time for ONE neuron with weights `w[p]` and spike times
+/// `s[p]`, by event walking. Returns first integer t with V(t) >= theta,
+/// else T_R.
+pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams) -> i32 {
+    let mut scratch = EventScratch::new(params.t_r);
+    scratch.load(s);
+    neuron_output_indexed(w, &scratch, theta, params)
+}
+
+/// Event-driven response for a whole column (flat row-major weights, stride
+/// `p`) against an already-loaded event index. The batched engine reuses
+/// one scratch per worker.
+pub fn event_driven_indexed(
+    w: &[f32],
+    p: usize,
+    scratch: &EventScratch,
+    theta: f32,
+    params: &TnnParams,
+) -> Vec<i32> {
+    w.chunks_exact(p)
+        .map(|row| neuron_output_indexed(row, scratch, theta, params))
+        .collect()
+}
+
+/// Event-driven response for a whole column (flat row-major weights, stride
+/// `p`). The event index is built once and shared by all neurons.
+pub fn event_driven(w: &[f32], p: usize, s: &[i32], theta: f32, params: &TnnParams) -> Vec<i32> {
+    let mut scratch = EventScratch::new(params.t_r);
+    scratch.load(s);
+    event_driven_indexed(w, p, &scratch, theta, params)
 }
 
 #[cfg(test)]
@@ -120,22 +182,20 @@ mod tests {
     use crate::sim::column::{first_crossing, potentials};
     use crate::util::Rng;
 
-    fn agree(params: &TnnParams, w: &[Vec<f32>], s: &[i32], theta: f32) {
-        let cyc: Vec<i32> = potentials(w, s, params)
+    fn agree(params: &TnnParams, w: &[f32], p: usize, s: &[i32], theta: f32) {
+        let cyc: Vec<i32> = potentials(w, p, s, params)
             .iter()
             .map(|v| first_crossing(v, theta, params.t_r))
             .collect();
-        let evt = event_driven(w, s, theta, params);
+        let evt = event_driven(w, p, s, theta, params);
         assert_eq!(cyc, evt, "response={:?} theta={theta} s={s:?}", params.response);
     }
 
     /// Dyadic (1/8-step) weights and 1/4-step thresholds keep all arithmetic
     /// exact in both f32 and f64, so the engines must agree bit-for-bit
     /// regardless of summation order.
-    fn dyadic_w(rng: &mut Rng, q: usize, p: usize) -> Vec<Vec<f32>> {
-        (0..q)
-            .map(|_| (0..p).map(|_| rng.below(57) as f32 * 0.125).collect())
-            .collect()
+    fn dyadic_w(rng: &mut Rng, q: usize, p: usize) -> Vec<f32> {
+        (0..q * p).map(|_| rng.below(57) as f32 * 0.125).collect()
     }
 
     #[test]
@@ -147,7 +207,7 @@ mod tests {
             let w = dyadic_w(&mut rng, 2, p);
             let s: Vec<i32> = (0..p).map(|_| rng.range(0, 12) as i32).collect();
             let theta = rng.below(240) as f32 * 0.25 + 1.0;
-            agree(&params, &w, &s, theta);
+            agree(&params, &w, p, &s, theta);
         }
     }
 
@@ -161,7 +221,7 @@ mod tests {
             let w = dyadic_w(&mut rng, 3, p);
             let s: Vec<i32> = (0..p).map(|_| rng.range(0, 33) as i32).collect();
             let theta = rng.below(80) as f32 * 0.25 + 0.5;
-            agree(&params, &w, &s, theta);
+            agree(&params, &w, p, &s, theta);
         }
     }
 
@@ -180,14 +240,14 @@ mod tests {
             let w = dyadic_w(&mut rng, 3, p);
             let s: Vec<i32> = (0..p).map(|_| rng.range(0, 33) as i32).collect();
             let theta = rng.below(80) as f32 * 0.25 + 0.5;
-            let near_boundary = potentials(&w, &s, &params)
+            let near_boundary = potentials(&w, p, &s, &params)
                 .iter()
                 .flatten()
                 .any(|&v| (v - theta).abs() < 1e-3);
             if near_boundary {
                 continue;
             }
-            agree(&params, &w, &s, theta);
+            agree(&params, &w, p, &s, theta);
             checked += 1;
         }
         assert!(checked > 200, "too many skipped cases: {checked}");
@@ -198,5 +258,22 @@ mod tests {
         let params = TnnParams::default();
         let y = neuron_output_event(&[3.0, 3.0], &[32, 32], 1.0, &params);
         assert_eq!(y, params.t_r);
+    }
+
+    #[test]
+    fn scratch_reuse_across_samples_matches_fresh_index() {
+        let params = TnnParams::default();
+        let mut rng = Rng::new(23);
+        let p = 12;
+        let w = dyadic_w(&mut rng, 2, p);
+        let mut scratch = EventScratch::new(params.t_r);
+        for _ in 0..50 {
+            let s: Vec<i32> = (0..p).map(|_| rng.range(0, 33) as i32).collect();
+            let theta = rng.below(120) as f32 * 0.25 + 0.5;
+            scratch.load(&s);
+            let reused = event_driven_indexed(&w, p, &scratch, theta, &params);
+            let fresh = event_driven(&w, p, &s, theta, &params);
+            assert_eq!(reused, fresh);
+        }
     }
 }

@@ -5,19 +5,30 @@
 //! artifacts by the integration tests. Two temporal engines are provided,
 //! mirroring the paper's §II-A description of the TNNGen simulator:
 //!
-//! * [`column::cycle`] — cycle-accurate: sweeps every time step t in
-//!   [0, T_R), the direct-implementation semantics of [7].
+//! * [`column::potentials`] + cycle sweep — cycle-accurate: sweeps every
+//!   time step t in [0, T_R), the direct-implementation semantics of [7].
 //! * [`event::event_driven`] — event-driven: jumps between input-spike
 //!   events and solves the (piecewise-linear / piecewise-constant) potential
 //!   crossing in closed form, skipping spike-free windows.
 //!
 //! Both engines must agree exactly; `rust/tests/properties.rs` checks this.
+//!
+//! On top of the per-sample [`column::CycleSim`], [`batch::BatchSim`] runs
+//! whole datasets at once: read-only phases (encode, response, WTA) fan out
+//! across samples on the coordinator worker pool, training replays cached
+//! spike trains. Batched results are bit-exact with the per-sample path for
+//! identical seeds, for any worker count.
+//!
+//! Weights are flat row-major `Vec<f32>` matrices (stride p), the same
+//! layout `runtime::column::init_weights_flat` produces.
 
+pub mod batch;
 pub mod column;
 pub mod encode;
 pub mod event;
 pub mod multilayer;
 
+pub use batch::BatchSim;
 pub use column::{first_crossing, potentials, stdp_update, wta, CycleSim, StepOutput};
 pub use encode::encode_window;
 pub use multilayer::MultiLayerSim;

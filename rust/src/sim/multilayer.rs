@@ -60,6 +60,20 @@ impl MultiLayerSim {
         }
         out
     }
+
+    /// Batched feed-forward inference over a whole dataset: samples are
+    /// independent, so the stack fans out across the coordinator worker
+    /// pool. Order-preserving and bit-exact with a per-sample [`Self::infer`]
+    /// loop for any worker count.
+    pub fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<StepOutput> {
+        use crate::coordinator::jobs::{chunk_ranges, default_workers, parallel_map_workers};
+        let workers = default_workers();
+        let ranges = chunk_ranges(xs.len(), workers);
+        let chunks: Vec<Vec<StepOutput>> = parallel_map_workers(ranges, workers, |(lo, hi)| {
+            (lo..hi).map(|i| self.infer(&xs[i])).collect()
+        });
+        chunks.into_iter().flatten().collect()
+    }
 }
 
 #[cfg(test)]
@@ -92,7 +106,7 @@ mod tests {
     #[test]
     fn step_updates_all_layers() {
         let mut ml = stack();
-        let before: Vec<Vec<Vec<f32>>> = ml.layers.iter().map(|l| l.weights.clone()).collect();
+        let before: Vec<Vec<f32>> = ml.layers.iter().map(|l| l.weights.clone()).collect();
         let x: Vec<f32> = (0..16).map(|i| ((i * i) as f32 * 0.31).cos()).collect();
         for _ in 0..10 {
             ml.step(&x);
@@ -100,6 +114,17 @@ mod tests {
         for (k, layer) in ml.layers.iter().enumerate() {
             assert_ne!(layer.weights, before[k], "layer {k} did not learn");
         }
+    }
+
+    #[test]
+    fn infer_batch_matches_per_sample_loop() {
+        let ml = stack();
+        let mut rng = crate::util::Rng::new(13);
+        let xs: Vec<Vec<f32>> = (0..17)
+            .map(|_| (0..16).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+        let per_sample: Vec<StepOutput> = xs.iter().map(|x| ml.infer(x)).collect();
+        assert_eq!(ml.infer_batch(&xs), per_sample);
     }
 
     #[test]

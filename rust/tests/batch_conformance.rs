@@ -1,0 +1,139 @@
+//! Conformance suite for the batched parallel simulation engine:
+//!
+//! * `BatchSim` must be bit-exact with the per-sample `CycleSim` path
+//!   (winners, spike times, final weights) for every response function;
+//! * the full native clustering pipeline must produce identical reports on
+//!   the batched and sequential executors;
+//! * `coordinator::explorer` sweep reports must be BYTE-identical
+//!   regardless of worker count — this pins both `parallel_map`'s
+//!   order-preservation and the per-item (not per-thread) RNG discipline.
+
+use tnngen::cluster::pipeline::TnnClustering;
+use tnngen::config::presets::test_configs;
+use tnngen::config::{ColumnConfig, Response};
+use tnngen::coordinator::explorer::{explore_with_workers, sweep_csv, SweepSpace};
+use tnngen::coordinator::jobs::{parallel_map_rng, parallel_map_workers};
+use tnngen::data::generate;
+use tnngen::sim::{BatchSim, CycleSim, MultiLayerSim};
+use tnngen::util::Rng;
+
+fn windows(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// BatchSim vs CycleSim on the shipped presets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch_engine_bit_exact_on_test_presets() {
+    for cfg in test_configs() {
+        let xs = windows(cfg.p, 48, 11);
+        let mut sim = CycleSim::new(cfg.clone(), 21);
+        let mut batch = BatchSim::new(cfg.clone(), 21);
+        for _ in 0..2 {
+            sim.train_epoch(&xs);
+        }
+        batch.train_epochs(&xs, 2);
+        assert_eq!(sim.weights, batch.sim.weights, "{}", cfg.tag());
+        let per_sample: Vec<_> = xs.iter().map(|x| sim.infer(x)).collect();
+        assert_eq!(batch.infer_batch(&xs), per_sample, "{}", cfg.tag());
+    }
+}
+
+#[test]
+fn batch_engine_bit_exact_for_each_response_function() {
+    for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+        let mut cfg = ColumnConfig::new("Conf", "synthetic", 20, 3);
+        cfg.params.response = resp;
+        let xs = windows(20, 33, 2);
+        let sim = CycleSim::new(cfg.clone(), 9);
+        let batch = BatchSim::from_sim(sim.clone()).with_workers(5);
+        assert_eq!(batch.infer_winners(&xs), sim.infer_all(&xs), "{resp:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full pipeline: batched executor == sequential executor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_pipeline_reports_identical_batched_vs_sequential() {
+    for (name, p, q) in [("ECG200", 16, 2), ("Beef", 48, 4)] {
+        let cfg = ColumnConfig::new(name, "synthetic", p, q);
+        let ds = generate(name, p, q, 40, 13);
+        let pipe = TnnClustering { epochs: 3, seed: 17, n_per_split: 40 };
+        let batched = pipe.run_native(&cfg, &ds);
+        let sequential = pipe.run_native_sequential(&cfg, &ds);
+        assert_eq!(
+            format!("{batched:?}"),
+            format!("{sequential:?}"),
+            "{name}: batched and sequential reports diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explorer sweeps are worker-count invariant (byte-identical reports)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn explorer_sweep_reports_byte_identical_for_any_worker_count() {
+    let base = ColumnConfig::new("Sweep", "synthetic", 16, 2);
+    let ds = generate("ECG200", 16, 2, 30, 5);
+    let space = SweepSpace {
+        theta_frac: vec![0.15, 0.2, 0.3],
+        sparse_cutoff: vec![0.5, 0.7],
+        ..Default::default()
+    };
+    let pipe = TnnClustering { epochs: 2, seed: 3, n_per_split: 30 };
+    let reference = sweep_csv(&explore_with_workers(&base, &ds, &space, &pipe, 1));
+    assert!(reference.lines().count() > 6, "sweep ran");
+    for workers in [2usize, 4, 16] {
+        let got = sweep_csv(&explore_with_workers(&base, &ds, &space, &pipe, workers));
+        assert_eq!(got, reference, "workers={workers}: sweep report changed");
+    }
+}
+
+#[test]
+fn parallel_map_rng_streams_do_not_depend_on_worker_count() {
+    // The determinism primitive behind randomized parallel phases: child
+    // streams are split from the master in input order, not thread order.
+    let job = |i: u64, rng: &mut Rng| (i, rng.next_u64(), rng.below(1000));
+    let serial = parallel_map_rng((0..64).collect(), 7, 1, job);
+    for workers in [2usize, 8, 32] {
+        assert_eq!(parallel_map_rng((0..64).collect(), 7, workers, job), serial);
+    }
+}
+
+#[test]
+fn parallel_map_preserves_order_under_uneven_load() {
+    // Items deliberately sized so late items finish first on a pool.
+    let out = parallel_map_workers((0..50u64).rev().collect::<Vec<_>>(), 8, |i| {
+        let spin = i * 3_000;
+        (0..spin).fold(i, |a, b| a.wrapping_add(b))
+    });
+    let expect: Vec<u64> = (0..50u64)
+        .rev()
+        .map(|i| {
+            let spin = i * 3_000;
+            (0..spin).fold(i, |a, b| a.wrapping_add(b))
+        })
+        .collect();
+    assert_eq!(out, expect);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-layer batched inference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multilayer_infer_batch_matches_per_sample() {
+    let l1 = ColumnConfig::new("L1", "synthetic", 16, 8);
+    let l2 = ColumnConfig::new("L2", "synthetic", 8, 2);
+    let ml = MultiLayerSim::new(&[l1, l2], 7).unwrap();
+    let xs = windows(16, 29, 3);
+    let per_sample: Vec<_> = xs.iter().map(|x| ml.infer(x)).collect();
+    assert_eq!(ml.infer_batch(&xs), per_sample);
+}

@@ -63,7 +63,7 @@ fn gate_level_rtl_reproduces_trained_column_inference() {
     }
     // Quantize trained weights to hardware fixed point.
     let w_fp: Vec<Vec<u64>> = sim
-        .weights
+        .weight_rows()
         .iter()
         .map(|row| row.iter().map(|&w| (w * 8.0).round() as u64).collect())
         .collect();
@@ -113,7 +113,7 @@ fn gate_level_rtl_learns_like_functional_sim() {
         let got_w = rtl.read_weights(&gsim);
         for (j, row) in got_w.iter().enumerate() {
             for (i, &u) in row.iter().enumerate() {
-                let f = (fsim.weights[j][i] * 8.0).round() as u64;
+                let f = (fsim.weight(j, i) * 8.0).round() as u64;
                 assert_eq!(u, f, "step {step} w[{j}][{i}]");
             }
         }

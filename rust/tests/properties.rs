@@ -5,13 +5,14 @@
 
 use tnngen::cluster::metrics::{adjusted_rand_index, nmi, purity, rand_index};
 use tnngen::cluster::kmeans::kmeans;
-use tnngen::config::{toml, TnnParams};
+use tnngen::config::{toml, Response, TnnParams};
 use tnngen::eda::synthesis::{optimize, SynthStats};
 use tnngen::rtl::netlist::{Gate, GateKind, Netlist};
 use tnngen::rtl::GateSim;
 use tnngen::sim::column::{first_crossing, potentials, stdp_update, wta};
 use tnngen::sim::encode_window;
 use tnngen::sim::event::event_driven;
+use tnngen::sim::{BatchSim, CycleSim};
 use tnngen::util::linalg::dist2;
 use tnngen::util::prop::{check, Gen};
 
@@ -175,17 +176,102 @@ fn prop_event_driven_matches_cycle_accurate() {
         let params = TnnParams::default();
         let p = g.size(1, 24);
         let q = g.size(1, 4);
-        let w: Vec<Vec<f32>> = (0..q)
-            .map(|_| (0..p).map(|_| g.rng.below(57) as f32 * 0.125).collect())
-            .collect();
+        let w: Vec<f32> = (0..q * p).map(|_| g.rng.below(57) as f32 * 0.125).collect();
         let s: Vec<i32> = (0..p).map(|_| g.rng.range(0, 33) as i32).collect();
         let theta = g.rng.below(400) as f32 * 0.25 + 1.0;
-        let cyc: Vec<i32> = potentials(&w, &s, &params)
+        let cyc: Vec<i32> = potentials(&w, p, &s, &params)
             .iter()
             .map(|v| first_crossing(v, theta, params.t_r))
             .collect();
-        let evt = event_driven(&w, &s, theta, &params);
+        let evt = event_driven(&w, p, &s, theta, &params);
         assert_eq!(cyc, evt);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Batched engine is bit-exact with the per-sample path
+// ---------------------------------------------------------------------------
+
+/// Random column config exercising all three response functions and random
+/// p/q/theta/cutoff.
+fn random_config(g: &mut Gen) -> tnngen::config::ColumnConfig {
+    let responses = [Response::Snl, Response::Rnl, Response::Lif];
+    let p = g.size(2, 24);
+    let q = g.size(1, 5);
+    let mut cfg = tnngen::config::ColumnConfig::new("Prop", "synthetic", p, q);
+    cfg.params.response = *g.rng.choose(&responses);
+    cfg.params.theta_frac = g.rng.f32() * 0.5 + 0.05;
+    cfg.params.sparse_cutoff = g.rng.f32() * 0.8;
+    cfg
+}
+
+fn random_windows(g: &mut Gen, p: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..p).map(|_| g.rng.f32() * 2.0 - 1.0).collect())
+        .collect()
+}
+
+#[test]
+fn prop_batchsim_inference_bit_exact_with_cyclesim() {
+    check("BatchSim infer == CycleSim infer", 40, |g: &mut Gen| {
+        let cfg = random_config(g);
+        let n = g.size(1, 25);
+        let xs = random_windows(g, cfg.p, n);
+        let seed = g.rng.next_u64();
+        let workers = g.size(1, 6);
+        let sim = CycleSim::new(cfg.clone(), seed);
+        let batch = BatchSim::new(cfg, seed).with_workers(workers);
+        // Full outputs (winner AND spike times), not just winners.
+        let per_sample: Vec<_> = xs.iter().map(|x| sim.infer(x)).collect();
+        assert_eq!(batch.infer_batch(&xs), per_sample);
+        assert_eq!(batch.infer_winners(&xs), sim.infer_all(&xs));
+    });
+}
+
+#[test]
+fn prop_batchsim_training_bit_exact_with_cyclesim() {
+    check("BatchSim train == CycleSim train", 30, |g: &mut Gen| {
+        let cfg = random_config(g);
+        let n = g.size(1, 20);
+        let epochs = g.size(1, 3);
+        let xs = random_windows(g, cfg.p, n);
+        let seed = g.rng.next_u64();
+        let workers = g.size(1, 6);
+        let mut sim = CycleSim::new(cfg.clone(), seed);
+        let mut batch = BatchSim::new(cfg, seed).with_workers(workers);
+        for _ in 0..epochs {
+            sim.train_epoch(&xs);
+        }
+        batch.train_epochs(&xs, epochs);
+        // Final weights bit-identical, and post-training inference too.
+        assert_eq!(sim.weights, batch.sim.weights);
+        assert_eq!(batch.infer_winners(&xs), sim.infer_all(&xs));
+    });
+}
+
+#[test]
+fn prop_batchsim_no_fire_case_matches() {
+    check("BatchSim no-fire (winner=-1) == CycleSim", 30, |g: &mut Gen| {
+        let mut cfg = random_config(g);
+        // theta_frac 40 puts theta above any reachable potential for every
+        // response family (RNL ramps to at most p*w_max*(T_R-1)), so no
+        // neuron ever fires and the winner must be -1 everywhere.
+        cfg.params.theta_frac = 40.0;
+        let n = g.size(1, 15);
+        let xs = random_windows(g, cfg.p, n);
+        let seed = g.rng.next_u64();
+        let sim = CycleSim::new(cfg.clone(), seed);
+        let batch = BatchSim::new(cfg, seed).with_workers(g.size(1, 5));
+        let winners = batch.infer_winners(&xs);
+        assert!(winners.iter().all(|&w| w == -1), "{winners:?}");
+        assert_eq!(winners, sim.infer_all(&xs));
+        // Training through the no-fire path (pure search updates) too.
+        let mut a = sim.clone();
+        let mut b = batch.clone();
+        a.train_epoch(&xs);
+        let enc = b.encode_batch(&xs);
+        b.train_epoch_encoded(&enc);
+        assert_eq!(a.weights, b.sim.weights);
     });
 }
 
@@ -218,17 +304,13 @@ fn prop_stdp_keeps_weights_in_range_and_masks() {
         let params = TnnParams::default();
         let p = g.size(1, 40);
         let q = g.size(1, 5);
-        let mut w: Vec<Vec<f32>> = (0..q)
-            .map(|_| (0..p).map(|_| g.rng.f32() * 7.0).collect())
-            .collect();
+        let mut w: Vec<f32> = (0..q * p).map(|_| g.rng.f32() * 7.0).collect();
         let s: Vec<i32> = (0..p).map(|_| g.rng.range(0, 33) as i32).collect();
         let y: Vec<i32> = (0..q).map(|_| g.rng.range(0, 33) as i32).collect();
         let (_, gated) = wta(&y, params.t_r, params.tie);
-        stdp_update(&mut w, &s, &gated, &params);
-        for row in &w {
-            for &v in row {
-                assert!((0.0..=7.0).contains(&v));
-            }
+        stdp_update(&mut w, p, &s, &gated, &params);
+        for &v in &w {
+            assert!((0.0..=7.0).contains(&v));
         }
         // At most one neuron had an output spike after WTA.
         assert!(gated.iter().filter(|&&t| t < params.t_r).count() <= 1);

@@ -38,9 +38,7 @@ fn load_pair(tag: &str, seed: u64) -> Option<(TnnColumn, CycleSim)> {
     quantize(&mut column.weights);
     let cfg = by_tag(tag).unwrap();
     let mut sim = CycleSim::new(cfg, seed);
-    for row in sim.weights.iter_mut() {
-        quantize(row);
-    }
+    quantize(&mut sim.weights);
     Some((column, sim))
 }
 
@@ -72,9 +70,9 @@ fn pjrt_step_trajectory_matches_native() {
         assert_eq!((w_pjrt, &y_pjrt), (out.winner, &out.y), "step {i}");
     }
     // Weight states must agree exactly after the whole trajectory.
-    let native_rows = &sim.weights;
+    let native_rows = sim.weight_rows();
     let pjrt_rows = column.weight_rows();
-    for (j, (a, b)) in pjrt_rows.iter().zip(native_rows).enumerate() {
+    for (j, (a, b)) in pjrt_rows.iter().zip(&native_rows).enumerate() {
         assert_eq!(a, b, "weight row {j}");
     }
 }
@@ -116,7 +114,8 @@ fn pjrt_remainder_paths_cover_partial_batches() {
         sim.step(x);
     }
     let rows = column.weight_rows();
-    for (a, b) in rows.iter().zip(&sim.weights) {
+    let native_rows = sim.weight_rows();
+    for (a, b) in rows.iter().zip(&native_rows) {
         assert_eq!(a, b);
     }
 }
