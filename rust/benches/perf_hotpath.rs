@@ -14,7 +14,8 @@ use tnngen::coordinator::{Coordinator, SimBackend};
 use tnngen::cluster::pipeline::TnnClustering;
 use tnngen::data::{load_benchmark, generate};
 use tnngen::eda::synthesis::{optimize, SynthStats};
-use tnngen::eda::{place, synthesize, tnn7, PlaceOpts};
+use tnngen::eda::{place, synthesize, tnn7, FlowCampaign, PlaceOpts};
+use tnngen::report::experiments::{run_paper_flows_with, Effort};
 use tnngen::rtl::{generate_column, GateSim};
 use tnngen::sim::{BatchSim, CycleSim};
 use tnngen::util::stats::median;
@@ -114,6 +115,32 @@ fn main() {
     bench("SA placement (65x2 TNN7)", 3, || {
         let _ = place(&design, &PlaceOpts::default());
     });
+
+    banner("L3 perf: flow campaign (fast effort: 3 designs x 3 libraries)");
+    let effort = Effort::fast();
+    let t_c1 = bench_median("flow campaign, 1 worker", 2, || {
+        let _ = run_paper_flows_with(effort, &FlowCampaign::with_workers(1)).unwrap();
+    });
+    let nw = default_workers();
+    let t_cn = bench_median(&format!("flow campaign, {nw} workers"), 2, || {
+        let _ = run_paper_flows_with(effort, &FlowCampaign::with_workers(nw)).unwrap();
+    });
+    println!(
+        "flow campaign speedup: {:.2}x with {nw} workers (9 independent flows, deterministic order)",
+        t_c1 / t_cn
+    );
+    let cache_dir = std::env::temp_dir().join(format!("tnngen_bench_cache_{}", std::process::id()));
+    let warm_fill = FlowCampaign::with_workers(nw).with_cache_dir(&cache_dir).unwrap();
+    let _ = run_paper_flows_with(effort, &warm_fill).unwrap();
+    let t_warm = bench_median("flow campaign, warm cache", 3, || {
+        let c = FlowCampaign::with_workers(nw).with_cache_dir(&cache_dir).unwrap();
+        let _ = run_paper_flows_with(effort, &c).unwrap();
+    });
+    println!(
+        "warm-cache campaign speedup vs cold 1-worker: {:.0}x (all flow stages skipped)",
+        t_c1 / t_warm
+    );
+    std::fs::remove_dir_all(&cache_dir).ok();
 
     banner("L1/L2 perf: PJRT dispatch (requires artifacts)");
     if let Ok(coord) = Coordinator::with_artifacts(std::path::Path::new("artifacts")) {

@@ -138,6 +138,32 @@ impl ColumnConfig {
     pub fn theta(&self) -> f32 {
         self.params.theta(self.p)
     }
+
+    /// Canonical one-line description of the full design point (name,
+    /// geometry and every TNN hyper-parameter). Two configs produce the
+    /// same fingerprint iff they describe the same design; the flow-report
+    /// cache (`eda::cache`) hashes this into its content key.
+    pub fn fingerprint(&self) -> String {
+        let p = &self.params;
+        format!(
+            "cfg:{}|{}|p={} q={}|t={} t_r={} w_max={} theta={} cap={} back={} search={} resp={} lif={} tie={:?} cutoff={}",
+            self.name,
+            self.modality,
+            self.p,
+            self.q,
+            p.t,
+            p.t_r,
+            p.w_max,
+            p.theta_frac,
+            p.mu_capture,
+            p.mu_backoff,
+            p.mu_search,
+            p.response.name(),
+            p.lif_decay,
+            p.tie,
+            p.sparse_cutoff,
+        )
+    }
 }
 
 pub fn pad_to(n: usize, m: usize) -> usize {

@@ -80,6 +80,24 @@ where
     })
 }
 
+/// Fallible order-preserving parallel map: like [`parallel_map_workers`]
+/// but for jobs returning `Result`. Every job runs to completion (no
+/// early cancellation); if any failed, the error of the FIRST failed job
+/// in INPUT order is returned — deterministic for any worker count. The
+/// flow-campaign runner (`eda::flow::FlowCampaign`) is built on this.
+pub fn parallel_try_map_workers<T, R, F>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+) -> anyhow::Result<Vec<R>>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> anyhow::Result<R> + Send + Sync,
+{
+    parallel_map_workers(items, workers, f).into_iter().collect()
+}
+
 /// Parallel map where every item gets its own deterministic child RNG
 /// stream, split from `seed` in input order BEFORE dispatch. Item i sees
 /// the same stream no matter which thread runs it or how many workers
@@ -147,6 +165,24 @@ mod tests {
         for workers in [2, 3, 8, 64] {
             let par = parallel_map_workers((0..257).collect(), workers, f);
             assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn try_map_collects_results_and_surfaces_first_error_in_input_order() {
+        let ok: anyhow::Result<Vec<i32>> =
+            parallel_try_map_workers((0..10).collect(), 4, |i: i32| Ok(i * 2));
+        assert_eq!(ok.unwrap(), (0..10).map(|i| i * 2).collect::<Vec<_>>());
+        for workers in [1, 2, 8] {
+            let err = parallel_try_map_workers((0..10).collect(), workers, |i: i32| {
+                if i % 3 == 1 {
+                    Err(anyhow::anyhow!("boom {i}"))
+                } else {
+                    Ok(i)
+                }
+            });
+            // Items 1, 4, 7 fail; input order makes "boom 1" the winner.
+            assert_eq!(err.unwrap_err().to_string(), "boom 1", "workers={workers}");
         }
     }
 

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::cluster::pipeline::{ClusteringReport, TnnClustering};
 use crate::config::{ArtifactManifest, ColumnConfig};
 use crate::data::{load_benchmark, Dataset};
-use crate::eda::{run_flow, CellLibrary, FlowOpts, FlowReport};
+use crate::eda::{run_flow, CellLibrary, FlowCampaign, FlowJob, FlowOpts, FlowReport};
 use crate::forecast::Forecaster;
 use crate::runtime::Engine;
 
@@ -153,21 +153,36 @@ impl Coordinator {
         results.into_iter().collect()
     }
 
-    /// Train a forecaster on a sweep of flow runs for `lib` (paper §III-D).
+    /// Train a forecaster on a sweep of flow runs for `lib` (paper §III-D),
+    /// running the sweep as a parallel campaign on all cores.
     pub fn train_forecaster(
         &self,
         sizes: &[(usize, usize)],
         lib: &CellLibrary,
         opts: &FlowOpts,
     ) -> Result<Forecaster> {
-        let reports: Result<Vec<FlowReport>> = sizes
+        self.train_forecaster_with(sizes, lib, opts, &FlowCampaign::default())
+    }
+
+    /// [`Self::train_forecaster`] on an explicit [`FlowCampaign`]: the
+    /// training sweep fans out one flow per worker and reuses the
+    /// campaign's flow-report cache, so a warm `reproduce` rerun trains
+    /// the forecaster without running a single flow stage.
+    pub fn train_forecaster_with(
+        &self,
+        sizes: &[(usize, usize)],
+        lib: &CellLibrary,
+        opts: &FlowOpts,
+        campaign: &FlowCampaign,
+    ) -> Result<Forecaster> {
+        let jobs: Vec<FlowJob> = sizes
             .iter()
             .map(|&(p, q)| {
                 let cfg = ColumnConfig::new(&format!("sweep_{p}x{q}"), "sweep", p, q);
-                run_flow(&cfg, lib, opts)
+                FlowJob::new(cfg, lib.clone(), opts.clone())
             })
             .collect();
-        Forecaster::train(&reports?)
+        Forecaster::train(&campaign.run(jobs)?)
     }
 }
 

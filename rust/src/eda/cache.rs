@@ -1,0 +1,264 @@
+//! Content-hashed on-disk flow-report cache.
+//!
+//! A cache key is an FNV-1a hash over a canonical description of
+//! everything that determines a flow result: the full [`ColumnConfig`]
+//! (including every TNN hyper-parameter), the [`CellLibrary`] contents
+//! (every cell constant, so editing a library invalidates its entries),
+//! the [`FlowOpts`], and [`FLOW_CODE_VERSION`]. Because `run_flow` is
+//! deterministic for a given (config, library, opts) triple — placement SA
+//! is seeded via `PlaceOpts::seed` — a cached report is byte-for-byte the
+//! report a fresh run would produce, except that its [`StageRuntimes`]
+//! are the wall-clock measurements of the run that populated the cache.
+//!
+//! Reports are stored as one pretty-printed JSON file per key (the
+//! [`crate::report::artifacts::flow_report_json`] schema), so cache
+//! entries double as machine-readable artifacts. Corrupt or unreadable
+//! entries are treated as misses and silently re-run.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ColumnConfig;
+use crate::report::artifacts::{flow_report_json, parse, Json};
+
+use super::flow::{FlowOpts, FlowReport, StageRuntimes};
+use super::library::CellLibrary;
+use super::power::PowerReport;
+use super::sta::TimingReport;
+
+/// Bump whenever any flow-stage algorithm or calibration constant changes
+/// in a way that affects reports, so stale cache entries self-invalidate.
+pub const FLOW_CODE_VERSION: u32 = 1;
+
+/// 64-bit FNV-1a over a byte string (the offline substitute for a real
+/// content-hash crate; collisions are no worse than any 64-bit digest).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// On-disk flow-report cache with hit/miss counters. Shareable across the
+/// campaign worker pool (`&FlowCache` is `Send + Sync`: the only interior
+/// mutability is atomic counters; files are written via rename).
+#[derive(Debug)]
+pub struct FlowCache {
+    dir: PathBuf,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    tmp_seq: AtomicUsize,
+}
+
+impl FlowCache {
+    /// Open (creating if needed) a cache rooted at `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating flow cache dir {}", dir.display()))?;
+        Ok(FlowCache {
+            dir,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            tmp_seq: AtomicUsize::new(0),
+        })
+    }
+
+    /// The cache root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Content hash of everything that determines a flow result.
+    pub fn key(cfg: &ColumnConfig, lib: &CellLibrary, opts: &FlowOpts) -> u64 {
+        let canon = format!(
+            "flow-v{FLOW_CODE_VERSION}|{}|{}|moves={} seed={} die={:?} freq={:?} act={:?}",
+            cfg.fingerprint(),
+            lib.fingerprint(),
+            opts.place.moves_per_instance,
+            opts.place.seed,
+            opts.place.fixed_die_um,
+            opts.freq_mhz,
+            opts.activity,
+        );
+        fnv1a64(canon.as_bytes())
+    }
+
+    /// File path backing a key.
+    pub fn path_of(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("flow-{key:016x}.json"))
+    }
+
+    /// Look up a report; counts a hit on success and a miss on any absent
+    /// or undecodable entry.
+    pub fn lookup(&self, key: u64) -> Option<FlowReport> {
+        match self.try_read(key) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn try_read(&self, key: u64) -> Option<FlowReport> {
+        let text = std::fs::read_to_string(self.path_of(key)).ok()?;
+        let doc = parse(&text).ok()?;
+        report_from_json(&doc).ok()
+    }
+
+    /// Persist a report under `key` (atomic write-then-rename so a
+    /// concurrent reader never sees a torn file).
+    pub fn store(&self, key: u64, report: &FlowReport) -> Result<()> {
+        let text = flow_report_json(report).pretty();
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!(".flow-{key:016x}.{}.{seq}.tmp", std::process::id()));
+        let path = self.path_of(key);
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("writing cache entry {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing cache entry {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Reports served from disk so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that fell through to a real flow run so far.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+fn field<'a>(doc: &'a Json, key: &str) -> Result<&'a Json> {
+    doc.get(key).ok_or_else(|| anyhow!("cache entry missing field {key:?}"))
+}
+
+fn f(doc: &Json, key: &str) -> Result<f64> {
+    field(doc, key)?.as_f64().ok_or_else(|| anyhow!("field {key:?} is not a number"))
+}
+
+fn u(doc: &Json, key: &str) -> Result<usize> {
+    let i = field(doc, key)?.as_i64().ok_or_else(|| anyhow!("field {key:?} is not an integer"))?;
+    usize::try_from(i).map_err(|_| anyhow!("field {key:?} is negative"))
+}
+
+fn s(doc: &Json, key: &str) -> Result<String> {
+    Ok(field(doc, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field {key:?} is not a string"))?
+        .to_string())
+}
+
+/// Decode a [`flow_report_json`] document back into a [`FlowReport`].
+/// Inverse of the encoder: every field round-trips exactly (floats are
+/// emitted in shortest round-trip form).
+pub fn report_from_json(doc: &Json) -> Result<FlowReport> {
+    let power_doc = field(doc, "power")?;
+    let timing_doc = field(doc, "timing")?;
+    let rt_doc = field(doc, "runtimes")?;
+    let critical_path = field(timing_doc, "critical_path")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("critical_path is not an array"))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(|x| x.to_string())
+                .ok_or_else(|| anyhow!("critical_path entry is not a string"))
+        })
+        .collect::<Result<Vec<String>>>()?;
+    Ok(FlowReport {
+        design: s(doc, "design")?,
+        tag: s(doc, "tag")?,
+        library: s(doc, "library")?,
+        synapse_count: u(doc, "synapse_count")?,
+        gates_in: u(doc, "gates_in")?,
+        instances: u(doc, "instances")?,
+        macro_instances: u(doc, "macro_instances")?,
+        die_area_um2: f(doc, "die_area_um2")?,
+        cell_area_um2: f(doc, "cell_area_um2")?,
+        leakage_uw: f(doc, "leakage_uw")?,
+        latency_ns: f(doc, "latency_ns")?,
+        wirelength_um: f(doc, "wirelength_um")?,
+        power: PowerReport {
+            leakage_nw: f(power_doc, "leakage_nw")?,
+            dynamic_nw: f(power_doc, "dynamic_nw")?,
+            total_nw: f(power_doc, "total_nw")?,
+            freq_mhz: f(power_doc, "freq_mhz")?,
+            activity: f(power_doc, "activity")?,
+        },
+        timing: TimingReport {
+            critical_path_ps: f(timing_doc, "critical_path_ps")?,
+            clock_period_ps: f(timing_doc, "clock_period_ps")?,
+            fmax_mhz: f(timing_doc, "fmax_mhz")?,
+            critical_path,
+            depth: u(timing_doc, "depth")?,
+        },
+        runtimes: StageRuntimes {
+            rtl_gen_s: f(rt_doc, "rtl_gen_s")?,
+            synthesis_s: f(rt_doc, "synthesis_s")?,
+            placement_s: f(rt_doc, "placement_s")?,
+            routing_s: f(rt_doc, "routing_s")?,
+            sta_s: f(rt_doc, "sta_s")?,
+            power_s: f(rt_doc, "power_s")?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eda::cells::{asap7, tnn7};
+    use crate::eda::placement::PlaceOpts;
+
+    #[test]
+    fn fnv_is_stable_and_spreads() {
+        // Reference vectors for 64-bit FNV-1a.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+
+    #[test]
+    fn key_sensitive_to_config_library_and_opts() {
+        let cfg = ColumnConfig::new("K", "synthetic", 8, 2);
+        let base = FlowCache::key(&cfg, &tnn7(), &FlowOpts::default());
+        // Same inputs -> same key.
+        assert_eq!(base, FlowCache::key(&cfg, &tnn7(), &FlowOpts::default()));
+        // Different design size.
+        let bigger = ColumnConfig::new("K", "synthetic", 9, 2);
+        assert_ne!(base, FlowCache::key(&bigger, &tnn7(), &FlowOpts::default()));
+        // Different hyper-parameters.
+        let mut tweaked = cfg.clone();
+        tweaked.params.theta_frac = 0.3;
+        assert_ne!(base, FlowCache::key(&tweaked, &tnn7(), &FlowOpts::default()));
+        // Different library.
+        assert_ne!(base, FlowCache::key(&cfg, &asap7(), &FlowOpts::default()));
+        // Different flow options.
+        let opts = FlowOpts {
+            place: PlaceOpts { moves_per_instance: 16, ..Default::default() },
+            ..Default::default()
+        };
+        assert_ne!(base, FlowCache::key(&cfg, &tnn7(), &opts));
+    }
+
+    #[test]
+    fn lookup_of_absent_key_counts_a_miss() {
+        let dir = std::env::temp_dir().join(format!("tnngen_cache_unit_{}", std::process::id()));
+        let cache = FlowCache::new(&dir).unwrap();
+        assert!(cache.lookup(0xdead_beef).is_none());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

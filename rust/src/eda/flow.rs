@@ -1,6 +1,16 @@
 //! Flow orchestration: RTL -> synthesis -> placement -> routing -> STA ->
 //! power, with per-stage wall-clock measurement (the data behind Fig 3 and
-//! the §III-C runtime claims).
+//! the §III-C runtime claims), plus the parallel, cached **flow campaign
+//! runner** that executes many (design, library) flows on the
+//! `coordinator::jobs` worker pool.
+//!
+//! Campaign determinism contract (inherited from PR 1's worker pool):
+//! [`FlowCampaign::run`] returns reports in job order for any worker
+//! count, and every metric field of a report is a pure function of
+//! (config, library, opts) — only the measured [`StageRuntimes`] are
+//! wall-clock and excluded from the byte-identity guarantee. With a
+//! [`FlowCache`] attached, completed flows are skipped entirely on
+//! re-runs and served from disk.
 
 use std::time::Instant;
 
@@ -9,6 +19,7 @@ use anyhow::Result;
 use crate::config::ColumnConfig;
 use crate::rtl::{generate_column_silicon, ColumnRtl};
 
+use super::cache::FlowCache;
 use super::library::CellLibrary;
 use super::placement::{place, PlaceOpts, Placement};
 use super::power::{self, PowerReport, DEFAULT_ACTIVITY};
@@ -16,14 +27,23 @@ use super::routing::{route, RoutingResult};
 use super::sta::{analyze as sta_analyze, computation_latency_ns, TimingReport};
 use super::synthesis::{synthesize, MappedDesign};
 
-/// Per-stage wall-clock runtimes (seconds).
+/// Per-stage wall-clock runtimes (seconds). These are measurement data:
+/// they vary run to run and machine to machine, and are deliberately
+/// excluded from the campaign byte-identity contract (cached reports
+/// carry the runtimes of the run that populated the cache).
 #[derive(Debug, Clone, Default)]
 pub struct StageRuntimes {
+    /// RTL generation (netlist construction) wall-clock.
     pub rtl_gen_s: f64,
+    /// Logic synthesis (optimization + tech mapping) wall-clock.
     pub synthesis_s: f64,
+    /// Simulated-annealing placement wall-clock.
     pub placement_s: f64,
+    /// Global routing wall-clock.
     pub routing_s: f64,
+    /// Static timing analysis wall-clock.
     pub sta_s: f64,
+    /// Power analysis wall-clock.
     pub power_s: f64,
 }
 
@@ -41,36 +61,66 @@ impl StageRuntimes {
 /// Complete post-layout report for one (design, library) flow run.
 #[derive(Debug, Clone)]
 pub struct FlowReport {
+    /// Design (benchmark) name, e.g. `ECG200`.
     pub design: String,
+    /// Geometry tag, e.g. `96x2`.
     pub tag: String,
+    /// Cell-library name the flow targeted.
     pub library: String,
+    /// Total synapses (`p * q`) — the x-axis of every paper fit.
     pub synapse_count: usize,
+    /// Generic gates entering synthesis.
     pub gates_in: usize,
+    /// Mapped instances (std cells + macros) after synthesis.
     pub instances: usize,
+    /// Macro instances among them (0 for pure std-cell libraries).
     pub macro_instances: usize,
     /// Post-layout die area (um^2) — the Table-IV metric.
     pub die_area_um2: f64,
+    /// Summed standard-cell/macro area (um^2).
     pub cell_area_um2: f64,
     /// Post-layout leakage — the Table-III metric.
     pub leakage_uw: f64,
+    /// Full power breakdown (leakage + dynamic at the operating point).
     pub power: PowerReport,
+    /// Static timing: critical path, clock period, fmax.
     pub timing: TimingReport,
     /// Per-sample computation latency (ns) — the Fig-2 metric.
     pub latency_ns: f64,
+    /// Total routed wirelength (um).
     pub wirelength_um: f64,
+    /// Measured per-stage wall-clock (see [`StageRuntimes`]).
     pub runtimes: StageRuntimes,
 }
 
 /// Flow options.
 #[derive(Debug, Clone, Default)]
 pub struct FlowOpts {
+    /// Placement effort/seed/floorplan options.
     pub place: PlaceOpts,
     /// Override the operating frequency for power (default: fmax).
     pub freq_mhz: Option<f64>,
+    /// Override the switching activity for dynamic power.
     pub activity: Option<f64>,
 }
 
 /// Run the full hardware flow for one column config on one library.
+///
+/// Deterministic: every metric field of the returned report is a pure
+/// function of `(cfg, lib, opts)`; only [`FlowReport::runtimes`] is
+/// wall-clock.
+///
+/// ```
+/// use tnngen::config::ColumnConfig;
+/// use tnngen::eda::{run_flow, tnn7, FlowOpts};
+///
+/// let cfg = ColumnConfig::new("DocFlow", "synthetic", 8, 2);
+/// let r = run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap();
+/// assert_eq!(r.synapse_count, 16);
+/// assert!(r.die_area_um2 > 0.0);
+/// assert!(r.leakage_uw > 0.0);
+/// assert!(r.macro_instances > 0); // TNN7 maps synapses onto macros
+/// ```
 pub fn run_flow(cfg: &ColumnConfig, lib: &CellLibrary, opts: &FlowOpts) -> Result<FlowReport> {
     let t0 = Instant::now();
     let rtl = generate_column_silicon(cfg)?;
@@ -137,6 +187,121 @@ pub fn run_flow_on_rtl(
     })
 }
 
+/// [`run_flow`] with an optional flow-report cache in front: a decodable
+/// cached entry for the content key is returned without running any flow
+/// stage; a miss runs the flow and populates the cache.
+pub fn run_flow_cached(
+    cfg: &ColumnConfig,
+    lib: &CellLibrary,
+    opts: &FlowOpts,
+    cache: Option<&FlowCache>,
+) -> Result<FlowReport> {
+    let Some(cache) = cache else { return run_flow(cfg, lib, opts) };
+    let key = FlowCache::key(cfg, lib, opts);
+    if let Some(report) = cache.lookup(key) {
+        return Ok(report);
+    }
+    let report = run_flow(cfg, lib, opts)?;
+    cache.store(key, &report)?;
+    Ok(report)
+}
+
+/// One unit of campaign work: a (design, library, options) triple.
+#[derive(Debug, Clone)]
+pub struct FlowJob {
+    /// The column design to run.
+    pub config: ColumnConfig,
+    /// The target cell library.
+    pub library: CellLibrary,
+    /// Flow options (placement effort, operating point).
+    pub opts: FlowOpts,
+}
+
+impl FlowJob {
+    /// Convenience constructor.
+    pub fn new(config: ColumnConfig, library: CellLibrary, opts: FlowOpts) -> Self {
+        FlowJob { config, library, opts }
+    }
+}
+
+/// Parallel, cached campaign runner for hardware flows.
+///
+/// Runs one flow per worker on the `coordinator::jobs` pool
+/// ([`crate::coordinator::jobs::parallel_map_workers`]); results come
+/// back **in job order regardless of scheduling**, so campaign output is
+/// reproducible for any worker count. An optional [`FlowCache`] makes
+/// repeated campaigns resumable: completed flows are served from disk and
+/// skip every flow stage.
+#[derive(Debug)]
+pub struct FlowCampaign {
+    workers: usize,
+    cache: Option<FlowCache>,
+}
+
+impl Default for FlowCampaign {
+    /// All cores, no cache.
+    fn default() -> Self {
+        FlowCampaign {
+            workers: crate::coordinator::jobs::default_workers(),
+            cache: None,
+        }
+    }
+}
+
+impl FlowCampaign {
+    /// Campaign pinned to exactly `workers` threads (min 1), no cache.
+    pub fn with_workers(workers: usize) -> Self {
+        FlowCampaign { workers: workers.max(1), cache: None }
+    }
+
+    /// Attach an on-disk flow-report cache rooted at `dir` (created on
+    /// demand).
+    pub fn with_cache_dir(mut self, dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        self.cache = Some(FlowCache::new(dir)?);
+        Ok(self)
+    }
+
+    /// Worker threads this campaign uses.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The attached cache, if any.
+    pub fn cache(&self) -> Option<&FlowCache> {
+        self.cache.as_ref()
+    }
+
+    /// Cache hits so far (0 without a cache).
+    pub fn cache_hits(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.hits())
+    }
+
+    /// Cache misses so far (0 without a cache).
+    pub fn cache_misses(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.misses())
+    }
+
+    /// Run every job, one flow per worker, returning reports **in job
+    /// order** (independent of thread scheduling). All jobs run even if
+    /// one fails; the first error in job order is returned.
+    pub fn run(&self, jobs: Vec<FlowJob>) -> Result<Vec<FlowReport>> {
+        let cache = self.cache.as_ref();
+        crate::coordinator::jobs::parallel_try_map_workers(jobs, self.workers, move |job| {
+            run_flow_cached(&job.config, &job.library, &job.opts, cache)
+        })
+    }
+
+    /// Run a single flow through the campaign's cache.
+    pub fn run_one(
+        &self,
+        cfg: &ColumnConfig,
+        lib: &CellLibrary,
+        opts: &FlowOpts,
+    ) -> Result<FlowReport> {
+        run_flow_cached(cfg, lib, opts, self.cache.as_ref())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +328,30 @@ mod tests {
         assert!(t.leakage_uw < a.leakage_uw);
         assert!(t.instances < a.instances);
         assert!(t.macro_instances > 0);
+    }
+
+    #[test]
+    fn campaign_preserves_job_order() {
+        let jobs: Vec<FlowJob> = [(6usize, 2usize), (10, 2), (8, 2)]
+            .iter()
+            .map(|&(p, q)| {
+                FlowJob::new(
+                    ColumnConfig::new(&format!("ord{p}x{q}"), "synthetic", p, q),
+                    asap7(),
+                    FlowOpts::default(),
+                )
+            })
+            .collect();
+        let reports = FlowCampaign::with_workers(3).run(jobs).unwrap();
+        let tags: Vec<&str> = reports.iter().map(|r| r.tag.as_str()).collect();
+        assert_eq!(tags, vec!["6x2", "10x2", "8x2"]);
+    }
+
+    #[test]
+    fn uncached_campaign_reports_zero_cache_traffic() {
+        let c = FlowCampaign::with_workers(2);
+        assert_eq!(c.cache_hits(), 0);
+        assert_eq!(c.cache_misses(), 0);
+        assert!(c.cache().is_none());
     }
 }

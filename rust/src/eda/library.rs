@@ -14,6 +14,7 @@ use crate::rtl::GateKind;
 /// Timing/power/geometry model for one standard cell or macro.
 #[derive(Debug, Clone)]
 pub struct Cell {
+    /// Cell name as it would appear in a Liberty file.
     pub name: String,
     /// Die area in um^2.
     pub area_um2: f64,
@@ -47,8 +48,11 @@ pub struct TechParams {
 /// A cell library (FreePDK45 / ASAP7 / TNN7).
 #[derive(Debug, Clone)]
 pub struct CellLibrary {
+    /// Library name as printed in the paper tables.
     pub name: String,
+    /// Process node (nm).
     pub node_nm: u32,
+    /// Shared technology parameters.
     pub tech: TechParams,
     /// Mapping from generic gate kind to the chosen std cell.
     std_cells: HashMap<GateKind, Cell>,
@@ -57,6 +61,8 @@ pub struct CellLibrary {
 }
 
 impl CellLibrary {
+    /// Empty library shell; populate with [`Self::add_std_cell`] /
+    /// [`Self::add_macro`].
     pub fn new(name: &str, node_nm: u32, tech: TechParams) -> Self {
         CellLibrary {
             name: name.to_string(),
@@ -67,32 +73,78 @@ impl CellLibrary {
         }
     }
 
+    /// Register the std cell implementing a generic gate kind.
     pub fn add_std_cell(&mut self, kind: GateKind, cell: Cell) {
         self.std_cells.insert(kind, cell);
     }
 
+    /// Register a macro cell (keyed by its name).
     pub fn add_macro(&mut self, cell: Cell) {
         self.macros.insert(cell.name.clone(), cell);
     }
 
+    /// The std cell for a gate kind (panics if the library is incomplete —
+    /// a library construction bug, not a runtime condition).
     pub fn std_cell(&self, kind: GateKind) -> &Cell {
         self.std_cells
             .get(&kind)
             .unwrap_or_else(|| panic!("{}: no cell for {kind:?}", self.name))
     }
 
+    /// Macro lookup by name (None for std-cell-only libraries).
     pub fn macro_cell(&self, name: &str) -> Option<&Cell> {
         self.macros.get(name)
     }
 
+    /// Whether this library carries macros (true for TNN7).
     pub fn has_macros(&self) -> bool {
         !self.macros.is_empty()
     }
 
+    /// Macro names, sorted (deterministic iteration for reports/tests).
     pub fn macro_names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.macros.keys().map(|s| s.as_str()).collect();
         v.sort();
         v
+    }
+
+    /// Canonical description of the whole library: name, node, tech
+    /// parameters and every cell constant, in sorted order. Editing any
+    /// cell changes the fingerprint, which is what lets the flow-report
+    /// cache (`eda::cache`) key on library *contents* rather than name.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = format!(
+            "lib:{} node={} row={} wdel={} wcap={} util={} vdd={}",
+            self.name,
+            self.node_nm,
+            self.tech.row_height_um,
+            self.tech.wire_delay_ps_per_um,
+            self.tech.wire_cap_ff_per_um,
+            self.tech.utilization,
+            self.tech.vdd,
+        );
+        let mut kinds: Vec<_> = self.std_cells.keys().copied().collect();
+        kinds.sort();
+        let cell_desc = |c: &Cell| {
+            format!(
+                "{} a={} l={} d={} c={} e={} ge={}",
+                c.name,
+                c.area_um2,
+                c.leakage_nw,
+                c.delay_ps,
+                c.input_cap_ff,
+                c.switch_energy_fj,
+                c.gate_equivalents
+            )
+        };
+        for k in kinds {
+            let _ = write!(out, "|{k:?}:{}", cell_desc(&self.std_cells[&k]));
+        }
+        for name in self.macro_names() {
+            let _ = write!(out, "|macro:{}", cell_desc(&self.macros[name]));
+        }
+        out
     }
 }
 

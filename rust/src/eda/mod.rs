@@ -9,6 +9,7 @@
 //! placement wall-clock x instance count, critical path x wire delay), with
 //! per-cell constants calibrated to published PDK data.
 
+pub mod cache;
 pub mod cells;
 pub mod flow;
 pub mod library;
@@ -18,8 +19,12 @@ pub mod routing;
 pub mod sta;
 pub mod synthesis;
 
+pub use cache::{FlowCache, FLOW_CODE_VERSION};
 pub use cells::{all_libraries, asap7, freepdk45, tnn7};
-pub use flow::{run_flow, run_flow_on_rtl, FlowOpts, FlowReport, StageRuntimes};
+pub use flow::{
+    run_flow, run_flow_cached, run_flow_on_rtl, FlowCampaign, FlowJob, FlowOpts, FlowReport,
+    StageRuntimes,
+};
 pub use library::{Cell, CellLibrary, TechParams};
 pub use placement::{place, PlaceOpts, Placement};
 pub use power::PowerReport;

@@ -20,8 +20,9 @@ use super::synthesis::MappedDesign;
 pub struct Placement {
     /// (x, y) center of each instance, in um.
     pub coords: Vec<(f32, f32)>,
-    /// Die side lengths in um (square floorplan unless fixed).
+    /// Die width in um (square floorplan unless fixed).
     pub die_w_um: f64,
+    /// Die height in um.
     pub die_h_um: f64,
     /// Total cell area (um^2).
     pub cell_area_um2: f64,
@@ -31,8 +32,11 @@ pub struct Placement {
     pub hpwl_um: f64,
     /// Initial (random) HPWL, for the improvement report.
     pub initial_hpwl_um: f64,
+    /// SA moves attempted.
     pub moves_attempted: u64,
+    /// SA moves accepted.
     pub moves_accepted: u64,
+    /// Measured placement wall-clock (s) — the Fig-3 "place" component.
     pub runtime_s: f64,
 }
 
@@ -40,6 +44,11 @@ pub struct Placement {
 /// trees, routed on dedicated resources) and excluded from HPWL/routing —
 /// standard practice, and essential for SA move cost (see §Perf).
 pub const GLOBAL_NET_PINS: usize = 64;
+
+/// Target placement utilization for auto-sized (natural) floorplans:
+/// die area = cell area / utilization. Exposed so report layers can tell
+/// natural floorplans from fixed ones (`PlaceOpts::fixed_die_um`).
+pub const TARGET_UTILIZATION: f64 = 0.70;
 
 /// Nets as instance-index lists (pins), built from the mapped design.
 pub fn build_pin_nets(d: &MappedDesign) -> Vec<Vec<usize>> {
@@ -76,6 +85,8 @@ fn hpwl_of(net: &[usize], coords: &[(f32, f32)]) -> f64 {
 pub struct PlaceOpts {
     /// SA moves per instance (effort). Innovus default effort ~ O(10).
     pub moves_per_instance: usize,
+    /// SA seed — placement is fully deterministic per seed (the flow
+    /// cache and the campaign byte-identity guarantee rely on this).
     pub seed: u64,
     /// Optional fixed floorplan side (um) — Fig 2 places three columns on
     /// the same floorplan.
@@ -93,8 +104,7 @@ pub fn place(d: &MappedDesign, opts: &PlaceOpts) -> Placement {
     let t0 = Instant::now();
     let n_inst = d.instances.len();
     let cell_area: f64 = d.area_um2();
-    let util = 0.70; // target utilization (per-library value lives in tech)
-    let die_area = cell_area / util;
+    let die_area = cell_area / TARGET_UTILIZATION;
     let die_side = match opts.fixed_die_um {
         Some(s) => s,
         None => die_area.sqrt(),

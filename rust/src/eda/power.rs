@@ -9,23 +9,31 @@ use super::library::CellLibrary;
 use super::routing::RoutingResult;
 use super::synthesis::MappedDesign;
 
+/// Power breakdown for one placed-and-routed design at an operating point.
 #[derive(Debug, Clone)]
 pub struct PowerReport {
+    /// Total leakage power (nW) — sum of per-cell leakage.
     pub leakage_nw: f64,
+    /// Dynamic power (nW) at `freq_mhz` / `activity`.
     pub dynamic_nw: f64,
+    /// Leakage + dynamic (nW).
     pub total_nw: f64,
     /// Operating frequency used for the dynamic estimate (MHz).
     pub freq_mhz: f64,
+    /// Switching activity factor used for the dynamic estimate.
     pub activity: f64,
 }
 
 impl PowerReport {
+    /// Leakage in uW (the Table-III ASAP7/TNN7 unit).
     pub fn leakage_uw(&self) -> f64 {
         self.leakage_nw / 1e3
     }
+    /// Leakage in mW (the Table-III FreePDK45 unit).
     pub fn leakage_mw(&self) -> f64 {
         self.leakage_nw / 1e6
     }
+    /// Total power in mW (the §III-B largest-column unit).
     pub fn total_mw(&self) -> f64 {
         self.total_nw / 1e6
     }
@@ -37,6 +45,7 @@ impl PowerReport {
 /// column (0.067 mW at ~180 ns/sample).
 pub const DEFAULT_ACTIVITY: f64 = 0.20;
 
+/// Power analysis over a mapped + routed design at `freq_mhz`/`activity`.
 pub fn analyze(
     d: &MappedDesign,
     lib: &CellLibrary,

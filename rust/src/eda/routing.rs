@@ -9,6 +9,7 @@ use std::time::Instant;
 use super::placement::{build_pin_nets, Placement};
 use super::synthesis::MappedDesign;
 
+/// Global-routing result for one placed design.
 #[derive(Debug, Clone)]
 pub struct RoutingResult {
     /// Total routed wirelength (um).
@@ -17,6 +18,7 @@ pub struct RoutingResult {
     pub peak_congestion: f64,
     /// Rip-up-and-reroute iterations performed.
     pub iterations: usize,
+    /// Measured routing wall-clock (s) — the Fig-3 "route" component.
     pub runtime_s: f64,
     /// Per-net routed length (um), aligned with `build_pin_nets` order.
     pub net_length_um: Vec<f64>,
@@ -33,6 +35,7 @@ fn detour_factor(pins: usize) -> f64 {
     (0.85 + 0.18 * (pins as f64).sqrt()).min(3.0)
 }
 
+/// Route a placed design: per-net lengths, congestion, wirelength.
 pub fn route(d: &MappedDesign, placement: &Placement) -> RoutingResult {
     let t0 = Instant::now();
     let nets = build_pin_nets(d);

@@ -15,6 +15,7 @@ use super::placement::build_pin_nets;
 use super::routing::RoutingResult;
 use super::synthesis::MappedDesign;
 
+/// Static-timing result for one placed-and-routed design.
 #[derive(Debug, Clone)]
 pub struct TimingReport {
     /// Longest register-to-register (or port-to-port) path, ps.
@@ -33,6 +34,8 @@ pub struct TimingReport {
 /// margins are of this order).
 const MARGIN: f64 = 1.10;
 
+/// Static timing analysis: arrival-time propagation in topological order;
+/// fails on combinational cycles or net-bookkeeping mismatches.
 pub fn analyze(d: &MappedDesign, lib: &CellLibrary, routing: &RoutingResult) -> Result<TimingReport> {
     // Per-net wire delay: routed length * ps/um.
     let nets = build_pin_nets(d);

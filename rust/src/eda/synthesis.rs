@@ -21,25 +21,39 @@ use super::library::{Cell, CellLibrary};
 /// One mapped instance (std cell or macro).
 #[derive(Debug, Clone)]
 pub struct MappedInstance {
+    /// Hierarchical instance name.
     pub name: String,
     /// Index into `MappedDesign::cells`.
     pub cell: usize,
+    /// Input net ids.
     pub inputs: Vec<NetId>,
+    /// Output net ids.
     pub outputs: Vec<NetId>,
+    /// True for flops and macros absorbing sequential gates (STA cut
+    /// points).
     pub is_seq: bool,
+    /// True for TNN7 macro instances.
     pub is_macro: bool,
 }
 
 /// Synthesis statistics (reported by the benches and the CLI).
 #[derive(Debug, Clone, Default)]
 pub struct SynthStats {
+    /// Generic gates entering synthesis.
     pub gates_in: usize,
+    /// Gates remaining after generic optimization.
     pub gates_optimized: usize,
+    /// Gates removed by constant folding / aliasing.
     pub const_folded: usize,
+    /// Gates merged by structural hashing (CSE).
     pub cse_merged: usize,
+    /// Gates removed as dead code.
     pub dce_removed: usize,
+    /// Std-cell instances after mapping.
     pub std_instances: usize,
+    /// Macro instances after mapping (0 for pure std-cell libraries).
     pub macro_instances: usize,
+    /// Measured synthesis wall-clock (s) — the Fig-3 "synth" component.
     pub runtime_s: f64,
 }
 
@@ -47,24 +61,34 @@ pub struct SynthStats {
 /// routing, STA and power analysis.
 #[derive(Debug, Clone)]
 pub struct MappedDesign {
+    /// Design (netlist) name.
     pub name: String,
+    /// Library the design was mapped onto.
     pub library: String,
     /// Distinct cells used (instances index into this table).
     pub cells: Vec<Cell>,
+    /// All mapped instances.
     pub instances: Vec<MappedInstance>,
+    /// Net count carried over from the source netlist.
     pub num_nets: usize,
+    /// Primary-input net ids.
     pub primary_inputs: Vec<NetId>,
+    /// Primary-output net ids.
     pub primary_outputs: Vec<NetId>,
+    /// Optimization/mapping statistics.
     pub stats: SynthStats,
 }
 
 impl MappedDesign {
+    /// Total cell area (um^2).
     pub fn area_um2(&self) -> f64 {
         self.instances.iter().map(|i| self.cells[i.cell].area_um2).sum()
     }
+    /// Total cell leakage (nW).
     pub fn leakage_nw(&self) -> f64 {
         self.instances.iter().map(|i| self.cells[i.cell].leakage_nw).sum()
     }
+    /// The cell an instance is mapped onto.
     pub fn cell_of(&self, inst: &MappedInstance) -> &Cell {
         &self.cells[inst.cell]
     }

@@ -1,37 +1,69 @@
 //! Forecasting (paper §III-D): linear-regression prediction of post-layout
-//! die area and leakage power from synapse count, trained on TNNGen flow
-//! runs — lets users without EDA access estimate silicon metrics without
-//! running the hardware flow.
+//! die area, leakage power and place-and-route runtime from synapse count,
+//! trained on TNNGen flow runs — lets users without EDA access estimate
+//! silicon metrics without running the hardware flow.
 //!
 //! The paper's published TNN7 fit: `Area = 5.56*syn - 94.9`,
 //! `Leakage = 0.00541*syn - 0.725`; our model is trained the same way (on
 //! a sweep of flow runs with varying column sizes) and the Table-V bench
-//! reports forecast errors per design.
+//! reports forecast errors per design. The runtime fit consumes the
+//! stage-level wall-clock capture ([`crate::eda::StageRuntimes`]) of the
+//! same training flows, mirroring the paper's design-runtime forecasting
+//! story.
 
 use crate::eda::FlowReport;
 use crate::util::stats::{linear_fit, rel_err_pct};
 
-/// A trained (area, leakage) forecaster for one library.
+/// A trained (area, leakage, P&R-runtime) forecaster for one library.
 #[derive(Debug, Clone)]
 pub struct Forecaster {
+    /// Library every training flow targeted.
     pub library: String,
-    /// Area fit: area_um2 = a * synapses + b, plus fit quality.
+    /// Area fit: area_um2 = a * synapses + b, plus fit quality (R^2).
     pub area_fit: (f64, f64, f64),
-    /// Leakage fit: leakage_uw = a * synapses + b.
+    /// Leakage fit: leakage_uw = a * synapses + b, plus R^2.
     pub leak_fit: (f64, f64, f64),
-    /// Training points (synapse count, area, leakage) for reporting.
-    pub points: Vec<(usize, f64, f64)>,
+    /// P&R-runtime fit: pnr_s = a * synapses + b, plus R^2. Trained from
+    /// the measured [`crate::eda::StageRuntimes`] of the training flows,
+    /// so predictions are machine-specific (unlike area/leakage).
+    pub pnr_fit: (f64, f64, f64),
+    /// Training points (synapse count, area um^2, leakage uW, measured
+    /// P&R seconds) for reporting — every fit can be validated against
+    /// these from the JSON artifact alone.
+    pub points: Vec<(usize, f64, f64, f64)>,
 }
 
+/// One prediction from a [`Forecaster`] — no EDA run involved.
 #[derive(Debug, Clone)]
 pub struct Forecast {
+    /// Synapse count the prediction is for.
     pub synapse_count: usize,
+    /// Predicted post-layout die area (um^2).
     pub area_um2: f64,
+    /// Predicted post-layout leakage (uW).
     pub leakage_uw: f64,
+    /// Predicted place-and-route runtime (s) on the training machine.
+    pub pnr_s: f64,
 }
 
 impl Forecaster {
     /// Train from a set of flow reports (all from the same library).
+    ///
+    /// ```
+    /// use tnngen::config::ColumnConfig;
+    /// use tnngen::eda::{run_flow, tnn7, FlowOpts};
+    /// use tnngen::forecast::Forecaster;
+    ///
+    /// let reports: Vec<_> = [(8usize, 2usize), (16, 2), (24, 2)]
+    ///     .iter()
+    ///     .map(|&(p, q)| {
+    ///         let cfg = ColumnConfig::new(&format!("fc{p}x{q}"), "synthetic", p, q);
+    ///         run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap()
+    ///     })
+    ///     .collect();
+    /// let fc = Forecaster::train(&reports).unwrap();
+    /// assert!(fc.area_fit.0 > 0.0); // area grows with synapse count
+    /// ```
     pub fn train(reports: &[FlowReport]) -> anyhow::Result<Self> {
         use anyhow::ensure;
         ensure!(reports.len() >= 2, "need at least two flow runs to fit");
@@ -43,28 +75,50 @@ impl Forecaster {
         let xs: Vec<f64> = reports.iter().map(|r| r.synapse_count as f64).collect();
         let areas: Vec<f64> = reports.iter().map(|r| r.die_area_um2).collect();
         let leaks: Vec<f64> = reports.iter().map(|r| r.leakage_uw).collect();
+        let pnrs: Vec<f64> = reports.iter().map(|r| r.runtimes.pnr_s()).collect();
         Ok(Forecaster {
             library,
             area_fit: linear_fit(&xs, &areas),
             leak_fit: linear_fit(&xs, &leaks),
+            pnr_fit: linear_fit(&xs, &pnrs),
             points: reports
                 .iter()
-                .map(|r| (r.synapse_count, r.die_area_um2, r.leakage_uw))
+                .map(|r| (r.synapse_count, r.die_area_um2, r.leakage_uw, r.runtimes.pnr_s()))
                 .collect(),
         })
     }
 
     /// Predict silicon metrics for a synapse count, without any EDA run.
+    ///
+    /// ```
+    /// use tnngen::config::ColumnConfig;
+    /// use tnngen::eda::{run_flow, tnn7, FlowOpts};
+    /// use tnngen::forecast::Forecaster;
+    ///
+    /// let reports: Vec<_> = [(8usize, 2usize), (16, 2)]
+    ///     .iter()
+    ///     .map(|&(p, q)| {
+    ///         let cfg = ColumnConfig::new(&format!("fc{p}x{q}"), "synthetic", p, q);
+    ///         run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap()
+    ///     })
+    ///     .collect();
+    /// let fc = Forecaster::train(&reports).unwrap();
+    /// let f = fc.predict(300);
+    /// assert_eq!(f.synapse_count, 300);
+    /// assert!(f.area_um2 > 0.0 && f.leakage_uw > 0.0);
+    /// ```
     pub fn predict(&self, synapse_count: usize) -> Forecast {
         let x = synapse_count as f64;
         Forecast {
             synapse_count,
             area_um2: self.area_fit.0 * x + self.area_fit.1,
             leakage_uw: self.leak_fit.0 * x + self.leak_fit.1,
+            pnr_s: self.pnr_fit.0 * x + self.pnr_fit.1,
         }
     }
 
-    /// Forecast errors vs an actual flow run: (area %err, leakage %err).
+    /// Forecast errors vs an actual flow run: (area %err, leakage %err),
+    /// where %err = 100 * (forecast - actual) / actual.
     pub fn errors(&self, actual: &FlowReport) -> (f64, f64) {
         let f = self.predict(actual.synapse_count);
         (
@@ -131,5 +185,20 @@ mod tests {
         let f = fc.predict(300);
         assert!((f.area_um2 - (5.56 * 300.0 - 94.9)).abs() < 1e-6);
         assert!((f.leakage_uw - (0.00541 * 300.0 - 0.725)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pnr_runtime_fit_recovers_synthetic_line() {
+        // pnr_s = placement_s + routing_s; set an exact line in synapses.
+        let mut rs = reports(&[(8, 2), (16, 2)]);
+        for (i, r) in rs.iter_mut().enumerate() {
+            r.synapse_count = (i + 1) * 50;
+            r.runtimes.placement_s = 0.001 * r.synapse_count as f64;
+            r.runtimes.routing_s = 0.0005 * r.synapse_count as f64;
+        }
+        let fc = Forecaster::train(&rs).unwrap();
+        assert!((fc.pnr_fit.0 - 0.0015).abs() < 1e-12, "slope {}", fc.pnr_fit.0);
+        let f = fc.predict(200);
+        assert!((f.pnr_s - 0.0015 * 200.0 - fc.pnr_fit.1).abs() < 1e-9);
     }
 }

@@ -8,6 +8,12 @@
 //!   explore <tag|name>            design-space sweep (native simulator)
 //!   forecast [--syn N]            train forecaster + predict without EDA
 //!   reproduce --table N | --fig N | --all
+//!
+//! The flow-heavy commands (`flow`, `forecast`, `reproduce`) run on the
+//! parallel, cached flow-campaign runner: `--workers N` pins the worker
+//! count (0 = all cores; results are byte-identical for any value),
+//! `--cache-dir DIR` caches completed flow reports on disk so re-runs
+//! skip finished flows, and `--json` emits machine-readable output.
 
 use anyhow::{bail, Context, Result};
 
@@ -16,9 +22,12 @@ use tnngen::cluster::pipeline::TnnClustering;
 use tnngen::config::presets::{all_configs, by_tag};
 use tnngen::config::ColumnConfig;
 use tnngen::coordinator::explorer::{explore_with_workers, SweepSpace};
+use tnngen::coordinator::jobs::default_workers;
 use tnngen::coordinator::{Coordinator, SimBackend};
 use tnngen::data::load_benchmark;
-use tnngen::eda::{all_libraries, run_flow, tnn7, FlowOpts};
+use tnngen::eda::{all_libraries, tnn7, FlowCampaign, FlowOpts, FlowReport};
+use tnngen::forecast::Forecaster;
+use tnngen::report::artifacts;
 use tnngen::report::experiments::{self, Effort};
 use tnngen::report::{f2, f3, Table};
 use tnngen::rtl::{generate_column, verilog::emit_verilog};
@@ -40,15 +49,20 @@ fn main() {
 const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce> [args]
   simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N] [--sequential|--shuffle]
   generate-rtl <tag> [--out file.v]
-  flow <tag> [--lib FreePDK45|ASAP7|TNN7] [--layout]
+  flow <tag> [--lib FreePDK45|ASAP7|TNN7] [--layout] [--cache-dir DIR] [--json]
   explore <tag|name> [--epochs N] [--workers N] [--csv]
-  forecast [--syn N] [--full]
+  forecast [--syn N] [--full] [--workers N] [--cache-dir DIR] [--json]
   reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]
+            [--workers N] [--cache-dir DIR] [--json]
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
-  explore --workers pins the sweep worker count (0 = all cores); reports
-  are byte-identical for any value.";
+  explore/forecast/reproduce --workers pins the worker count (0 = all
+  cores); deterministic outputs are byte-identical for any value.
+  --cache-dir caches completed flow reports (content-hashed on design +
+  library + options + flow version) so re-runs skip finished flows.
+  --json emits machine-readable output; reproduce also writes JSON/CSV
+  artifacts under target/reports/ either way.";
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -58,6 +72,19 @@ fn resolve_config(key: &str) -> Result<ColumnConfig> {
         .into_iter()
         .find(|c| c.name == key)
         .with_context(|| format!("unknown design {key:?} (try `tnngen list`)"))
+}
+
+/// Build the flow campaign for `--workers` (0 = all cores) + `--cache-dir`.
+fn campaign_of(args: &Args) -> Result<FlowCampaign> {
+    let workers = match args.flag_usize("workers", 0)? {
+        0 => default_workers(),
+        n => n,
+    };
+    let mut campaign = FlowCampaign::with_workers(workers);
+    if let Some(dir) = args.flag("cache-dir") {
+        campaign = campaign.with_cache_dir(dir)?;
+    }
+    Ok(campaign)
 }
 
 fn backend_of(args: &Args) -> Result<(SimBackend, Coordinator)> {
@@ -161,7 +188,12 @@ fn dispatch(args: &Args) -> Result<()> {
                 .into_iter()
                 .find(|l| l.name == lib_name)
                 .with_context(|| format!("unknown library {lib_name:?}"))?;
-            let r = run_flow(&cfg, &lib, &FlowOpts::default())?;
+            let campaign = campaign_of(args)?;
+            let r = campaign.run_one(&cfg, &lib, &FlowOpts::default())?;
+            if args.flag_bool("json") {
+                print!("{}", artifacts::flow_report_json(&r).pretty());
+                return Ok(());
+            }
             println!(
                 "{} on {}: die {:.1} um2 ({:.4} mm2), leakage {:.3} uW, total {:.3} mW,\n\
                  fmax {:.0} MHz, latency {:.1} ns, {} instances ({} macros), wirelength {:.0} um",
@@ -187,6 +219,14 @@ fn dispatch(args: &Args) -> Result<()> {
                 r.runtimes.pnr_s(),
                 r.runtimes.full_flow_s()
             );
+            if campaign.cache().is_some() {
+                println!(
+                    "cache: {} hit / {} miss ({})",
+                    campaign.cache_hits(),
+                    campaign.cache_misses(),
+                    if campaign.cache_hits() > 0 { "served from disk; runtimes are from the populating run" } else { "stored for next time" }
+                );
+            }
             if args.flag_bool("layout") {
                 let rtl = generate_column(&cfg)?;
                 let d = tnngen::eda::synthesize(&rtl.netlist, &lib);
@@ -229,14 +269,27 @@ fn dispatch(args: &Args) -> Result<()> {
         "forecast" => {
             let coord = Coordinator::native();
             let full = args.flag_bool("full");
-            let fc = coord.train_forecaster(
+            let campaign = campaign_of(args)?;
+            let fc = coord.train_forecaster_with(
                 &experiments::forecast_sweep(full),
                 &tnn7(),
                 &FlowOpts::default(),
+                &campaign,
             )?;
+            let prediction = match args.flag("syn") {
+                Some(syn) => Some(fc.predict(syn.parse()?)),
+                None => None,
+            };
+            if args.flag_bool("json") {
+                print!("{}", artifacts::forecaster_json(&fc, prediction.as_ref()).pretty());
+                return Ok(());
+            }
             println!(
-                "trained on {} TNN7 flows: Area = {:.3}*syn + {:.1} (R2 {:.4}), Leak = {:.5}*syn + {:.3} (R2 {:.4})",
+                "trained on {} TNN7 flows ({} workers, cache {} hit / {} miss): Area = {:.3}*syn + {:.1} (R2 {:.4}), Leak = {:.5}*syn + {:.3} (R2 {:.4})",
                 fc.points.len(),
+                campaign.workers(),
+                campaign.cache_hits(),
+                campaign.cache_misses(),
                 fc.area_fit.0,
                 fc.area_fit.1,
                 fc.area_fit.2,
@@ -244,17 +297,16 @@ fn dispatch(args: &Args) -> Result<()> {
                 fc.leak_fit.1,
                 fc.leak_fit.2
             );
-            if let Some(syn) = args.flag("syn") {
-                let syn: usize = syn.parse()?;
-                let f = fc.predict(syn);
+            if let Some(f) = prediction {
                 println!(
-                    "forecast for {syn} synapses: {:.1} um2, {:.3} uW leakage (no EDA run)",
-                    f.area_um2, f.leakage_uw
+                    "forecast for {} synapses: {:.1} um2, {:.3} uW leakage (no EDA run)",
+                    f.synapse_count, f.area_um2, f.leakage_uw
                 );
             }
             Ok(())
         }
         "reproduce" => {
+            let t0 = std::time::Instant::now();
             let effort = if args.flag_bool("fast") { Effort::fast() } else { Effort::full() };
             let all = args.flag_bool("all");
             let table = args.flag("table");
@@ -262,32 +314,84 @@ fn dispatch(args: &Args) -> Result<()> {
             if !all && table.is_none() && fig.is_none() {
                 bail!("reproduce needs --table N, --fig N or --all");
             }
+            let json = args.flag_bool("json");
+            let campaign = campaign_of(args)?;
+            // In --json mode the ASCII tables are suppressed from stdout;
+            // they still go into the campaign document's "renders" map and
+            // target/reports/ receives the CSV+JSON artifacts either way.
+            let mut renders: Vec<(String, String)> = Vec::new();
+            let mut show = |name: &str, s: String| {
+                if !json {
+                    println!("{s}");
+                }
+                renders.push((name.to_string(), s));
+            };
             let want_t = |n: &str| all || table == Some(n);
             let want_f = |n: &str| all || fig == Some(n);
+            let mut campaign_flows: Vec<FlowReport> = Vec::new();
+            let mut forecaster: Option<Forecaster> = None;
             if want_t("2") {
                 let (backend, coord) = backend_of(args)?;
-                println!("{}", experiments::table2(effort, backend, &coord)?);
+                show("table2", experiments::table2(effort, backend, &coord)?);
             }
             if want_t("3") || want_t("4") || want_t("5") || want_f("4") {
-                let flows = experiments::run_paper_flows(effort)?;
+                let flows = experiments::run_paper_flows_with(effort, &campaign)?;
                 if want_t("3") {
-                    println!("{}", experiments::table3(&flows, effort)?);
+                    show("table3", experiments::table3(&flows, effort)?);
                 }
                 if want_t("4") {
-                    println!("{}", experiments::table4(&flows, effort)?);
+                    show("table4", experiments::table4(&flows, effort)?);
                     if let Some(s) = experiments::largest_column_summary(&flows) {
-                        println!("{s}");
+                        show("largest_column", s);
                     }
                 }
                 if want_t("5") || want_f("4") {
-                    println!("{}", experiments::table5_fig4(&flows, effort)?);
+                    let (rendered, fc) =
+                        experiments::table5_fig4_with(&flows, effort, &campaign)?;
+                    show("table5_fig4", rendered);
+                    forecaster = Some(fc);
                 }
+                campaign_flows = flows;
             }
             if want_f("2") {
-                println!("{}", experiments::fig2(effort)?);
+                let (rendered, flows) = experiments::fig2_with(effort, &campaign)?;
+                show("fig2", rendered);
+                campaign_flows.extend(flows);
             }
             if want_f("3") {
-                println!("{}", experiments::fig3(effort)?);
+                let (rendered, flows) = experiments::fig3_with(effort, &campaign)?;
+                show("fig3", rendered);
+                campaign_flows.extend(flows);
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+            if json {
+                print!(
+                    "{}",
+                    artifacts::campaign_json(
+                        &campaign_flows,
+                        &renders,
+                        forecaster.as_ref(),
+                        campaign.workers(),
+                        campaign.cache_hits(),
+                        campaign.cache_misses(),
+                        wall_s,
+                    )
+                    .pretty()
+                );
+            } else if campaign.cache().is_some() {
+                println!(
+                    "campaign: {} workers, cache {} hits / {} misses, {:.2}s (artifacts in target/reports/)",
+                    campaign.workers(),
+                    campaign.cache_hits(),
+                    campaign.cache_misses(),
+                    wall_s
+                );
+            } else {
+                println!(
+                    "campaign: {} workers, {:.2}s (artifacts in target/reports/; use --cache-dir to make re-runs incremental)",
+                    campaign.workers(),
+                    wall_s
+                );
             }
             Ok(())
         }

@@ -1,0 +1,647 @@
+//! Machine-readable campaign artifacts: a dependency-free JSON value type
+//! (emitter + parser, the offline substitute for `serde_json`) and the
+//! builders that turn [`FlowReport`]s and [`Forecaster`]s into the
+//! `*.json` files written next to the ASCII tables by `tnngen reproduce`.
+//!
+//! Two views of a flow report exist on purpose:
+//!
+//! * [`flow_metrics_json`] — only the **deterministic** quantities (area,
+//!   leakage, timing, power). Byte-identical across runs and worker counts;
+//!   this is what the campaign determinism tests compare.
+//! * [`flow_report_json`] — everything, including the measured wall-clock
+//!   [`StageRuntimes`]. This is the cache/file format; wall-clock fields
+//!   are measurement data and are excluded from the determinism contract.
+//!
+//! Number formatting uses Rust's shortest-round-trip `Display` for `f64`,
+//! so emit → parse → emit is byte-stable (the flow-cache warm path relies
+//! on this).
+
+use std::fmt::Write as _;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::eda::{FlowReport, StageRuntimes};
+use crate::forecast::{Forecast, Forecaster};
+
+/// A JSON value (object keys keep insertion order, so rendering is
+/// deterministic).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null` (also used for non-finite floats).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// An integer (emitted without a decimal point).
+    Int(i64),
+    /// A double-precision number (shortest round-trip rendering).
+    Num(f64),
+    /// A string (escaped on render).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object as an ordered key/value list.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Build an object from `(&str, Json)` pairs, preserving order.
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: `Num` directly, `Int` widened to `f64`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Integer view: `Int` directly, whole-valued `Num` converted.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::Num(v) if v.fract() == 0.0 && v.abs() < 9.0e15 => Some(*v as i64),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Array view.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Render as pretty-printed JSON (2-space indent, trailing newline).
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(v) => {
+                if v.is_finite() {
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    pad(out, indent + 1);
+                    item.write(out, indent + 1);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(entries) => {
+                if entries.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in entries.iter().enumerate() {
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                    if i + 1 < entries.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn pad(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document produced by [`Json::pretty`] (accepts any
+/// whitespace; escapes limited to the ones the emitter writes plus
+/// `\uXXXX` BMP code points — enough for cache/file round-trips).
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    ensure!(p.pos == p.bytes.len(), "trailing characters at byte {}", p.pos);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t') | Some(b'\n') | Some(b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", c as char, self.pos)
+        }
+    }
+
+    fn lit(&mut self, word: &str) -> Result<()> {
+        let end = self.pos + word.len();
+        if end <= self.bytes.len() && &self.bytes[self.pos..end] == word.as_bytes() {
+            self.pos = end;
+            Ok(())
+        } else {
+            bail!("expected {word:?} at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => {
+                self.lit("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                Ok(Json::Null)
+            }
+            Some(_) => self.number(),
+            None => bail!("unexpected end of JSON"),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut entries = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(entries));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            entries.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(entries));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    /// Decode the single UTF-8 scalar at `pos` in O(1) (looking at most 4
+    /// bytes ahead — NOT the whole remaining buffer, which would make
+    /// string parsing quadratic). The input came from a `&str`, so a
+    /// non-empty position always starts a valid scalar; the 4-byte window
+    /// may merely cut the FOLLOWING character short, which `valid_up_to`
+    /// handles.
+    fn next_char(&mut self) -> Result<char> {
+        let end = (self.pos + 4).min(self.bytes.len());
+        let chunk = &self.bytes[self.pos..end];
+        let prefix = match std::str::from_utf8(chunk) {
+            Ok(s) => s,
+            Err(e) if e.valid_up_to() > 0 => {
+                std::str::from_utf8(&chunk[..e.valid_up_to()]).unwrap()
+            }
+            Err(e) => bail!("invalid UTF-8 in string: {e}"),
+        };
+        let Some(c) = prefix.chars().next() else { bail!("unterminated string") };
+        self.pos += c.len_utf8();
+        Ok(c)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.next_char()?;
+            match c {
+                '"' => return Ok(s),
+                '\\' => {
+                    let Some(e) = self.peek() else { bail!("unterminated escape") };
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000c}'),
+                        b'u' => {
+                            ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| anyhow::anyhow!("bad \\u escape: {e}"))?;
+                            self.pos += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("unsupported escape \\{}", other as char),
+                    }
+                }
+                c => s.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9') | Some(b'-') | Some(b'+') | Some(b'.') | Some(b'e') | Some(b'E')
+        ) {
+            self.pos += 1;
+        }
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        ensure!(!tok.is_empty(), "expected a number at byte {start}");
+        if tok.contains(['.', 'e', 'E']) {
+            Ok(Json::Num(tok.parse::<f64>()?))
+        } else {
+            match tok.parse::<i64>() {
+                Ok(i) => Ok(Json::Int(i)),
+                Err(_) => Ok(Json::Num(tok.parse::<f64>()?)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flow-report / forecaster artifact builders
+// ---------------------------------------------------------------------------
+
+/// Schema tag written into every full flow-report document.
+pub const FLOW_REPORT_SCHEMA: &str = "tnngen.flow_report/v1";
+
+/// Schema tag for the deterministic metrics-only view.
+pub const FLOW_METRICS_SCHEMA: &str = "tnngen.flow_metrics/v1";
+
+fn metric_entries(r: &FlowReport) -> Vec<(String, Json)> {
+    let entries = vec![
+        ("design", Json::Str(r.design.clone())),
+        ("tag", Json::Str(r.tag.clone())),
+        ("library", Json::Str(r.library.clone())),
+        ("synapse_count", Json::Int(r.synapse_count as i64)),
+        ("gates_in", Json::Int(r.gates_in as i64)),
+        ("instances", Json::Int(r.instances as i64)),
+        ("macro_instances", Json::Int(r.macro_instances as i64)),
+        ("die_area_um2", Json::Num(r.die_area_um2)),
+        ("cell_area_um2", Json::Num(r.cell_area_um2)),
+        ("leakage_uw", Json::Num(r.leakage_uw)),
+        ("latency_ns", Json::Num(r.latency_ns)),
+        ("wirelength_um", Json::Num(r.wirelength_um)),
+        (
+            "power",
+            Json::obj(vec![
+                ("leakage_nw", Json::Num(r.power.leakage_nw)),
+                ("dynamic_nw", Json::Num(r.power.dynamic_nw)),
+                ("total_nw", Json::Num(r.power.total_nw)),
+                ("freq_mhz", Json::Num(r.power.freq_mhz)),
+                ("activity", Json::Num(r.power.activity)),
+            ]),
+        ),
+        (
+            "timing",
+            Json::obj(vec![
+                ("critical_path_ps", Json::Num(r.timing.critical_path_ps)),
+                ("clock_period_ps", Json::Num(r.timing.clock_period_ps)),
+                ("fmax_mhz", Json::Num(r.timing.fmax_mhz)),
+                ("depth", Json::Int(r.timing.depth as i64)),
+                (
+                    "critical_path",
+                    Json::Arr(r.timing.critical_path.iter().map(|s| Json::Str(s.clone())).collect()),
+                ),
+            ]),
+        ),
+    ];
+    entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+/// JSON for the measured per-stage wall-clock runtimes (seconds).
+pub fn stage_runtimes_json(rt: &StageRuntimes) -> Json {
+    Json::obj(vec![
+        ("rtl_gen_s", Json::Num(rt.rtl_gen_s)),
+        ("synthesis_s", Json::Num(rt.synthesis_s)),
+        ("placement_s", Json::Num(rt.placement_s)),
+        ("routing_s", Json::Num(rt.routing_s)),
+        ("sta_s", Json::Num(rt.sta_s)),
+        ("power_s", Json::Num(rt.power_s)),
+        ("pnr_s", Json::Num(rt.pnr_s())),
+        ("full_flow_s", Json::Num(rt.full_flow_s())),
+    ])
+}
+
+/// Deterministic metrics view of a flow report (no wall-clock fields).
+/// Byte-identical for any worker count and across cold/warm cache runs.
+pub fn flow_metrics_json(r: &FlowReport) -> Json {
+    let mut entries = vec![("schema".to_string(), Json::Str(FLOW_METRICS_SCHEMA.to_string()))];
+    entries.extend(metric_entries(r));
+    Json::Obj(entries)
+}
+
+/// Full-fidelity flow report (metrics + measured [`StageRuntimes`]); the
+/// on-disk flow-cache format. Every field of [`FlowReport`] round-trips.
+pub fn flow_report_json(r: &FlowReport) -> Json {
+    let mut entries = vec![("schema".to_string(), Json::Str(FLOW_REPORT_SCHEMA.to_string()))];
+    entries.extend(metric_entries(r));
+    entries.push(("runtimes".to_string(), stage_runtimes_json(&r.runtimes)));
+    Json::Obj(entries)
+}
+
+/// JSON for a trained forecaster: both fits plus the training points, and
+/// optionally one prediction (the `forecast --syn N --json` output).
+pub fn forecaster_json(fc: &Forecaster, prediction: Option<&Forecast>) -> Json {
+    let fit = |f: (f64, f64, f64)| {
+        Json::obj(vec![
+            ("slope", Json::Num(f.0)),
+            ("intercept", Json::Num(f.1)),
+            ("r2", Json::Num(f.2)),
+        ])
+    };
+    let mut entries = vec![
+        ("schema", Json::Str("tnngen.forecaster/v1".to_string())),
+        ("library", Json::Str(fc.library.clone())),
+        ("area_fit", fit(fc.area_fit)),
+        ("leakage_fit", fit(fc.leak_fit)),
+        ("pnr_runtime_fit", fit(fc.pnr_fit)),
+        (
+            "training_points",
+            Json::Arr(
+                fc.points
+                    .iter()
+                    .map(|&(syn, area, leak, pnr_s)| {
+                        Json::obj(vec![
+                            ("synapses", Json::Int(syn as i64)),
+                            ("area_um2", Json::Num(area)),
+                            ("leakage_uw", Json::Num(leak)),
+                            ("pnr_s", Json::Num(pnr_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(p) = prediction {
+        entries.push((
+            "prediction",
+            Json::obj(vec![
+                ("synapses", Json::Int(p.synapse_count as i64)),
+                ("area_um2", Json::Num(p.area_um2)),
+                ("leakage_uw", Json::Num(p.leakage_uw)),
+                ("pnr_s", Json::Num(p.pnr_s)),
+            ]),
+        ));
+    }
+    Json::obj(entries)
+}
+
+/// The `reproduce --json` document: campaign stats, every flow report
+/// the campaign executed (full fidelity, in run order — including the
+/// Fig-2/Fig-3 flows), the rendered text of every requested table/figure
+/// (`renders`, so `--json` is self-contained even for sections like
+/// Table II that run no hardware flow), and — when a forecaster was
+/// trained — forecast-vs-actual error columns per flow of the
+/// forecaster's library.
+pub fn campaign_json(
+    flows: &[FlowReport],
+    renders: &[(String, String)],
+    forecaster: Option<&Forecaster>,
+    workers: usize,
+    cache_hits: usize,
+    cache_misses: usize,
+    wall_s: f64,
+) -> Json {
+    // Forecast columns only make sense for flows on their natural
+    // (utilization-derived) floorplan: Fig 2 places small columns on a
+    // shared die padded to the largest of the three, and comparing the
+    // forecast of a design's natural area against that padded die would
+    // read as forecaster error. Natural placements satisfy
+    // die ≈ cell / TARGET_UTILIZATION (see `eda::placement`).
+    let natural_floorplan = |r: &FlowReport| {
+        r.die_area_um2 > 0.0
+            && ((r.die_area_um2 - r.cell_area_um2 / crate::eda::placement::TARGET_UTILIZATION)
+                .abs()
+                / r.die_area_um2)
+                < 0.01
+    };
+    let flow_docs: Vec<Json> = flows
+        .iter()
+        .map(|r| {
+            let mut doc = flow_report_json(r);
+            if let Some(fc) = forecaster {
+                if fc.library == r.library && natural_floorplan(r) {
+                    let (area_err, leak_err) = fc.errors(r);
+                    let f = fc.predict(r.synapse_count);
+                    if let Json::Obj(entries) = &mut doc {
+                        entries.push((
+                            "forecast".to_string(),
+                            Json::obj(vec![
+                                ("area_um2", Json::Num(f.area_um2)),
+                                ("leakage_uw", Json::Num(f.leakage_uw)),
+                                ("area_err_pct", Json::Num(area_err)),
+                                ("leakage_err_pct", Json::Num(leak_err)),
+                            ]),
+                        ));
+                    }
+                }
+            }
+            doc
+        })
+        .collect();
+    let mut entries = vec![
+        ("schema", Json::Str("tnngen.campaign/v1".to_string())),
+        ("workers", Json::Int(workers as i64)),
+        ("cache_hits", Json::Int(cache_hits as i64)),
+        ("cache_misses", Json::Int(cache_misses as i64)),
+        ("wall_s", Json::Num(wall_s)),
+        (
+            "renders",
+            Json::Obj(
+                renders
+                    .iter()
+                    .map(|(name, text)| (name.clone(), Json::Str(text.clone())))
+                    .collect(),
+            ),
+        ),
+        ("flows", Json::Arr(flow_docs)),
+    ];
+    if let Some(fc) = forecaster {
+        entries.push(("forecaster", forecaster_json(fc, None)));
+    }
+    Json::obj(entries)
+}
+
+/// Write a JSON artifact under `target/reports/` (same directory as the
+/// CSV artifacts; created on demand). Returns the path written.
+pub fn save_json(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {
+    super::save_report(name, &value.pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let doc = Json::obj(vec![
+            ("s", Json::Str("a \"quoted\"\nline\\".to_string())),
+            ("i", Json::Int(-42)),
+            ("f", Json::Num(1.25)),
+            ("tiny", Json::Num(5.41e-3)),
+            ("b", Json::Bool(true)),
+            ("n", Json::Null),
+            ("arr", Json::Arr(vec![Json::Int(1), Json::Str("x,y".to_string())])),
+            ("empty_arr", Json::Arr(vec![])),
+            ("empty_obj", Json::Obj(vec![])),
+        ]);
+        let text = doc.pretty();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, doc);
+        // Byte-stability: emit(parse(emit(x))) == emit(x).
+        assert_eq!(back.pretty(), text);
+    }
+
+    #[test]
+    fn float_display_roundtrips_exactly() {
+        for v in [0.1, 1.0 / 3.0, 5.56, 1e-9, 123456.789, 2.2250738585072014e-8] {
+            let s = format!("{v}");
+            assert_eq!(s.parse::<f64>().unwrap(), v, "{s}");
+        }
+    }
+
+    #[test]
+    fn non_ascii_strings_roundtrip() {
+        let doc = Json::obj(vec![
+            ("units", Json::Str("µm² ≤ 5.3 — naïve ✓".to_string())),
+            ("mixed", Json::Str("aµb".to_string())),
+        ]);
+        let back = parse(&doc.pretty()).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("{\"a\": 1} extra").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let doc = parse("{\"a\": 3, \"b\": 2.5, \"c\": [\"x\"]}").unwrap();
+        assert_eq!(doc.get("a").and_then(Json::as_i64), Some(3));
+        assert_eq!(doc.get("a").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(doc.get("b").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(doc.get("c").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        assert!(doc.get("missing").is_none());
+    }
+}

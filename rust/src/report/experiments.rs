@@ -1,7 +1,14 @@
 //! Regeneration of every table and figure in the paper's evaluation
 //! section. Shared by the bench harnesses (`rust/benches/*.rs`) and the
 //! `tnngen reproduce` CLI command; each function returns the rendered
-//! table and writes CSV data under `target/reports/`.
+//! table and writes CSV **and JSON** data under `target/reports/`.
+//!
+//! All hardware flows run through the parallel, cached [`FlowCampaign`]
+//! runner: `reproduce --workers N` fans designs out one flow per worker
+//! with deterministic result order, and `--cache-dir` makes repeat runs
+//! skip completed flows entirely. The plain (`campaign`-less) entry
+//! points keep the PR-1 bench harnesses working and default to all cores
+//! with no cache.
 
 use anyhow::Result;
 
@@ -14,26 +21,32 @@ use crate::config::ColumnConfig;
 use crate::coordinator::{Coordinator, SimBackend};
 use crate::data::load_benchmark;
 use crate::eda::{
-    all_libraries, asap7, run_flow, tnn7, FlowOpts, FlowReport, PlaceOpts,
+    all_libraries, asap7, tnn7, FlowCampaign, FlowJob, FlowOpts, FlowReport, PlaceOpts,
 };
 use crate::forecast::Forecaster;
+use crate::report::artifacts::{save_json, Json};
 use crate::report::{f1, f2, f3, pct, save_report, Table};
 
 /// Experiment effort: `full` reproduces every row; fast mode trims the
 /// largest designs so tests and quick runs stay snappy.
 #[derive(Debug, Clone, Copy)]
 pub struct Effort {
+    /// Reproduce all seven designs (vs the three smallest).
     pub full: bool,
     /// Samples per split for clustering data.
     pub n_per_split: usize,
+    /// Training epochs for the clustering pipeline.
     pub epochs: usize,
+    /// Master seed for data generation and training.
     pub seed: u64,
 }
 
 impl Effort {
+    /// Full paper reproduction (all seven designs).
     pub fn full() -> Self {
         Effort { full: true, n_per_split: 60, epochs: 4, seed: 42 }
     }
+    /// Trimmed reproduction (three smallest designs, fewer epochs).
     pub fn fast() -> Self {
         Effort { full: false, n_per_split: 24, epochs: 2, seed: 42 }
     }
@@ -45,6 +58,18 @@ impl Effort {
         } else {
             // Fast mode: the three smallest designs.
             all.into_iter().filter(|c| c.synapse_count() <= 304).collect()
+        }
+    }
+
+    /// Flow options used for the paper tables at this effort (placement
+    /// SA effort is halved in fast mode).
+    pub fn flow_opts(&self) -> FlowOpts {
+        FlowOpts {
+            place: PlaceOpts {
+                moves_per_instance: if self.full { 8 } else { 4 },
+                ..Default::default()
+            },
+            ..Default::default()
         }
     }
 }
@@ -88,22 +113,31 @@ pub fn table2(effort: Effort, backend: SimBackend, coord: &Coordinator) -> Resul
         t.render()
     );
     save_report("table2.csv", &t.to_csv())?;
+    save_json("table2.json", &t.to_json())?;
     Ok(rendered)
 }
 
-/// Shared flow runner for Tables III/IV (+ §III-B derived claims).
-pub fn run_paper_flows(effort: Effort) -> Result<Vec<FlowReport>> {
-    let mut out = Vec::new();
+/// The campaign job list behind Tables III/IV/V: every effort design
+/// crossed with every library, in deterministic (design-major) order.
+pub fn paper_flow_jobs(effort: Effort) -> Vec<FlowJob> {
+    let mut jobs = Vec::new();
     for cfg in effort.configs() {
         for lib in all_libraries() {
-            let opts = FlowOpts {
-                place: PlaceOpts { moves_per_instance: if effort.full { 8 } else { 4 }, ..Default::default() },
-                ..Default::default()
-            };
-            out.push(run_flow(&cfg, &lib, &opts)?);
+            jobs.push(FlowJob::new(cfg.clone(), lib, effort.flow_opts()));
         }
     }
-    Ok(out)
+    jobs
+}
+
+/// Shared flow runner for Tables III/IV (+ §III-B derived claims), on a
+/// default campaign (all cores, no cache).
+pub fn run_paper_flows(effort: Effort) -> Result<Vec<FlowReport>> {
+    run_paper_flows_with(effort, &FlowCampaign::default())
+}
+
+/// [`run_paper_flows`] on an explicit campaign (worker count + cache).
+pub fn run_paper_flows_with(effort: Effort, campaign: &FlowCampaign) -> Result<Vec<FlowReport>> {
+    campaign.run(paper_flow_jobs(effort))
 }
 
 fn find<'a>(flows: &'a [FlowReport], tag: &str, lib: &str) -> Option<&'a FlowReport> {
@@ -148,6 +182,7 @@ pub fn table3(flows: &[FlowReport], effort: Effort) -> Result<String> {
         avg_delta
     );
     save_report("table3.csv", &t.to_csv())?;
+    save_json("table3.json", &t.to_json())?;
     Ok(rendered)
 }
 
@@ -189,6 +224,7 @@ pub fn table4(flows: &[FlowReport], effort: Effort) -> Result<String> {
         avg_delta
     );
     save_report("table4.csv", &t.to_csv())?;
+    save_json("table4.json", &t.to_json())?;
     Ok(rendered)
 }
 
@@ -204,29 +240,59 @@ pub fn largest_column_summary(flows: &[FlowReport]) -> Option<String> {
     ))
 }
 
-/// Fig 2: three small columns on one floorplan + the largest column;
-/// computation latencies, plus ASCII layout density maps.
+/// Fig 2 on a default campaign (all cores, no cache).
 pub fn fig2(effort: Effort) -> Result<String> {
+    Ok(fig2_with(effort, &FlowCampaign::default())?.0)
+}
+
+/// Fig 2: three small columns on one floorplan + the largest column;
+/// computation latencies, plus ASCII layout density maps. Probe flows
+/// (including the expensive 270x25 column in full effort) and
+/// fixed-floorplan flows fan out over the campaign workers. Returns the
+/// rendered figure plus every flow report it ran (probes, placed,
+/// largest), for the `--json` campaign document.
+pub fn fig2_with(effort: Effort, campaign: &FlowCampaign) -> Result<(String, Vec<FlowReport>)> {
     let lib = tnn7();
     let mut out = String::new();
     let mut t = Table::new(&["Column", "Latency (ns)", "paper (ns)", "fmax (MHz)", "die (um2)"]);
     // Shared floorplan sized for the largest of the three small columns.
     let small_tags = ["65x2", "96x2", "152x2"];
-    let mut shared_side = 0.0f64;
-    let mut reports = Vec::new();
-    for cfg in paper_configs() {
-        if small_tags.contains(&cfg.tag().as_str()) {
-            let probe = run_flow(&cfg, &lib, &FlowOpts::default())?;
-            shared_side = shared_side.max(probe.die_area_um2.sqrt());
-            reports.push((cfg, probe));
-        }
+    let small_cfgs: Vec<ColumnConfig> = paper_configs()
+        .into_iter()
+        .filter(|c| small_tags.contains(&c.tag().as_str()))
+        .collect();
+    // The largest column (full effort only) shares the probe batch so the
+    // most expensive flow overlaps the small ones instead of running
+    // serially after both barriers; it is excluded from the shared_side
+    // fold (it gets its own natural floorplan).
+    let largest_cfg = if effort.full {
+        paper_configs().into_iter().find(|c| c.tag() == "270x25")
+    } else {
+        None
+    };
+    let mut probe_jobs: Vec<FlowJob> = small_cfgs
+        .iter()
+        .map(|cfg| FlowJob::new(cfg.clone(), lib.clone(), FlowOpts::default()))
+        .collect();
+    if let Some(cfg) = &largest_cfg {
+        probe_jobs.push(FlowJob::new(cfg.clone(), lib.clone(), FlowOpts::default()));
     }
-    for (cfg, _probe) in &reports {
-        let opts = FlowOpts {
-            place: PlaceOpts { fixed_die_um: Some(shared_side), ..Default::default() },
-            ..Default::default()
-        };
-        let r = run_flow(cfg, &lib, &opts)?;
+    let mut probes = campaign.run(probe_jobs)?;
+    let largest_report = largest_cfg.as_ref().map(|_| probes.remove(small_cfgs.len()));
+    let shared_side = probes
+        .iter()
+        .map(|p| p.die_area_um2.sqrt())
+        .fold(0.0f64, f64::max);
+    let fixed_opts = FlowOpts {
+        place: PlaceOpts { fixed_die_um: Some(shared_side), ..Default::default() },
+        ..Default::default()
+    };
+    let placed_jobs: Vec<FlowJob> = small_cfgs
+        .iter()
+        .map(|cfg| FlowJob::new(cfg.clone(), lib.clone(), fixed_opts.clone()))
+        .collect();
+    let placed = campaign.run(placed_jobs)?;
+    for (cfg, r) in small_cfgs.iter().zip(&placed) {
         let paper = FIG2_PAPER.iter().find(|(t2, _)| *t2 == cfg.tag()).unwrap().1;
         t.row(&[
             cfg.tag(),
@@ -236,17 +302,17 @@ pub fn fig2(effort: Effort) -> Result<String> {
             f1(r.die_area_um2),
         ]);
     }
-    if effort.full {
-        if let Some(cfg) = paper_configs().into_iter().find(|c| c.tag() == "270x25") {
-            let r = run_flow(&cfg, &lib, &FlowOpts::default())?;
-            t.row(&[
-                cfg.tag(),
-                f2(r.latency_ns),
-                f2(180.0),
-                f1(r.timing.fmax_mhz),
-                f1(r.die_area_um2),
-            ]);
-        }
+    let mut all_flows = probes;
+    all_flows.extend(placed);
+    if let (Some(cfg), Some(r)) = (&largest_cfg, largest_report) {
+        t.row(&[
+            cfg.tag(),
+            f2(r.latency_ns),
+            f2(180.0),
+            f1(r.timing.fmax_mhz),
+            f1(r.die_area_um2),
+        ]);
+        all_flows.push(r);
     }
     out.push_str(&format!(
         "Fig 2 — computation latency, three columns on a {:.0}x{:.0} um floorplan (TNN7)\n{}",
@@ -255,12 +321,21 @@ pub fn fig2(effort: Effort) -> Result<String> {
         t.render()
     ));
     save_report("fig2.csv", &t.to_csv())?;
-    Ok(out)
+    save_json("fig2.json", &t.to_json())?;
+    Ok((out, all_flows))
+}
+
+/// Fig 3 on a default campaign (all cores, no cache).
+pub fn fig3(effort: Effort) -> Result<String> {
+    Ok(fig3_with(effort, &FlowCampaign::default())?.0)
 }
 
 /// Fig 3: place-and-route runtime, ASAP7 vs TNN7, vs column size. Also
-/// reports the §III-C synthesis-speedup and full-flow claims.
-pub fn fig3(effort: Effort) -> Result<String> {
+/// reports the §III-C synthesis-speedup and full-flow claims. Runtime
+/// columns are measured wall-clock (from [`crate::eda::StageRuntimes`]);
+/// on a warm cache they are the timings of the run that populated it.
+/// Returns the rendered figure plus every flow report it ran.
+pub fn fig3_with(effort: Effort, campaign: &FlowCampaign) -> Result<(String, Vec<FlowReport>)> {
     let mut t = Table::new(&[
         "Column",
         "Synapses",
@@ -272,11 +347,18 @@ pub fn fig3(effort: Effort) -> Result<String> {
         "synth speedup",
         "full-flow speedup",
     ]);
+    let configs = effort.configs();
+    let mut jobs = Vec::new();
+    for cfg in &configs {
+        jobs.push(FlowJob::new(cfg.clone(), asap7(), FlowOpts::default()));
+        jobs.push(FlowJob::new(cfg.clone(), tnn7(), FlowOpts::default()));
+    }
+    let flows = campaign.run(jobs)?;
     let mut pnr_gains = Vec::new();
     let mut last_full_gain = 0.0;
-    for cfg in effort.configs() {
-        let a = run_flow(&cfg, &asap7(), &FlowOpts::default())?;
-        let t7 = run_flow(&cfg, &tnn7(), &FlowOpts::default())?;
+    for (i, cfg) in configs.iter().enumerate() {
+        let a = &flows[2 * i];
+        let t7 = &flows[2 * i + 1];
         let pnr_speedup = a.runtimes.pnr_s() / t7.runtimes.pnr_s().max(1e-9);
         let synth_speedup = a.runtimes.synthesis_s / t7.runtimes.synthesis_s.max(1e-9);
         let full = a.runtimes.full_flow_s() / t7.runtimes.full_flow_s().max(1e-9);
@@ -303,7 +385,8 @@ pub fn fig3(effort: Effort) -> Result<String> {
         last_full_gain
     );
     save_report("fig3.csv", &t.to_csv())?;
-    Ok(rendered)
+    save_json("fig3.json", &t.to_json())?;
+    Ok((rendered, flows))
 }
 
 /// Training sweep sizes for the forecaster (synapse counts spanning the
@@ -329,12 +412,29 @@ pub fn forecast_sweep(full: bool) -> Vec<(usize, usize)> {
     }
 }
 
-/// Table V + Fig 4: forecast post-layout TNN7 area/leakage from synapse
-/// count; report the fit and per-design errors vs actual flows.
+/// Table V + Fig 4 on a default campaign; returns the rendered text only
+/// (bench-harness compatible).
 pub fn table5_fig4(flows: &[FlowReport], effort: Effort) -> Result<String> {
+    Ok(table5_fig4_with(flows, effort, &FlowCampaign::default())?.0)
+}
+
+/// Table V + Fig 4: forecast post-layout TNN7 area/leakage from synapse
+/// count; report the fit and per-design errors vs actual flows. The
+/// training sweep runs on the campaign (parallel + cached). Returns the
+/// rendered text plus the trained forecaster (for the `--json` artifact).
+/// JSON artifacts carry numeric forecast-vs-actual error columns.
+pub fn table5_fig4_with(
+    flows: &[FlowReport],
+    effort: Effort,
+    campaign: &FlowCampaign,
+) -> Result<(String, Forecaster)> {
     let coord = Coordinator::native();
-    let fc: Forecaster =
-        coord.train_forecaster(&forecast_sweep(effort.full), &tnn7(), &FlowOpts::default())?;
+    let fc: Forecaster = coord.train_forecaster_with(
+        &forecast_sweep(effort.full),
+        &tnn7(),
+        &FlowOpts::default(),
+        campaign,
+    )?;
     let mut t = Table::new(&[
         "Benchmark",
         "Synapses",
@@ -343,6 +443,7 @@ pub fn table5_fig4(flows: &[FlowReport], effort: Effort) -> Result<String> {
         "FC leakage (uW)",
         "leakage err",
     ]);
+    let mut t5_rows: Vec<Json> = Vec::new();
     for cfg in effort.configs() {
         let Some(actual) = find(flows, &cfg.tag(), "TNN7") else { continue };
         let f = fc.predict(cfg.synapse_count());
@@ -355,10 +456,21 @@ pub fn table5_fig4(flows: &[FlowReport], effort: Effort) -> Result<String> {
             f2(f.leakage_uw),
             pct(le),
         ]);
+        t5_rows.push(Json::obj(vec![
+            ("benchmark", Json::Str(cfg.name.clone())),
+            ("synapses", Json::Int(cfg.synapse_count() as i64)),
+            ("forecast_area_um2", Json::Num(f.area_um2)),
+            ("actual_area_um2", Json::Num(actual.die_area_um2)),
+            ("area_err_pct", Json::Num(ae)),
+            ("forecast_leakage_uw", Json::Num(f.leakage_uw)),
+            ("actual_leakage_uw", Json::Num(actual.leakage_uw)),
+            ("leakage_err_pct", Json::Num(le)),
+        ]));
     }
     // Fig 4 data: training points + fit lines.
     let mut fig4 = Table::new(&["synapses", "area_um2", "leakage_uw", "fit_area", "fit_leak"]);
-    for &(syn, area, leak) in &fc.points {
+    let mut fig4_rows: Vec<Json> = Vec::new();
+    for &(syn, area, leak, _pnr_s) in &fc.points {
         let p = fc.predict(syn);
         fig4.row(&[
             syn.to_string(),
@@ -367,10 +479,47 @@ pub fn table5_fig4(flows: &[FlowReport], effort: Effort) -> Result<String> {
             f2(p.area_um2),
             f3(p.leakage_uw),
         ]);
+        fig4_rows.push(Json::obj(vec![
+            ("synapses", Json::Int(syn as i64)),
+            ("area_um2", Json::Num(area)),
+            ("leakage_uw", Json::Num(leak)),
+            ("fit_area_um2", Json::Num(p.area_um2)),
+            ("fit_leakage_uw", Json::Num(p.leakage_uw)),
+        ]));
     }
     save_report("table5.csv", &t.to_csv())?;
     save_report("fig4.csv", &fig4.to_csv())?;
-    Ok(format!(
+    let fits = Json::obj(vec![
+        (
+            "area_fit",
+            Json::obj(vec![
+                ("slope", Json::Num(fc.area_fit.0)),
+                ("intercept", Json::Num(fc.area_fit.1)),
+                ("r2", Json::Num(fc.area_fit.2)),
+                ("paper_slope", Json::Num(PAPER_AREA_FIT.0)),
+                ("paper_intercept", Json::Num(PAPER_AREA_FIT.1)),
+            ]),
+        ),
+        (
+            "leakage_fit",
+            Json::obj(vec![
+                ("slope", Json::Num(fc.leak_fit.0)),
+                ("intercept", Json::Num(fc.leak_fit.1)),
+                ("r2", Json::Num(fc.leak_fit.2)),
+                ("paper_slope", Json::Num(PAPER_LEAK_FIT.0)),
+                ("paper_intercept", Json::Num(PAPER_LEAK_FIT.1)),
+            ]),
+        ),
+    ]);
+    save_json(
+        "table5.json",
+        &Json::obj(vec![("fits", fits.clone()), ("designs", Json::Arr(t5_rows))]),
+    )?;
+    save_json(
+        "fig4.json",
+        &Json::obj(vec![("fits", fits), ("points", Json::Arr(fig4_rows))]),
+    )?;
+    let rendered = format!(
         "Table V — forecasted post-P&R TNN7 area/leakage (trained on {} flow runs)\n{}\n\
          fit: Area = {:.3}*syn + {:.1} (R2={:.4})   [paper: {:.2}*syn + {:.1}]\n\
          fit: Leak = {:.5}*syn + {:.3} (R2={:.4})  [paper: {:.5}*syn + {:.3}]\n",
@@ -386,7 +535,8 @@ pub fn table5_fig4(flows: &[FlowReport], effort: Effort) -> Result<String> {
         fc.leak_fit.2,
         PAPER_LEAK_FIT.0,
         PAPER_LEAK_FIT.1,
-    ))
+    );
+    Ok((rendered, fc))
 }
 
 /// ASCII layout density map (the Fig-2 "layout" visual).
@@ -422,6 +572,23 @@ mod tests {
     fn fast_effort_trims_configs() {
         assert_eq!(Effort::fast().configs().len(), 3);
         assert_eq!(Effort::full().configs().len(), 7);
+    }
+
+    #[test]
+    fn paper_flow_jobs_cover_configs_times_libraries() {
+        let jobs = paper_flow_jobs(Effort::fast());
+        assert_eq!(jobs.len(), 3 * 3);
+        // Design-major deterministic order: 3 libraries per design.
+        assert_eq!(jobs[0].config.tag(), jobs[2].config.tag());
+        assert_eq!(jobs[0].library.name, "FreePDK45");
+        assert_eq!(jobs[1].library.name, "ASAP7");
+        assert_eq!(jobs[2].library.name, "TNN7");
+    }
+
+    #[test]
+    fn effort_flow_opts_scale_with_effort() {
+        assert_eq!(Effort::full().flow_opts().place.moves_per_instance, 8);
+        assert_eq!(Effort::fast().flow_opts().place.moves_per_instance, 4);
     }
 
     #[test]

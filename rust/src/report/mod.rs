@@ -1,6 +1,8 @@
-//! Table and CSV emitters: every paper table/figure is regenerated through
-//! these formatters by the benches and the `tnngen reproduce` CLI command.
+//! Table, CSV and JSON emitters: every paper table/figure is regenerated
+//! through these formatters by the benches and the `tnngen reproduce` CLI
+//! command. [`artifacts`] holds the machine-readable (JSON) side.
 
+pub mod artifacts;
 pub mod experiments;
 
 use std::fmt::Write as _;
@@ -12,15 +14,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append a row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render as an aligned ASCII table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -66,18 +71,61 @@ impl Table {
         }
         out
     }
+
+    /// JSON rendering: an array of objects keyed by header. Cells that
+    /// parse as plain numbers are emitted as numbers (keeping the table's
+    /// paper-precision formatting), everything else as strings. Repeated
+    /// headers (the `paper` reference columns of Tables III/IV) are
+    /// disambiguated with `_2`, `_3`, ... so no column is lost to JSON
+    /// object-key collisions. Output is deterministic — headers keep
+    /// table order.
+    pub fn to_json(&self) -> artifacts::Json {
+        use crate::report::artifacts::Json;
+        let mut keys: Vec<String> = Vec::with_capacity(self.headers.len());
+        for (i, h) in self.headers.iter().enumerate() {
+            // First occurrence keeps the bare header; repeats get _2, _3...
+            let seen = self.headers[..i].iter().filter(|x| *x == h).count();
+            if seen == 0 {
+                keys.push(h.clone());
+            } else {
+                keys.push(format!("{h}_{}", seen + 1));
+            }
+        }
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::Obj(
+                    keys.iter()
+                        .zip(row)
+                        .map(|(k, c)| {
+                            let v = match c.parse::<f64>() {
+                                Ok(x) if x.is_finite() => Json::Num(x),
+                                _ => Json::Str(c.clone()),
+                            };
+                            (k.clone(), v)
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::Arr(rows)
+    }
 }
 
-/// Format helpers matching the paper's precision conventions.
+/// Format to 3 decimals (the paper's rand-index precision).
 pub fn f3(x: f64) -> String {
     format!("{x:.3}")
 }
+/// Format to 2 decimals (power/latency columns).
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
+/// Format to 1 decimal (area columns).
 pub fn f1(x: f64) -> String {
     format!("{x:.1}")
 }
+/// Signed percentage with 2 decimals (forecast-error columns).
 pub fn pct(x: f64) -> String {
     format!("{x:+.2}%")
 }
@@ -124,5 +172,31 @@ mod tests {
     fn format_helpers() {
         assert_eq!(f3(1.23456), "1.235");
         assert_eq!(pct(-1.7), "-1.70%");
+    }
+
+    #[test]
+    fn to_json_types_cells_by_parseability() {
+        use crate::report::artifacts::Json;
+        let mut t = Table::new(&["tag", "area"]);
+        t.row(&["96x2".into(), "1513.05".into()]);
+        let j = t.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("tag"), Some(&Json::Str("96x2".to_string())));
+        assert_eq!(rows[0].get("area").and_then(Json::as_f64), Some(1513.05));
+    }
+
+    #[test]
+    fn to_json_disambiguates_repeated_headers() {
+        use crate::report::artifacts::Json;
+        // Tables III/IV repeat a "paper" reference column per library.
+        let mut t = Table::new(&["lib", "paper", "other", "paper", "paper"]);
+        t.row(&["a".into(), "1".into(), "x".into(), "2".into(), "3".into()]);
+        let j = t.to_json();
+        let row = &j.as_arr().unwrap()[0];
+        assert_eq!(row.get("paper").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(row.get("paper_2").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(row.get("paper_3").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(row.get("other"), Some(&Json::Str("x".to_string())));
     }
 }

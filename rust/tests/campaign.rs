@@ -1,0 +1,187 @@
+//! Campaign determinism + cache conformance tests (ISSUE 2 acceptance):
+//!
+//! * metric outputs are byte-identical for 1 vs N workers,
+//! * a warm cache serves every flow from disk (all stages skipped) and
+//!   round-trips reports byte-for-byte, including the stored runtimes,
+//! * `Forecaster::errors` returns exact percentages on known inputs.
+
+use std::path::PathBuf;
+
+use tnngen::config::ColumnConfig;
+use tnngen::eda::{
+    asap7, run_flow, tnn7, FlowCache, FlowCampaign, FlowJob, FlowOpts, FlowReport,
+};
+use tnngen::forecast::Forecaster;
+use tnngen::report::artifacts::{flow_metrics_json, flow_report_json, Json};
+
+/// Six tiny flows (3 designs x 2 libraries) — the whole suite stays fast.
+fn tiny_jobs() -> Vec<FlowJob> {
+    let mut jobs = Vec::new();
+    for &(p, q) in &[(8usize, 2usize), (12, 2), (16, 2)] {
+        for lib in [asap7(), tnn7()] {
+            jobs.push(FlowJob::new(
+                ColumnConfig::new(&format!("camp{p}x{q}"), "synthetic", p, q),
+                lib,
+                FlowOpts::default(),
+            ));
+        }
+    }
+    jobs
+}
+
+fn metrics_bytes(flows: &[FlowReport]) -> String {
+    Json::Arr(flows.iter().map(flow_metrics_json).collect()).pretty()
+}
+
+fn full_bytes(flows: &[FlowReport]) -> String {
+    Json::Arr(flows.iter().map(flow_report_json).collect()).pretty()
+}
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("{tag}_{}", std::process::id()));
+    // Start clean so reruns of the suite don't see stale entries.
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn campaign_metrics_byte_identical_for_1_vs_n_workers() {
+    let baseline = FlowCampaign::with_workers(1).run(tiny_jobs()).unwrap();
+    let expected = metrics_bytes(&baseline);
+    for workers in [2, 4, 8] {
+        let par = FlowCampaign::with_workers(workers).run(tiny_jobs()).unwrap();
+        assert_eq!(metrics_bytes(&par), expected, "workers={workers}");
+    }
+}
+
+#[test]
+fn warm_cache_skips_all_flows_and_roundtrips_bytes() {
+    let dir = tempdir("tnngen_campaign_warm");
+    let n_jobs = tiny_jobs().len();
+
+    let cold = FlowCampaign::with_workers(4).with_cache_dir(&dir).unwrap();
+    let cold_reports = cold.run(tiny_jobs()).unwrap();
+    assert_eq!(cold.cache_misses(), n_jobs, "cold run must miss every job");
+    assert_eq!(cold.cache_hits(), 0);
+
+    let warm = FlowCampaign::with_workers(4).with_cache_dir(&dir).unwrap();
+    let warm_reports = warm.run(tiny_jobs()).unwrap();
+    assert_eq!(warm.cache_hits(), n_jobs, "warm run must hit every job");
+    assert_eq!(warm.cache_misses(), 0, "warm run must skip every flow stage");
+
+    // Cold vs warm: byte-identical INCLUDING the stored wall-clock
+    // runtimes (the warm run serves the cold run's measurements).
+    assert_eq!(full_bytes(&cold_reports), full_bytes(&warm_reports));
+
+    // And a 1-worker warm run reads back the same bytes again.
+    let warm1 = FlowCampaign::with_workers(1).with_cache_dir(&dir).unwrap();
+    let warm1_reports = warm1.run(tiny_jobs()).unwrap();
+    assert_eq!(full_bytes(&cold_reports), full_bytes(&warm1_reports));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_roundtrip_preserves_every_field() {
+    let dir = tempdir("tnngen_campaign_rt");
+    let cache = FlowCache::new(&dir).unwrap();
+    let cfg = ColumnConfig::new("RoundTrip", "synthetic", 8, 2);
+    let opts = FlowOpts::default();
+    let lib = tnn7();
+    let r = run_flow(&cfg, &lib, &opts).unwrap();
+    let key = FlowCache::key(&cfg, &lib, &opts);
+    cache.store(key, &r).unwrap();
+    let r2 = cache.lookup(key).expect("stored entry must decode");
+    assert_eq!(flow_report_json(&r).pretty(), flow_report_json(&r2).pretty());
+    // Spot-check non-numeric and wall-clock fields explicitly.
+    assert_eq!(r.timing.critical_path, r2.timing.critical_path);
+    assert_eq!(r.timing.depth, r2.timing.depth);
+    assert_eq!(r.runtimes.placement_s, r2.runtimes.placement_s);
+    assert_eq!(r.power.activity, r2.power.activity);
+    assert_eq!(r.design, r2.design);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_cache_entry_is_treated_as_a_miss() {
+    let dir = tempdir("tnngen_campaign_corrupt");
+    let cache = FlowCache::new(&dir).unwrap();
+    let cfg = ColumnConfig::new("Corrupt", "synthetic", 8, 2);
+    let key = FlowCache::key(&cfg, &asap7(), &FlowOpts::default());
+    std::fs::write(cache.path_of(key), "{ not json").unwrap();
+    assert!(cache.lookup(key).is_none());
+    assert_eq!(cache.misses(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn forecaster_errors_exact_on_known_inputs() {
+    // Hand-build a training set on the paper's published TNN7 line, then
+    // craft actuals at exact binary ratios of the prediction so the
+    // expected percentages are exact in f64.
+    let mut rs: Vec<FlowReport> = [(8usize, 2usize), (16, 2)]
+        .iter()
+        .map(|&(p, q)| {
+            let cfg = ColumnConfig::new(&format!("err{p}x{q}"), "synthetic", p, q);
+            run_flow(&cfg, &tnn7(), &FlowOpts::default()).unwrap()
+        })
+        .collect();
+    for (i, r) in rs.iter_mut().enumerate() {
+        r.synapse_count = (i + 1) * 100;
+        r.die_area_um2 = 5.56 * r.synapse_count as f64 - 94.9;
+        r.leakage_uw = 0.00541 * r.synapse_count as f64 - 0.725;
+    }
+    let fc = Forecaster::train(&rs).unwrap();
+
+    // actual = prediction  ->  both errors exactly 0.
+    let mut actual = rs[1].clone();
+    let pred = fc.predict(actual.synapse_count);
+    actual.die_area_um2 = pred.area_um2;
+    actual.leakage_uw = pred.leakage_uw;
+    assert_eq!(fc.errors(&actual), (0.0, 0.0));
+
+    // actual area = prediction / 2  ->  +100% exactly (halving is exact
+    // in binary floating point, and (p - p/2) / (p/2) == 1 exactly).
+    // actual leakage = prediction * 2  ->  -50% exactly.
+    actual.die_area_um2 = pred.area_um2 / 2.0;
+    actual.leakage_uw = pred.leakage_uw * 2.0;
+    let (area_err, leak_err) = fc.errors(&actual);
+    assert_eq!(area_err, 100.0);
+    assert_eq!(leak_err, -50.0);
+
+    // actual area = prediction / 4  ->  +300% (to rounding: 0.75*p is
+    // generally not exactly representable, unlike the halving above).
+    actual.die_area_um2 = pred.area_um2 / 4.0;
+    let (area_err, _) = fc.errors(&actual);
+    assert!((area_err - 300.0).abs() < 1e-9, "{area_err}");
+}
+
+#[test]
+fn forecaster_trains_through_campaign_with_cache() {
+    // Train twice over the same cache dir: the second training must be
+    // all hits and produce identical fits.
+    let dir = tempdir("tnngen_campaign_fc");
+    let coord = tnngen::coordinator::Coordinator::native();
+    let sizes = [(8usize, 2usize), (16, 2), (24, 2)];
+
+    let c1 = FlowCampaign::with_workers(4).with_cache_dir(&dir).unwrap();
+    let fc1 = coord
+        .train_forecaster_with(&sizes, &tnn7(), &FlowOpts::default(), &c1)
+        .unwrap();
+    assert_eq!(c1.cache_misses(), sizes.len());
+
+    let c2 = FlowCampaign::with_workers(2).with_cache_dir(&dir).unwrap();
+    let fc2 = coord
+        .train_forecaster_with(&sizes, &tnn7(), &FlowOpts::default(), &c2)
+        .unwrap();
+    assert_eq!(c2.cache_hits(), sizes.len());
+    assert_eq!(c2.cache_misses(), 0);
+    assert_eq!(fc1.area_fit, fc2.area_fit);
+    assert_eq!(fc1.leak_fit, fc2.leak_fit);
+    // Even the runtime fit matches: warm training reads the cold run's
+    // stored stage runtimes.
+    assert_eq!(fc1.pnr_fit, fc2.pnr_fit);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
