@@ -94,6 +94,36 @@ fn main() {
     });
     println!("batched sweep speedup: {:.2}x", t_sweep_seq / t_sweep_bat);
 
+    banner("L3 perf: serve shard pool (96x2, fixed open-loop offered load)");
+    {
+        use tnngen::serve::{run_open_loop, LoadSpec, ServeOpts, TnnService};
+        let spec = LoadSpec {
+            rps: 3000.0,
+            duration_s: 1.0,
+            learn_every: 0,
+            drain_timeout: std::time::Duration::from_secs(5),
+        };
+        let mut single_p99 = 0.0;
+        for shards in [1usize, default_workers()] {
+            let svc = TnnService::start(cfg.clone(), 1, ServeOpts { shards, ..Default::default() });
+            let r = run_open_loop(&svc, &xs, &spec);
+            svc.shutdown();
+            println!(
+                "serve {shards:>2} shard(s): {:>6.0} rps completed (offered {:.0}), p50 {:>6.0} us  p95 {:>7.0} us  p99 {:>7.0} us, rejected {}",
+                r.throughput_rps, spec.rps, r.latency_p50_us, r.latency_p95_us, r.latency_p99_us, r.rejected
+            );
+            if shards == 1 {
+                single_p99 = r.latency_p99_us;
+            } else if single_p99 > 0.0 && r.latency_p99_us > 0.0 {
+                println!(
+                    "serve p99 improvement 1 -> {shards} shards: {:.2}x at {:.0} rps offered",
+                    single_p99 / r.latency_p99_us,
+                    spec.rps
+                );
+            }
+        }
+    }
+
     banner("L3 perf: gate-level simulator");
     let small = ColumnConfig::new("perf", "synthetic", 12, 2);
     let rtl = generate_column(&small).unwrap();

@@ -70,6 +70,13 @@ impl Args {
         }
     }
 
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
     pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
     }
@@ -97,6 +104,15 @@ mod tests {
         assert!(a.flag_bool("fast"));
         assert_eq!(a.flag_usize("epochs", 4).unwrap(), 8);
         assert_eq!(a.flag_usize("missing", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn parses_f64_flags() {
+        let a = parse(&["serve", "--rps", "1500.5", "--duration=2"]);
+        assert_eq!(a.flag_f64("rps", 100.0).unwrap(), 1500.5);
+        assert_eq!(a.flag_f64("duration", 5.0).unwrap(), 2.0);
+        assert_eq!(a.flag_f64("missing", 5.0).unwrap(), 5.0);
+        assert!(parse(&["serve", "--rps", "abc"]).flag_f64("rps", 1.0).is_err());
     }
 
     #[test]

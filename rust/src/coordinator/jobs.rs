@@ -113,6 +113,20 @@ where
     parallel_map_workers(seeded, workers, move |(t, mut rng)| f(t, &mut rng))
 }
 
+/// Spawn a named OS thread for a long-lived service worker (the serve
+/// subsystem's shard/learner/front-end threads). Unlike the scoped pool
+/// above, these threads own their state (`'static`) and outlive the caller;
+/// the name shows up in debuggers and panic messages.
+pub fn spawn_worker<F>(name: &str, f: F) -> std::thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .expect("failed to spawn worker thread")
+}
+
 /// Split `0..n` into at most `chunks` contiguous, balanced `(lo, hi)`
 /// ranges (first `n % chunks` ranges get one extra element). Used to give
 /// each worker a run of samples so per-sample scratch buffers amortize.
@@ -196,6 +210,14 @@ mod tests {
         }
         // Streams are actually independent across items.
         assert_ne!(serial[0].1, serial[1].1);
+    }
+
+    #[test]
+    fn spawn_worker_runs_with_its_name() {
+        let h = spawn_worker("tnngen-test-worker", || {
+            assert_eq!(std::thread::current().name(), Some("tnngen-test-worker"));
+        });
+        h.join().unwrap();
     }
 
     #[test]

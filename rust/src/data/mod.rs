@@ -52,11 +52,36 @@ impl Dataset {
     }
 }
 
-/// Load the dataset for a benchmark: real UCR files when available, the
-/// seeded synthetic generator otherwise.
+/// Load the dataset for a benchmark: real UCR files when available under
+/// the default `data/ucr/` root, the seeded synthetic generator otherwise.
 pub fn load_benchmark(name: &str, len: usize, classes: usize, n_per_split: usize, seed: u64) -> Dataset {
-    if let Ok(ds) = ucr::load_ucr_dir(std::path::Path::new("data/ucr"), name) {
-        return ds;
+    load_benchmark_from(None, name, len, classes, n_per_split, seed)
+}
+
+/// [`load_benchmark`] with an explicit UCR-archive root (the CLI's
+/// `--ucr-dir DIR`). Real `<root>/<name>/<name>_{TRAIN,TEST}.tsv` files win
+/// when they load; otherwise the synthetic generator is used — with a note
+/// on stderr when a root was explicitly requested, so a typo'd path never
+/// silently swaps real data for synthetic.
+pub fn load_benchmark_from(
+    ucr_root: Option<&std::path::Path>,
+    name: &str,
+    len: usize,
+    classes: usize,
+    n_per_split: usize,
+    seed: u64,
+) -> Dataset {
+    let root = ucr_root.unwrap_or_else(|| std::path::Path::new("data/ucr"));
+    match ucr::load_ucr_dir(root, name) {
+        Ok(ds) => ds,
+        Err(e) => {
+            if ucr_root.is_some() {
+                eprintln!(
+                    "note: no loadable UCR data for {name} under {} ({e:#}); using the synthetic {name} generator",
+                    root.display()
+                );
+            }
+            generate(name, len, classes, n_per_split, seed)
+        }
     }
-    generate(name, len, classes, n_per_split, seed)
 }

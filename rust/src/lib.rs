@@ -27,6 +27,11 @@
 //! * [`forecast`] — the paper's forecasting feature: linear-regression
 //!   prediction of post-layout area/leakage (and P&R runtime) from synapse
 //!   count.
+//! * [`serve`] — the streaming inference service: sharded micro-batching
+//!   execution over trained columns with online STDP on a single-writer
+//!   learner shard, epoch-versioned weight snapshots, typed backpressure,
+//!   lock-free metrics, a closed-loop load harness and an optional TCP
+//!   front-end (`tnngen serve`).
 //! * [`coordinator`] — TNNGen orchestration: end-to-end design runs,
 //!   design-space exploration, multi-design parallelism.
 //! * [`report`] — table/CSV/JSON emitters used by the benches and the CLI
@@ -53,6 +58,7 @@ pub mod forecast;
 pub mod report;
 pub mod rtl;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

@@ -8,14 +8,20 @@
 //!   explore <tag|name>            design-space sweep (native simulator)
 //!   forecast [--syn N]            train forecaster + predict without EDA
 //!   reproduce --table N | --fig N | --all
+//!   serve <tag|name>              streaming inference service (+ bench/TCP)
 //!
 //! The flow-heavy commands (`flow`, `forecast`, `reproduce`) run on the
 //! parallel, cached flow-campaign runner: `--workers N` pins the worker
 //! count (0 = all cores; results are byte-identical for any value),
 //! `--cache-dir DIR` caches completed flow reports on disk so re-runs
 //! skip finished flows, and `--json` emits machine-readable output.
+//! `serve` starts the sharded micro-batching service (`serve::TnnService`)
+//! and either drives it with the in-process load generator (`--bench`) or
+//! exposes it over a length-prefixed TCP frame protocol (`--tcp ADDR`).
 
-use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
 
 use tnngen::cli::Args;
 use tnngen::cluster::pipeline::TnnClustering;
@@ -24,13 +30,14 @@ use tnngen::config::ColumnConfig;
 use tnngen::coordinator::explorer::{explore_with_workers, SweepSpace};
 use tnngen::coordinator::jobs::default_workers;
 use tnngen::coordinator::{Coordinator, SimBackend};
-use tnngen::data::load_benchmark;
+use tnngen::data::{load_benchmark_from, Dataset};
 use tnngen::eda::{all_libraries, tnn7, FlowCampaign, FlowOpts, FlowReport};
 use tnngen::forecast::Forecaster;
 use tnngen::report::artifacts;
 use tnngen::report::experiments::{self, Effort};
 use tnngen::report::{f2, f3, Table};
 use tnngen::rtl::{generate_column, verilog::emit_verilog};
+use tnngen::serve::{run_open_loop, LoadSpec, ServeOpts, TcpFront, TnnService};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -46,14 +53,18 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce> [args]
-  simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N] [--sequential|--shuffle]
+const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce|serve> [args]
+  simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N]
+           [--sequential|--shuffle] [--ucr-dir DIR]
   generate-rtl <tag> [--out file.v]
   flow <tag> [--lib FreePDK45|ASAP7|TNN7] [--layout] [--cache-dir DIR] [--json]
   explore <tag|name> [--epochs N] [--workers N] [--csv]
   forecast [--syn N] [--full] [--workers N] [--cache-dir DIR] [--json]
   reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]
-            [--workers N] [--cache-dir DIR] [--json]
+            [--workers N] [--cache-dir DIR] [--json] [--ucr-dir DIR]
+  serve <tag|name> [--shards N] [--batch N] [--wait-us US] [--queue N] [--learn-queue N]
+        [--snapshot-every K] [--bench --rps R --duration S [--learn-every K] [--json]]
+        [--tcp ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
@@ -62,7 +73,15 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   --cache-dir caches completed flow reports (content-hashed on design +
   library + options + flow version) so re-runs skip finished flows.
   --json emits machine-readable output; reproduce also writes JSON/CSV
-  artifacts under target/reports/ either way.";
+  artifacts under target/reports/ either way.
+  --ucr-dir points simulate/reproduce/serve at a real UCR archive
+  (<DIR>/<Name>/<Name>_TRAIN.tsv); synthetic generators fill in when the
+  files are absent.
+  serve --bench drives the sharded micro-batching service with an
+  open-loop load generator at --rps for --duration seconds and reports
+  throughput + nearest-rank p50/p95/p99 latency (typed rejections count
+  as backpressure, never silent drops); --tcp ADDR additionally exposes
+  the service over a length-prefixed frame protocol (see README).";
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -72,6 +91,25 @@ fn resolve_config(key: &str) -> Result<ColumnConfig> {
         .into_iter()
         .find(|c| c.name == key)
         .with_context(|| format!("unknown design {key:?} (try `tnngen list`)"))
+}
+
+/// Load the dataset for a design honoring `--ucr-dir`, and insist that
+/// real data actually fits the column geometry instead of panicking deep
+/// inside the simulator.
+fn dataset_for(args: &Args, cfg: &ColumnConfig, n_per_split: usize, seed: u64) -> Result<Dataset> {
+    let ucr_root = args.flag("ucr-dir").map(std::path::Path::new);
+    let ds = load_benchmark_from(ucr_root, &cfg.name, cfg.p, cfg.q, n_per_split, seed);
+    ensure!(
+        ds.len == cfg.p && ds.classes == cfg.q,
+        "dataset {} is {}x{} but design {} expects {}x{}",
+        ds.name,
+        ds.len,
+        ds.classes,
+        cfg.tag(),
+        cfg.p,
+        cfg.q
+    );
+    Ok(ds)
 }
 
 /// Build the flow campaign for `--workers` (0 = all cores) + `--cache-dir`.
@@ -126,7 +164,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 seed: args.flag_u64("seed", 42)?,
                 n_per_split: args.flag_usize("samples", 60)?,
             };
-            let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
+            let ds = dataset_for(args, &cfg, pipe.n_per_split, pipe.seed)?;
             let sequential = args.flag_bool("sequential");
             let shuffle = args.flag_bool("shuffle");
             if (sequential || shuffle) && backend != SimBackend::Native {
@@ -243,7 +281,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 seed: args.flag_u64("seed", 42)?,
                 n_per_split: args.flag_usize("samples", 40)?,
             };
-            let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, pipe.n_per_split, pipe.seed);
+            let ds = dataset_for(args, &cfg, pipe.n_per_split, pipe.seed)?;
             let workers = match args.flag_usize("workers", 0)? {
                 0 => tnngen::coordinator::jobs::default_workers(),
                 n => n,
@@ -332,7 +370,8 @@ fn dispatch(args: &Args) -> Result<()> {
             let mut forecaster: Option<Forecaster> = None;
             if want_t("2") {
                 let (backend, coord) = backend_of(args)?;
-                show("table2", experiments::table2(effort, backend, &coord)?);
+                let ucr_root = args.flag("ucr-dir").map(std::path::Path::new);
+                show("table2", experiments::table2_with(effort, backend, &coord, ucr_root)?);
             }
             if want_t("3") || want_t("4") || want_t("5") || want_f("4") {
                 let flows = experiments::run_paper_flows_with(effort, &campaign)?;
@@ -393,6 +432,97 @@ fn dispatch(args: &Args) -> Result<()> {
                     wall_s
                 );
             }
+            Ok(())
+        }
+        "serve" => {
+            let key = args.positional.first().context("serve needs a design tag/name")?;
+            let cfg = resolve_config(key)?;
+            let opts = ServeOpts {
+                shards: args.flag_usize("shards", 2)?,
+                max_batch: args.flag_usize("batch", 16)?,
+                max_wait: Duration::from_micros(args.flag_u64("wait-us", 200)?),
+                queue_capacity: args.flag_usize("queue", 1024)?,
+                learn_queue_capacity: args.flag_usize("learn-queue", 1024)?,
+                snapshot_every: args.flag_usize("snapshot-every", 64)?,
+                worker_delay: Duration::ZERO,
+            };
+            let seed = args.flag_u64("seed", 42)?;
+            let svc = std::sync::Arc::new(TnnService::start(cfg.clone(), seed, opts));
+            let tcp = match args.flag("tcp") {
+                Some(addr) => {
+                    let front = TcpFront::spawn(svc.clone(), addr)?;
+                    println!(
+                        "serving {} ({}, {} shards, batch {}, queue {}) on tcp://{}",
+                        cfg.tag(),
+                        cfg.name,
+                        svc.shards(),
+                        opts.max_batch,
+                        opts.queue_capacity,
+                        front.local_addr()
+                    );
+                    Some(front)
+                }
+                None => None,
+            };
+            let bench = args.flag_bool("bench");
+            ensure!(bench || tcp.is_some(), "serve needs --bench and/or --tcp ADDR");
+            if bench {
+                let ds = dataset_for(args, &cfg, args.flag_usize("samples", 60)?, seed)?;
+                let (windows, _) = ds.all();
+                let spec = LoadSpec {
+                    rps: args.flag_f64("rps", 1000.0)?,
+                    duration_s: args.flag_f64("duration", 5.0)?,
+                    learn_every: args.flag_usize("learn-every", 0)?,
+                    drain_timeout: Duration::from_secs(5),
+                };
+                ensure!(spec.rps > 0.0, "--rps must be positive");
+                ensure!(spec.duration_s > 0.0, "--duration must be positive");
+                let r = run_open_loop(&svc, &windows, &spec);
+                if args.flag_bool("json") {
+                    print!("{}", artifacts::serve_bench_json(&r).pretty());
+                } else {
+                    println!(
+                        "serve bench {} ({}): {} shards, batch {} — offered {} @ {:.0} rps for {:.1}s",
+                        r.design, ds.name, r.shards, r.max_batch, r.offered, r.target_rps, spec.duration_s
+                    );
+                    println!(
+                        "  accepted {} rejected {} (queue {}), completed {} lost {}, learn {}/{} rejected",
+                        r.accepted, r.rejected, r.queue_capacity, r.completed, r.lost,
+                        r.learn_rejected, r.learn_offered
+                    );
+                    println!(
+                        "  throughput {:.0} rps | latency p50 {:.0} us p95 {:.0} us p99 {:.0} us mean {:.0} us max {:.0} us",
+                        r.throughput_rps,
+                        r.latency_p50_us,
+                        r.latency_p95_us,
+                        r.latency_p99_us,
+                        r.latency_mean_us,
+                        r.latency_max_us
+                    );
+                    println!(
+                        "  batches {} (mean {:.1} samples) | learned {} steps, {} snapshots | no-fire {} | digest {}",
+                        r.metrics.batches,
+                        r.metrics.mean_batch(),
+                        r.metrics.learned,
+                        r.metrics.snapshots_published,
+                        r.no_fire,
+                        r.winners_digest
+                    );
+                }
+            }
+            if let Some(front) = &tcp {
+                if bench {
+                    println!(
+                        "bench complete — still serving on tcp://{} (Ctrl-C to stop)",
+                        front.local_addr()
+                    );
+                }
+                // Serve until the process is killed.
+                loop {
+                    std::thread::park();
+                }
+            }
+            svc.shutdown();
             Ok(())
         }
         "" => {

@@ -579,6 +579,70 @@ pub fn campaign_json(
     Json::obj(entries)
 }
 
+/// Schema identifier of [`serve_bench_json`] documents.
+pub const SERVE_BENCH_SCHEMA: &str = "tnngen.serve.bench/v1";
+
+/// The `tnngen serve --bench --json` document: offered/accepted/rejected
+/// admission counters, completed throughput, client-side nearest-rank
+/// latency percentiles (exact, from `util::stats::percentile_nearest_rank`
+/// over per-request samples), the service-side histogram snapshot, and the
+/// winners digest used by the determinism tests. Counter fields and the
+/// digest are deterministic in closed-loop mode; wall-clock, throughput
+/// and latency fields are measurement data (same split as
+/// [`flow_metrics_json`] vs [`flow_report_json`]).
+pub fn serve_bench_json(r: &crate::serve::BenchReport) -> Json {
+    let m = &r.metrics;
+    Json::obj(vec![
+        ("schema", Json::Str(SERVE_BENCH_SCHEMA.to_string())),
+        ("design", Json::Str(r.design.clone())),
+        ("mode", Json::Str(r.mode.clone())),
+        ("shards", Json::Int(r.shards as i64)),
+        ("max_batch", Json::Int(r.max_batch as i64)),
+        ("queue_capacity", Json::Int(r.queue_capacity as i64)),
+        ("target_rps", Json::Num(r.target_rps)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("offered", Json::Int(r.offered as i64)),
+        ("accepted", Json::Int(r.accepted as i64)),
+        ("rejected", Json::Int(r.rejected as i64)),
+        ("learn_offered", Json::Int(r.learn_offered as i64)),
+        ("learn_rejected", Json::Int(r.learn_rejected as i64)),
+        ("completed", Json::Int(r.completed as i64)),
+        ("lost", Json::Int(r.lost as i64)),
+        ("no_fire", Json::Int(r.no_fire as i64)),
+        ("throughput_rps", Json::Num(r.throughput_rps)),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("p50", Json::Num(r.latency_p50_us)),
+                ("p95", Json::Num(r.latency_p95_us)),
+                ("p99", Json::Num(r.latency_p99_us)),
+                ("mean", Json::Num(r.latency_mean_us)),
+                ("max", Json::Num(r.latency_max_us)),
+            ]),
+        ),
+        (
+            "service",
+            Json::obj(vec![
+                ("batches", Json::Int(m.batches as i64)),
+                ("mean_batch", Json::Num(m.mean_batch())),
+                ("learned", Json::Int(m.learned as i64)),
+                ("snapshots_published", Json::Int(m.snapshots_published as i64)),
+                (
+                    "latency_us",
+                    Json::obj(vec![
+                        ("p50", Json::Num(m.service_p50_us)),
+                        ("p95", Json::Num(m.service_p95_us)),
+                        ("p99", Json::Num(m.service_p99_us)),
+                        ("mean", Json::Num(m.service_mean_us)),
+                        ("recorded", Json::Int(m.recorded as i64)),
+                    ]),
+                ),
+            ]),
+        ),
+        ("winners_digest", Json::Str(r.winners_digest.clone())),
+    ])
+}
+
 /// Write a JSON artifact under `target/reports/` (same directory as the
 /// CSV artifacts; created on demand). Returns the path written.
 pub fn save_json(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {

@@ -19,7 +19,7 @@ use crate::config::presets::{
 };
 use crate::config::ColumnConfig;
 use crate::coordinator::{Coordinator, SimBackend};
-use crate::data::load_benchmark;
+use crate::data::load_benchmark_from;
 use crate::eda::{
     all_libraries, asap7, tnn7, FlowCampaign, FlowJob, FlowOpts, FlowReport, PlaceOpts,
 };
@@ -75,8 +75,22 @@ impl Effort {
 }
 
 /// Table II: clustering rand index (TNN vs DTCR-proxy, normalized to
-/// k-means) for the seven UCR-modality benchmarks.
+/// k-means) for the seven UCR-modality benchmarks (synthetic data, or the
+/// default `data/ucr/` root when populated).
 pub fn table2(effort: Effort, backend: SimBackend, coord: &Coordinator) -> Result<String> {
+    table2_with(effort, backend, coord, None)
+}
+
+/// [`table2`] with an explicit UCR-archive root (the CLI's `--ucr-dir`):
+/// real `<root>/<Name>/<Name>_{TRAIN,TEST}.tsv` data when loadable,
+/// synthetic generators otherwise. Real data whose geometry disagrees
+/// with the paper design is an error (not a silent fallback).
+pub fn table2_with(
+    effort: Effort,
+    backend: SimBackend,
+    coord: &Coordinator,
+    ucr_root: Option<&std::path::Path>,
+) -> Result<String> {
     let mut t = Table::new(&[
         "UCR Column (pxq)",
         "Benchmark",
@@ -91,7 +105,18 @@ pub fn table2(effort: Effort, backend: SimBackend, coord: &Coordinator) -> Resul
     ]);
     let pipe = TnnClustering { epochs: effort.epochs, seed: effort.seed, n_per_split: effort.n_per_split };
     for cfg in effort.configs() {
-        let ds = load_benchmark(&cfg.name, cfg.p, cfg.q, effort.n_per_split, effort.seed);
+        let ds =
+            load_benchmark_from(ucr_root, &cfg.name, cfg.p, cfg.q, effort.n_per_split, effort.seed);
+        anyhow::ensure!(
+            ds.len == cfg.p && ds.classes == cfg.q,
+            "dataset {} is {}x{} but design {} expects {}x{}",
+            ds.name,
+            ds.len,
+            ds.classes,
+            cfg.tag(),
+            cfg.p,
+            cfg.q
+        );
         let r = coord.run_clustering(&cfg, &ds, &pipe, backend)?;
         let paper = TABLE2_PAPER.iter().find(|(n, _, _)| *n == cfg.name).unwrap();
         t.row(&[

@@ -1,0 +1,279 @@
+//! Load generation against a running [`TnnService`] and the bench report
+//! behind `tnngen serve --bench`.
+//!
+//! Two drive modes:
+//!
+//! * [`run_open_loop`] — offered load at a fixed target rate for a fixed
+//!   duration, submissions never wait for replies (the "users don't slow
+//!   down because you are slow" model). Overload surfaces as typed
+//!   rejections counted in the report.
+//! * [`run_closed_loop`] — a bounded number of in-flight requests; the
+//!   next submit waits for a reply. With in-flight <= queue capacity and
+//!   learning off this mode is fully deterministic: same seed, same
+//!   windows, same winners digest for ANY shard count (inference is pure
+//!   and every shard serves the same epoch-0 snapshot).
+//!
+//! Client-side latency percentiles use the nearest-rank helpers from
+//! [`util::stats`](crate::util::stats) on the exact per-request samples;
+//! the service-side histogram snapshot rides along in
+//! [`BenchReport::metrics`].
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::eda::cache::fnv1a64;
+use crate::util::stats::{mean, nearest_rank_index};
+
+use super::metrics::MetricsSnapshot;
+use super::{InferReply, TnnService};
+
+/// Load-generator parameters for [`run_open_loop`].
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Target offered rate (requests per second, > 0).
+    pub rps: f64,
+    /// Offered-load duration in seconds (> 0).
+    pub duration_s: f64,
+    /// Every k-th request is submitted to the learner write path instead
+    /// of inference (0 = inference only).
+    pub learn_every: usize,
+    /// How long to wait for stragglers after the offered phase ends before
+    /// counting them as lost.
+    pub drain_timeout: Duration,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            rps: 1000.0,
+            duration_s: 1.0,
+            learn_every: 0,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Everything `tnngen serve --bench` reports (rendered as JSON by
+/// `report::artifacts::serve_bench_json`).
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Served design tag (`{p}x{q}`).
+    pub design: String,
+    /// Reader-shard count.
+    pub shards: usize,
+    /// Micro-batch flush size.
+    pub max_batch: usize,
+    /// Inference-queue admission bound.
+    pub queue_capacity: usize,
+    /// `"open-loop"` or `"closed-loop"`.
+    pub mode: String,
+    /// Target offered rate (0 for closed loop).
+    pub target_rps: f64,
+    /// Wall-clock of the whole run including the drain phase.
+    pub wall_s: f64,
+    /// Total submit attempts (inference + learn).
+    pub offered: u64,
+    /// Inference requests admitted.
+    pub accepted: u64,
+    /// Inference requests rejected by admission control.
+    pub rejected: u64,
+    /// Learn requests offered.
+    pub learn_offered: u64,
+    /// Learn requests rejected by admission control.
+    pub learn_rejected: u64,
+    /// Replies observed by the client.
+    pub completed: u64,
+    /// Accepted requests whose reply did not arrive within the drain
+    /// timeout (0 in a healthy run).
+    pub lost: u64,
+    /// Replies with no firing neuron (winner -1).
+    pub no_fire: u64,
+    /// Completed inference replies per wall second.
+    pub throughput_rps: f64,
+    /// Client-side nearest-rank latency percentiles (microseconds).
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    pub latency_max_us: f64,
+    /// FNV-1a over (id, winner) pairs in id order — the determinism
+    /// fingerprint compared by `rust/tests/serve.rs`.
+    pub winners_digest: String,
+    /// Service-side counters and histogram at the end of the run.
+    pub metrics: MetricsSnapshot,
+}
+
+/// Client-side tallies accumulated while driving the service.
+#[derive(Default)]
+struct Tally {
+    offered: u64,
+    accepted: u64,
+    rejected: u64,
+    learn_offered: u64,
+    learn_rejected: u64,
+    lost: u64,
+    replies: Vec<InferReply>,
+}
+
+impl Tally {
+    fn submit_infer(
+        &mut self,
+        svc: &TnnService,
+        window: Vec<f32>,
+        tx: &mpsc::Sender<InferReply>,
+    ) -> bool {
+        self.offered += 1;
+        match svc.submit_infer(window, tx.clone()) {
+            Ok(_) => {
+                self.accepted += 1;
+                true
+            }
+            Err(_) => {
+                self.rejected += 1;
+                false
+            }
+        }
+    }
+
+    fn submit_learn(&mut self, svc: &TnnService, window: Vec<f32>) {
+        self.offered += 1;
+        self.learn_offered += 1;
+        if svc.submit_learn(window).is_err() {
+            self.learn_rejected += 1;
+        }
+    }
+
+    fn into_report(mut self, svc: &TnnService, mode: &str, target_rps: f64, wall_s: f64) -> BenchReport {
+        self.replies.sort_by_key(|r| r.id);
+        // Sorted once; each percentile is then a nearest-rank index into
+        // the same samples (equivalent to `stats::percentile_nearest_rank`
+        // without re-sorting per quantile).
+        let mut lat: Vec<f64> =
+            self.replies.iter().map(|r| r.latency.as_secs_f64() * 1e6).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p95, p99, mean_us, max_us) = if lat.is_empty() {
+            (0.0, 0.0, 0.0, 0.0, 0.0)
+        } else {
+            let pick = |p: f64| lat[nearest_rank_index(lat.len(), p)];
+            (pick(50.0), pick(95.0), pick(99.0), mean(&lat), *lat.last().unwrap())
+        };
+        let mut bytes = Vec::with_capacity(self.replies.len() * 12);
+        for r in &self.replies {
+            bytes.extend_from_slice(&r.id.to_le_bytes());
+            bytes.extend_from_slice(&r.winner.to_le_bytes());
+        }
+        let completed = self.replies.len() as u64;
+        let opts = svc.opts();
+        BenchReport {
+            design: svc.config().tag(),
+            shards: svc.shards(),
+            max_batch: opts.max_batch,
+            queue_capacity: opts.queue_capacity,
+            mode: mode.to_string(),
+            target_rps,
+            wall_s,
+            offered: self.offered,
+            accepted: self.accepted,
+            rejected: self.rejected,
+            learn_offered: self.learn_offered,
+            learn_rejected: self.learn_rejected,
+            completed,
+            lost: self.lost,
+            no_fire: self.replies.iter().filter(|r| r.winner < 0).count() as u64,
+            throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+            latency_p50_us: p50,
+            latency_p95_us: p95,
+            latency_p99_us: p99,
+            latency_mean_us: mean_us,
+            latency_max_us: max_us,
+            winners_digest: format!("{:016x}", fnv1a64(&bytes)),
+            metrics: svc.metrics().snapshot(),
+        }
+    }
+}
+
+/// Drive the service open-loop: `ceil(rps * duration_s)` submissions paced
+/// at the target rate (windows replayed round-robin), then a drain phase.
+/// Submissions never wait for replies; a saturated queue shows up as
+/// [`SubmitError::QueueFull`](super::SubmitError::QueueFull) rejections in
+/// the report.
+pub fn run_open_loop(svc: &TnnService, windows: &[Vec<f32>], spec: &LoadSpec) -> BenchReport {
+    assert!(!windows.is_empty(), "load generator needs at least one window");
+    assert!(spec.rps > 0.0 && spec.duration_s > 0.0, "rps and duration must be positive");
+    let total = (spec.rps * spec.duration_s).ceil() as u64;
+    let (tx, rx) = mpsc::channel();
+    let mut tally = Tally::default();
+    let start = Instant::now();
+    for i in 0..total {
+        let target = start + Duration::from_secs_f64(i as f64 / spec.rps);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let window = windows[(i as usize) % windows.len()].clone();
+        let is_learn = spec.learn_every > 0 && (i as usize) % spec.learn_every == spec.learn_every - 1;
+        if is_learn {
+            tally.submit_learn(svc, window);
+        } else {
+            tally.submit_infer(svc, window, &tx);
+        }
+        // Opportunistic drain keeps the reply channel shallow under load.
+        while let Ok(r) = rx.try_recv() {
+            tally.replies.push(r);
+        }
+    }
+    while (tally.replies.len() as u64) < tally.accepted {
+        match rx.recv_timeout(spec.drain_timeout) {
+            Ok(r) => tally.replies.push(r),
+            Err(_) => {
+                tally.lost = tally.accepted - tally.replies.len() as u64;
+                break;
+            }
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    tally.into_report(svc, "open-loop", spec.rps, wall_s)
+}
+
+/// Drive the service closed-loop: exactly `requests` submissions (windows
+/// replayed round-robin) with at most `inflight` outstanding at any time.
+/// With `inflight <= queue_capacity` nothing is ever rejected, and — while
+/// the learner is idle — the resulting winners digest is a pure function
+/// of the windows and the service seed, for any shard count.
+pub fn run_closed_loop(
+    svc: &TnnService,
+    windows: &[Vec<f32>],
+    requests: usize,
+    inflight: usize,
+) -> BenchReport {
+    assert!(!windows.is_empty(), "load generator needs at least one window");
+    assert!(requests > 0, "need at least one request");
+    let inflight = inflight.max(1) as u64;
+    let (tx, rx) = mpsc::channel();
+    let mut tally = Tally::default();
+    let mut outstanding = 0u64;
+    let mut i = 0usize;
+    let start = Instant::now();
+    while i < requests || outstanding > 0 {
+        if i < requests && outstanding < inflight {
+            let window = windows[i % windows.len()].clone();
+            if tally.submit_infer(svc, window, &tx) {
+                outstanding += 1;
+            }
+            i += 1;
+            continue;
+        }
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(r) => {
+                tally.replies.push(r);
+                outstanding -= 1;
+            }
+            Err(_) => {
+                tally.lost = outstanding;
+                break;
+            }
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    tally.into_report(svc, "closed-loop", 0.0, wall_s)
+}

@@ -1,0 +1,269 @@
+//! Lock-free service metrics: monotonically increasing atomic counters and
+//! a log-linear latency histogram, sampled into an immutable
+//! [`MetricsSnapshot`] for reporting (`report::artifacts::serve_bench_json`).
+//!
+//! The histogram is HDR-style: 16 linear sub-buckets per power-of-two
+//! octave of microseconds, so relative error is bounded at ~6% across the
+//! full `u64` range while `record` stays a single atomic increment —
+//! shard workers never contend on a lock to report a latency. Percentiles
+//! use the same nearest-rank definition as `util::stats`
+//! ([`crate::util::stats::nearest_rank_index`]); the reported value is a
+//! bucket's lower bound, i.e. a slight underestimate, never an
+//! interpolated fiction.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+use crate::util::stats::nearest_rank_index;
+
+/// Linear sub-buckets per octave.
+const SUB_BUCKETS: u64 = 16;
+/// Total bucket count: values 0..16 map 1:1, then 16 buckets per octave
+/// for octaves 4..=63 — covers every `u64` microsecond value.
+const BUCKETS: usize = ((63 - 3) * SUB_BUCKETS + SUB_BUCKETS) as usize;
+
+/// Index of the histogram bucket containing `v` (microseconds).
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS {
+        return v as usize;
+    }
+    let msb = 63 - u64::from(v.leading_zeros()); // >= 4
+    let group = msb - 3;
+    let sub = (v >> (msb - 4)) - SUB_BUCKETS; // 0..16
+    ((group * SUB_BUCKETS + sub) as usize).min(BUCKETS - 1)
+}
+
+/// Smallest microsecond value that lands in bucket `idx` (the value the
+/// percentile query reports for that bucket).
+fn bucket_floor_us(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB_BUCKETS {
+        return idx;
+    }
+    let group = idx / SUB_BUCKETS;
+    let sub = idx % SUB_BUCKETS;
+    (sub + SUB_BUCKETS) << (group - 1)
+}
+
+/// Lock-free log-linear latency histogram (microsecond resolution).
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample (saturated to whole microseconds).
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_index(us)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// Mean recorded latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Relaxed) as f64 / n as f64
+    }
+
+    /// Nearest-rank p-th percentile in microseconds (0 when empty). The
+    /// rank is resolved against cumulative bucket counts and the bucket's
+    /// lower bound is reported.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = nearest_rank_index(n as usize, p) as u64;
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum > target {
+                return bucket_floor_us(idx) as f64;
+            }
+        }
+        bucket_floor_us(BUCKETS - 1) as f64
+    }
+}
+
+/// Counters shared by the batcher, shard workers and the learner. All
+/// fields are monotonic; read them via [`ServeMetrics::snapshot`].
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Inference requests admitted into the queue.
+    pub accepted: AtomicU64,
+    /// Inference requests rejected by admission control (queue full).
+    pub rejected: AtomicU64,
+    /// Inference requests completed (reply produced by a shard).
+    pub completed: AtomicU64,
+    /// Learn requests admitted into the learner queue.
+    pub learn_accepted: AtomicU64,
+    /// Learn requests rejected by admission control.
+    pub learn_rejected: AtomicU64,
+    /// Online-STDP steps applied by the learner.
+    pub learned: AtomicU64,
+    /// Weight snapshots published to the reader shards.
+    pub snapshots_published: AtomicU64,
+    /// Micro-batches flushed by shard workers.
+    pub batches: AtomicU64,
+    /// Samples served across all flushed batches.
+    pub batched_samples: AtomicU64,
+    /// End-to-end (submit -> reply) latency, recorded by shard workers.
+    pub latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served request's end-to-end latency.
+    pub fn record_latency(&self, d: Duration) {
+        self.latency.record(d);
+    }
+
+    /// Consistent-enough point-in-time copy of every counter (individual
+    /// loads are relaxed; exact cross-counter consistency is not needed
+    /// for reporting).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            accepted: self.accepted.load(Relaxed),
+            rejected: self.rejected.load(Relaxed),
+            completed: self.completed.load(Relaxed),
+            learn_accepted: self.learn_accepted.load(Relaxed),
+            learn_rejected: self.learn_rejected.load(Relaxed),
+            learned: self.learned.load(Relaxed),
+            snapshots_published: self.snapshots_published.load(Relaxed),
+            batches: self.batches.load(Relaxed),
+            batched_samples: self.batched_samples.load(Relaxed),
+            service_p50_us: self.latency.percentile_us(50.0),
+            service_p95_us: self.latency.percentile_us(95.0),
+            service_p99_us: self.latency.percentile_us(99.0),
+            service_mean_us: self.latency.mean_us(),
+            recorded: self.latency.count(),
+        }
+    }
+}
+
+/// Plain-data copy of [`ServeMetrics`] at one instant.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub learn_accepted: u64,
+    pub learn_rejected: u64,
+    pub learned: u64,
+    pub snapshots_published: u64,
+    pub batches: u64,
+    pub batched_samples: u64,
+    /// Service-side nearest-rank latency percentiles (microseconds).
+    pub service_p50_us: f64,
+    pub service_p95_us: f64,
+    pub service_p99_us: f64,
+    pub service_mean_us: f64,
+    /// Samples behind the percentile figures.
+    pub recorded: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean flushed-batch size (0 when no batch has been flushed).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_samples as f64 / self.batches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile_nearest_rank;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_floor_is_tight() {
+        let mut prev = 0usize;
+        for v in [0u64, 1, 7, 15, 16, 17, 31, 32, 63, 64, 100, 1000, 65_535, 1 << 30, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket index must be monotone at {v}");
+            assert!(bucket_floor_us(idx) <= v, "floor must not exceed value at {v}");
+            prev = idx;
+        }
+        // Values below SUB_BUCKETS are exact.
+        for v in 0..16u64 {
+            assert_eq!(bucket_floor_us(bucket_index(v)), v);
+        }
+        // Octave boundaries are exact too.
+        for v in [16u64, 32, 64, 128, 1 << 20] {
+            assert_eq!(bucket_floor_us(bucket_index(v)), v);
+        }
+        assert!(bucket_index(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for v in [20u64, 100, 999, 12_345, 1_000_000, 123_456_789] {
+            let floor = bucket_floor_us(bucket_index(v));
+            assert!(floor <= v);
+            assert!((v - floor) as f64 / v as f64 < 1.0 / 16.0, "error too large at {v}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_match_stats_helper_on_exact_values() {
+        // Samples below 16us land in exact buckets, so the histogram must
+        // agree exactly with the nearest-rank helper on raw samples.
+        let h = LatencyHistogram::default();
+        let samples: Vec<u64> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        for &s in &samples {
+            h.record(Duration::from_micros(s));
+        }
+        let raw: Vec<f64> = samples.iter().map(|&s| s as f64).collect();
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(h.percentile_us(p), percentile_nearest_rank(&raw, p), "p{p}");
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean_us() - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = ServeMetrics::new();
+        m.accepted.fetch_add(3, Relaxed);
+        m.batches.fetch_add(2, Relaxed);
+        m.batched_samples.fetch_add(7, Relaxed);
+        m.record_latency(Duration::from_micros(42));
+        let s = m.snapshot();
+        assert_eq!(s.accepted, 3);
+        assert_eq!(s.recorded, 1);
+        assert!((s.mean_batch() - 3.5).abs() < 1e-12);
+        assert!(s.service_p50_us <= 42.0 && s.service_p50_us >= 40.0);
+    }
+}

@@ -1,0 +1,357 @@
+//! Streaming inference service for trained TNN columns (the ROADMAP's
+//! "serve heavy traffic" vertical).
+//!
+//! The paper positions TNN columns as always-on sensory processing units;
+//! this subsystem turns the offline batch simulator into a servable
+//! system. It is dependency-free (std threads + channels only) and built
+//! from four pieces:
+//!
+//! * [`batcher`] — a bounded MPSC micro-batching queue (flush on
+//!   `max_batch` or `max_wait`) with admission control: a full queue
+//!   rejects with the typed [`SubmitError::QueueFull`] instead of ever
+//!   blocking the accept path.
+//! * [`shard`] — N reader-shard replicas, each owning a
+//!   [`sim::BatchSim`](crate::sim::BatchSim) with reusable scratch, plus
+//!   one single-writer learner applying online STDP and publishing
+//!   epoch-versioned weight snapshots.
+//! * [`metrics`] — lock-free counters and a log-linear latency histogram
+//!   with nearest-rank p50/p95/p99 queries.
+//! * [`loadgen`] — a load generator (open-loop at a target rate, or
+//!   closed-loop with bounded in-flight) producing the
+//!   [`BenchReport`](loadgen::BenchReport) behind `tnngen serve --bench`.
+//!
+//! [`TnnService`] wires them together; [`tcp`] optionally exposes the
+//! service over a length-prefixed frame protocol. Contracts proven by
+//! `rust/tests/serve.rs`: reader results are bit-identical to offline
+//! [`BatchSim`](crate::sim::BatchSim) on the served snapshot; closed-loop
+//! bench results are deterministic for a fixed seed (and independent of
+//! shard count while not learning); overload returns typed rejections with
+//! no deadlocks and no silent drops; the drained learner trajectory equals
+//! serial [`CycleSim`](crate::sim::CycleSim) STDP.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod shard;
+pub mod tcp;
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ColumnConfig;
+use crate::coordinator::jobs::spawn_worker;
+use crate::sim::CycleSim;
+
+use batcher::Batcher;
+use metrics::ServeMetrics;
+use shard::{learner_loop, reader_loop, SharedWeights, Snapshot};
+
+pub use loadgen::{run_closed_loop, run_open_loop, BenchReport, LoadSpec};
+pub use metrics::MetricsSnapshot;
+pub use tcp::TcpFront;
+
+/// Typed admission-control error: the service never blocks a producer and
+/// never silently drops an accepted request — overload is visible here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue already holds `capacity` requests; retry later or
+    /// shed load upstream.
+    QueueFull {
+        /// The configured queue bound that was hit.
+        capacity: usize,
+    },
+    /// The service is shutting down; no further requests are admitted.
+    Closed,
+    /// The window length does not match the column's synapse count `p`.
+    WindowLen {
+        /// Expected length (the design's `p`).
+        expected: usize,
+        /// Length actually submitted.
+        got: usize,
+    },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity}); request rejected")
+            }
+            SubmitError::Closed => write!(f, "service closed"),
+            SubmitError::WindowLen { expected, got } => {
+                write!(f, "window has {got} samples, column expects {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One admitted inference request traveling through the batcher.
+pub struct InferRequest {
+    /// Monotonic per-service request id (assigned at admission).
+    pub id: u64,
+    /// Raw time-series window, length `p`.
+    pub window: Vec<f32>,
+    /// Admission time; end-to-end latency is measured from here.
+    pub submitted: Instant,
+    /// Per-client reply channel.
+    pub reply: mpsc::Sender<InferReply>,
+}
+
+/// One admitted learn (online-STDP) request. Fire-and-forget: learning
+/// progress is observable via metrics and published snapshot epochs.
+pub struct LearnRequest {
+    /// Raw time-series window, length `p`.
+    pub window: Vec<f32>,
+}
+
+/// Reply to one [`InferRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferReply {
+    /// The request id this reply answers.
+    pub id: u64,
+    /// WTA winner neuron, or -1 when no neuron fired.
+    pub winner: i32,
+    /// Weight-snapshot epoch the result was computed on.
+    pub epoch: u64,
+    /// End-to-end (submit -> reply) latency.
+    pub latency: Duration,
+}
+
+/// Service tuning knobs. `Default` is sized for small columns at a few
+/// thousand requests per second.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// Reader-shard replicas (>= 1).
+    pub shards: usize,
+    /// Micro-batch flush size.
+    pub max_batch: usize,
+    /// Micro-batch flush deadline once a batch has started filling.
+    pub max_wait: Duration,
+    /// Inference-queue bound (admission control).
+    pub queue_capacity: usize,
+    /// Learn-queue bound.
+    pub learn_queue_capacity: usize,
+    /// Learner steps between weight-snapshot publishes.
+    pub snapshot_every: usize,
+    /// Test-only: artificial per-batch delay in the shard workers, to make
+    /// overload deterministic in tests. Keep `Duration::ZERO` in production.
+    pub worker_delay: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            shards: 2,
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 1024,
+            learn_queue_capacity: 1024,
+            snapshot_every: 64,
+            worker_delay: Duration::ZERO,
+        }
+    }
+}
+
+/// The running service: N reader shards + 1 learner over two bounded
+/// micro-batching queues, with shared metrics and epoch-versioned weights.
+///
+/// All methods take `&self`, so the service can be wrapped in an `Arc` and
+/// shared with front-ends ([`tcp::TcpFront`]) or load generators.
+pub struct TnnService {
+    cfg: ColumnConfig,
+    opts: ServeOpts,
+    infer_q: Arc<Batcher<InferRequest>>,
+    learn_q: Arc<Batcher<LearnRequest>>,
+    weights: Arc<SharedWeights>,
+    metrics: Arc<ServeMetrics>,
+    next_id: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl TnnService {
+    /// Initialize the column like [`CycleSim::new`] (same seed -> same
+    /// epoch-0 weights) and start the shard + learner threads.
+    pub fn start(cfg: ColumnConfig, seed: u64, opts: ServeOpts) -> Self {
+        let shards = opts.shards.max(1);
+        let learner_sim = CycleSim::new(cfg.clone(), seed);
+        let weights = Arc::new(SharedWeights::new(learner_sim.weights.clone()));
+        let metrics = Arc::new(ServeMetrics::new());
+        let infer_q =
+            Arc::new(Batcher::new(opts.queue_capacity, opts.max_batch, opts.max_wait));
+        let learn_q =
+            Arc::new(Batcher::new(opts.learn_queue_capacity, opts.max_batch, opts.max_wait));
+        let mut workers = Vec::with_capacity(shards + 1);
+        for i in 0..shards {
+            let (cfg, q, w, m) =
+                (cfg.clone(), infer_q.clone(), weights.clone(), metrics.clone());
+            let delay = opts.worker_delay;
+            workers.push(spawn_worker(&format!("tnn-serve-shard-{i}"), move || {
+                reader_loop(cfg, q, w, m, delay);
+            }));
+        }
+        {
+            let (q, w, m) = (learn_q.clone(), weights.clone(), metrics.clone());
+            let every = opts.snapshot_every;
+            workers.push(spawn_worker("tnn-serve-learner", move || {
+                learner_loop(learner_sim, q, w, m, every);
+            }));
+        }
+        TnnService {
+            cfg,
+            opts,
+            infer_q,
+            learn_q,
+            weights,
+            metrics,
+            next_id: AtomicU64::new(0),
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// The served column design.
+    pub fn config(&self) -> &ColumnConfig {
+        &self.cfg
+    }
+
+    /// Reader-shard count.
+    pub fn shards(&self) -> usize {
+        self.opts.shards.max(1)
+    }
+
+    /// The options the service was started with.
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
+    /// Live metrics handle.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// The newest published weight snapshot (epoch 0 until the learner has
+    /// published).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.weights.load()
+    }
+
+    /// Admit one inference request; the reply is delivered on `reply`.
+    /// Returns the assigned request id, or a typed rejection — never
+    /// blocks.
+    pub fn submit_infer(
+        &self,
+        window: Vec<f32>,
+        reply: mpsc::Sender<InferReply>,
+    ) -> Result<u64, SubmitError> {
+        if window.len() != self.cfg.p {
+            return Err(SubmitError::WindowLen { expected: self.cfg.p, got: window.len() });
+        }
+        let id = self.next_id.fetch_add(1, Relaxed);
+        let req = InferRequest { id, window, submitted: Instant::now(), reply };
+        match self.infer_q.submit(req) {
+            Ok(()) => {
+                self.metrics.accepted.fetch_add(1, Relaxed);
+                Ok(id)
+            }
+            Err(e) => {
+                if matches!(e, SubmitError::QueueFull { .. }) {
+                    self.metrics.rejected.fetch_add(1, Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Admit one online-STDP learn request (fire-and-forget write path).
+    pub fn submit_learn(&self, window: Vec<f32>) -> Result<(), SubmitError> {
+        if window.len() != self.cfg.p {
+            return Err(SubmitError::WindowLen { expected: self.cfg.p, got: window.len() });
+        }
+        match self.learn_q.submit(LearnRequest { window }) {
+            Ok(()) => {
+                self.metrics.learn_accepted.fetch_add(1, Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                if matches!(e, SubmitError::QueueFull { .. }) {
+                    self.metrics.learn_rejected.fetch_add(1, Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience for synchronous callers (the TCP front-end): submit one
+    /// window and block until its reply arrives.
+    pub fn infer_blocking(&self, window: Vec<f32>) -> Result<InferReply, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_infer(window, tx)?;
+        // The shard replies to every admitted request, even during a
+        // drain; a recv error therefore only happens on hard shutdown.
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Graceful shutdown: stop admissions, let the workers drain both
+    /// queues (every accepted request is still answered and every pending
+    /// learn step applied + published), then join all threads. Idempotent.
+    pub fn shutdown(&self) {
+        self.infer_q.close();
+        self.learn_q.close();
+        let mut handles = self.workers.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TnnService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ColumnConfig {
+        ColumnConfig::new("ServeUnit", "synthetic", 12, 2)
+    }
+
+    #[test]
+    fn infer_blocking_round_trips_and_counts() {
+        let svc = TnnService::start(cfg(), 3, ServeOpts { shards: 1, ..Default::default() });
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.4).sin()).collect();
+        let r = svc.infer_blocking(x.clone()).unwrap();
+        assert_eq!(r.epoch, 0);
+        assert_eq!(r.winner, crate::sim::CycleSim::new(cfg(), 3).infer(&x).winner);
+        svc.shutdown();
+        let m = svc.metrics().snapshot();
+        assert_eq!(m.accepted, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.recorded, 1);
+    }
+
+    #[test]
+    fn wrong_window_length_is_a_typed_error() {
+        let svc = TnnService::start(cfg(), 1, ServeOpts { shards: 1, ..Default::default() });
+        let err = svc.infer_blocking(vec![0.0; 5]).unwrap_err();
+        assert_eq!(err, SubmitError::WindowLen { expected: 12, got: 5 });
+        assert_eq!(svc.submit_learn(vec![0.0; 5]), Err(SubmitError::WindowLen { expected: 12, got: 5 }));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submits_after_shutdown_are_closed() {
+        let svc = TnnService::start(cfg(), 1, ServeOpts { shards: 2, ..Default::default() });
+        svc.shutdown();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(svc.submit_infer(vec![0.0; 12], tx), Err(SubmitError::Closed));
+        assert_eq!(svc.submit_learn(vec![0.0; 12]), Err(SubmitError::Closed));
+        // Shutdown is idempotent.
+        svc.shutdown();
+    }
+}

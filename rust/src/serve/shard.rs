@@ -1,0 +1,171 @@
+//! Column replicas and the single-writer / multi-reader weight store.
+//!
+//! The serving pool is N **reader shards** — each a thread owning its own
+//! [`BatchSim`] replica of the column (private scratch, zero sharing on
+//! the hot path) — plus one designated **learner**: the only thread that
+//! ever mutates weights. The learner applies online STDP in strict
+//! request-arrival order and periodically publishes an immutable,
+//! epoch-versioned [`Snapshot`] through [`SharedWeights`]; readers adopt
+//! the newest snapshot at micro-batch boundaries, so every sample within
+//! one batch is served from exactly one epoch and reader results are
+//! always bit-identical to running [`BatchSim`] offline on that epoch's
+//! weights (proven by `rust/tests/serve.rs`).
+//!
+//! The single-writer discipline is what makes online learning safe
+//! without per-weight locks: readers never observe a torn update because
+//! they only ever see whole published snapshots (`Arc` swaps under a
+//! briefly-held `RwLock`), and the learner never observes reader state at
+//! all.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::config::ColumnConfig;
+use crate::sim::{BatchSim, CycleSim};
+
+use super::batcher::Batcher;
+use super::metrics::ServeMetrics;
+use super::{InferReply, InferRequest, LearnRequest};
+
+/// One immutable, epoch-versioned copy of the column weights. Epoch 0 is
+/// the seed initialization; each learner publish increments it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Publish generation (0 = initial weights).
+    pub epoch: u64,
+    /// Flat row-major `[q * p]` weights, the `sim::CycleSim` layout.
+    pub weights: Vec<f32>,
+}
+
+/// Single-writer / multi-reader snapshot cell. Only the learner calls
+/// [`SharedWeights::publish`]; any thread may [`SharedWeights::load`].
+pub struct SharedWeights {
+    current: RwLock<Arc<Snapshot>>,
+}
+
+impl SharedWeights {
+    /// Start at epoch 0 with the given initial weights.
+    pub fn new(weights: Vec<f32>) -> Self {
+        SharedWeights { current: RwLock::new(Arc::new(Snapshot { epoch: 0, weights })) }
+    }
+
+    /// Cheap read-side access: clones the `Arc`, never the weights.
+    pub fn load(&self) -> Arc<Snapshot> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Swap in a new weight snapshot; returns its epoch. Must only be
+    /// called from the single learner thread (the epoch sequence assumes
+    /// one writer).
+    pub fn publish(&self, weights: Vec<f32>) -> u64 {
+        let mut cur = self.current.write().unwrap();
+        let epoch = cur.epoch + 1;
+        *cur = Arc::new(Snapshot { epoch, weights });
+        epoch
+    }
+}
+
+/// Reader-shard worker loop: pull micro-batches, adopt the newest weight
+/// snapshot at each batch boundary, run batched inference, reply. Exits
+/// when the queue is closed and drained. `throttle` is a test-only delay
+/// simulating a slow shard (Duration::ZERO in production).
+pub(crate) fn reader_loop(
+    cfg: ColumnConfig,
+    queue: Arc<Batcher<InferRequest>>,
+    weights: Arc<SharedWeights>,
+    metrics: Arc<ServeMetrics>,
+    throttle: Duration,
+) {
+    let mut snap = weights.load();
+    let mut engine =
+        BatchSim::from_sim(CycleSim::from_flat(cfg.clone(), snap.weights.clone())).with_workers(1);
+    while let Some(batch) = queue.next_batch() {
+        if !throttle.is_zero() {
+            std::thread::sleep(throttle);
+        }
+        let latest = weights.load();
+        if latest.epoch != snap.epoch {
+            snap = latest;
+            engine = BatchSim::from_sim(CycleSim::from_flat(cfg.clone(), snap.weights.clone()))
+                .with_workers(1);
+        }
+        let n = batch.len();
+        let (metas, windows): (Vec<_>, Vec<_>) = batch
+            .into_iter()
+            .map(|r| ((r.id, r.submitted, r.reply), r.window))
+            .unzip();
+        let outs = engine.infer_batch(&windows);
+        for ((id, submitted, reply), out) in metas.into_iter().zip(outs) {
+            let latency = submitted.elapsed();
+            metrics.record_latency(latency);
+            metrics.completed.fetch_add(1, Relaxed);
+            // A dropped receiver (client gone) is not an error for the shard.
+            let _ = reply.send(InferReply { id, winner: out.winner, epoch: snap.epoch, latency });
+        }
+        metrics.batches.fetch_add(1, Relaxed);
+        metrics.batched_samples.fetch_add(n as u64, Relaxed);
+    }
+}
+
+/// Learner worker loop: apply online STDP steps in strict arrival order,
+/// publish a snapshot every `snapshot_every` steps, and always publish
+/// once more on shutdown if steps are pending — so after a drained
+/// shutdown the published snapshot is exactly the serial STDP trajectory
+/// over every accepted learn request.
+pub(crate) fn learner_loop(
+    mut sim: CycleSim,
+    queue: Arc<Batcher<LearnRequest>>,
+    weights: Arc<SharedWeights>,
+    metrics: Arc<ServeMetrics>,
+    snapshot_every: usize,
+) {
+    let every = snapshot_every.max(1);
+    let mut steps = 0usize;
+    let mut dirty = false;
+    while let Some(batch) = queue.next_batch() {
+        for req in batch {
+            sim.step(&req.window);
+            steps += 1;
+            dirty = true;
+            metrics.learned.fetch_add(1, Relaxed);
+            if steps % every == 0 {
+                weights.publish(sim.weights.clone());
+                metrics.snapshots_published.fetch_add(1, Relaxed);
+                dirty = false;
+            }
+        }
+    }
+    if dirty {
+        weights.publish(sim.weights.clone());
+        metrics.snapshots_published.fetch_add(1, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_weights_version_and_content() {
+        let sw = SharedWeights::new(vec![1.0, 2.0]);
+        let s0 = sw.load();
+        assert_eq!(s0.epoch, 0);
+        assert_eq!(s0.weights, vec![1.0, 2.0]);
+        assert_eq!(sw.publish(vec![3.0, 4.0]), 1);
+        assert_eq!(sw.publish(vec![5.0, 6.0]), 2);
+        let s2 = sw.load();
+        assert_eq!(s2.epoch, 2);
+        assert_eq!(s2.weights, vec![5.0, 6.0]);
+        // Old snapshots stay valid for readers that still hold them.
+        assert_eq!(s0.weights, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn loads_share_the_snapshot_allocation() {
+        let sw = SharedWeights::new(vec![0.5; 8]);
+        let a = sw.load();
+        let b = sw.load();
+        assert!(Arc::ptr_eq(&a, &b), "load must clone the Arc, not the weights");
+    }
+}

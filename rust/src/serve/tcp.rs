@@ -1,0 +1,256 @@
+//! Optional TCP front-end: a length-prefixed frame protocol over the
+//! in-process service.
+//!
+//! Wire format (all integers little-endian):
+//!
+//! ```text
+//! frame   := u32 payload_len | payload                (len cap: 1 MiB)
+//! request := u8 kind (1 = infer, 2 = learn) | f32 x p window
+//! reply   := u8 status | i32 winner | u64 epoch | u32 latency_us
+//! status  := 0 ok | 1 rejected (queue full) | 2 bad request | 3 closed
+//! ```
+//!
+//! One reply frame answers every request frame, in order, per connection
+//! (requests on one connection are handled synchronously; use multiple
+//! connections for pipelining — the shard pool batches across
+//! connections). Learn requests are acknowledged with `winner = -1` and
+//! `epoch = 0`. Admission-control rejections surface as `status = 1`, so a
+//! remote client sees exactly the same typed backpressure as an in-process
+//! caller.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::coordinator::jobs::spawn_worker;
+
+use super::{SubmitError, TnnService};
+
+/// Request kind: inference (expects a meaningful reply).
+pub const KIND_INFER: u8 = 1;
+/// Request kind: online-STDP learn (acknowledged only).
+pub const KIND_LEARN: u8 = 2;
+
+/// Reply status: served.
+pub const STATUS_OK: u8 = 0;
+/// Reply status: rejected by admission control (queue full) — retry later.
+pub const STATUS_REJECTED: u8 = 1;
+/// Reply status: malformed frame or wrong window length.
+pub const STATUS_BAD_REQUEST: u8 = 2;
+/// Reply status: service shutting down.
+pub const STATUS_CLOSED: u8 = 3;
+
+/// Maximum accepted payload size; larger frames poison the connection.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Decoded reply frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireReply {
+    /// One of the `STATUS_*` constants.
+    pub status: u8,
+    /// WTA winner (-1 for no-fire, rejections and learn acks).
+    pub winner: i32,
+    /// Weight-snapshot epoch the result was computed on.
+    pub epoch: u64,
+    /// Server-measured end-to-end latency in microseconds (saturated).
+    pub latency_us: u32,
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF before a
+/// length prefix (the peer hung up between requests).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    match r.read_exact(&mut len4) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+/// Encode a request payload (`kind` + f32-LE window).
+pub fn encode_request(kind: u8, window: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(1 + 4 * window.len());
+    p.push(kind);
+    for v in window {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+/// Decode a request payload into `(kind, window)`.
+pub fn decode_request(payload: &[u8]) -> anyhow::Result<(u8, Vec<f32>)> {
+    anyhow::ensure!(!payload.is_empty(), "empty request frame");
+    let kind = payload[0];
+    anyhow::ensure!(
+        kind == KIND_INFER || kind == KIND_LEARN,
+        "unknown request kind {kind}"
+    );
+    let body = &payload[1..];
+    anyhow::ensure!(body.len() % 4 == 0, "window bytes not a multiple of 4");
+    let window = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((kind, window))
+}
+
+/// Encode a reply payload (17 bytes).
+pub fn encode_reply(r: &WireReply) -> Vec<u8> {
+    let mut p = Vec::with_capacity(17);
+    p.push(r.status);
+    p.extend_from_slice(&r.winner.to_le_bytes());
+    p.extend_from_slice(&r.epoch.to_le_bytes());
+    p.extend_from_slice(&r.latency_us.to_le_bytes());
+    p
+}
+
+/// Decode a reply payload.
+pub fn decode_reply(payload: &[u8]) -> anyhow::Result<WireReply> {
+    anyhow::ensure!(payload.len() == 17, "reply frame must be 17 bytes, got {}", payload.len());
+    Ok(WireReply {
+        status: payload[0],
+        winner: i32::from_le_bytes(payload[1..5].try_into().unwrap()),
+        epoch: u64::from_le_bytes(payload[5..13].try_into().unwrap()),
+        latency_us: u32::from_le_bytes(payload[13..17].try_into().unwrap()),
+    })
+}
+
+fn reject_reply(e: &SubmitError) -> WireReply {
+    let status = match e {
+        SubmitError::QueueFull { .. } => STATUS_REJECTED,
+        SubmitError::Closed => STATUS_CLOSED,
+        SubmitError::WindowLen { .. } => STATUS_BAD_REQUEST,
+    };
+    WireReply { status, winner: -1, epoch: 0, latency_us: 0 }
+}
+
+fn handle_conn(svc: Arc<TnnService>, mut stream: TcpStream) -> std::io::Result<()> {
+    while let Some(payload) = read_frame(&mut stream)? {
+        let reply = match decode_request(&payload) {
+            Err(_) => WireReply { status: STATUS_BAD_REQUEST, winner: -1, epoch: 0, latency_us: 0 },
+            Ok((KIND_LEARN, window)) => match svc.submit_learn(window) {
+                Ok(()) => WireReply { status: STATUS_OK, winner: -1, epoch: 0, latency_us: 0 },
+                Err(e) => reject_reply(&e),
+            },
+            Ok((_, window)) => match svc.infer_blocking(window) {
+                Ok(r) => WireReply {
+                    status: STATUS_OK,
+                    winner: r.winner,
+                    epoch: r.epoch,
+                    latency_us: r.latency.as_micros().min(u32::MAX as u128) as u32,
+                },
+                Err(e) => reject_reply(&e),
+            },
+        };
+        write_frame(&mut stream, &encode_reply(&reply))?;
+    }
+    Ok(())
+}
+
+/// Running TCP front-end. The accept loop and per-connection threads are
+/// detached; they share the service via `Arc` and stop serving (status 3)
+/// once the service shuts down.
+pub struct TcpFront {
+    local_addr: SocketAddr,
+}
+
+impl TcpFront {
+    /// Bind `addr` (e.g. `"127.0.0.1:7070"`, port 0 for ephemeral) and
+    /// start accepting framed connections against `svc`.
+    pub fn spawn(svc: Arc<TnnService>, addr: &str) -> crate::Result<TcpFront> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding tcp front-end on {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        spawn_worker("tnn-serve-tcp-accept", move || {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(s) => {
+                        let svc = svc.clone();
+                        spawn_worker("tnn-serve-tcp-conn", move || {
+                            let _ = handle_conn(svc, s);
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpFront { local_addr })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), Some(b"hello".to_vec()));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Vec::new()));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut r = Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        let mut r = Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let w = vec![0.25f32, -1.5, 3.75];
+        let p = encode_request(KIND_INFER, &w);
+        let (kind, back) = decode_request(&p).unwrap();
+        assert_eq!(kind, KIND_INFER);
+        assert_eq!(back, w);
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[9]).is_err(), "unknown kind");
+        assert!(decode_request(&[KIND_INFER, 0, 0]).is_err(), "ragged window bytes");
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let r = WireReply { status: STATUS_OK, winner: -1, epoch: 42, latency_us: 1234 };
+        assert_eq!(decode_reply(&encode_reply(&r)).unwrap(), r);
+        assert!(decode_reply(&[0; 5]).is_err());
+    }
+}

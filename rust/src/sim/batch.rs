@@ -257,6 +257,35 @@ mod tests {
     }
 
     #[test]
+    fn no_fire_sentinel_propagates_through_batched_inference() {
+        // An all-equal window under the default positive sparse cutoff
+        // encodes to all-t_r (no input spikes at all), so no neuron can
+        // ever cross threshold: the t_r sentinel must survive the batched
+        // path as winner -1 and y == [t_r; q], for every response family.
+        for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+            let mut cfg = ColumnConfig::new("NoFire", "synthetic", 12, 3);
+            cfg.params.response = resp;
+            assert!(cfg.params.sparse_cutoff > 0.0, "test needs a sparse code");
+            let t_r = cfg.params.t_r;
+            let batch = BatchSim::new(cfg, 4).with_workers(2);
+            let flat = vec![1.5f32; 12];
+            assert_eq!(batch.sim.encode(&flat), vec![t_r; 12], "{resp:?}");
+            // Mix no-fire windows with a normal one: only the flat windows
+            // carry the sentinel.
+            let normal = windows(12, 1, 2).pop().unwrap();
+            let mixed = vec![flat.clone(), normal, flat];
+            let outs = batch.infer_batch(&mixed);
+            assert_eq!(outs[0].winner, -1, "{resp:?}");
+            assert_eq!(outs[0].y, vec![t_r; 3], "{resp:?}");
+            assert_eq!(outs[2], outs[0], "{resp:?}");
+            assert_eq!(batch.infer_winners(&mixed)[0], -1, "{resp:?}");
+            // The sentinel also survives the pre-encoded entry points.
+            let enc = batch.encode_batch(&mixed);
+            assert_eq!(batch.winners_encoded(&enc)[0], -1, "{resp:?}");
+        }
+    }
+
+    #[test]
     fn empty_dataset_is_fine() {
         let cfg = ColumnConfig::new("E", "synthetic", 8, 2);
         let mut b = BatchSim::new(cfg, 1);

@@ -67,6 +67,32 @@ mod tests {
     }
 
     #[test]
+    fn all_equal_window_hits_the_span_clamp() {
+        // Equal values make hi - lo == 0; the 1e-9 clamp normalizes every
+        // input to x_hat = 0. Under any positive cutoff the whole window is
+        // sparse (t_r sentinel everywhere); with a dense code (cutoff 0)
+        // every synapse lands on the slowest spike t - 1.
+        assert_eq!(encode_window(&[4.2; 6], 8, 32, 0.5), vec![32; 6]);
+        assert_eq!(encode_window(&[-3.0; 6], 8, 32, 0.0), vec![7; 6]);
+        assert_eq!(encode_window(&[0.0; 4], 8, 32, f32::MIN_POSITIVE), vec![32; 4]);
+    }
+
+    #[test]
+    fn cutoff_exactly_at_boundary_still_spikes() {
+        // The sparsity test is strict (x_hat < cutoff): a value normalizing
+        // to EXACTLY the cutoff keeps its spike.
+        let s = encode_window(&[0.0, 1.0, 0.5], 8, 32, 0.5);
+        assert_eq!(s[0], 32, "x_hat 0 is below the cutoff: sparse");
+        assert_eq!(s[1], 0, "x_hat 1 is the fastest spike");
+        // x_hat == 0.5 exactly (both 0.5 and the 0..1 span are exact in
+        // f32): spikes at round_half_even(0.5 * 7) = round(3.5) -> 4.
+        assert_eq!(s[2], 4);
+        // Nudging the cutoff one ulp above 0.5 silences that synapse.
+        let s2 = encode_window(&[0.0, 1.0, 0.5], 8, 32, 0.500_000_06);
+        assert_eq!(s2[2], 32);
+    }
+
+    #[test]
     fn scale_invariance_exact_for_powers_of_two() {
         // Power-of-two scaling is exact in f32, so encoding is bit-identical.
         // (General affine shifts are invariant only up to f32 rounding at

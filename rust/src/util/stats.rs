@@ -41,6 +41,27 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// 0-based index of the nearest-rank p-th percentile (0 < p <= 100) in a
+/// sorted collection of `n` samples: `ceil(p/100 * n)` clamped to [1, n],
+/// minus one. Shared by [`percentile_nearest_rank`] (on raw samples) and
+/// the serve-metrics latency histogram (on cumulative bucket counts).
+pub fn nearest_rank_index(n: usize, p: f64) -> usize {
+    assert!(n > 0, "nearest rank of empty collection");
+    let rank = (p / 100.0 * n as f64).ceil() as usize;
+    rank.clamp(1, n) - 1
+}
+
+/// p-th percentile by the nearest-rank definition: the smallest sample such
+/// that at least p% of the data is <= it (no interpolation — the reported
+/// value is always an observed sample). This is the convention used for the
+/// serve latency report (`serve::metrics`, `serve::loadgen`).
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[nearest_rank_index(v.len(), p)]
+}
+
 /// Ordinary least squares fit y = a*x + b; returns (a, b, r2).
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     assert_eq!(xs.len(), ys.len());
@@ -88,6 +109,43 @@ mod tests {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
         assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_matches_textbook_example() {
+        // The canonical nearest-rank worked example: [15, 20, 35, 40, 50].
+        let xs = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile_nearest_rank(&xs, 5.0), 15.0);
+        assert_eq!(percentile_nearest_rank(&xs, 30.0), 20.0);
+        assert_eq!(percentile_nearest_rank(&xs, 40.0), 20.0);
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 35.0);
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 50.0);
+        // Unsorted input is sorted internally.
+        assert_eq!(percentile_nearest_rank(&[9.0, 1.0, 5.0], 50.0), 5.0);
+    }
+
+    #[test]
+    fn nearest_rank_always_returns_an_observed_sample() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        for p in [1.0, 2.5, 50.0, 95.0, 99.0, 99.9, 100.0] {
+            let v = percentile_nearest_rank(&xs, p);
+            assert!(xs.contains(&v), "p{p} gave non-sample {v}");
+        }
+        // p50/p95/p99 of 0..100: ranks 51, 96, 100 -> values 50, 95, 99.
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 50.0);
+        assert_eq!(percentile_nearest_rank(&xs, 95.0), 95.0);
+        assert_eq!(percentile_nearest_rank(&xs, 99.0), 99.0);
+        // Single sample: every percentile is that sample.
+        assert_eq!(percentile_nearest_rank(&[7.5], 1.0), 7.5);
+        assert_eq!(percentile_nearest_rank(&[7.5], 99.0), 7.5);
+    }
+
+    #[test]
+    fn nearest_rank_index_clamps() {
+        assert_eq!(nearest_rank_index(5, 0.0), 0);
+        assert_eq!(nearest_rank_index(5, 100.0), 4);
+        assert_eq!(nearest_rank_index(1, 50.0), 0);
+        assert_eq!(nearest_rank_index(100, 99.0), 98);
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Acceptance tests for the serve subsystem (ISSUE 3):
+//!
+//! (a) closed-loop bench results are deterministic for a fixed seed and
+//!     shard count (and, while not learning, for ANY shard count);
+//! (b) reader-shard inference is bit-identical to `BatchSim` run offline
+//!     on the same weight snapshot;
+//! (c) overload returns typed rejections — no deadlock, no silent drops:
+//!     accepted + rejected == offered and every accepted request replies;
+//! (d) the `--bench --json` report parses and carries throughput plus
+//!     nearest-rank p50/p95/p99 from `util::stats`.
+//!
+//! Plus: the drained learner trajectory equals serial per-sample STDP,
+//! readers adopt published snapshots, and the TCP front-end round-trips
+//! the frame protocol on a live socket.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use tnngen::config::ColumnConfig;
+use tnngen::report::artifacts;
+use tnngen::serve::{
+    run_closed_loop, run_open_loop, LoadSpec, ServeOpts, SubmitError, TnnService,
+};
+use tnngen::sim::{BatchSim, CycleSim};
+use tnngen::util::Rng;
+
+fn cfg() -> ColumnConfig {
+    ColumnConfig::new("ServeTest", "synthetic", 24, 3)
+}
+
+fn windows(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect()
+}
+
+#[test]
+fn closed_loop_bench_is_deterministic_for_fixed_seed_and_shards() {
+    let xs = windows(64, 24, 7);
+    let run = |shards: usize| {
+        let svc = TnnService::start(cfg(), 11, ServeOpts { shards, ..Default::default() });
+        let r = run_closed_loop(&svc, &xs, 200, 8);
+        svc.shutdown();
+        r
+    };
+    let a = run(2);
+    let b = run(2);
+    assert_eq!(a.winners_digest, b.winners_digest, "same seed + shards => same digest");
+    assert_eq!(a.completed, 200);
+    assert_eq!(b.completed, 200);
+    assert_eq!((a.offered, a.accepted, a.rejected, a.lost), (200, 200, 0, 0));
+    // Inference-only serving is a pure function of the windows and the
+    // seed: the digest is shard-count invariant too.
+    let c = run(5);
+    assert_eq!(a.winners_digest, c.winners_digest, "digest must not depend on shard count");
+}
+
+#[test]
+fn reader_results_bit_identical_to_offline_batchsim_on_same_snapshot() {
+    let xs = windows(40, 24, 3);
+    let svc = TnnService::start(cfg(), 5, ServeOpts { shards: 3, ..Default::default() });
+    let snap = svc.snapshot();
+    assert_eq!(snap.epoch, 0);
+    let (tx, rx) = mpsc::channel();
+    let mut ids = Vec::new();
+    for x in &xs {
+        ids.push(svc.submit_infer(x.clone(), tx.clone()).unwrap());
+    }
+    let mut got = BTreeMap::new();
+    for _ in 0..xs.len() {
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+        assert_eq!(r.epoch, 0, "no learner activity => epoch-0 snapshot");
+        got.insert(r.id, r.winner);
+    }
+    svc.shutdown();
+    let offline =
+        BatchSim::from_sim(CycleSim::from_flat(cfg(), snap.weights.clone())).infer_winners(&xs);
+    for (i, id) in ids.iter().enumerate() {
+        assert_eq!(got[id], offline[i], "sample {i}");
+    }
+}
+
+#[test]
+fn backpressure_returns_typed_rejections_without_deadlock_or_silent_drops() {
+    let xs = windows(8, 24, 1);
+    let opts = ServeOpts {
+        shards: 1,
+        queue_capacity: 4,
+        max_batch: 2,
+        max_wait: Duration::from_micros(50),
+        worker_delay: Duration::from_millis(3),
+        ..Default::default()
+    };
+    let svc = TnnService::start(cfg(), 2, opts);
+    let (tx, rx) = mpsc::channel();
+    let offered = 200u64;
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    for i in 0..offered {
+        match svc.submit_infer(xs[(i as usize) % xs.len()].clone(), tx.clone()) {
+            Ok(_) => accepted += 1,
+            Err(SubmitError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 4, "typed rejection carries the configured bound");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "offered load must exceed capacity in this setup");
+    assert_eq!(accepted + rejected, offered, "every submit is accounted for");
+    // No deadlock, no silent drops: every accepted request gets a reply.
+    for k in 0..accepted {
+        rx.recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|_| panic!("accepted request {k} never completed"));
+    }
+    svc.shutdown();
+    let m = svc.metrics().snapshot();
+    assert_eq!(m.accepted, accepted);
+    assert_eq!(m.rejected, rejected);
+    assert_eq!(m.completed, accepted);
+}
+
+#[test]
+fn drained_learner_matches_serial_stdp_trajectory_and_publishes() {
+    let xs = windows(50, 24, 9);
+    let opts = ServeOpts { shards: 2, snapshot_every: 16, ..Default::default() };
+    let svc = TnnService::start(cfg(), 21, opts);
+    for x in &xs {
+        svc.submit_learn(x.clone()).unwrap();
+    }
+    // Graceful shutdown drains the learner queue and publishes the final
+    // snapshot, so the served weights equal serial per-sample STDP.
+    svc.shutdown();
+    let snap = svc.snapshot();
+    let mut offline = CycleSim::new(cfg(), 21);
+    for x in &xs {
+        offline.step(x);
+    }
+    assert_eq!(snap.weights, offline.weights, "single-writer trajectory must be serial");
+    // 3 periodic publishes (16, 32, 48) + 1 final drain publish.
+    assert_eq!(snap.epoch, 4);
+    let m = svc.metrics().snapshot();
+    assert_eq!(m.learn_accepted, 50);
+    assert_eq!(m.learned, 50);
+    assert_eq!(m.snapshots_published, 4);
+}
+
+#[test]
+fn readers_adopt_published_snapshots() {
+    let xs = windows(32, 24, 13);
+    let opts = ServeOpts { shards: 2, snapshot_every: 8, ..Default::default() };
+    let svc = TnnService::start(cfg(), 31, opts);
+    for x in &xs {
+        svc.submit_learn(x.clone()).unwrap();
+    }
+    // Wait until all 32 steps have applied AND epoch 4 (32 / snapshot_every)
+    // is published; afterwards the learner is quiescent.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.snapshot().epoch < 4 {
+        assert!(Instant::now() < deadline, "learner stalled");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let snap = svc.snapshot();
+    assert_eq!(snap.epoch, 4);
+    assert_eq!(svc.metrics().snapshot().learned, 32);
+    let probe = windows(10, 24, 99);
+    let (tx, rx) = mpsc::channel();
+    let mut ids = Vec::new();
+    for x in &probe {
+        ids.push(svc.submit_infer(x.clone(), tx.clone()).unwrap());
+    }
+    let mut got = BTreeMap::new();
+    for _ in 0..probe.len() {
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+        assert_eq!(r.epoch, 4, "readers must serve the newest published epoch");
+        got.insert(r.id, r.winner);
+    }
+    svc.shutdown();
+    let offline = BatchSim::from_sim(CycleSim::from_flat(cfg(), snap.weights.clone()))
+        .infer_winners(&probe);
+    for (i, id) in ids.iter().enumerate() {
+        assert_eq!(got[id], offline[i], "post-learning sample {i}");
+    }
+}
+
+#[test]
+fn bench_json_report_has_throughput_and_nearest_rank_percentiles() {
+    let xs = windows(16, 24, 5);
+    let svc = TnnService::start(cfg(), 3, ServeOpts::default());
+    let spec = LoadSpec {
+        rps: 2000.0,
+        duration_s: 0.25,
+        learn_every: 4,
+        drain_timeout: Duration::from_secs(5),
+    };
+    let r = run_open_loop(&svc, &xs, &spec);
+    svc.shutdown();
+    assert_eq!(r.offered, 500);
+    assert_eq!(r.learn_offered, 125);
+    assert_eq!(r.accepted + r.rejected + r.learn_offered, r.offered);
+    assert_eq!(r.completed + r.lost, r.accepted);
+    let doc = artifacts::serve_bench_json(&r);
+    let parsed = artifacts::parse(&doc.pretty()).expect("bench JSON must parse");
+    assert_eq!(parsed.get("schema").and_then(|v| v.as_str()), Some(artifacts::SERVE_BENCH_SCHEMA));
+    assert_eq!(parsed.get("offered").and_then(|v| v.as_i64()), Some(500));
+    assert!(parsed.get("throughput_rps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    let lat = parsed.get("latency_us").expect("latency_us object");
+    let p50 = lat.get("p50").and_then(|v| v.as_f64()).unwrap();
+    let p95 = lat.get("p95").and_then(|v| v.as_f64()).unwrap();
+    let p99 = lat.get("p99").and_then(|v| v.as_f64()).unwrap();
+    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "p50 {p50} p95 {p95} p99 {p99}");
+    let svc_lat = parsed.get("service").and_then(|s| s.get("latency_us")).expect("service histogram");
+    assert!(svc_lat.get("p99").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+    assert!(parsed.get("winners_digest").and_then(|v| v.as_str()).unwrap().len() == 16);
+}
+
+#[test]
+fn tcp_front_serves_inference_over_length_prefixed_frames() {
+    use tnngen::serve::tcp;
+    let xs = windows(5, 24, 17);
+    let svc = Arc::new(TnnService::start(cfg(), 7, ServeOpts { shards: 1, ..Default::default() }));
+    let front = tcp::TcpFront::spawn(svc.clone(), "127.0.0.1:0").expect("bind ephemeral port");
+    let offline = {
+        let snap = svc.snapshot();
+        BatchSim::from_sim(CycleSim::from_flat(cfg(), snap.weights.clone())).infer_winners(&xs)
+    };
+    let mut conn = std::net::TcpStream::connect(front.local_addr()).expect("connect");
+    for (i, x) in xs.iter().enumerate() {
+        tcp::write_frame(&mut conn, &tcp::encode_request(tcp::KIND_INFER, x)).unwrap();
+        let payload = tcp::read_frame(&mut conn).unwrap().expect("reply frame");
+        let reply = tcp::decode_reply(&payload).unwrap();
+        assert_eq!(reply.status, tcp::STATUS_OK);
+        assert_eq!(reply.epoch, 0);
+        assert_eq!(reply.winner, offline[i], "sample {i}");
+    }
+    // A learn request is acknowledged.
+    tcp::write_frame(&mut conn, &tcp::encode_request(tcp::KIND_LEARN, &xs[0])).unwrap();
+    let ack = tcp::decode_reply(&tcp::read_frame(&mut conn).unwrap().unwrap()).unwrap();
+    assert_eq!(ack.status, tcp::STATUS_OK);
+    // Wrong window length is a bad request, not a dropped connection.
+    tcp::write_frame(&mut conn, &tcp::encode_request(tcp::KIND_INFER, &[0.0; 3])).unwrap();
+    let bad = tcp::decode_reply(&tcp::read_frame(&mut conn).unwrap().unwrap()).unwrap();
+    assert_eq!(bad.status, tcp::STATUS_BAD_REQUEST);
+    drop(conn);
+    svc.shutdown();
+}
