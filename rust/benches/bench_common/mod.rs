@@ -3,6 +3,9 @@
 //!
 //! Every bench binary prints the corresponding paper table/figure rows so
 //! `cargo bench | tee bench_output.txt` records the full reproduction.
+// Each bench target compiles this module separately and uses a subset of
+// the helpers; the unused ones in any one target are not dead code.
+#![allow(dead_code)]
 
 use tnngen::report::experiments::Effort;
 use tnngen::util::stats::{mean, median, stddev};

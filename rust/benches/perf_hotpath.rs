@@ -1,186 +1,40 @@
-//! Bench: hot-path microbenchmarks for the §Perf optimization pass
-//! (EXPERIMENTS.md). Per-layer: native response path, batched-vs-sequential
-//! dataset engine, gate-level sim throughput, SA placement move rate,
-//! synthesis optimization rate, and PJRT dispatch cost.
+//! Bench: hot-path performance rows for `cargo bench` compatibility.
+//!
+//! Since the bench subsystem landed (`tnngen bench`, `rust/src/bench/`),
+//! this binary is a thin Criterion-free shim over the same registry — one
+//! source of truth for workload setup instead of bespoke rows. It runs
+//! the full engine × workload matrix (seven paper designs on
+//! cyclesim/batchsim/serve, the encode/STDP/WTA micro hot paths, and the
+//! fast-effort flow campaign) and prints one row per entry.
+//!
+//! `TNNGEN_BENCH_FAST=1` selects the quick profile (small datasets, 3
+//! iterations); the default is the full baseline-recording profile. For
+//! artifacts, diffs and regression gating use the CLI:
+//! `tnngen bench record` / `bench diff` / `bench check` (see
+//! docs/BENCHMARKS.md).
 
-mod bench_common;
-
-use bench_common::{banner, bench};
-use tnngen::config::presets::by_tag;
-use tnngen::config::ColumnConfig;
-use tnngen::coordinator::explorer::{explore_with_workers, SweepSpace};
+use tnngen::bench::{default_registry, render_row, row_header, run_entry, Profile, RunnerOpts};
 use tnngen::coordinator::jobs::default_workers;
-use tnngen::coordinator::{Coordinator, SimBackend};
-use tnngen::cluster::pipeline::TnnClustering;
-use tnngen::data::{load_benchmark, generate};
-use tnngen::eda::synthesis::{optimize, SynthStats};
-use tnngen::eda::{place, synthesize, tnn7, FlowCampaign, PlaceOpts};
-use tnngen::report::experiments::{run_paper_flows_with, Effort};
-use tnngen::rtl::{generate_column, GateSim};
-use tnngen::sim::{BatchSim, CycleSim};
-use tnngen::util::stats::median;
-use tnngen::util::timer::time_iters;
-use tnngen::util::Rng;
-
-/// Like `bench`, but also returns the median seconds so sections can print
-/// sequential-vs-batched speedup ratios.
-fn bench_median<F: FnMut()>(name: &str, iters: usize, f: F) -> f64 {
-    let samples = time_iters(iters, f);
-    let med = median(&samples);
-    println!("bench {name:<40} median {:>10.3} ms  n={}", med * 1e3, samples.len());
-    med
-}
 
 fn main() {
-    banner("L3 perf: native functional simulator");
-    let cfg = by_tag("96x2").unwrap();
-    let mut sim = CycleSim::new(cfg.clone(), 1);
-    let mut rng = Rng::new(9);
-    let xs: Vec<Vec<f32>> = (0..120)
-        .map(|_| (0..96).map(|_| rng.f32()).collect())
-        .collect();
-    bench("native step x120 (96x2)", 10, || {
-        for x in &xs {
-            sim.step(x);
-        }
-    });
-    bench("native infer x120 (96x2)", 10, || {
-        for x in &xs {
-            let _ = sim.infer(x);
-        }
-    });
-
-    banner("L3 perf: event-driven vs cycle-accurate response");
-    let s_enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
-    bench("cycle-accurate response x120", 10, || {
-        for s in &s_enc {
-            let _ = sim.response(s);
-        }
-    });
-    let theta = sim.config.theta();
-    let params = sim.config.params;
-    bench("event-driven response x120", 10, || {
-        for s in &s_enc {
-            let _ = tnngen::sim::event::event_driven(&sim.weights, sim.config.p, s, theta, &params);
-        }
-    });
-
-    banner("L3 perf: batched vs sequential dataset engine (96x2)");
-    println!("workers: {}", default_workers());
-    let frozen = sim.clone();
-    let batch = BatchSim::from_sim(frozen.clone());
-    let t_seq = bench_median("sequential infer x120 (96x2)", 20, || {
-        for x in &xs {
-            let _ = frozen.infer(x);
-        }
-    });
-    let t_bat = bench_median("batched infer x120 (96x2)", 20, || {
-        let _ = batch.infer_winners(&xs);
-    });
-    println!("batched dataset inference speedup: {:.2}x (acceptance floor: 2x)", t_seq / t_bat);
-
-    let sweep_cfg = by_tag("16x2").unwrap();
-    let sweep_ds = generate("ECG200", 16, 2, 40, 3);
-    let sweep_pipe = TnnClustering { epochs: 2, seed: 1, n_per_split: 40 };
-    let space = SweepSpace::default(); // 9 points
-    let cfgs = space.configs(&sweep_cfg);
-    let t_sweep_seq = bench_median("sequential sweep, 9 pts (16x2)", 5, || {
-        for c in &cfgs {
-            let _ = sweep_pipe.run_native_sequential(c, &sweep_ds);
-        }
-    });
-    let t_sweep_bat = bench_median("batched sweep, 9 pts (16x2)", 5, || {
-        let _ = explore_with_workers(&sweep_cfg, &sweep_ds, &space, &sweep_pipe, default_workers());
-    });
-    println!("batched sweep speedup: {:.2}x", t_sweep_seq / t_sweep_bat);
-
-    banner("L3 perf: serve shard pool (96x2, fixed open-loop offered load)");
-    {
-        use tnngen::serve::{run_open_loop, LoadSpec, ServeOpts, TnnService};
-        let spec = LoadSpec {
-            rps: 3000.0,
-            duration_s: 1.0,
-            learn_every: 0,
-            drain_timeout: std::time::Duration::from_secs(5),
-        };
-        let mut single_p99 = 0.0;
-        for shards in [1usize, default_workers()] {
-            let svc = TnnService::start(cfg.clone(), 1, ServeOpts { shards, ..Default::default() });
-            let r = run_open_loop(&svc, &xs, &spec);
-            svc.shutdown();
-            println!(
-                "serve {shards:>2} shard(s): {:>6.0} rps completed (offered {:.0}), p50 {:>6.0} us  p95 {:>7.0} us  p99 {:>7.0} us, rejected {}",
-                r.throughput_rps, spec.rps, r.latency_p50_us, r.latency_p95_us, r.latency_p99_us, r.rejected
-            );
-            if shards == 1 {
-                single_p99 = r.latency_p99_us;
-            } else if single_p99 > 0.0 && r.latency_p99_us > 0.0 {
-                println!(
-                    "serve p99 improvement 1 -> {shards} shards: {:.2}x at {:.0} rps offered",
-                    single_p99 / r.latency_p99_us,
-                    spec.rps
-                );
-            }
-        }
-    }
-
-    banner("L3 perf: gate-level simulator");
-    let small = ColumnConfig::new("perf", "synthetic", 12, 2);
-    let rtl = generate_column(&small).unwrap();
-    let mut gsim = GateSim::new(&rtl.netlist).unwrap();
-    rtl.load_weights(&mut gsim, &vec![vec![28u64; 12]; 2]);
-    let spikes: Vec<i32> = (0..12).map(|i| (i % 8) as i32).collect();
-    bench("gate-level sample (12x2 column)", 10, || {
-        let _ = rtl.run_sample(&mut gsim, &spikes, true);
-    });
-
-    banner("L3 perf: synthesis optimization + SA placement");
-    let cfg_hw = by_tag("65x2").unwrap();
-    let rtl_hw = generate_column(&cfg_hw).unwrap();
-    bench("synthesis optimize (65x2 ASAP7 fabric)", 3, || {
-        let mut stats = SynthStats::default();
-        let _ = optimize(&rtl_hw.netlist, &mut stats);
-    });
-    let design = synthesize(&rtl_hw.netlist, &tnn7());
-    bench("SA placement (65x2 TNN7)", 3, || {
-        let _ = place(&design, &PlaceOpts::default());
-    });
-
-    banner("L3 perf: flow campaign (fast effort: 3 designs x 3 libraries)");
-    let effort = Effort::fast();
-    let t_c1 = bench_median("flow campaign, 1 worker", 2, || {
-        let _ = run_paper_flows_with(effort, &FlowCampaign::with_workers(1)).unwrap();
-    });
-    let nw = default_workers();
-    let t_cn = bench_median(&format!("flow campaign, {nw} workers"), 2, || {
-        let _ = run_paper_flows_with(effort, &FlowCampaign::with_workers(nw)).unwrap();
-    });
-    println!(
-        "flow campaign speedup: {:.2}x with {nw} workers (9 independent flows, deterministic order)",
-        t_c1 / t_cn
-    );
-    let cache_dir = std::env::temp_dir().join(format!("tnngen_bench_cache_{}", std::process::id()));
-    let warm_fill = FlowCampaign::with_workers(nw).with_cache_dir(&cache_dir).unwrap();
-    let _ = run_paper_flows_with(effort, &warm_fill).unwrap();
-    let t_warm = bench_median("flow campaign, warm cache", 3, || {
-        let c = FlowCampaign::with_workers(nw).with_cache_dir(&cache_dir).unwrap();
-        let _ = run_paper_flows_with(effort, &c).unwrap();
-    });
-    println!(
-        "warm-cache campaign speedup vs cold 1-worker: {:.0}x (all flow stages skipped)",
-        t_c1 / t_warm
-    );
-    std::fs::remove_dir_all(&cache_dir).ok();
-
-    banner("L1/L2 perf: PJRT dispatch (requires artifacts)");
-    if let Ok(coord) = Coordinator::with_artifacts(std::path::Path::new("artifacts")) {
-        let cfg2 = by_tag("96x2").unwrap();
-        let ds = load_benchmark(&cfg2.name, cfg2.p, cfg2.q, 32, 42);
-        let pipe = TnnClustering { epochs: 1, seed: 42, n_per_split: 32 };
-        bench("pjrt epoch 64 samples (96x2)", 3, || {
-            let _ = coord.run_clustering(&cfg2, &ds, &pipe, SimBackend::Pjrt).unwrap();
-        });
+    let profile = if std::env::var("TNNGEN_BENCH_FAST").ok().as_deref() == Some("1") {
+        Profile::Quick
     } else {
-        println!("artifacts not built; skipping PJRT microbench");
+        Profile::Full
+    };
+    let opts = RunnerOpts::for_profile(profile);
+    println!(
+        "perf_hotpath shim over the tnngen bench registry ({} profile, {} workers, \
+         {} warmup + {} iters per entry)",
+        profile.name(),
+        default_workers(),
+        opts.warmup_iters,
+        opts.iters
+    );
+    println!("{}", row_header());
+    for entry in default_registry(profile) {
+        let result = run_entry(&entry, &opts);
+        println!("{}", render_row(&result));
     }
+    println!("(record/diff/gate these rows with `tnngen bench record|diff|check`)");
 }

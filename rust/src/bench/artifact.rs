@@ -1,0 +1,282 @@
+//! The versioned on-disk bench result format: `tnngen.bench/v1`.
+//!
+//! Emitted and parsed with the dependency-free JSON layer
+//! ([`report::artifacts`](crate::report::artifacts)), so emit → parse →
+//! emit is byte-stable (floats render with Rust's shortest-round-trip
+//! `Display`). Field-by-field documentation lives in
+//! `docs/BENCHMARKS.md`; `rust/tests/bench.rs` pins the round-trip.
+//!
+//! Seconds fields follow the repo's measurement split (see
+//! `docs/ARCHITECTURE.md` § determinism): entry *identity* fields (name,
+//! units, warmup/iteration counts) are deterministic for a given profile;
+//! the `secs` block is wall-clock measurement data and varies run to run.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::report::artifacts::{self, Json};
+use crate::util::stats::{mean, median, percentile_nearest_rank};
+
+/// Schema tag written into (and required from) every bench artifact.
+pub const BENCH_SCHEMA: &str = "tnngen.bench/v1";
+
+/// Wall-clock statistics over one entry's per-iteration samples
+/// (seconds). `median`/`mean` interpolate; `p50`/`p99` use the
+/// nearest-rank definition (always an observed sample), the same
+/// convention as the serve latency report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timing {
+    /// Interpolated median of the per-iteration seconds.
+    pub median_s: f64,
+    /// Arithmetic mean.
+    pub mean_s: f64,
+    /// Nearest-rank 50th percentile (an observed sample).
+    pub p50_s: f64,
+    /// Nearest-rank 99th percentile (the max for small iteration counts).
+    pub p99_s: f64,
+    /// Fastest iteration.
+    pub min_s: f64,
+    /// Slowest iteration.
+    pub max_s: f64,
+}
+
+impl Timing {
+    /// Compute the statistics from per-iteration seconds sorted
+    /// ascending (the shape [`crate::util::timer::time_iters`] returns).
+    /// Panics on empty input.
+    pub fn from_sorted_seconds(sorted: &[f64]) -> Timing {
+        assert!(!sorted.is_empty(), "timing of zero iterations");
+        Timing {
+            median_s: median(sorted),
+            mean_s: mean(sorted),
+            p50_s: percentile_nearest_rank(sorted, 50.0),
+            p99_s: percentile_nearest_rank(sorted, 99.0),
+            min_s: sorted[0],
+            max_s: sorted[sorted.len() - 1],
+        }
+    }
+}
+
+/// One measured registry entry, as stored in the artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryResult {
+    /// Stable `workload/design/engine` identity.
+    pub name: String,
+    /// Workload segment (e.g. `full_column`).
+    pub workload: String,
+    /// Design segment (e.g. `96x2`).
+    pub design: String,
+    /// Engine segment (e.g. `batchsim`).
+    pub engine: String,
+    /// Work items per timed iteration (windows / requests / flows).
+    pub units_per_iter: usize,
+    /// Untimed warmup iterations that preceded measurement.
+    pub warmup_iters: usize,
+    /// Timed iterations behind the statistics.
+    pub iters: usize,
+    /// Wall-clock statistics (seconds).
+    pub timing: Timing,
+    /// `units_per_iter / median_s` (0 when the median underflows).
+    pub throughput_per_s: f64,
+}
+
+/// A full bench run: profile + worker count + every entry, in registry
+/// order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchArtifact {
+    /// Profile the run used (`quick` / `full`).
+    pub profile: String,
+    /// Worker threads available to the parallel engines.
+    pub workers: usize,
+    /// Per-entry results in registry order.
+    pub entries: Vec<EntryResult>,
+}
+
+fn timing_json(t: &Timing) -> Json {
+    Json::obj(vec![
+        ("median", Json::Num(t.median_s)),
+        ("mean", Json::Num(t.mean_s)),
+        ("p50", Json::Num(t.p50_s)),
+        ("p99", Json::Num(t.p99_s)),
+        ("min", Json::Num(t.min_s)),
+        ("max", Json::Num(t.max_s)),
+    ])
+}
+
+fn entry_json(e: &EntryResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(e.name.clone())),
+        ("workload", Json::Str(e.workload.clone())),
+        ("design", Json::Str(e.design.clone())),
+        ("engine", Json::Str(e.engine.clone())),
+        ("units_per_iter", Json::Int(e.units_per_iter as i64)),
+        ("warmup_iters", Json::Int(e.warmup_iters as i64)),
+        ("iters", Json::Int(e.iters as i64)),
+        ("secs", timing_json(&e.timing)),
+        ("throughput_per_s", Json::Num(e.throughput_per_s)),
+    ])
+}
+
+/// Render an artifact as its `tnngen.bench/v1` JSON document.
+pub fn bench_json(a: &BenchArtifact) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(BENCH_SCHEMA.to_string())),
+        ("profile", Json::Str(a.profile.clone())),
+        ("workers", Json::Int(a.workers as i64)),
+        ("entries", Json::Arr(a.entries.iter().map(entry_json).collect())),
+    ])
+}
+
+fn parse_timing(secs: &Json) -> Result<Timing> {
+    let f = |k: &str| {
+        secs.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("missing numeric field secs.{k}"))
+    };
+    Ok(Timing {
+        median_s: f("median")?,
+        mean_s: f("mean")?,
+        p50_s: f("p50")?,
+        p99_s: f("p99")?,
+        min_s: f("min")?,
+        max_s: f("max")?,
+    })
+}
+
+fn parse_entry(e: &Json) -> Result<EntryResult> {
+    let s = |k: &str| {
+        e.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .with_context(|| format!("missing string field {k:?}"))
+    };
+    let n = |k: &str| {
+        e.get(k)
+            .and_then(Json::as_i64)
+            .with_context(|| format!("missing integer field {k:?}"))
+    };
+    let secs = e.get("secs").context("missing secs object")?;
+    Ok(EntryResult {
+        name: s("name")?,
+        workload: s("workload")?,
+        design: s("design")?,
+        engine: s("engine")?,
+        units_per_iter: n("units_per_iter")? as usize,
+        warmup_iters: n("warmup_iters")? as usize,
+        iters: n("iters")? as usize,
+        timing: parse_timing(secs)?,
+        throughput_per_s: e
+            .get("throughput_per_s")
+            .and_then(Json::as_f64)
+            .context("missing numeric field throughput_per_s")?,
+    })
+}
+
+/// Parse a `tnngen.bench/v1` document. Rejects other schema tags loudly
+/// so a future `/v2` cannot be silently misread.
+pub fn parse_bench(text: &str) -> Result<BenchArtifact> {
+    let doc = artifacts::parse(text)?;
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .context("missing schema field")?;
+    ensure!(
+        schema == BENCH_SCHEMA,
+        "unsupported bench schema {schema:?} (expected {BENCH_SCHEMA})"
+    );
+    let profile = doc
+        .get("profile")
+        .and_then(Json::as_str)
+        .context("missing profile field")?
+        .to_string();
+    let workers = doc
+        .get("workers")
+        .and_then(Json::as_i64)
+        .context("missing workers field")? as usize;
+    let raw = doc.get("entries").and_then(Json::as_arr).context("missing entries array")?;
+    let mut entries = Vec::with_capacity(raw.len());
+    for (i, e) in raw.iter().enumerate() {
+        entries.push(parse_entry(e).with_context(|| format!("bench entry {i}"))?);
+    }
+    Ok(BenchArtifact { profile, workers, entries })
+}
+
+/// Load and parse an artifact file (the `--against` / `--current` paths).
+pub fn load_bench(path: &std::path::Path) -> Result<BenchArtifact> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench artifact {}", path.display()))?;
+    parse_bench(&text).with_context(|| format!("parsing bench artifact {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_artifact() -> BenchArtifact {
+        let timing = |m: f64| Timing {
+            median_s: m,
+            mean_s: m * 1.05,
+            p50_s: m,
+            p99_s: m * 1.5,
+            min_s: m * 0.9,
+            max_s: m * 1.5,
+        };
+        BenchArtifact {
+            profile: "quick".to_string(),
+            workers: 8,
+            entries: vec![
+                EntryResult {
+                    name: "encode/96x2/cyclesim".to_string(),
+                    workload: "encode".to_string(),
+                    design: "96x2".to_string(),
+                    engine: "cyclesim".to_string(),
+                    units_per_iter: 12,
+                    warmup_iters: 1,
+                    iters: 3,
+                    timing: timing(1.25e-4),
+                    throughput_per_s: 12.0 / 1.25e-4,
+                },
+                EntryResult {
+                    name: "full_column/96x2/serve".to_string(),
+                    workload: "full_column".to_string(),
+                    design: "96x2".to_string(),
+                    engine: "serve".to_string(),
+                    units_per_iter: 64,
+                    warmup_iters: 1,
+                    iters: 3,
+                    timing: timing(3.7e-3),
+                    throughput_per_s: 64.0 / 3.7e-3,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn emit_parse_roundtrip_is_byte_stable() {
+        let a = sample_artifact();
+        let text = bench_json(&a).pretty();
+        let back = parse_bench(&text).unwrap();
+        assert_eq!(back, a);
+        assert_eq!(bench_json(&back).pretty(), text);
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let a = sample_artifact();
+        let text = bench_json(&a).pretty().replace("tnngen.bench/v1", "tnngen.bench/v9");
+        let err = parse_bench(&text).unwrap_err();
+        assert!(err.to_string().contains("unsupported bench schema"), "{err:#}");
+        assert!(parse_bench("{}").is_err());
+        assert!(parse_bench("not json").is_err());
+    }
+
+    #[test]
+    fn timing_from_sorted_seconds() {
+        let t = Timing::from_sorted_seconds(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.median_s, 2.5);
+        assert_eq!(t.mean_s, 2.5);
+        assert_eq!(t.p50_s, 2.0, "nearest rank is an observed sample");
+        assert_eq!(t.p99_s, 4.0);
+        assert_eq!(t.min_s, 1.0);
+        assert_eq!(t.max_s, 4.0);
+    }
+}

@@ -1,0 +1,366 @@
+//! Regression gating: `bench diff` and `bench check`.
+//!
+//! Entries are aligned by their stable `workload/design/engine` name and
+//! compared on the **median** seconds (the statistic least sensitive to
+//! scheduler outliers; see `docs/BENCHMARKS.md` for the rationale). A
+//! current median more than `fail_threshold`× the baseline median is a
+//! regression; less than `1/fail_threshold`× is an improvement;
+//! everything else is within the noise band. Entries whose medians both
+//! sit under the noise floor are never flagged — at micro-second scale
+//! the timer, not the code, dominates the ratio. Rows whose
+//! `units_per_iter` differ (artifacts recorded under different profiles
+//! or overridden iteration flags) are classified incomparable and never
+//! judged — a ratio across different work sizes is not a verdict; the
+//! CLI additionally refuses `bench check` across mismatched profiles.
+//!
+//! `bench check` exit protocol (enforced in `main.rs`, pinned by
+//! `rust/tests/bench.rs`): 0 = pass (or `--report-only`), 3 = regression
+//! gate tripped, 1 = operational error (missing/corrupt baseline).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::report::Table;
+
+use super::artifact::BenchArtifact;
+
+/// One aligned comparison row (medians in seconds; `None` = the entry is
+/// absent on that side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    /// Entry name the sides were aligned on.
+    pub name: String,
+    /// Baseline median seconds, if the baseline has the entry.
+    pub baseline_s: Option<f64>,
+    /// Current median seconds, if the current run has the entry.
+    pub current_s: Option<f64>,
+    /// Baseline `units_per_iter` (work-size fingerprint).
+    pub baseline_units: Option<usize>,
+    /// Current `units_per_iter`.
+    pub current_units: Option<usize>,
+}
+
+impl DiffRow {
+    /// `current / baseline` (>1 = slower), when both sides are present
+    /// and the baseline is positive.
+    pub fn ratio(&self) -> Option<f64> {
+        match (self.baseline_s, self.current_s) {
+            (Some(b), Some(c)) if b > 0.0 => Some(c / b),
+            _ => None,
+        }
+    }
+}
+
+/// Align two artifacts by entry name: baseline entries in baseline order
+/// first (with the matching current median, if any), then current-only
+/// entries in current order.
+pub fn diff(baseline: &BenchArtifact, current: &BenchArtifact) -> Vec<DiffRow> {
+    let cur: BTreeMap<&str, (f64, usize)> = current
+        .entries
+        .iter()
+        .map(|e| (e.name.as_str(), (e.timing.median_s, e.units_per_iter)))
+        .collect();
+    let base_names: BTreeSet<&str> = baseline.entries.iter().map(|e| e.name.as_str()).collect();
+    let mut rows = Vec::with_capacity(baseline.entries.len());
+    for e in &baseline.entries {
+        let found = cur.get(e.name.as_str()).copied();
+        rows.push(DiffRow {
+            name: e.name.clone(),
+            baseline_s: Some(e.timing.median_s),
+            current_s: found.map(|(s, _)| s),
+            baseline_units: Some(e.units_per_iter),
+            current_units: found.map(|(_, u)| u),
+        });
+    }
+    for e in &current.entries {
+        if !base_names.contains(e.name.as_str()) {
+            rows.push(DiffRow {
+                name: e.name.clone(),
+                baseline_s: None,
+                current_s: Some(e.timing.median_s),
+                baseline_units: None,
+                current_units: Some(e.units_per_iter),
+            });
+        }
+    }
+    rows
+}
+
+/// Gating policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateSpec {
+    /// Ratio above which a slowdown fails the gate (and below whose
+    /// reciprocal a speedup counts as an improvement).
+    pub fail_threshold: f64,
+    /// Medians both under this many seconds are never flagged (timer
+    /// noise floor).
+    pub noise_floor_s: f64,
+}
+
+impl Default for GateSpec {
+    /// 1.5× threshold, 100 µs noise floor.
+    fn default() -> Self {
+        GateSpec { fail_threshold: 1.5, noise_floor_s: 1e-4 }
+    }
+}
+
+/// Per-row classification under a [`GateSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Slower than `fail_threshold`× the baseline.
+    Regression,
+    /// Faster than `1/fail_threshold`× the baseline.
+    Improvement,
+    /// Within the threshold band.
+    Within,
+    /// Both medians under the noise floor; not judged.
+    Noise,
+    /// Work sizes (`units_per_iter`) differ — the ratio would compare
+    /// different workloads, so the row is never judged.
+    Incomparable,
+    /// Present only in the baseline.
+    OnlyBaseline,
+    /// Present only in the current run.
+    OnlyCurrent,
+}
+
+impl Verdict {
+    /// Short label for tables and summaries.
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Regression => "REGRESSION",
+            Verdict::Improvement => "improvement",
+            Verdict::Within => "ok",
+            Verdict::Noise => "noise",
+            Verdict::Incomparable => "units-mismatch",
+            Verdict::OnlyBaseline => "missing",
+            Verdict::OnlyCurrent => "new",
+        }
+    }
+}
+
+/// Classify one aligned row.
+pub fn classify(row: &DiffRow, spec: &GateSpec) -> Verdict {
+    match (row.baseline_s, row.current_s) {
+        (None, _) => Verdict::OnlyCurrent,
+        (_, None) => Verdict::OnlyBaseline,
+        (Some(b), Some(c)) => {
+            if row.baseline_units != row.current_units {
+                return Verdict::Incomparable;
+            }
+            if b < spec.noise_floor_s && c < spec.noise_floor_s {
+                return Verdict::Noise;
+            }
+            match row.ratio() {
+                Some(r) if r > spec.fail_threshold => Verdict::Regression,
+                Some(r) if r < 1.0 / spec.fail_threshold => Verdict::Improvement,
+                _ => Verdict::Within,
+            }
+        }
+    }
+}
+
+/// The gate's aggregate result.
+#[derive(Debug, Clone, Default)]
+pub struct GateOutcome {
+    /// Rows present on both sides.
+    pub compared: usize,
+    /// Rows within the threshold band (including noise-floor rows).
+    pub within: usize,
+    /// Rows failing the gate, in baseline order.
+    pub regressions: Vec<DiffRow>,
+    /// Rows beating the reciprocal threshold, in baseline order.
+    pub improvements: Vec<DiffRow>,
+    /// Entry names only the baseline has (coverage shrank).
+    pub only_in_baseline: Vec<String>,
+    /// Entry names only the current run has (coverage grew).
+    pub only_in_current: Vec<String>,
+    /// Entry names whose work sizes differ between the sides (compared
+    /// under different profiles or overridden counts); never judged.
+    pub incomparable: Vec<String>,
+}
+
+impl GateOutcome {
+    /// The gate passes iff no regression was found.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// One-line summary for logs and CI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} compared: {} regression(s), {} improvement(s), {} within band; \
+             {} missing, {} new, {} incomparable",
+            self.compared,
+            self.regressions.len(),
+            self.improvements.len(),
+            self.within,
+            self.only_in_baseline.len(),
+            self.only_in_current.len(),
+            self.incomparable.len()
+        )
+    }
+}
+
+/// Run the gate: align, classify every row, aggregate.
+pub fn check(baseline: &BenchArtifact, current: &BenchArtifact, spec: &GateSpec) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    for row in diff(baseline, current) {
+        match classify(&row, spec) {
+            Verdict::Regression => {
+                out.compared += 1;
+                out.regressions.push(row);
+            }
+            Verdict::Improvement => {
+                out.compared += 1;
+                out.improvements.push(row);
+            }
+            Verdict::Within | Verdict::Noise => {
+                out.compared += 1;
+                out.within += 1;
+            }
+            Verdict::Incomparable => out.incomparable.push(row.name),
+            Verdict::OnlyBaseline => out.only_in_baseline.push(row.name),
+            Verdict::OnlyCurrent => out.only_in_current.push(row.name),
+        }
+    }
+    out
+}
+
+fn ms(v: Option<f64>) -> String {
+    match v {
+        Some(s) => format!("{:.3}", s * 1e3),
+        None => "-".to_string(),
+    }
+}
+
+/// Render aligned rows as an ASCII table (the `bench diff` output).
+pub fn render_diff(rows: &[DiffRow], spec: &GateSpec) -> String {
+    let mut t = Table::new(&["benchmark", "baseline ms", "current ms", "ratio", "verdict"]);
+    for row in rows {
+        let ratio = match row.ratio() {
+            Some(r) => format!("{r:.2}x"),
+            None => "-".to_string(),
+        };
+        t.row(&[
+            row.name.clone(),
+            ms(row.baseline_s),
+            ms(row.current_s),
+            ratio,
+            classify(row, spec).label().to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::artifact::{EntryResult, Timing};
+
+    fn entry(name: &str, median_s: f64) -> EntryResult {
+        let parts: Vec<&str> = name.split('/').collect();
+        EntryResult {
+            name: name.to_string(),
+            workload: parts[0].to_string(),
+            design: parts[1].to_string(),
+            engine: parts[2].to_string(),
+            units_per_iter: 10,
+            warmup_iters: 1,
+            iters: 3,
+            timing: Timing {
+                median_s,
+                mean_s: median_s,
+                p50_s: median_s,
+                p99_s: median_s,
+                min_s: median_s,
+                max_s: median_s,
+            },
+            throughput_per_s: 10.0 / median_s,
+        }
+    }
+
+    fn artifact(entries: Vec<EntryResult>) -> BenchArtifact {
+        BenchArtifact { profile: "quick".to_string(), workers: 4, entries }
+    }
+
+    #[test]
+    fn classifies_regression_improvement_and_band() {
+        let baseline = artifact(vec![
+            entry("a/1x1/e", 0.010),
+            entry("b/1x1/e", 0.010),
+            entry("c/1x1/e", 0.010),
+            entry("gone/1x1/e", 0.010),
+        ]);
+        let current = artifact(vec![
+            entry("a/1x1/e", 0.030), // 3.0x: regression
+            entry("b/1x1/e", 0.002), // 0.2x: improvement
+            entry("c/1x1/e", 0.012), // 1.2x: within band
+            entry("new/1x1/e", 0.010),
+        ]);
+        let out = check(&baseline, &current, &GateSpec::default());
+        assert!(!out.passed());
+        assert_eq!(out.compared, 3);
+        assert_eq!(out.within, 1);
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].name, "a/1x1/e");
+        assert_eq!(out.improvements.len(), 1);
+        assert_eq!(out.improvements[0].name, "b/1x1/e");
+        assert_eq!(out.only_in_baseline, vec!["gone/1x1/e".to_string()]);
+        assert_eq!(out.only_in_current, vec!["new/1x1/e".to_string()]);
+    }
+
+    #[test]
+    fn noise_floor_suppresses_microsecond_flapping() {
+        // 5 µs -> 40 µs is an 8x "slowdown" but both sit under the 100 µs
+        // noise floor: never a regression.
+        let baseline = artifact(vec![entry("a/1x1/e", 5e-6)]);
+        let current = artifact(vec![entry("a/1x1/e", 4e-5)]);
+        let out = check(&baseline, &current, &GateSpec::default());
+        assert!(out.passed());
+        assert_eq!(out.within, 1);
+        // Above the floor the same ratio fails.
+        let b2 = artifact(vec![entry("a/1x1/e", 5e-3)]);
+        let c2 = artifact(vec![entry("a/1x1/e", 4e-2)]);
+        assert!(!check(&b2, &c2, &GateSpec::default()).passed());
+    }
+
+    #[test]
+    fn mismatched_units_are_never_judged() {
+        // Same entry measured over different work sizes (e.g. a quick
+        // artifact gated against a full-profile baseline): a 5x "speedup"
+        // from doing a quarter of the work must not count as anything.
+        let mut small = entry("a/1x1/e", 0.002);
+        small.units_per_iter = 3;
+        let baseline = artifact(vec![entry("a/1x1/e", 0.010)]);
+        let current = artifact(vec![small]);
+        let out = check(&baseline, &current, &GateSpec::default());
+        assert!(out.passed());
+        assert_eq!(out.compared, 0);
+        assert_eq!(out.improvements.len(), 0);
+        assert_eq!(out.incomparable, vec!["a/1x1/e".to_string()]);
+        let rendered = render_diff(&diff(&baseline, &current), &GateSpec::default());
+        assert!(rendered.contains("units-mismatch"), "{rendered}");
+    }
+
+    #[test]
+    fn identical_runs_pass_cleanly() {
+        let a = artifact(vec![entry("a/1x1/e", 0.010), entry("b/1x1/e", 0.020)]);
+        let out = check(&a, &a, &GateSpec::default());
+        assert!(out.passed());
+        assert_eq!(out.compared, 2);
+        assert_eq!(out.within, 2);
+        assert!(out.only_in_baseline.is_empty() && out.only_in_current.is_empty());
+    }
+
+    #[test]
+    fn diff_renders_every_row() {
+        let baseline = artifact(vec![entry("a/1x1/e", 0.010)]);
+        let current = artifact(vec![entry("a/1x1/e", 0.011), entry("n/1x1/e", 0.001)]);
+        let rows = diff(&baseline, &current);
+        assert_eq!(rows.len(), 2);
+        let rendered = render_diff(&rows, &GateSpec::default());
+        assert!(rendered.contains("a/1x1/e"), "{rendered}");
+        assert!(rendered.contains("new"), "{rendered}");
+        assert!(rendered.contains("1.10x"), "{rendered}");
+    }
+}

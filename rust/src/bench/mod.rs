@@ -1,0 +1,42 @@
+//! Rebar-style benchmark harness (`tnngen bench`).
+//!
+//! The repo's single source of truth for software-performance
+//! measurement, replacing the ad-hoc rows `benches/perf_hotpath.rs` used
+//! to print. Modeled on BurntSushi's `rebar` (benchmarks defined as data,
+//! a harness that runs them, a versioned result format, and a documented
+//! methodology — see `docs/BENCHMARKS.md`):
+//!
+//! * [`registry`] — the benchmark matrix as data: engine × workload
+//!   entries (CycleSim vs BatchSim vs the sharded serve path vs the flow
+//!   campaign; encode, STDP, WTA, full-column, clustering-pipeline and
+//!   flow-campaign workloads) over the seven Table-II paper designs.
+//! * [`runner`] — warmup/iteration control around each entry, collecting
+//!   wall-clock samples and deriving throughput plus nearest-rank
+//!   p50/p99 via [`util::stats`](crate::util::stats).
+//! * [`artifact`] — the versioned on-disk result format
+//!   (`tnngen.bench/v1` JSON, emitted and parsed with
+//!   [`report::artifacts`](crate::report::artifacts); emit → parse →
+//!   emit is byte-stable).
+//! * [`gate`] — `bench diff` / `bench check`: compare two artifacts,
+//!   classify per-entry ratios against a fail threshold, and gate CI on
+//!   regressions (exit 3) while staying quiet about timer noise.
+//!
+//! The committed seed baseline lives at the repo root (`BENCH_seed.json`)
+//! and CI runs `tnngen bench check --against BENCH_seed.json` in
+//! report-only mode on every push, so every "make a hot path faster" PR
+//! gets a measured before/after for free. Determinism contract: the
+//! registry (entry names, units, order) and the iteration counts are pure
+//! functions of the profile and flags — only the measured seconds vary
+//! run to run. `rust/tests/bench.rs` pins the contract.
+
+pub mod artifact;
+pub mod gate;
+pub mod registry;
+pub mod runner;
+
+pub use artifact::{
+    bench_json, load_bench, parse_bench, BenchArtifact, EntryResult, Timing, BENCH_SCHEMA,
+};
+pub use gate::{check, diff, render_diff, DiffRow, GateOutcome, GateSpec};
+pub use registry::{default_registry, BenchEntry, Profile};
+pub use runner::{render_row, row_header, run_all, run_entry, RunnerOpts};

@@ -1,0 +1,479 @@
+//! The benchmark matrix as data: engine × workload entries over the seven
+//! Table-II paper designs.
+//!
+//! Every entry is a named `(workload, design, engine)` triple plus a
+//! factory that builds the timed closure. Setup (dataset generation,
+//! simulator/service construction, pre-encoding) happens inside the
+//! factory, OUTSIDE the timed region — the runner only times the returned
+//! closure. Entry names, order and `units_per_iter` are pure functions of
+//! the [`Profile`], so two registry builds are always identical
+//! (`rust/tests/bench.rs` pins this); only the measured seconds vary.
+//!
+//! Workload glossary (all on the shared seed 42):
+//!
+//! * `encode` — temporal encoding of raw windows (`sim::encode`).
+//! * `stdp` — online-STDP steps over pre-encoded spike trains.
+//! * `wta` — 1-WTA winner selection over pre-computed response vectors.
+//! * `response_event` / `response_cycle` — event-driven vs
+//!   cycle-accurate response evaluation on pre-encoded spikes.
+//! * `full_column` — encode → response → WTA inference per window.
+//! * `clustering` — the full Table-II pipeline (train + infer + score).
+//! * `gate_level` — gate-level functional simulation of a small column
+//!   (construction + weight load + samples; see the entry comment).
+//! * `synthesis` / `placement` — isolated EDA stage hot paths.
+//! * `flow_campaign` — the fast-effort hardware-flow campaign (RTL →
+//!   synthesis → place → route → STA → power, 3 designs × 3 libraries),
+//!   cold (`paper-fast`) and warm-cache (`paper-fast-warm`).
+//!
+//! Engine glossary:
+//!
+//! * `cyclesim` — per-sample reference simulator ([`CycleSim`]).
+//! * `batchsim` — batched parallel engine ([`BatchSim`], worker pool).
+//! * `serve` — the sharded micro-batching service driven closed-loop
+//!   ([`crate::serve::TnnService`], 2 shards, bounded in-flight).
+//! * `gatesim` — the event-driven gate-level simulator
+//!   ([`crate::rtl::GateSim`], the Xcelium substitute).
+//! * `eda` — individual EDA flow stages run directly.
+//! * `campaign` — the parallel flow-campaign runner
+//!   ([`crate::eda::FlowCampaign`]).
+//!
+//! The PJRT request path is not in the matrix: it is stubbed offline
+//! (`runtime::xla_stub`), so there is no real dispatch to measure in
+//! this build.
+
+use crate::cluster::pipeline::TnnClustering;
+use crate::config::presets::{by_tag, paper_configs};
+use crate::config::ColumnConfig;
+use crate::coordinator::jobs::default_workers;
+use crate::data::generate;
+use crate::eda::synthesis::{optimize, SynthStats};
+use crate::eda::{place, synthesize, tnn7, FlowCampaign, PlaceOpts};
+use crate::report::experiments::{paper_flow_jobs, Effort};
+use crate::rtl::{generate_column, GateSim};
+use crate::serve::{run_closed_loop, ServeOpts, TnnService};
+use crate::sim::column::wta;
+use crate::sim::{BatchSim, CycleSim};
+
+/// Master seed shared by every entry: datasets, weight init and the serve
+/// service all derive from it, so two runs measure identical work.
+pub const BENCH_SEED: u64 = 42;
+
+/// Removes its directory when the owning closure is dropped (used by the
+/// warm-cache campaign entry so its scratch flow cache never leaks).
+struct TempDirGuard(std::path::PathBuf);
+
+impl Drop for TempDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// The timed closure of one benchmark entry.
+pub type RunFn = Box<dyn FnMut()>;
+/// Factory building a [`RunFn`]; runs once per measurement, untimed.
+pub type Factory = Box<dyn Fn() -> RunFn>;
+
+/// Measurement effort: `quick` is the CI-smoke profile, `full` the
+/// recorded-baseline profile. Both cover the identical entry matrix; they
+/// differ only in dataset size, request counts and (via
+/// [`RunnerOpts::for_profile`](super::runner::RunnerOpts::for_profile))
+/// warmup/iteration counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Small datasets, few iterations — seconds-scale total runtime.
+    Quick,
+    /// Baseline-recording sizes (more samples, more iterations).
+    Full,
+}
+
+impl Profile {
+    /// Parse a `--profile` value (`"quick"` / `"full"`).
+    pub fn parse(s: &str) -> Option<Profile> {
+        match s {
+            "quick" => Some(Profile::Quick),
+            "full" => Some(Profile::Full),
+            _ => None,
+        }
+    }
+
+    /// The profile's name as written into the artifact.
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::Quick => "quick",
+            Profile::Full => "full",
+        }
+    }
+
+    /// Samples per dataset split for a design with `q` classes (every
+    /// class keeps at least one prototype in play).
+    fn n_per_split(self, q: usize) -> usize {
+        match self {
+            Profile::Quick => q.max(6),
+            Profile::Full => q.max(24),
+        }
+    }
+
+    /// Closed-loop requests per iteration for the serve engine.
+    fn serve_requests(self) -> usize {
+        match self {
+            Profile::Quick => 64,
+            Profile::Full => 512,
+        }
+    }
+
+    /// Training epochs for the clustering workload.
+    fn epochs(self) -> usize {
+        match self {
+            Profile::Quick => 1,
+            Profile::Full => 2,
+        }
+    }
+}
+
+/// One declared benchmark: identity + units + the factory building its
+/// timed closure.
+pub struct BenchEntry {
+    /// Workload name (first path segment, e.g. `full_column`).
+    pub workload: &'static str,
+    /// Design tag (second segment, e.g. `96x2`; `paper-fast` for the
+    /// campaign entry).
+    pub design: String,
+    /// Engine name (third segment, e.g. `batchsim`).
+    pub engine: &'static str,
+    /// Work items one closure call processes (windows, requests or
+    /// flows); `throughput_per_s = units_per_iter / median seconds`.
+    pub units_per_iter: usize,
+    factory: Factory,
+}
+
+impl BenchEntry {
+    /// Declare an entry. The factory runs once per measurement, outside
+    /// the timed region; the closure it returns is what gets timed.
+    pub fn new(
+        workload: &'static str,
+        design: String,
+        engine: &'static str,
+        units_per_iter: usize,
+        factory: impl Fn() -> RunFn + 'static,
+    ) -> BenchEntry {
+        BenchEntry { workload, design, engine, units_per_iter, factory: Box::new(factory) }
+    }
+
+    /// Stable `workload/design/engine` identity — the key `bench diff` /
+    /// `bench check` align entries on.
+    pub fn name(&self) -> String {
+        format!("{}/{}/{}", self.workload, self.design, self.engine)
+    }
+
+    /// Build the timed closure (setup happens here, untimed).
+    pub fn prepare(&self) -> RunFn {
+        (self.factory)()
+    }
+}
+
+/// The default engine × workload matrix (39 entries):
+///
+/// * per paper design: `full_column` on `cyclesim`, `batchsim` and
+///   `serve`, plus `clustering` on `batchsim` — all seven designs appear
+///   under three distinct engines;
+/// * hot-path micro workloads (`encode`/`stdp`/`wta` and the
+///   event-driven vs cycle-accurate response pair) on the ECG200 (96x2)
+///   representative design;
+/// * the hardware side: gate-level simulation (12x2), isolated
+///   synthesis/placement stages (65x2), and the fast-effort flow
+///   campaign cold and warm-cache.
+pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
+    let mut entries = Vec::new();
+    for cfg in paper_configs() {
+        let tag = cfg.tag();
+        let n = profile.n_per_split(cfg.q);
+        let units = 2 * n; // Dataset::all() merges both splits.
+        {
+            let cfg = cfg.clone();
+            entries.push(BenchEntry::new("full_column", tag.clone(), "cyclesim", units, move || {
+                let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+                Box::new(move || {
+                    for x in &xs {
+                        std::hint::black_box(sim.infer(x).winner);
+                    }
+                })
+            }));
+        }
+        {
+            let cfg = cfg.clone();
+            entries.push(BenchEntry::new("full_column", tag.clone(), "batchsim", units, move || {
+                let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                let batch = BatchSim::new(cfg.clone(), BENCH_SEED);
+                Box::new(move || {
+                    std::hint::black_box(batch.infer_winners(&xs).len());
+                })
+            }));
+        }
+        {
+            let cfg = cfg.clone();
+            let requests = profile.serve_requests();
+            entries.push(BenchEntry::new(
+                "full_column",
+                tag.clone(),
+                "serve",
+                requests,
+                move || {
+                    let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                    let opts = ServeOpts { shards: 2, ..Default::default() };
+                    let svc = TnnService::start(cfg.clone(), BENCH_SEED, opts);
+                    Box::new(move || {
+                        std::hint::black_box(run_closed_loop(&svc, &xs, requests, 32).completed);
+                    })
+                },
+            ));
+        }
+        {
+            let cfg = cfg.clone();
+            let epochs = profile.epochs();
+            entries.push(BenchEntry::new("clustering", tag.clone(), "batchsim", units, move || {
+                let ds = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED);
+                let pipe = TnnClustering { epochs, seed: BENCH_SEED, n_per_split: n };
+                let cfg = cfg.clone();
+                let workers = default_workers();
+                Box::new(move || {
+                    std::hint::black_box(pipe.run_native_with_workers(&cfg, &ds, workers).ri_tnn);
+                })
+            }));
+        }
+    }
+
+    // Hot-path micro workloads on the ECG200 representative design.
+    let micro = by_tag("96x2").expect("the ECG200 96x2 preset exists");
+    let n = profile.n_per_split(micro.q);
+    let units = 2 * n;
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("encode", micro.tag(), "cyclesim", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            Box::new(move || {
+                for x in &xs {
+                    std::hint::black_box(sim.encode(x).len());
+                }
+            })
+        }));
+    }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("encode", micro.tag(), "batchsim", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let batch = BatchSim::new(cfg.clone(), BENCH_SEED);
+            Box::new(move || {
+                std::hint::black_box(batch.encode_batch(&xs).len());
+            })
+        }));
+    }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("stdp", micro.tag(), "cyclesim", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let mut sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+            Box::new(move || {
+                for s in &enc {
+                    std::hint::black_box(sim.step_encoded(s).winner);
+                }
+            })
+        }));
+    }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("wta", micro.tag(), "cyclesim", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let ys: Vec<Vec<i32>> = xs.iter().map(|x| sim.response(&sim.encode(x))).collect();
+            let t_r = cfg.params.t_r;
+            let tie = cfg.params.tie;
+            Box::new(move || {
+                for y in &ys {
+                    std::hint::black_box(wta(y, t_r, tie).0);
+                }
+            })
+        }));
+    }
+
+    // Event-driven vs cycle-accurate response evaluation on pre-encoded
+    // spikes (the engine-dispatch comparison the old perf bench printed).
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("response_event", micro.tag(), "cyclesim", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+            Box::new(move || {
+                for s in &enc {
+                    std::hint::black_box(sim.response(s).len());
+                }
+            })
+        }));
+    }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("response_cycle", micro.tag(), "cyclesim", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+            Box::new(move || {
+                for s in &enc {
+                    std::hint::black_box(sim.response_cycle_accurate(s).len());
+                }
+            })
+        }));
+    }
+
+    // Gate-level functional simulation (the Xcelium substitute). GateSim
+    // borrows the netlist, so construction + weight load sit inside the
+    // timed region by design: the entry measures end-to-end gate-level
+    // evaluation cold-start + samples (documented in docs/BENCHMARKS.md).
+    {
+        let samples = 8;
+        entries.push(BenchEntry::new(
+            "gate_level",
+            "12x2".to_string(),
+            "gatesim",
+            samples,
+            move || {
+                let cfg = ColumnConfig::new("BenchGate", "synthetic", 12, 2);
+                let rtl = generate_column(&cfg).expect("gate-level RTL");
+                let weights = vec![vec![28u64; 12]; 2];
+                let spikes: Vec<i32> = (0..12).map(|i| (i % 8) as i32).collect();
+                Box::new(move || {
+                    let mut gsim = GateSim::new(&rtl.netlist).expect("gate sim");
+                    rtl.load_weights(&mut gsim, &weights);
+                    for _ in 0..samples {
+                        std::hint::black_box(rtl.run_sample(&mut gsim, &spikes, true).0);
+                    }
+                })
+            },
+        ));
+    }
+
+    // EDA stage hot paths on the smallest paper design: logic-synthesis
+    // optimization and SA placement, isolated from the full flow.
+    {
+        entries.push(BenchEntry::new("synthesis", "65x2".to_string(), "eda", 1, move || {
+            let cfg = by_tag("65x2").expect("the 65x2 preset exists");
+            let rtl = generate_column(&cfg).expect("synthesis RTL");
+            Box::new(move || {
+                let mut stats = SynthStats::default();
+                std::hint::black_box(optimize(&rtl.netlist, &mut stats).gates.len());
+            })
+        }));
+    }
+    {
+        entries.push(BenchEntry::new("placement", "65x2".to_string(), "eda", 1, move || {
+            let cfg = by_tag("65x2").expect("the 65x2 preset exists");
+            let rtl = generate_column(&cfg).expect("placement RTL");
+            let design = synthesize(&rtl.netlist, &tnn7());
+            Box::new(move || {
+                std::hint::black_box(place(&design, &PlaceOpts::default()).die_area_um2);
+            })
+        }));
+    }
+
+    // The fast-effort hardware-flow campaign (same job list as
+    // `reproduce --fast`: 3 designs × 3 libraries = 9 flows), cold and
+    // warm-cache. Jobs and campaigns are built in the factories; the
+    // timed closures only clone the job list and run it.
+    let flow_units = paper_flow_jobs(Effort::fast()).len();
+    entries.push(BenchEntry::new(
+        "flow_campaign",
+        "paper-fast".to_string(),
+        "campaign",
+        flow_units,
+        move || {
+            let jobs = paper_flow_jobs(Effort::fast());
+            let campaign = FlowCampaign::with_workers(default_workers());
+            Box::new(move || {
+                let reports = campaign.run(jobs.clone()).expect("flow campaign");
+                std::hint::black_box(reports.len());
+            })
+        },
+    ));
+    entries.push(BenchEntry::new(
+        "flow_campaign",
+        "paper-fast-warm".to_string(),
+        "campaign",
+        flow_units,
+        move || {
+            let dir = std::env::temp_dir()
+                .join(format!("tnngen_bench_flowcache_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let jobs = paper_flow_jobs(Effort::fast());
+            let campaign = FlowCampaign::with_workers(default_workers())
+                .with_cache_dir(&dir)
+                .expect("flow cache dir");
+            // Populate the cache once, untimed: the timed closure then
+            // measures the pure warm path (every flow served from disk).
+            campaign.run(jobs.clone()).expect("cache-populating campaign");
+            let guard = TempDirGuard(dir);
+            Box::new(move || {
+                let reports = campaign.run(jobs.clone()).expect("warm flow campaign");
+                std::hint::black_box((reports.len(), &guard));
+            })
+        },
+    ));
+
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{BTreeMap, BTreeSet};
+
+    #[test]
+    fn registry_names_are_unique_and_stable() {
+        let a = default_registry(Profile::Quick);
+        let b = default_registry(Profile::Quick);
+        let names_a: Vec<String> = a.iter().map(|e| e.name()).collect();
+        let names_b: Vec<String> = b.iter().map(|e| e.name()).collect();
+        assert_eq!(names_a, names_b, "registry must be deterministic");
+        let set: BTreeSet<&String> = names_a.iter().collect();
+        assert_eq!(set.len(), names_a.len(), "names must be unique");
+        let units_a: Vec<usize> = a.iter().map(|e| e.units_per_iter).collect();
+        let units_b: Vec<usize> = b.iter().map(|e| e.units_per_iter).collect();
+        assert_eq!(units_a, units_b);
+    }
+
+    #[test]
+    fn all_seven_designs_appear_under_at_least_three_engines() {
+        let entries = default_registry(Profile::Quick);
+        let mut engines_by_design: BTreeMap<String, BTreeSet<&'static str>> = BTreeMap::new();
+        for e in &entries {
+            engines_by_design.entry(e.design.clone()).or_default().insert(e.engine);
+        }
+        for cfg in crate::config::presets::paper_configs() {
+            let engines = engines_by_design.get(&cfg.tag()).unwrap_or_else(|| {
+                panic!("design {} missing from the registry", cfg.tag())
+            });
+            assert!(engines.len() >= 3, "{}: engines {engines:?}", cfg.tag());
+        }
+    }
+
+    #[test]
+    fn registry_has_the_documented_entry_count() {
+        // 7 designs x 4 + 4 micro + 2 response + gate_level + 2 EDA
+        // stages + 2 campaigns.
+        assert_eq!(default_registry(Profile::Quick).len(), 7 * 4 + 4 + 2 + 1 + 2 + 2);
+    }
+
+    #[test]
+    fn prepared_closures_run() {
+        // The cheapest micro entry must produce a runnable closure.
+        let entries = default_registry(Profile::Quick);
+        let enc = entries
+            .iter()
+            .find(|e| e.name() == "encode/96x2/cyclesim")
+            .expect("encode micro entry");
+        let mut f = enc.prepare();
+        f();
+        f();
+    }
+}

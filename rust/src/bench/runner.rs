@@ -1,0 +1,138 @@
+//! Warmup/iteration control around registry entries.
+//!
+//! The measurement discipline (documented in `docs/BENCHMARKS.md`):
+//! setup runs untimed in the entry factory, `warmup_iters` untimed calls
+//! prime caches/allocators/thread pools, then exactly `iters` timed
+//! calls feed [`Timing::from_sorted_seconds`]. Iteration counts are
+//! fixed per profile — never calibrated from the clock — so two runs of
+//! the same profile always execute identical work (the run-to-run
+//! determinism contract pinned by `rust/tests/bench.rs`).
+
+use crate::util::timer::time_iters;
+
+use super::artifact::{EntryResult, Timing};
+use super::registry::{BenchEntry, Profile};
+
+/// Iteration policy for one bench run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunnerOpts {
+    /// Untimed priming calls before measurement.
+    pub warmup_iters: usize,
+    /// Timed calls per entry (clamped to >= 1).
+    pub iters: usize,
+}
+
+impl RunnerOpts {
+    /// The profile's default policy: `quick` = 1 warmup + 3 iterations,
+    /// `full` = 2 warmup + 7 iterations (odd counts keep the median an
+    /// observed sample).
+    pub fn for_profile(profile: Profile) -> RunnerOpts {
+        match profile {
+            Profile::Quick => RunnerOpts { warmup_iters: 1, iters: 3 },
+            Profile::Full => RunnerOpts { warmup_iters: 2, iters: 7 },
+        }
+    }
+}
+
+/// Measure one entry: build its closure (untimed), warm up, time `iters`
+/// calls, and fold the samples into an [`EntryResult`].
+pub fn run_entry(entry: &BenchEntry, opts: &RunnerOpts) -> EntryResult {
+    let mut f = entry.prepare();
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let iters = opts.iters.max(1);
+    let samples = time_iters(iters, || f());
+    let timing = Timing::from_sorted_seconds(&samples);
+    let throughput_per_s = if timing.median_s > 0.0 {
+        entry.units_per_iter as f64 / timing.median_s
+    } else {
+        0.0
+    };
+    EntryResult {
+        name: entry.name(),
+        workload: entry.workload.to_string(),
+        design: entry.design.clone(),
+        engine: entry.engine.to_string(),
+        units_per_iter: entry.units_per_iter,
+        warmup_iters: opts.warmup_iters,
+        iters,
+        timing,
+        throughput_per_s,
+    }
+}
+
+/// Measure every entry in order (the `tnngen bench` / `cargo bench
+/// --bench perf_hotpath` loop without progressive printing).
+pub fn run_all(entries: &[BenchEntry], opts: &RunnerOpts) -> Vec<EntryResult> {
+    entries.iter().map(|e| run_entry(e, opts)).collect()
+}
+
+/// Column header matching [`render_row`].
+pub fn row_header() -> String {
+    format!(
+        "{:<36} {:>5} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "iters", "median ms", "p50 ms", "p99 ms", "units/s"
+    )
+}
+
+/// One human-readable result row (the ASCII counterpart of the JSON
+/// artifact entry).
+pub fn render_row(r: &EntryResult) -> String {
+    format!(
+        "{:<36} {:>5} {:>12.3} {:>12.3} {:>12.3} {:>14.1}",
+        r.name,
+        r.iters,
+        r.timing.median_s * 1e3,
+        r.timing.p50_s * 1e3,
+        r.timing.p99_s * 1e3,
+        r.throughput_per_s
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counting_entry(units: usize) -> BenchEntry {
+        BenchEntry::new("unit", "test".to_string(), "noop", units, || {
+            let mut acc = 0u64;
+            Box::new(move || {
+                for i in 0..10_000u64 {
+                    acc = acc.wrapping_add(i);
+                }
+                std::hint::black_box(acc);
+            })
+        })
+    }
+
+    #[test]
+    fn run_entry_uses_exactly_the_requested_iterations() {
+        let e = counting_entry(10);
+        let opts = RunnerOpts { warmup_iters: 0, iters: 4 };
+        let a = run_entry(&e, &opts);
+        let b = run_entry(&e, &opts);
+        assert_eq!(a.iters, 4);
+        assert_eq!(b.iters, 4);
+        assert_eq!(a.name, "unit/test/noop");
+        assert_eq!(a.units_per_iter, 10);
+        assert!(a.timing.min_s <= a.timing.median_s);
+        assert!(a.timing.median_s <= a.timing.max_s);
+    }
+
+    #[test]
+    fn zero_iters_is_clamped_to_one() {
+        let e = counting_entry(1);
+        let r = run_entry(&e, &RunnerOpts { warmup_iters: 0, iters: 0 });
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn rows_render_with_stable_width() {
+        let e = counting_entry(3);
+        let r = run_entry(&e, &RunnerOpts { warmup_iters: 0, iters: 2 });
+        let row = render_row(&r);
+        assert!(row.starts_with("unit/test/noop"));
+        assert_eq!(row_header().split_whitespace().count(), 9);
+    }
+}

@@ -32,6 +32,11 @@
 //!   learner shard, epoch-versioned weight snapshots, typed backpressure,
 //!   lock-free metrics, a closed-loop load harness and an optional TCP
 //!   front-end (`tnngen serve`).
+//! * [`bench`] — the rebar-style benchmark harness (`tnngen bench`):
+//!   engine×workload registry over the seven paper designs, a
+//!   warmup/iteration runner, the versioned `tnngen.bench/v1` artifact
+//!   format and the `diff`/`check` regression gate (see
+//!   `docs/BENCHMARKS.md`).
 //! * [`coordinator`] — TNNGen orchestration: end-to-end design runs,
 //!   design-space exploration, multi-design parallelism.
 //! * [`report`] — table/CSV/JSON emitters used by the benches and the CLI
@@ -43,13 +48,16 @@
 //! See `docs/ARCHITECTURE.md` for the paper-section → module map and the
 //! campaign-runner dataflow.
 
+// The user-facing analysis/reporting/serving layers keep full rustdoc
+// coverage; CI runs `cargo doc` with `-D warnings` (and clippy denies all
+// warnings) so regressions fail the build.
+#[warn(missing_docs)]
+pub mod bench;
 pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
-// The user-facing analysis/reporting layers keep full rustdoc coverage;
-// CI runs `cargo doc` with `-D warnings` so regressions fail the build.
 #[warn(missing_docs)]
 pub mod eda;
 #[warn(missing_docs)]
@@ -58,7 +66,9 @@ pub mod forecast;
 pub mod report;
 pub mod rtl;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod serve;
+#[warn(missing_docs)]
 pub mod sim;
 pub mod util;
 

@@ -9,6 +9,7 @@
 //!   forecast [--syn N]            train forecaster + predict without EDA
 //!   reproduce --table N | --fig N | --all
 //!   serve <tag|name>              streaming inference service (+ bench/TCP)
+//!   bench [run|list|record|diff|check]   rebar-style benchmark harness
 //!
 //! The flow-heavy commands (`flow`, `forecast`, `reproduce`) run on the
 //! parallel, cached flow-campaign runner: `--workers N` pins the worker
@@ -18,11 +19,16 @@
 //! `serve` starts the sharded micro-batching service (`serve::TnnService`)
 //! and either drives it with the in-process load generator (`--bench`) or
 //! exposes it over a length-prefixed TCP frame protocol (`--tcp ADDR`).
+//! `bench` runs the registry of engine×workload benchmarks
+//! (`bench::default_registry`), records `tnngen.bench/v1` artifacts and
+//! gates regressions against a recorded baseline (exit 3 on a tripped
+//! gate; see docs/BENCHMARKS.md).
 
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use tnngen::bench::{self, GateSpec, Profile, RunnerOpts};
 use tnngen::cli::Args;
 use tnngen::cluster::pipeline::TnnClustering;
 use tnngen::config::presets::{all_configs, by_tag};
@@ -53,7 +59,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce|serve> [args]
+const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce|serve|bench> [args]
   simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N]
            [--sequential|--shuffle] [--ucr-dir DIR]
   generate-rtl <tag> [--out file.v]
@@ -65,6 +71,12 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   serve <tag|name> [--shards N] [--batch N] [--wait-us US] [--queue N] [--learn-queue N]
         [--snapshot-every K] [--bench --rps R --duration S [--learn-every K] [--json]]
         [--tcp ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
+  bench [run|list] [--profile quick|full | --quick] [--filter SUBSTR]
+        [--iters N] [--warmup N] [--json] [--out FILE]
+  bench record [--out FILE] [run flags]       (defaults to BENCH_<profile>.json)
+  bench diff <baseline.json> <current.json>
+  bench check --against <baseline.json> [--current <artifact.json>]
+        [--fail-threshold R] [--report-only] [run flags]
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
@@ -81,7 +93,14 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   open-loop load generator at --rps for --duration seconds and reports
   throughput + nearest-rank p50/p95/p99 latency (typed rejections count
   as backpressure, never silent drops); --tcp ADDR additionally exposes
-  the service over a length-prefixed frame protocol (see README).";
+  the service over a length-prefixed frame protocol (see README).
+  bench runs the engine x workload registry (7 paper designs on cyclesim/
+  batchsim/serve + micro hot paths + the flow campaign) with fixed
+  warmup/iteration counts, emits tnngen.bench/v1 JSON (--json / --out),
+  and `bench check` gates medians against a recorded baseline: exit 0 on
+  pass, 3 when a median exceeds --fail-threshold (default 1.5x) times
+  its baseline; --report-only prints the verdicts but always exits 0.
+  See docs/BENCHMARKS.md for the methodology and schema.";
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -525,10 +544,179 @@ fn dispatch(args: &Args) -> Result<()> {
             svc.shutdown();
             Ok(())
         }
+        "bench" => bench_cmd(args),
         "" => {
             println!("{USAGE}");
             Ok(())
         }
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
+}
+
+/// The `tnngen bench` subcommands (run/list/record/diff/check). `check`
+/// exits the process with code 3 when the regression gate trips, unless
+/// `--report-only` demotes the gate to a report.
+fn bench_cmd(args: &Args) -> Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("run");
+    let profile = if args.flag_bool("quick") {
+        Profile::Quick
+    } else {
+        let name = args.flag_str("profile", "quick");
+        Profile::parse(name).with_context(|| format!("unknown profile {name:?} (quick|full)"))?
+    };
+    match sub {
+        "list" => {
+            let mut t = Table::new(&["benchmark", "workload", "design", "engine", "units/iter"]);
+            for e in bench::default_registry(profile) {
+                t.row(&[
+                    e.name(),
+                    e.workload.to_string(),
+                    e.design.clone(),
+                    e.engine.to_string(),
+                    e.units_per_iter.to_string(),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "run" | "record" => {
+            let json = args.flag_bool("json");
+            let artifact = bench_run(args, profile, !json)?;
+            let doc = bench::bench_json(&artifact);
+            if json {
+                print!("{}", doc.pretty());
+            }
+            let out = match args.flag("out") {
+                Some(p) => Some(p.to_string()),
+                None if sub == "record" => Some(format!("BENCH_{}.json", profile.name())),
+                None => None,
+            };
+            if let Some(path) = out {
+                std::fs::write(&path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+                eprintln!(
+                    "wrote {path}: {} entries ({} profile)",
+                    artifact.entries.len(),
+                    artifact.profile
+                );
+            }
+            Ok(())
+        }
+        "diff" => {
+            let usage = "bench diff needs <baseline.json> <current.json>";
+            let base = args.positional.get(1).context(usage)?;
+            let cur = args.positional.get(2).context(usage)?;
+            let baseline = bench::load_bench(std::path::Path::new(base))?;
+            let current = bench::load_bench(std::path::Path::new(cur))?;
+            if baseline.profile != current.profile {
+                eprintln!(
+                    "warning: comparing a {:?}-profile baseline against a {:?}-profile run; \
+                     mismatched work sizes are flagged as units-mismatch, not judged",
+                    baseline.profile, current.profile
+                );
+            }
+            let spec = gate_spec(args)?;
+            let rows = bench::diff(&baseline, &current);
+            print!("{}", bench::render_diff(&rows, &spec));
+            println!("{}", bench::check(&baseline, &current, &spec).summary());
+            Ok(())
+        }
+        "check" => {
+            let base =
+                args.flag("against").context("bench check needs --against <baseline.json>")?;
+            let baseline = bench::load_bench(std::path::Path::new(base))?;
+            let current = match args.flag("current") {
+                Some(p) => bench::load_bench(std::path::Path::new(p))?,
+                None => {
+                    // Refuse BEFORE running the suite: a profile mismatch
+                    // would throw away minutes of measurement.
+                    ensure!(
+                        baseline.profile == profile.name(),
+                        "baseline {base} is a {:?}-profile artifact but this run would use \
+                         {:?}; gating across profiles compares different work sizes — \
+                         re-run with --profile {}",
+                        baseline.profile,
+                        profile.name(),
+                        baseline.profile
+                    );
+                    bench_run(args, profile, true)?
+                }
+            };
+            ensure!(
+                baseline.profile == current.profile,
+                "baseline {base} is a {:?}-profile artifact but the current run is {:?}; \
+                 gating across profiles compares different work sizes — re-run with \
+                 --profile {} or record a matching baseline",
+                baseline.profile,
+                current.profile,
+                baseline.profile
+            );
+            let spec = gate_spec(args)?;
+            let outcome = bench::check(&baseline, &current, &spec);
+            // Print the flagged rows only; the full table is `bench diff`.
+            let mut flagged = outcome.regressions.clone();
+            flagged.extend(outcome.improvements.iter().cloned());
+            if !flagged.is_empty() {
+                print!("{}", bench::render_diff(&flagged, &spec));
+            }
+            println!("bench check vs {base}: {}", outcome.summary());
+            if !outcome.passed() {
+                if args.flag_bool("report-only") {
+                    println!("report-only: regression gate NOT enforced");
+                } else {
+                    eprintln!(
+                        "bench check failed: {} regression(s) above {:.2}x",
+                        outcome.regressions.len(),
+                        spec.fail_threshold
+                    );
+                    std::process::exit(3);
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown bench subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Run the (optionally `--filter`ed) registry under the profile's
+/// warmup/iteration policy (overridable with `--warmup`/`--iters`),
+/// printing progressive result rows unless suppressed for `--json`.
+fn bench_run(args: &Args, profile: Profile, print_rows: bool) -> Result<bench::BenchArtifact> {
+    let defaults = RunnerOpts::for_profile(profile);
+    let opts = RunnerOpts {
+        warmup_iters: args.flag_usize("warmup", defaults.warmup_iters)?,
+        iters: args.flag_usize("iters", defaults.iters)?,
+    };
+    let filter = args.flag_str("filter", "");
+    let entries: Vec<_> = bench::default_registry(profile)
+        .into_iter()
+        .filter(|e| filter.is_empty() || e.name().contains(filter))
+        .collect();
+    ensure!(
+        !entries.is_empty(),
+        "--filter {filter:?} matches no benchmark (try `tnngen bench list`)"
+    );
+    if print_rows {
+        println!("{}", bench::row_header());
+    }
+    let mut results = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let r = bench::run_entry(e, &opts);
+        if print_rows {
+            println!("{}", bench::render_row(&r));
+        }
+        results.push(r);
+    }
+    Ok(bench::BenchArtifact {
+        profile: profile.name().to_string(),
+        workers: default_workers(),
+        entries: results,
+    })
+}
+
+/// Gate policy from `--fail-threshold` (default 1.5x, must exceed 1.0).
+fn gate_spec(args: &Args) -> Result<GateSpec> {
+    let defaults = GateSpec::default();
+    let fail_threshold = args.flag_f64("fail-threshold", defaults.fail_threshold)?;
+    ensure!(fail_threshold > 1.0, "--fail-threshold must be > 1.0");
+    Ok(GateSpec { fail_threshold, ..defaults })
 }

@@ -52,6 +52,7 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// The admission bound (`capacity` passed to [`Batcher::new`]).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -61,6 +62,8 @@ impl<T> Batcher<T> {
         self.state.lock().unwrap().items.len()
     }
 
+    /// Whether no admitted item is currently waiting (racy, like
+    /// [`Batcher::len`]).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -90,11 +90,15 @@ pub struct BenchReport {
     pub no_fire: u64,
     /// Completed inference replies per wall second.
     pub throughput_rps: f64,
-    /// Client-side nearest-rank latency percentiles (microseconds).
+    /// Client-side nearest-rank p50 latency (microseconds).
     pub latency_p50_us: f64,
+    /// Client-side nearest-rank p95 latency (microseconds).
     pub latency_p95_us: f64,
+    /// Client-side nearest-rank p99 latency (microseconds).
     pub latency_p99_us: f64,
+    /// Client-side mean latency (microseconds).
     pub latency_mean_us: f64,
+    /// Slowest observed request latency (microseconds).
     pub latency_max_us: f64,
     /// FNV-1a over (id, winner) pairs in id order — the determinism
     /// fingerprint compared by `rust/tests/serve.rs`.

@@ -71,6 +71,7 @@ impl LatencyHistogram {
         self.sum_us.fetch_add(us, Relaxed);
     }
 
+    /// Total samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Relaxed)
     }
@@ -131,6 +132,7 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Fresh zeroed counters and an empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
@@ -166,19 +168,31 @@ impl ServeMetrics {
 /// Plain-data copy of [`ServeMetrics`] at one instant.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Inference requests admitted into the queue.
     pub accepted: u64,
+    /// Inference requests rejected by admission control.
     pub rejected: u64,
+    /// Inference requests completed (reply produced by a shard).
     pub completed: u64,
+    /// Learn requests admitted into the learner queue.
     pub learn_accepted: u64,
+    /// Learn requests rejected by admission control.
     pub learn_rejected: u64,
+    /// Online-STDP steps applied by the learner.
     pub learned: u64,
+    /// Weight snapshots published to the reader shards.
     pub snapshots_published: u64,
+    /// Micro-batches flushed by shard workers.
     pub batches: u64,
+    /// Samples served across all flushed batches.
     pub batched_samples: u64,
-    /// Service-side nearest-rank latency percentiles (microseconds).
+    /// Service-side nearest-rank p50 latency (microseconds).
     pub service_p50_us: f64,
+    /// Service-side nearest-rank p95 latency (microseconds).
     pub service_p95_us: f64,
+    /// Service-side nearest-rank p99 latency (microseconds).
     pub service_p99_us: f64,
+    /// Service-side mean latency (microseconds).
     pub service_mean_us: f64,
     /// Samples behind the percentile figures.
     pub recorded: u64,

@@ -27,6 +27,7 @@ use super::event::{event_driven_indexed, EventScratch};
 /// Batched executor wrapping one column simulator.
 #[derive(Clone)]
 pub struct BatchSim {
+    /// The wrapped per-sample simulator (weights are shared exactly).
     pub sim: CycleSim,
     workers: usize,
 }
@@ -50,14 +51,17 @@ impl BatchSim {
         self
     }
 
+    /// The pinned worker count.
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// The simulated column design.
     pub fn config(&self) -> &ColumnConfig {
         &self.sim.config
     }
 
+    /// Unwrap back into the per-sample simulator (weights preserved).
     pub fn into_sim(self) -> CycleSim {
         self.sim
     }

@@ -107,6 +107,7 @@ pub fn stdp_update(w: &mut [f32], p: usize, s: &[i32], gated: &[i32], params: &T
 /// Result of one simulated step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepOutput {
+    /// WTA winner neuron, or -1 when no neuron fired.
     pub winner: i32,
     /// Output spike times, length q.
     pub y: Vec<i32>,
@@ -116,6 +117,7 @@ pub struct StepOutput {
 /// of `runtime::TnnColumn` used for cross-validation and fast sweeps.
 #[derive(Clone)]
 pub struct CycleSim {
+    /// The simulated column design (geometry + TNN hyper-parameters).
     pub config: ColumnConfig,
     /// Real (unpadded) weights, flat row-major `[q * p]`, stride `p`.
     pub weights: Vec<f32>,
@@ -162,6 +164,8 @@ impl CycleSim {
         self.weights.chunks_exact(self.config.p).map(|r| r.to_vec()).collect()
     }
 
+    /// Temporal encoding of one raw window under the column's parameters
+    /// (see [`encode_window`]).
     pub fn encode(&self, x: &[f32]) -> Vec<i32> {
         encode_window(
             x,
@@ -254,12 +258,14 @@ impl CycleSim {
         StepOutput { winner, y }
     }
 
+    /// One online-STDP epoch: [`Self::step`] over every window in order.
     pub fn train_epoch(&mut self, xs: &[Vec<f32>]) {
         for x in xs {
             self.step(x);
         }
     }
 
+    /// Winners only, for every raw window (pure; weights untouched).
     pub fn infer_all(&self, xs: &[Vec<f32>]) -> Vec<i32> {
         xs.iter().map(|x| self.infer(x).winner).collect()
     }

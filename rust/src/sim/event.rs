@@ -33,6 +33,7 @@ pub struct EventScratch {
 }
 
 impl EventScratch {
+    /// Empty index sized for response windows of `t_r` time steps.
     pub fn new(t_r: i32) -> Self {
         EventScratch {
             by_time: vec![Vec::new(); t_r as usize],

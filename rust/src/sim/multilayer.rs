@@ -9,6 +9,7 @@ use super::column::{CycleSim, StepOutput};
 /// A stack of columns: layer k's output spike vector feeds layer k+1's
 /// encoder (spike times converted back to intensities, early = strong).
 pub struct MultiLayerSim {
+    /// Per-layer column simulators, input side first.
     pub layers: Vec<CycleSim>,
 }
 

@@ -1,0 +1,291 @@
+//! Bench-harness contract tests: schema round-trip (emit → parse → emit
+//! byte-stable, through real files), `bench check` exit codes on
+//! regression / improvement / missing baseline, and run-to-run
+//! determinism of the registry and its iteration counts under the fixed
+//! seed. The exit-code tests drive the real `tnngen` binary via
+//! `CARGO_BIN_EXE_tnngen`.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use tnngen::bench::{
+    bench_json, default_registry, load_bench, parse_bench, run_entry, BenchArtifact, EntryResult,
+    Profile, RunnerOpts, Timing,
+};
+
+fn entry(name: &str, median_s: f64) -> EntryResult {
+    let parts: Vec<&str> = name.split('/').collect();
+    assert_eq!(parts.len(), 3, "bench names are workload/design/engine");
+    EntryResult {
+        name: name.to_string(),
+        workload: parts[0].to_string(),
+        design: parts[1].to_string(),
+        engine: parts[2].to_string(),
+        units_per_iter: 16,
+        warmup_iters: 1,
+        iters: 3,
+        timing: Timing {
+            median_s,
+            mean_s: median_s * 1.01,
+            p50_s: median_s,
+            p99_s: median_s * 1.4,
+            min_s: median_s * 0.9,
+            max_s: median_s * 1.4,
+        },
+        throughput_per_s: 16.0 / median_s,
+    }
+}
+
+fn artifact(entries: Vec<EntryResult>) -> BenchArtifact {
+    artifact_with_profile("quick", entries)
+}
+
+fn artifact_with_profile(profile: &str, entries: Vec<EntryResult>) -> BenchArtifact {
+    BenchArtifact { profile: profile.to_string(), workers: 4, entries }
+}
+
+/// Fresh per-test scratch directory under the system temp root.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tnngen_bench_test_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_artifact(path: &Path, a: &BenchArtifact) {
+    std::fs::write(path, bench_json(a).pretty()).unwrap();
+}
+
+fn tnngen(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_tnngen")).args(args).output().expect("spawn tnngen")
+}
+
+#[test]
+fn schema_roundtrip_through_files_is_byte_stable() {
+    let dir = scratch("roundtrip");
+    let a = artifact(vec![
+        entry("encode/96x2/cyclesim", 1.375e-4),
+        entry("full_column/270x25/serve", 8.25e-3),
+        entry("flow_campaign/paper-fast/campaign", 2.125),
+    ]);
+    let path = dir.join("a.json");
+    let text = bench_json(&a).pretty();
+    std::fs::write(&path, &text).unwrap();
+    let back = load_bench(&path).unwrap();
+    assert_eq!(back, a, "parse must invert emit exactly");
+    assert_eq!(bench_json(&back).pretty(), text, "emit -> parse -> emit must be byte-stable");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn schema_tag_is_enforced() {
+    let a = artifact(vec![entry("a/1x1/e", 0.5)]);
+    let wrong = bench_json(&a).pretty().replace("tnngen.bench/v1", "tnngen.bench/v2");
+    let err = parse_bench(&wrong).unwrap_err();
+    assert!(format!("{err:#}").contains("unsupported bench schema"), "{err:#}");
+}
+
+#[test]
+fn registry_is_deterministic_and_covers_the_paper_matrix() {
+    let a = default_registry(Profile::Quick);
+    let b = default_registry(Profile::Quick);
+    let names: Vec<String> = a.iter().map(|e| e.name()).collect();
+    assert_eq!(names, b.iter().map(|e| e.name()).collect::<Vec<_>>());
+    assert_eq!(
+        a.iter().map(|e| e.units_per_iter).collect::<Vec<_>>(),
+        b.iter().map(|e| e.units_per_iter).collect::<Vec<_>>()
+    );
+    // 7 designs x (3 full_column engines + clustering) + 4 micro
+    // + 2 response + gate_level + 2 EDA stages + 2 campaigns.
+    assert_eq!(names.len(), 7 * 4 + 4 + 2 + 1 + 2 + 2);
+    for cfg in tnngen::config::presets::paper_configs() {
+        let tag = cfg.tag();
+        for engine in ["cyclesim", "batchsim", "serve"] {
+            let want = format!("full_column/{tag}/{engine}");
+            assert!(names.contains(&want), "registry is missing {want}");
+        }
+        assert!(names.contains(&format!("clustering/{tag}/batchsim")));
+    }
+    assert!(names.contains(&"flow_campaign/paper-fast/campaign".to_string()));
+    assert!(names.contains(&"flow_campaign/paper-fast-warm/campaign".to_string()));
+    assert!(names.contains(&"gate_level/12x2/gatesim".to_string()));
+    assert!(names.contains(&"synthesis/65x2/eda".to_string()));
+    assert!(names.contains(&"placement/65x2/eda".to_string()));
+}
+
+#[test]
+fn iteration_counts_are_deterministic_run_to_run() {
+    let entries = default_registry(Profile::Quick);
+    let enc = entries
+        .iter()
+        .find(|e| e.name() == "encode/96x2/cyclesim")
+        .expect("encode micro entry exists");
+    let opts = RunnerOpts { warmup_iters: 1, iters: 3 };
+    let a = run_entry(enc, &opts);
+    let b = run_entry(enc, &opts);
+    // Identity and work are fixed; only the measured seconds may differ.
+    assert_eq!(a.iters, 3);
+    assert_eq!(b.iters, 3);
+    assert_eq!(a.warmup_iters, b.warmup_iters);
+    assert_eq!(a.name, b.name);
+    assert_eq!(a.units_per_iter, b.units_per_iter);
+    assert!(a.timing.min_s >= 0.0 && a.timing.min_s <= a.timing.max_s);
+}
+
+#[test]
+fn check_gates_regressions_with_exit_code_3() {
+    let dir = scratch("regression");
+    let base = dir.join("base.json");
+    let cur = dir.join("cur.json");
+    write_artifact(&base, &artifact(vec![entry("a/1x1/e", 0.010), entry("b/1x1/e", 0.010)]));
+    write_artifact(&cur, &artifact(vec![entry("a/1x1/e", 0.040), entry("b/1x1/e", 0.010)]));
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(3), "regression must exit 3: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("REGRESSION"), "{stdout}");
+    // --report-only demotes the same regression to exit 0.
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+        "--report-only",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "report-only must exit 0: {out:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn check_passes_improvements_with_exit_code_0() {
+    let dir = scratch("improvement");
+    let base = dir.join("base.json");
+    let cur = dir.join("cur.json");
+    write_artifact(&base, &artifact(vec![entry("a/1x1/e", 0.040)]));
+    write_artifact(&cur, &artifact(vec![entry("a/1x1/e", 0.010)]));
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(0), "improvement must pass: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("1 improvement(s)"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn check_refuses_cross_profile_gating() {
+    let dir = scratch("profiles");
+    let base = dir.join("base.json");
+    let cur = dir.join("cur.json");
+    write_artifact(&base, &artifact_with_profile("full", vec![entry("a/1x1/e", 0.010)]));
+    write_artifact(&cur, &artifact_with_profile("quick", vec![entry("a/1x1/e", 0.010)]));
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1), "cross-profile gating must error: {out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("gating across profiles"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn check_with_missing_or_corrupt_baseline_is_an_operational_error() {
+    let dir = scratch("missing");
+    let cur = dir.join("cur.json");
+    write_artifact(&cur, &artifact(vec![entry("a/1x1/e", 0.010)]));
+    let absent = dir.join("does_not_exist.json");
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        absent.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1), "missing baseline must exit 1: {out:?}");
+    let corrupt = dir.join("corrupt.json");
+    std::fs::write(&corrupt, "{not json").unwrap();
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        corrupt.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1), "corrupt baseline must exit 1: {out:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn diff_lists_every_entry_and_exits_0() {
+    let dir = scratch("diff");
+    let base = dir.join("base.json");
+    let cur = dir.join("cur.json");
+    write_artifact(&base, &artifact(vec![entry("a/1x1/e", 0.010), entry("gone/1x1/e", 0.010)]));
+    write_artifact(&cur, &artifact(vec![entry("a/1x1/e", 0.011), entry("new/1x1/e", 0.010)]));
+    let out = tnngen(&["bench", "diff", base.to_str().unwrap(), cur.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "{out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for needle in ["a/1x1/e", "gone/1x1/e", "new/1x1/e", "missing", "new", "1 missing, 1 new"] {
+        assert!(stdout.contains(needle), "missing {needle:?} in:\n{stdout}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_list_prints_the_registry() {
+    let out = tnngen(&["bench", "list"]);
+    assert_eq!(out.status.code(), Some(0), "{out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let needles = [
+        "full_column/96x2/serve",
+        "clustering/270x25/batchsim",
+        "flow_campaign/paper-fast/campaign",
+    ];
+    for needle in needles {
+        assert!(stdout.contains(needle), "missing {needle:?} in:\n{stdout}");
+    }
+}
+
+#[test]
+fn bench_run_json_emits_a_valid_quick_artifact_for_a_filtered_entry() {
+    // One cheap micro entry end-to-end through the real CLI: the emitted
+    // document must parse as tnngen.bench/v1 with the requested counts.
+    let out = tnngen(&[
+        "bench",
+        "--quick",
+        "--json",
+        "--filter",
+        "encode/96x2/cyclesim",
+        "--warmup",
+        "0",
+        "--iters",
+        "2",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "{out:?}");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let a = parse_bench(&stdout).expect("CLI output must be a valid bench artifact");
+    assert_eq!(a.profile, "quick");
+    assert_eq!(a.entries.len(), 1);
+    assert_eq!(a.entries[0].name, "encode/96x2/cyclesim");
+    assert_eq!(a.entries[0].iters, 2);
+    assert_eq!(a.entries[0].warmup_iters, 0);
+}
