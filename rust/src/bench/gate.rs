@@ -23,6 +23,56 @@ use crate::report::Table;
 
 use super::artifact::BenchArtifact;
 
+/// True when `name` matches the comma-separated `filters` list: a
+/// pattern containing `*` glob-matches the WHOLE name (the only
+/// metacharacter is `*`, matching any — possibly empty — substring);
+/// any other pattern matches as a plain substring, preserving the
+/// original `--filter` semantics. An empty list matches everything.
+///
+/// This is what lets CI gate `--filter
+/// "response_,encode/,stdp/,wta/,full_column/*/batchsim"` — the sim
+/// hot-path rows — at a tight threshold while the rest of the matrix
+/// stays report-only.
+pub fn name_matches(filters: &str, name: &str) -> bool {
+    let mut any_pattern = false;
+    for pat in filters.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        any_pattern = true;
+        let hit = if pat.contains('*') { glob_match(pat, name) } else { name.contains(pat) };
+        if hit {
+            return true;
+        }
+    }
+    !any_pattern
+}
+
+/// Iterative `*`-wildcard full match (classic two-pointer backtracking).
+fn glob_match(pattern: &str, name: &str) -> bool {
+    let (p, n) = (pattern.as_bytes(), name.as_bytes());
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let mut star: Option<usize> = None;
+    let mut mark = 0usize;
+    while ni < n.len() {
+        if pi < p.len() && p[pi] != b'*' && p[pi] == n[ni] {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == b'*' {
+            star = Some(pi);
+            mark = ni;
+            pi += 1;
+        } else if let Some(sp) = star {
+            pi = sp + 1;
+            mark += 1;
+            ni = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
 /// One aligned comparison row (medians in seconds; `None` = the entry is
 /// absent on that side).
 #[derive(Debug, Clone, PartialEq)]
@@ -350,6 +400,42 @@ mod tests {
         assert_eq!(out.compared, 2);
         assert_eq!(out.within, 2);
         assert!(out.only_in_baseline.is_empty() && out.only_in_current.is_empty());
+    }
+
+    #[test]
+    fn name_matches_substrings_globs_and_lists() {
+        // Empty filter matches everything.
+        assert!(name_matches("", "full_column/65x2/batchsim"));
+        assert!(name_matches(" , ", "anything"));
+        // Plain substrings (the original --filter semantics).
+        assert!(name_matches("serve", "full_column/65x2/serve"));
+        assert!(!name_matches("serve", "full_column/65x2/batchsim"));
+        // Globs anchor to the whole name.
+        assert!(name_matches("full_column/*/batchsim", "full_column/65x2/batchsim"));
+        assert!(!name_matches("full_column/*/batchsim", "full_column/65x2/serve"));
+        assert!(!name_matches("full_column/*/batchsim", "clustering/65x2/batchsim"));
+        assert!(name_matches("*batchsim", "clustering/65x2/batchsim"));
+        assert!(!name_matches("batchsim*", "clustering/65x2/batchsim"));
+        // Comma-separated lists OR the patterns together.
+        let list = "response_,encode/,stdp/,wta/,full_column/*/batchsim";
+        for name in [
+            "response_event/96x2/cyclesim",
+            "response_cycle/96x2/cyclesim",
+            "encode/96x2/batchsim",
+            "stdp/96x2/cyclesim",
+            "wta/96x2/cyclesim",
+            "full_column/512x6/batchsim",
+        ] {
+            assert!(name_matches(list, name), "{name}");
+        }
+        for name in [
+            "full_column/96x2/serve",
+            "full_column/96x2/cyclesim",
+            "clustering/96x2/batchsim",
+            "flow_campaign/paper-fast/campaign",
+        ] {
+            assert!(!name_matches(list, name), "{name}");
+        }
     }
 
     #[test]

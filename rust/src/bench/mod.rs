@@ -37,6 +37,6 @@ pub mod runner;
 pub use artifact::{
     bench_json, load_bench, parse_bench, BenchArtifact, EntryResult, Timing, BENCH_SCHEMA,
 };
-pub use gate::{check, diff, render_diff, DiffRow, GateOutcome, GateSpec};
+pub use gate::{check, diff, name_matches, render_diff, DiffRow, GateOutcome, GateSpec};
 pub use registry::{default_registry, BenchEntry, Profile};
 pub use runner::{render_row, row_header, run_all, run_entry, RunnerOpts};

@@ -205,8 +205,15 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
             entries.push(BenchEntry::new("full_column", tag.clone(), "batchsim", units, move || {
                 let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
                 let batch = BatchSim::new(cfg.clone(), BENCH_SEED);
+                // Warm outside the timed region: spawns the shared pool on
+                // first use and grows the per-worker scratch + output
+                // buffer to steady state, so the timed closure measures
+                // the zero-allocation dispatch-only path.
+                let mut winners = Vec::new();
+                batch.infer_winners_into(&xs, &mut winners);
                 Box::new(move || {
-                    std::hint::black_box(batch.infer_winners(&xs).len());
+                    batch.infer_winners_into(&xs, &mut winners);
+                    std::hint::black_box(winners.len());
                 })
             }));
         }

@@ -69,9 +69,11 @@ pub fn explore(base: &ColumnConfig, ds: &Dataset, space: &SweepSpace, pipe: &Tnn
     explore_with_workers(base, ds, space, pipe, default_workers())
 }
 
-/// [`explore`] with a pinned worker count. Each sweep point runs its
-/// pipeline single-threaded (`run_native_with_workers(.., 1)`) so the
-/// parallelism granularity is one design per worker — no nested pools —
+/// [`explore`] with a pinned worker count. Sweep points are dispatched
+/// onto the persistent shared pool (`coordinator::pool`) with `workers`
+/// as the concurrency limit — no thread spawn per sweep. Each point runs
+/// its pipeline single-threaded (`run_native_with_workers(.., 1)`) so the
+/// parallelism granularity is one design per worker — no nested fan-out —
 /// and the report is byte-identical for ANY `workers` (order-preserving
 /// map, per-point seeds, stable sort; pinned by
 /// `rust/tests/batch_conformance.rs`).

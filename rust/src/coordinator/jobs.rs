@@ -1,7 +1,16 @@
-//! Minimal std::thread worker pool (offline substitute for tokio/rayon):
-//! order-preserving parallel map over CPU-bound jobs, with explicit
-//! worker-count control, chunking helpers for scratch reuse, and
-//! deterministic per-item RNG splitting.
+//! Order-preserving parallel map entry points (offline substitute for
+//! tokio/rayon), with explicit worker-count control, chunking helpers for
+//! scratch reuse, and deterministic per-item RNG splitting.
+//!
+//! Since PR 5 these are thin wrappers over the PERSISTENT process-wide
+//! worker pool ([`super::pool`]): no call spawns threads anymore — the
+//! pinned `workers` count is passed through as the dispatch concurrency
+//! limit, so a dispatch costs a condvar wake instead of N thread spawns.
+//! One deliberate semantic change: effective concurrency is additionally
+//! capped by the pool size (`default_workers`), so `--workers N` beyond
+//! the core count no longer oversubscribes with extra threads — results
+//! are bit-identical either way (order is index-addressed), only the
+//! scheduling differs.
 //!
 //! Determinism contract: results are returned in input order and any
 //! randomness is derived per ITEM (by splitting a master stream in input
@@ -10,10 +19,9 @@
 //! (`sim::batch`), the sweep explorer and the conformance tests all lean on
 //! this.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-
 use crate::util::Rng;
+
+use super::pool;
 
 /// Number of workers used when the caller does not pin one.
 pub fn default_workers() -> usize {
@@ -25,59 +33,25 @@ pub fn default_workers() -> usize {
 /// Parallel map preserving input order with the default worker count.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
-    T: Send + 'static,
-    R: Send + 'static,
+    T: Send,
+    R: Send,
     F: Fn(T) -> R + Send + Sync,
 {
     parallel_map_workers(items, default_workers(), f)
 }
 
-/// Parallel map preserving input order on exactly `workers` threads
-/// (clamped to [1, items.len()]). `workers == 1` runs on the caller thread
-/// with zero pool overhead — useful for nested parallelism, where the outer
-/// level already saturates the machine.
+/// Parallel map preserving input order on at most `workers` concurrent
+/// threads of the shared pool (clamped to [1, items.len()]).
+/// `workers == 1` runs on the caller thread with zero pool overhead —
+/// useful for nested parallelism, where the outer level already
+/// saturates the machine.
 pub fn parallel_map_workers<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
-    T: Send + 'static,
-    R: Send + 'static,
+    T: Send,
+    R: Send,
     F: Fn(T) -> R + Send + Sync,
 {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = workers.max(1).min(n);
-    if workers <= 1 {
-        return items.into_iter().map(f).collect();
-    }
-    let queue: Arc<Mutex<Vec<(usize, T)>>> =
-        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
-    let (tx, rx) = mpsc::channel::<(usize, R)>();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            let f = &f;
-            scope.spawn(move || loop {
-                let job = queue.lock().unwrap().pop();
-                match job {
-                    Some((idx, item)) => {
-                        let r = f(item);
-                        if tx.send((idx, r)).is_err() {
-                            break;
-                        }
-                    }
-                    None => break,
-                }
-            });
-        }
-        drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (idx, r) in rx {
-            out[idx] = Some(r);
-        }
-        out.into_iter().map(|r| r.expect("worker died")).collect()
-    })
+    pool::shared().map(items, workers, f)
 }
 
 /// Fallible order-preserving parallel map: like [`parallel_map_workers`]
@@ -91,11 +65,11 @@ pub fn parallel_try_map_workers<T, R, F>(
     f: F,
 ) -> anyhow::Result<Vec<R>>
 where
-    T: Send + 'static,
-    R: Send + 'static,
+    T: Send,
+    R: Send,
     F: Fn(T) -> anyhow::Result<R> + Send + Sync,
 {
-    parallel_map_workers(items, workers, f).into_iter().collect()
+    pool::shared().try_map(items, workers, f)
 }
 
 /// Parallel map where every item gets its own deterministic child RNG
@@ -104,18 +78,16 @@ where
 /// exist, so randomized parallel phases stay reproducible.
 pub fn parallel_map_rng<T, R, F>(items: Vec<T>, seed: u64, workers: usize, f: F) -> Vec<R>
 where
-    T: Send + 'static,
-    R: Send + 'static,
+    T: Send,
+    R: Send,
     F: Fn(T, &mut Rng) -> R + Send + Sync,
 {
-    let mut master = Rng::new(seed);
-    let seeded: Vec<(T, Rng)> = items.into_iter().map(|t| (t, master.split())).collect();
-    parallel_map_workers(seeded, workers, move |(t, mut rng)| f(t, &mut rng))
+    pool::shared().map_rng(items, seed, workers, f)
 }
 
 /// Spawn a named OS thread for a long-lived service worker (the serve
-/// subsystem's shard/learner/front-end threads). Unlike the scoped pool
-/// above, these threads own their state (`'static`) and outlive the caller;
+/// subsystem's shard/learner/front-end threads). Unlike pool dispatches,
+/// these threads own their state (`'static`) and outlive the caller;
 /// the name shows up in debuggers and panic messages.
 pub fn spawn_worker<F>(name: &str, f: F) -> std::thread::JoinHandle<()>
 where

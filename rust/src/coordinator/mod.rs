@@ -1,10 +1,13 @@
 //! TNNGen coordinator: the L3 orchestration layer tying the functional
 //! simulator (PJRT artifacts / native sim), the hardware generator and the
-//! EDA flow into single design runs, multi-design campaigns (with a
-//! std::thread worker pool) and design-space exploration.
+//! EDA flow into single design runs, multi-design campaigns and
+//! design-space exploration — all dispatched onto one persistent
+//! process-wide worker pool ([`pool`], fronted by the [`jobs`] map
+//! helpers).
 
 pub mod explorer;
 pub mod jobs;
+pub mod pool;
 
 use anyhow::Result;
 

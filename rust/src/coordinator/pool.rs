@@ -1,0 +1,503 @@
+//! Persistent worker pool: spawn once, park on a condvar, dispatch many.
+//!
+//! [`WorkerPool`] replaces the per-call `std::thread::scope` fan-out the
+//! engine shipped with (PR 1): worker threads are spawned ONCE, park on a
+//! condvar between jobs, and each dispatch hands out work by bumping an
+//! atomic chunk counter — no per-call thread spawn, no `Mutex<Vec>` queue
+//! popping on the per-item path, and no per-result mpsc sends (results are
+//! written straight into an index-addressed output buffer). At the
+//! micro-batch sizes the serve shards and the quick bench profile run
+//! (tens of samples), thread spawn alone used to cost more than the
+//! simulated work; a pool dispatch is a mutex push + condvar wake.
+//!
+//! Determinism contract (inherited by `coordinator::jobs` and everything
+//! above it): results are keyed by input index, so every entry point
+//! returns byte-identical output regardless of the worker count, the pool
+//! size or thread scheduling. Randomized phases split per-item RNG streams
+//! in input order before dispatch ([`WorkerPool::map_rng`]).
+//!
+//! Concurrency model:
+//!
+//! * a pool of `workers` has `workers - 1` background threads; the
+//!   dispatching thread always participates, so total parallelism is
+//!   `workers` and a 1-worker pool never touches a lock;
+//! * dispatches may overlap (several threads can dispatch onto one pool —
+//!   the serve shards and parallel test binaries do), and a job running on
+//!   a pool worker may itself dispatch: the nested caller drains its own
+//!   job, so nesting cannot deadlock;
+//! * every job carries a concurrency `limit` (the caller's pinned worker
+//!   count), so a pool sized for the whole machine still honors
+//!   `--workers N` semantics per dispatch — capped by the pool size, so
+//!   pinning above the core count no longer oversubscribes (results are
+//!   index-addressed and bit-identical either way);
+//! * a panicking job is caught on the worker, surfaced on the dispatching
+//!   thread after the job completes, and leaves the pool fully usable —
+//!   workers never die and no lock is poisoned (locks are never held
+//!   across user code).
+//!
+//! The process-wide pool lives in [`shared`]; long-lived owners
+//! (`sim::BatchSim`, `serve` shards, `eda::flow::FlowCampaign`) dispatch
+//! onto it instead of owning threads. Tests construct private pools to
+//! exercise lifecycle (drop joins every thread).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::util::Rng;
+
+/// One dispatched job: a borrowed chunk closure plus claim/completion
+/// state. The closure reference is lifetime-erased; it is only ever
+/// dereferenced before the dispatching thread (which owns the real
+/// borrow) returns from [`WorkerPool::dispatch_limited`].
+struct Job {
+    /// The chunk closure. SAFETY: dereferenced only while the dispatcher
+    /// blocks in `dispatch_limited`, which outlives every claim.
+    run: &'static (dyn Fn(usize) + Sync),
+    /// Total chunks to run (claimed exactly once each).
+    chunks: usize,
+    /// Per-job concurrency cap (the caller's pinned worker count).
+    limit: usize,
+    /// Next unclaimed chunk index (may overshoot `chunks` by one per
+    /// visiting worker; claims at or past `chunks` are no-ops).
+    next: AtomicUsize,
+    /// Threads currently claiming from this job (kept `<= limit`).
+    active: AtomicUsize,
+    /// Completion count + first panic payload.
+    state: Mutex<JobState>,
+    /// Signaled when `state.completed` reaches `chunks`.
+    finished: Condvar,
+}
+
+struct JobState {
+    completed: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct JobQueue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<JobQueue>,
+    work_ready: Condvar,
+}
+
+/// Claim and run chunks of `job` until none remain, respecting the job's
+/// concurrency cap. Returns without doing anything when the cap is
+/// already saturated. Panics from the chunk closure are recorded in the
+/// job state (first one wins), never unwound through the pool.
+fn run_chunks(job: &Job) {
+    if job.active.fetch_add(1, Ordering::Acquire) >= job.limit {
+        job.active.fetch_sub(1, Ordering::Release);
+        return;
+    }
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.chunks {
+            break;
+        }
+        let result = catch_unwind(AssertUnwindSafe(|| (job.run)(c)));
+        let mut st = job.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.completed += 1;
+        if st.completed == job.chunks {
+            job.finished.notify_all();
+        }
+    }
+    job.active.fetch_sub(1, Ordering::Release);
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return;
+                }
+                // Drop fully-claimed jobs from the front so the queue
+                // stays short (the dispatcher also removes its own job).
+                while q
+                    .jobs
+                    .front()
+                    .is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.chunks)
+                {
+                    q.jobs.pop_front();
+                }
+                let claimable = q.jobs.iter().find(|j| {
+                    j.next.load(Ordering::Relaxed) < j.chunks
+                        && j.active.load(Ordering::Relaxed) < j.limit
+                });
+                if let Some(j) = claimable {
+                    break Arc::clone(j);
+                }
+                q = shared.work_ready.wait(q).unwrap();
+            }
+        };
+        run_chunks(&job);
+    }
+}
+
+/// A persistent, reusable worker pool (see the module docs). Dropping the
+/// pool joins every background thread.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` total parallelism: `workers - 1`
+    /// parked background threads plus the dispatching thread itself
+    /// (so `WorkerPool::new(1)` spawns nothing and runs jobs inline).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(JobQueue { jobs: VecDeque::new(), shutdown: false }),
+            work_ready: Condvar::new(),
+        });
+        let handles = (0..workers - 1)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tnngen-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("failed to spawn pool worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// Total parallelism of the pool (background threads + the caller).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(chunk)` for every `chunk in 0..chunks`, blocking until all
+    /// complete. Chunks are claimed dynamically (whichever thread frees up
+    /// takes the next), at most `min(limit, pool size)` concurrently; the
+    /// calling thread always participates. A panic inside `f` is
+    /// re-raised here after the remaining chunks finish; the pool itself
+    /// survives and later dispatches run normally.
+    pub fn dispatch_limited(&self, chunks: usize, limit: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if chunks == 1 || self.handles.is_empty() || limit <= 1 {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+        // SAFETY: the job only lives in the queue + worker hands while
+        // this call blocks; every dereference of `run` happens before the
+        // matching chunk's completion count, and this function does not
+        // return until all chunks completed — so the borrow is live for
+        // every use. Workers that still hold the Arc afterwards only read
+        // the atomics, never `run`.
+        let run: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&'_ (dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            run,
+            chunks,
+            limit: limit.max(1),
+            next: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            state: Mutex::new(JobState { completed: 0, panic: None }),
+            finished: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push_back(Arc::clone(&job));
+        }
+        self.shared.work_ready.notify_all();
+        // The dispatcher works its own job too (and is the only claimant
+        // when every background worker is busy elsewhere, so a dispatch
+        // can never starve).
+        run_chunks(&job);
+        let payload = {
+            let mut st = job.state.lock().unwrap();
+            while st.completed < job.chunks {
+                st = job.finished.wait(st).unwrap();
+            }
+            st.panic.take()
+        };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    /// [`Self::dispatch_limited`] with no cap below the chunk count.
+    pub fn dispatch(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.dispatch_limited(chunks, chunks, f);
+    }
+
+    /// Order-preserving parallel map: `out[i] = f(items[i])`, items
+    /// claimed one at a time (dynamic load balancing, like the old
+    /// spawning `parallel_map_workers`), at most `limit` concurrently.
+    /// `limit <= 1` runs inline on the caller with zero pool overhead.
+    ///
+    /// If `f` panics, the panic is re-raised here; items not yet
+    /// processed (and results already produced) are leaked, not dropped.
+    pub fn map<T, R, F>(&self, items: Vec<T>, limit: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let limit = limit.max(1).min(n);
+        if limit == 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let input = TakeBuf::new(items);
+        let out = FillBuf::new(n);
+        self.dispatch_limited(n, limit, &|i| {
+            // SAFETY: chunk index == item index, claimed exactly once.
+            let item = unsafe { input.take(i) };
+            let value = f(item);
+            // SAFETY: same unique index; the slot is written exactly once.
+            unsafe { out.set(i, value) };
+        });
+        // SAFETY: dispatch_limited returned normally, so every index was
+        // taken and every output slot written.
+        unsafe { out.into_vec() }
+    }
+
+    /// Fallible order-preserving map: every item runs to completion and
+    /// the error of the FIRST failed item in INPUT order is returned —
+    /// deterministic for any worker count.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, limit: usize, f: F) -> anyhow::Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> anyhow::Result<R> + Sync,
+    {
+        self.map(items, limit, f).into_iter().collect()
+    }
+
+    /// Order-preserving map where every item gets its own deterministic
+    /// child RNG stream, split from `seed` in input order BEFORE
+    /// dispatch — item i sees the same stream no matter which thread runs
+    /// it or how many exist.
+    pub fn map_rng<T, R, F>(&self, items: Vec<T>, seed: u64, limit: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T, &mut Rng) -> R + Sync,
+    {
+        let mut master = Rng::new(seed);
+        let seeded: Vec<(T, Rng)> = items.into_iter().map(|t| (t, master.split())).collect();
+        self.map(seeded, limit, move |(t, mut rng)| f(t, &mut rng))
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Wake every parked worker with the shutdown flag and join them all.
+    /// No dispatch can be in flight here (dispatches borrow the pool), so
+    /// the queue is necessarily drained.
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide shared pool, spawned on first use and sized
+/// [`default_workers`](super::jobs::default_workers). Every
+/// `coordinator::jobs` entry point and the batched sim engine dispatch
+/// here; per-call worker pinning is expressed as the dispatch `limit`,
+/// never as pool construction.
+pub fn shared() -> &'static WorkerPool {
+    static SHARED: OnceLock<WorkerPool> = OnceLock::new();
+    SHARED.get_or_init(|| WorkerPool::new(super::jobs::default_workers()))
+}
+
+/// Items moved out of a `Vec` one index at a time from worker threads.
+/// Dropping frees the backing buffer WITHOUT dropping elements: on the
+/// success path all were moved out; on a panic path the remainder leaks.
+struct TakeBuf<T> {
+    ptr: *mut T,
+    len: usize,
+    cap: usize,
+}
+
+impl<T> TakeBuf<T> {
+    fn new(items: Vec<T>) -> TakeBuf<T> {
+        let mut items = std::mem::ManuallyDrop::new(items);
+        TakeBuf { ptr: items.as_mut_ptr(), len: items.len(), cap: items.capacity() }
+    }
+
+    /// Move element `i` out.
+    ///
+    /// # Safety
+    /// Each index must be taken at most once, and `i < len`.
+    unsafe fn take(&self, i: usize) -> T {
+        debug_assert!(i < self.len);
+        self.ptr.add(i).read()
+    }
+}
+
+impl<T> Drop for TakeBuf<T> {
+    fn drop(&mut self) {
+        // Rebuild with length 0: frees the allocation, drops no elements.
+        unsafe { drop(Vec::from_raw_parts(self.ptr, 0, self.cap)) };
+    }
+}
+
+unsafe impl<T: Send> Send for TakeBuf<T> {}
+unsafe impl<T: Send> Sync for TakeBuf<T> {}
+
+/// An output buffer filled by index from worker threads (each slot
+/// written exactly once), then converted into a `Vec`. This is what
+/// replaces the per-result mpsc channel of the old spawning pool.
+/// Dropping without conversion (panic path) frees the buffer and leaks
+/// whichever slots were initialized.
+pub(crate) struct FillBuf<R> {
+    ptr: *mut R,
+    len: usize,
+    cap: usize,
+}
+
+impl<R> FillBuf<R> {
+    /// Uninitialized buffer for `n` results.
+    pub(crate) fn new(n: usize) -> FillBuf<R> {
+        let mut v = std::mem::ManuallyDrop::new(Vec::<R>::with_capacity(n));
+        FillBuf { ptr: v.as_mut_ptr(), len: n, cap: v.capacity() }
+    }
+
+    /// Write slot `i`.
+    ///
+    /// # Safety
+    /// Each slot must be written exactly once (no old value is dropped),
+    /// and `i < n`.
+    pub(crate) unsafe fn set(&self, i: usize, value: R) {
+        debug_assert!(i < self.len);
+        self.ptr.add(i).write(value);
+    }
+
+    /// Assemble the final `Vec`.
+    ///
+    /// # Safety
+    /// Every slot `0..n` must have been written.
+    pub(crate) unsafe fn into_vec(self) -> Vec<R> {
+        let v = Vec::from_raw_parts(self.ptr, self.len, self.cap);
+        std::mem::forget(self);
+        v
+    }
+}
+
+impl<R> Drop for FillBuf<R> {
+    fn drop(&mut self) {
+        unsafe { drop(Vec::from_raw_parts(self.ptr, 0, self.cap)) };
+    }
+}
+
+unsafe impl<R: Send> Send for FillBuf<R> {}
+unsafe impl<R: Send> Sync for FillBuf<R> {}
+
+/// Shared pointer into a caller-owned slice for disjoint chunked writes
+/// (`Copy` results only, so overwriting a slot never needs a drop). Used
+/// by the winner-only batch paths to fill a reused output buffer with
+/// zero allocations.
+pub(crate) struct SlicePtr<R: Copy>(*mut R, usize);
+
+impl<R: Copy> SlicePtr<R> {
+    /// Wrap `out` for index-addressed writes from worker threads.
+    pub(crate) fn new(out: &mut [R]) -> SlicePtr<R> {
+        SlicePtr(out.as_mut_ptr(), out.len())
+    }
+
+    /// Write slot `i`.
+    ///
+    /// # Safety
+    /// Each index must be written by exactly one thread at a time, and
+    /// `i < out.len()`.
+    pub(crate) unsafe fn set(&self, i: usize, value: R) {
+        debug_assert!(i < self.1);
+        self.0.add(i).write(value);
+    }
+}
+
+unsafe impl<R: Copy + Send> Send for SlicePtr<R> {}
+unsafe impl<R: Copy + Send> Sync for SlicePtr<R> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn dispatch_runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.dispatch(64, &|c| {
+            hits[c].fetch_add(1, Ordering::Relaxed);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn map_matches_serial_for_any_limit() {
+        let pool = WorkerPool::new(6);
+        let serial: Vec<i64> = (0..200).map(|i| i * i - 7).collect();
+        for limit in [1usize, 2, 3, 6, 50, 200] {
+            let got = pool.map((0..200).collect::<Vec<i64>>(), limit, |i| i * i - 7);
+            assert_eq!(got, serial, "limit={limit}");
+        }
+    }
+
+    #[test]
+    fn one_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.handles.is_empty());
+        let out = pool.map(vec![1, 2, 3], 8, |i: i32| i * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+        pool.dispatch(5, &|_| {});
+    }
+
+    #[test]
+    fn nested_dispatch_does_not_deadlock() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map((0..8u64).collect::<Vec<_>>(), 4, |i| {
+            // Inner dispatch onto the SAME (shared-style) pool.
+            let inner = shared().map((0..5u64).collect::<Vec<_>>(), 2, move |j| i * 10 + j);
+            inner.iter().sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..8u64).map(|i| (0..5u64).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn limit_caps_concurrency() {
+        let pool = WorkerPool::new(8);
+        let active = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.dispatch_limited(64, 2, &|_| {
+            let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            active.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+}

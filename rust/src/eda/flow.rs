@@ -281,9 +281,10 @@ impl FlowCampaign {
         self.cache.as_ref().map_or(0, |c| c.misses())
     }
 
-    /// Run every job, one flow per worker, returning reports **in job
-    /// order** (independent of thread scheduling). All jobs run even if
-    /// one fails; the first error in job order is returned.
+    /// Run every job, one flow per worker on the persistent shared pool
+    /// (no thread spawn per campaign), returning reports **in job order**
+    /// (independent of thread scheduling). All jobs run even if one
+    /// fails; the first error in job order is returned.
     pub fn run(&self, jobs: Vec<FlowJob>) -> Result<Vec<FlowReport>> {
         let cache = self.cache.as_ref();
         crate::coordinator::jobs::parallel_try_map_workers(jobs, self.workers, move |job| {

@@ -71,12 +71,12 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   serve <tag|name> [--shards N] [--batch N] [--wait-us US] [--queue N] [--learn-queue N]
         [--snapshot-every K] [--bench --rps R --duration S [--learn-every K] [--json]]
         [--tcp ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
-  bench [run|list] [--profile quick|full | --quick] [--filter SUBSTR]
+  bench [run|list] [--profile quick|full | --quick] [--filter PATTERNS]
         [--iters N] [--warmup N] [--json] [--out FILE]
   bench record [--out FILE] [run flags]       (defaults to BENCH_<profile>.json)
   bench diff <baseline.json> <current.json>
   bench check --against <baseline.json> [--current <artifact.json>]
-        [--fail-threshold R] [--report-only] [run flags]
+        [--filter PATTERNS] [--fail-threshold R] [--report-only] [run flags]
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
@@ -100,7 +100,11 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   and `bench check` gates medians against a recorded baseline: exit 0 on
   pass, 3 when a median exceeds --fail-threshold (default 1.5x) times
   its baseline; --report-only prints the verdicts but always exits 0.
-  See docs/BENCHMARKS.md for the methodology and schema.";
+  --filter takes comma-separated patterns (plain substrings, or `*`
+  globs matched against the whole workload/design/engine name); on
+  `bench check` it narrows BOTH sides of the gate, which is how CI
+  hard-gates the sim hot-path rows at 1.25x while the full matrix stays
+  report-only. See docs/BENCHMARKS.md for the methodology and schema.";
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -623,8 +627,18 @@ fn bench_cmd(args: &Args) -> Result<()> {
         "check" => {
             let base =
                 args.flag("against").context("bench check needs --against <baseline.json>")?;
-            let baseline = bench::load_bench(std::path::Path::new(base))?;
-            let current = match args.flag("current") {
+            let mut baseline = bench::load_bench(std::path::Path::new(base))?;
+            // --filter narrows the gate to a subset of rows (substring or
+            // `*` glob, comma-separated), applied to BOTH sides so the
+            // comparison stays aligned. CI uses this to hard-gate the sim
+            // hot-path rows while the full matrix stays report-only.
+            let filter = args.flag_str("filter", "");
+            baseline.entries.retain(|e| bench::name_matches(filter, &e.name));
+            ensure!(
+                !baseline.entries.is_empty(),
+                "--filter {filter:?} matches no baseline entry in {base}"
+            );
+            let mut current = match args.flag("current") {
                 Some(p) => bench::load_bench(std::path::Path::new(p))?,
                 None => {
                     // Refuse BEFORE running the suite: a profile mismatch
@@ -641,6 +655,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
                     bench_run(args, profile, true)?
                 }
             };
+            current.entries.retain(|e| bench::name_matches(filter, &e.name));
             ensure!(
                 baseline.profile == current.profile,
                 "baseline {base} is a {:?}-profile artifact but the current run is {:?}; \
@@ -689,7 +704,7 @@ fn bench_run(args: &Args, profile: Profile, print_rows: bool) -> Result<bench::B
     let filter = args.flag_str("filter", "");
     let entries: Vec<_> = bench::default_registry(profile)
         .into_iter()
-        .filter(|e| filter.is_empty() || e.name().contains(filter))
+        .filter(|e| bench::name_matches(filter, &e.name()))
         .collect();
     ensure!(
         !entries.is_empty(),

@@ -67,9 +67,16 @@ impl SharedWeights {
 }
 
 /// Reader-shard worker loop: pull micro-batches, adopt the newest weight
-/// snapshot at each batch boundary, run batched inference, reply. Exits
-/// when the queue is closed and drained. `throttle` is a test-only delay
-/// simulating a slow shard (Duration::ZERO in production).
+/// snapshot at each batch boundary, run batched winner-only inference,
+/// reply. Exits when the queue is closed and drained. `throttle` is a
+/// test-only delay simulating a slow shard (Duration::ZERO in production).
+///
+/// The loop owns one [`BatchSim`] replica (workers pinned to 1 — shard
+/// parallelism lives at the shard count) plus reusable meta/window/winner
+/// buffers, so steady-state serving performs no engine rebuilds and no
+/// per-sample allocations: snapshot adoption copies weight VALUES into
+/// the existing engine (same geometry), and inference runs the
+/// zero-allocation [`BatchSim::infer_winners_into`] path.
 pub(crate) fn reader_loop(
     cfg: ColumnConfig,
     queue: Arc<Batcher<InferRequest>>,
@@ -79,7 +86,11 @@ pub(crate) fn reader_loop(
 ) {
     let mut snap = weights.load();
     let mut engine =
-        BatchSim::from_sim(CycleSim::from_flat(cfg.clone(), snap.weights.clone())).with_workers(1);
+        BatchSim::from_sim(CycleSim::from_flat(cfg, snap.weights.clone())).with_workers(1);
+    let mut metas: Vec<(u64, std::time::Instant, std::sync::mpsc::Sender<InferReply>)> =
+        Vec::new();
+    let mut windows: Vec<Vec<f32>> = Vec::new();
+    let mut winners: Vec<i32> = Vec::new();
     while let Some(batch) = queue.next_batch() {
         if !throttle.is_zero() {
             std::thread::sleep(throttle);
@@ -87,21 +98,24 @@ pub(crate) fn reader_loop(
         let latest = weights.load();
         if latest.epoch != snap.epoch {
             snap = latest;
-            engine = BatchSim::from_sim(CycleSim::from_flat(cfg.clone(), snap.weights.clone()))
-                .with_workers(1);
+            // Same column geometry across epochs: adopting a snapshot is a
+            // value copy into the live engine, not a rebuild.
+            engine.sim.weights.clone_from(&snap.weights);
         }
         let n = batch.len();
-        let (metas, windows): (Vec<_>, Vec<_>) = batch
-            .into_iter()
-            .map(|r| ((r.id, r.submitted, r.reply), r.window))
-            .unzip();
-        let outs = engine.infer_batch(&windows);
-        for ((id, submitted, reply), out) in metas.into_iter().zip(outs) {
+        metas.clear();
+        windows.clear();
+        for r in batch {
+            metas.push((r.id, r.submitted, r.reply));
+            windows.push(r.window);
+        }
+        engine.infer_winners_into(&windows, &mut winners);
+        for ((id, submitted, reply), &winner) in metas.drain(..).zip(winners.iter()) {
             let latency = submitted.elapsed();
             metrics.record_latency(latency);
             metrics.completed.fetch_add(1, Relaxed);
             // A dropped receiver (client gone) is not an error for the shard.
-            let _ = reply.send(InferReply { id, winner: out.winner, epoch: snap.epoch, latency });
+            let _ = reply.send(InferReply { id, winner, epoch: snap.epoch, latency });
         }
         metrics.batches.fetch_add(1, Relaxed);
         metrics.batched_samples.fetch_add(n as u64, Relaxed);

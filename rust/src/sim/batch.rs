@@ -3,51 +3,87 @@
 //!
 //! [`BatchSim`] runs encode -> response -> WTA over a whole dataset of
 //! windows at once. The read-only phases (encoding, response evaluation,
-//! inference) are parallelized across samples on the coordinator worker
-//! pool (`coordinator::jobs`), chunked so each worker reuses one
-//! [`EventScratch`] across its run of samples; the STDP weight-update
+//! inference) are dispatched in order-preserving chunks onto the
+//! PERSISTENT coordinator worker pool (`coordinator::pool::shared` — no
+//! per-call thread spawn), and each chunk reuses one [`SimScratch`]
+//! (event index + potential buffer + response/gate/encode buffers) across
+//! its whole run of samples, so the steady-state inner loop allocates
+//! nothing (`rust/tests/alloc.rs` pins this). The STDP weight-update
 //! recurrence is inherently serial, so training replays pre-encoded spike
-//! trains on the caller thread.
+//! trains on the caller thread through the same scratch.
 //!
 //! Conformance contract (property-tested in `rust/tests/properties.rs` and
 //! pinned by `rust/tests/batch_conformance.rs`): for identical seeds, every
 //! entry point is BIT-EXACT with the per-sample [`CycleSim`] path — same
 //! winners, same output spike times, same final weights — for any worker
-//! count. Parallelism never reorders results (`parallel_map_workers`
-//! preserves input order) and never reassociates arithmetic (each sample is
-//! evaluated with exactly the per-sample code path).
+//! count. Parallelism never reorders results (outputs are written by input
+//! index) and never reassociates arithmetic (each sample is evaluated with
+//! exactly the per-sample code path).
 
-use crate::config::{ColumnConfig, Response};
-use crate::coordinator::jobs::{chunk_ranges, default_workers, parallel_map_workers};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::config::ColumnConfig;
+use crate::coordinator::jobs::{chunk_ranges, default_workers};
+use crate::coordinator::pool::{self, FillBuf, SlicePtr};
 use crate::util::Rng;
 
-use super::column::{first_crossing, potentials, wta, CycleSim, StepOutput};
-use super::event::{event_driven_indexed, EventScratch};
+use super::column::{wta_winner, CycleSim, StepOutput};
+use super::scratch::SimScratch;
 
 /// Batched executor wrapping one column simulator.
-#[derive(Clone)]
 pub struct BatchSim {
     /// The wrapped per-sample simulator (weights are shared exactly).
     pub sim: CycleSim,
     workers: usize,
+    /// One scratch slot per worker chunk; slot k is locked by whichever
+    /// pool thread claims chunk k (uncontended: each chunk is claimed
+    /// once per dispatch), so buffers persist across dispatches.
+    scratch: Vec<Mutex<SimScratch>>,
+}
+
+impl Clone for BatchSim {
+    /// Clones the simulator and worker pinning; scratch buffers are
+    /// per-instance and start fresh.
+    fn clone(&self) -> Self {
+        BatchSim::from_sim(self.sim.clone()).with_workers(self.workers)
+    }
+}
+
+fn scratch_slots(cfg: &ColumnConfig, workers: usize) -> Vec<Mutex<SimScratch>> {
+    (0..workers.max(1)).map(|_| Mutex::new(SimScratch::for_config(cfg))).collect()
+}
+
+/// Lock a scratch slot, recovering from poisoning: a panic in a
+/// per-sample closure (e.g. a malformed window) unwinds through the held
+/// guard, but scratch buffers carry no cross-sample invariants — every
+/// use clears/rewrites them (and `EventScratch::load`, which DOES keep an
+/// internal invariant, performs no panicking operation mid-update) — so
+/// the slot stays safe to reuse and the engine keeps the pool's
+/// "a panicking job never bricks the machinery" contract.
+fn lock_scratch(slot: &Mutex<SimScratch>) -> MutexGuard<'_, SimScratch> {
+    slot.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl BatchSim {
     /// Initialize like [`CycleSim::new`] (same seed -> same weights) with
     /// the default worker count.
     pub fn new(config: ColumnConfig, seed: u64) -> Self {
-        BatchSim { sim: CycleSim::new(config, seed), workers: default_workers() }
+        BatchSim::from_sim(CycleSim::new(config, seed))
     }
 
     /// Wrap an existing per-sample simulator (shares its weights exactly).
     pub fn from_sim(sim: CycleSim) -> Self {
-        BatchSim { sim, workers: default_workers() }
+        let workers = default_workers();
+        let scratch = scratch_slots(&sim.config, workers);
+        BatchSim { sim, workers, scratch }
     }
 
     /// Pin the worker count (1 = caller thread only; useful when an outer
-    /// sweep already runs one design per worker).
+    /// sweep already runs one design per worker). The count is a dispatch
+    /// concurrency limit on the shared pool, not a thread spawn.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self.scratch = scratch_slots(&self.sim.config, self.workers);
         self
     }
 
@@ -66,19 +102,66 @@ impl BatchSim {
         self.sim
     }
 
-    /// Run `per_sample` over `0..n` in order-preserving parallel chunks.
+    /// Run `per_sample` over `0..n` in order-preserving parallel chunks on
+    /// the shared pool, collecting the results. Each chunk holds one
+    /// [`SimScratch`] slot for its whole run of samples.
     fn map_samples<R, F>(&self, n: usize, per_sample: F) -> Vec<R>
     where
-        R: Send + 'static,
-        F: Fn(usize, &mut EventScratch) -> R + Send + Sync,
+        R: Send,
+        F: Fn(usize, &mut SimScratch) -> R + Sync,
     {
-        let t_r = self.sim.config.params.t_r;
-        let ranges = chunk_ranges(n, self.workers);
-        let chunks: Vec<Vec<R>> = parallel_map_workers(ranges, self.workers, |(lo, hi)| {
-            let mut scratch = EventScratch::new(t_r);
-            (lo..hi).map(|i| per_sample(i, &mut scratch)).collect()
+        if n == 0 {
+            return Vec::new();
+        }
+        let chunks = self.workers.min(n);
+        if chunks <= 1 {
+            let mut scratch = lock_scratch(&self.scratch[0]);
+            return (0..n).map(|i| per_sample(i, &mut scratch)).collect();
+        }
+        let ranges = chunk_ranges(n, chunks);
+        let out = FillBuf::new(n);
+        pool::shared().dispatch(ranges.len(), &|c| {
+            let (lo, hi) = ranges[c];
+            let mut scratch = lock_scratch(&self.scratch[c]);
+            for i in lo..hi {
+                // SAFETY: ranges are disjoint and each chunk is claimed
+                // once, so every index is written exactly once.
+                unsafe { out.set(i, per_sample(i, &mut scratch)) };
+            }
         });
-        chunks.into_iter().flatten().collect()
+        // SAFETY: the dispatch completed, so every slot 0..n was written.
+        unsafe { out.into_vec() }
+    }
+
+    /// [`Self::map_samples`] for `Copy` results written into a reused
+    /// caller buffer — the zero-allocation winner paths.
+    fn fill_samples<R, F>(&self, out: &mut [R], per_sample: F)
+    where
+        R: Copy + Send,
+        F: Fn(usize, &mut SimScratch) -> R + Sync,
+    {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        let chunks = self.workers.min(n);
+        if chunks <= 1 {
+            let mut scratch = lock_scratch(&self.scratch[0]);
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = per_sample(i, &mut scratch);
+            }
+            return;
+        }
+        let ranges = chunk_ranges(n, chunks);
+        let out = SlicePtr::new(out);
+        pool::shared().dispatch(ranges.len(), &|c| {
+            let (lo, hi) = ranges[c];
+            let mut scratch = lock_scratch(&self.scratch[c]);
+            for i in lo..hi {
+                // SAFETY: ranges are disjoint and within out's length.
+                unsafe { out.set(i, per_sample(i, &mut scratch)) };
+            }
+        });
     }
 
     /// Encode every window (parallel; encoding is pure and
@@ -88,69 +171,80 @@ impl BatchSim {
         self.map_samples(xs.len(), |i, _| sim.encode(&xs[i]))
     }
 
-    /// Response for one pre-encoded sample using a loaded scratch — the
-    /// same dispatch as [`CycleSim::response`], with the event index built
-    /// once per sample instead of once per neuron.
-    fn response_indexed(&self, s: &[i32], scratch: &mut EventScratch) -> Vec<i32> {
-        let sim = &self.sim;
-        let params = &sim.config.params;
-        let theta = sim.config.theta();
-        match params.response {
-            Response::Snl | Response::Rnl => {
-                scratch.load(s);
-                event_driven_indexed(&sim.weights, sim.config.p, scratch, theta, params)
-            }
-            Response::Lif => potentials(&sim.weights, sim.config.p, s, params)
-                .iter()
-                .map(|v| first_crossing(v, theta, params.t_r))
-                .collect(),
-        }
-    }
-
     /// Output spike times for every pre-encoded sample (parallel).
     pub fn response_batch(&self, spikes: &[Vec<i32>]) -> Vec<Vec<i32>> {
-        self.map_samples(spikes.len(), |i, scratch| self.response_indexed(&spikes[i], scratch))
+        self.map_samples(spikes.len(), |i, scratch| {
+            self.sim.response_into(&spikes[i], scratch);
+            scratch.y.clone()
+        })
     }
 
     /// Inference for every pre-encoded sample (parallel).
     pub fn infer_encoded_batch(&self, spikes: &[Vec<i32>]) -> Vec<StepOutput> {
         let params = &self.sim.config.params;
         self.map_samples(spikes.len(), |i, scratch| {
-            let y = self.response_indexed(&spikes[i], scratch);
-            let (winner, _) = wta(&y, params.t_r, params.tie);
-            StepOutput { winner, y }
+            self.sim.response_into(&spikes[i], scratch);
+            let winner = wta_winner(&scratch.y, params.t_r, params.tie);
+            StepOutput { winner, y: scratch.y.clone() }
         })
     }
 
     /// Inference for every raw window (parallel encode + response + WTA).
     pub fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<StepOutput> {
-        let params = &self.sim.config.params;
         self.map_samples(xs.len(), |i, scratch| {
-            let s = self.sim.encode(&xs[i]);
-            let y = self.response_indexed(&s, scratch);
-            let (winner, _) = wta(&y, params.t_r, params.tie);
-            StepOutput { winner, y }
+            let winner = self.sim.infer_winner_with(&xs[i], scratch);
+            StepOutput { winner, y: scratch.y.clone() }
         })
     }
 
     /// Winners only, for raw windows — the batched counterpart of
-    /// [`CycleSim::infer_all`].
+    /// [`CycleSim::infer_all`]. Allocation-free per sample (only the
+    /// returned vector is allocated); [`Self::infer_winners_into`] reuses
+    /// even that.
     pub fn infer_winners(&self, xs: &[Vec<f32>]) -> Vec<i32> {
-        self.infer_batch(xs).into_iter().map(|o| o.winner).collect()
+        let mut out = vec![-1i32; xs.len()];
+        self.fill_samples(&mut out, |i, scratch| self.sim.infer_winner_with(&xs[i], scratch));
+        out
+    }
+
+    /// Winners for raw windows written into a reused caller buffer: the
+    /// steady-state serving hot path, with ZERO allocations once the
+    /// scratch and `out` are warm.
+    pub fn infer_winners_into(&self, xs: &[Vec<f32>], out: &mut Vec<i32>) {
+        out.clear();
+        out.resize(xs.len(), -1);
+        self.fill_samples(out, |i, scratch| self.sim.infer_winner_with(&xs[i], scratch));
     }
 
     /// Winners only, for pre-encoded samples.
     pub fn winners_encoded(&self, spikes: &[Vec<i32>]) -> Vec<i32> {
-        self.infer_encoded_batch(spikes).into_iter().map(|o| o.winner).collect()
+        let mut out = vec![-1i32; spikes.len()];
+        self.fill_samples(&mut out, |i, scratch| {
+            self.sim.infer_encoded_winner_with(&spikes[i], scratch)
+        });
+        out
+    }
+
+    /// Winners for pre-encoded samples written into a reused caller
+    /// buffer (zero steady-state allocations; pinned by
+    /// `rust/tests/alloc.rs`).
+    pub fn winners_encoded_into(&self, spikes: &[Vec<i32>], out: &mut Vec<i32>) {
+        out.clear();
+        out.resize(spikes.len(), -1);
+        self.fill_samples(out, |i, scratch| {
+            self.sim.infer_encoded_winner_with(&spikes[i], scratch)
+        });
     }
 
     /// One online-STDP epoch over pre-encoded spike trains. The update
     /// recurrence is serial by definition (sample k+1 sees sample k's
-    /// weights), so this replays on the caller thread — bit-exact with
-    /// `CycleSim::train_epoch` because encoding is pure.
+    /// weights), so this replays on the caller thread through one reused
+    /// scratch — bit-exact with `CycleSim::train_epoch` because encoding
+    /// is pure and the scratch step shares the per-sample arithmetic.
     pub fn train_epoch_encoded(&mut self, spikes: &[Vec<i32>]) {
+        let mut scratch = lock_scratch(&self.scratch[0]);
         for s in spikes {
-            self.sim.step_encoded(s);
+            self.sim.step_encoded_with(s, &mut scratch);
         }
     }
 
@@ -170,12 +264,13 @@ impl BatchSim {
     pub fn train_epochs_shuffled(&mut self, xs: &[Vec<f32>], epochs: usize, seed: u64) {
         let enc = self.encode_batch(xs);
         let mut master = Rng::new(seed);
+        let mut scratch = lock_scratch(&self.scratch[0]);
         for _ in 0..epochs {
             let mut child = master.split();
             let mut order: Vec<usize> = (0..enc.len()).collect();
             child.shuffle(&mut order);
             for &i in &order {
-                self.sim.step_encoded(&enc[i]);
+                self.sim.step_encoded_with(&enc[i], &mut scratch);
             }
         }
     }
@@ -244,6 +339,41 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_reuse_buffers_and_match() {
+        let cfg = ColumnConfig::new("Into", "synthetic", 18, 3);
+        let xs = windows(18, 21, 6);
+        let batch = BatchSim::new(cfg, 2).with_workers(3);
+        let enc = batch.encode_batch(&xs);
+        let mut out = vec![7i32; 50]; // stale contents/length must not leak
+        batch.infer_winners_into(&xs, &mut out);
+        assert_eq!(out, batch.infer_winners(&xs));
+        batch.winners_encoded_into(&enc, &mut out);
+        assert_eq!(out, batch.winners_encoded(&enc));
+        assert_eq!(out, batch.infer_winners(&xs));
+    }
+
+    #[test]
+    fn panicking_sample_does_not_brick_the_engine() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // LIF sweeps index s[i] for every synapse, so a malformed (short)
+        // window panics inside the per-sample closure while the per-chunk
+        // scratch guard is held.
+        let mut cfg = ColumnConfig::new("Poison", "synthetic", 12, 2);
+        cfg.params.response = Response::Lif;
+        let batch = BatchSim::new(cfg, 5).with_workers(2);
+        let good = windows(12, 9, 3);
+        let expect = batch.infer_winners(&good);
+        let mut bad = good.clone();
+        bad[4] = vec![0.5; 3];
+        let r = catch_unwind(AssertUnwindSafe(|| batch.infer_batch(&bad)));
+        assert!(r.is_err(), "short window must surface its panic");
+        // The engine (scratch slots included) keeps working afterwards:
+        // lock_scratch recovers the poisoned slot.
+        assert_eq!(batch.infer_winners(&good), expect);
+        assert_eq!(batch.infer_batch(&good).len(), 9);
+    }
+
+    #[test]
     fn shuffled_training_is_seed_deterministic_and_order_sensitive() {
         let cfg = ColumnConfig::new("Shuf", "synthetic", 16, 2);
         let xs = windows(16, 25, 8);
@@ -295,6 +425,9 @@ mod tests {
         let mut b = BatchSim::new(cfg, 1);
         assert!(b.infer_batch(&[]).is_empty());
         assert!(b.encode_batch(&[]).is_empty());
+        let mut out = vec![1, 2, 3];
+        b.infer_winners_into(&[], &mut out);
+        assert!(out.is_empty());
         b.train_epochs(&[], 3);
     }
 }

@@ -8,36 +8,52 @@
 
 use crate::config::{ColumnConfig, Response, TieBreak, TnnParams};
 
-use super::encode::encode_window;
+use super::encode::{encode_window, encode_window_into};
+use super::event::{event_driven_indexed_into, EventScratch};
+use super::scratch::SimScratch;
+
+/// Membrane potentials for flat row-major weights `w` (stride `p`) and
+/// spike times `s[p]`, written ROW-MAJOR (`v[j * t_r + t]`) into the
+/// caller's buffer — the allocation-free core behind [`potentials`].
+/// Identical accumulation order to the per-row form, so results are
+/// bit-exact.
+pub fn potentials_into(w: &[f32], p: usize, s: &[i32], params: &TnnParams, v: &mut Vec<f32>) {
+    debug_assert_eq!(w.len() % p.max(1), 0);
+    let t_r = params.t_r.max(0) as usize;
+    let q = w.len() / p.max(1);
+    v.clear();
+    v.resize(q * t_r, 0.0);
+    for (row, vrow) in w.chunks_exact(p).zip(v.chunks_exact_mut(t_r.max(1))) {
+        for (i, &wi) in row.iter().enumerate() {
+            if wi == 0.0 {
+                continue;
+            }
+            let si = s[i];
+            for (t, vt) in vrow.iter_mut().enumerate() {
+                let d = t as i64 - si as i64;
+                if d < 0 {
+                    continue;
+                }
+                *vt += match params.response {
+                    Response::Snl => wi,
+                    Response::Rnl => wi * d as f32,
+                    Response::Lif => wi * params.lif_decay.powi(d as i32),
+                };
+            }
+        }
+    }
+}
 
 /// Membrane potentials V[q][t] for flat row-major weights `w` (stride `p`)
 /// and spike times `s[p]`. Padded inputs are not needed natively.
 pub fn potentials(w: &[f32], p: usize, s: &[i32], params: &TnnParams) -> Vec<Vec<f32>> {
-    debug_assert_eq!(w.len() % p.max(1), 0);
-    let t_r = params.t_r as usize;
-    w.chunks_exact(p)
-        .map(|row| {
-            let mut v = vec![0.0f32; t_r];
-            for (i, &wi) in row.iter().enumerate() {
-                if wi == 0.0 {
-                    continue;
-                }
-                let si = s[i];
-                for (t, vt) in v.iter_mut().enumerate() {
-                    let d = t as i64 - si as i64;
-                    if d < 0 {
-                        continue;
-                    }
-                    *vt += match params.response {
-                        Response::Snl => wi,
-                        Response::Rnl => wi * d as f32,
-                        Response::Lif => wi * params.lif_decay.powi(d as i32),
-                    };
-                }
-            }
-            v
-        })
-        .collect()
+    let t_r = params.t_r.max(0) as usize;
+    if t_r == 0 {
+        return vec![Vec::new(); w.len() / p.max(1)];
+    }
+    let mut flat = Vec::new();
+    potentials_into(w, p, s, params, &mut flat);
+    flat.chunks_exact(t_r).map(|row| row.to_vec()).collect()
 }
 
 /// First t with V[t] >= theta, else T_R.
@@ -50,8 +66,11 @@ pub fn first_crossing(v: &[f32], theta: f32, t_r: i32) -> i32 {
     t_r
 }
 
-/// 1-WTA: returns (winner or -1, gated output spike times).
-pub fn wta(y: &[i32], t_r: i32, tie: TieBreak) -> (i32, Vec<i32>) {
+/// 1-WTA winner only: the winning neuron index, or -1 when nothing fired
+/// before T_R. Allocation-free counterpart of [`wta`] for the
+/// inference-only paths that discard the gated vector;
+/// `rust/tests/properties.rs` property-tests that the two always agree.
+pub fn wta_winner(y: &[i32], t_r: i32, tie: TieBreak) -> i32 {
     let mut best = i32::MAX;
     let mut winner = -1i32;
     for (j, &yj) in y.iter().enumerate() {
@@ -67,11 +86,27 @@ pub fn wta(y: &[i32], t_r: i32, tie: TieBreak) -> (i32, Vec<i32>) {
     if best >= t_r {
         winner = -1;
     }
-    let gated = y
-        .iter()
-        .enumerate()
-        .map(|(j, &yj)| if j as i32 == winner { yj } else { t_r })
-        .collect();
+    winner
+}
+
+/// 1-WTA with the gated spike times written into caller scratch (the
+/// STDP path needs them); returns the winner. [`wta`] is the allocating
+/// wrapper.
+pub fn wta_gate_into(y: &[i32], t_r: i32, tie: TieBreak, gated: &mut Vec<i32>) -> i32 {
+    let winner = wta_winner(y, t_r, tie);
+    gated.clear();
+    gated.extend(
+        y.iter()
+            .enumerate()
+            .map(|(j, &yj)| if j as i32 == winner { yj } else { t_r }),
+    );
+    winner
+}
+
+/// 1-WTA: returns (winner or -1, gated output spike times).
+pub fn wta(y: &[i32], t_r: i32, tie: TieBreak) -> (i32, Vec<i32>) {
+    let mut gated = Vec::with_capacity(y.len());
+    let winner = wta_gate_into(y, t_r, tie, &mut gated);
     (winner, gated)
 }
 
@@ -175,6 +210,17 @@ impl CycleSim {
         )
     }
 
+    /// [`Self::encode`] into a caller buffer (alloc-free once warm).
+    pub fn encode_into(&self, x: &[f32], out: &mut Vec<i32>) {
+        encode_window_into(
+            x,
+            self.config.params.t,
+            self.config.params.t_r,
+            self.config.params.sparse_cutoff,
+            out,
+        );
+    }
+
     /// Output spike times for already-encoded inputs.
     ///
     /// Dispatches to the event-driven engine for the no-leak response
@@ -207,10 +253,65 @@ impl CycleSim {
             .collect()
     }
 
-    /// Inference for one already-encoded window.
+    /// The response core writing into caller buffers: `events` and `v`
+    /// are working scratch, `y` receives the output spike times. Same
+    /// engine dispatch (and bit-exact results) as [`Self::response`],
+    /// with zero steady-state allocations.
+    fn response_parts(
+        &self,
+        s: &[i32],
+        events: &mut EventScratch,
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) {
+        let params = &self.config.params;
+        let theta = self.config.theta();
+        match params.response {
+            Response::Rnl | Response::Snl => {
+                events.load(s);
+                event_driven_indexed_into(&self.weights, self.config.p, events, theta, params, y);
+            }
+            Response::Lif => {
+                potentials_into(&self.weights, self.config.p, s, params, v);
+                let t_r = params.t_r;
+                y.clear();
+                y.extend(
+                    v.chunks_exact(t_r.max(1) as usize)
+                        .map(|row| first_crossing(row, theta, t_r)),
+                );
+            }
+        }
+    }
+
+    /// [`Self::response`] into caller scratch (fills `scratch.y`);
+    /// allocation-free once the scratch is warm.
+    pub fn response_into(&self, s: &[i32], scratch: &mut SimScratch) {
+        self.response_parts(s, &mut scratch.events, &mut scratch.v, &mut scratch.y);
+    }
+
+    /// Winner-only inference for one already-encoded window using caller
+    /// scratch: response into `scratch.y`, then [`wta_winner`] — no
+    /// allocation anywhere on the path.
+    pub fn infer_encoded_winner_with(&self, s: &[i32], scratch: &mut SimScratch) -> i32 {
+        self.response_into(s, scratch);
+        wta_winner(&scratch.y, self.config.params.t_r, self.config.params.tie)
+    }
+
+    /// Winner-only inference for one raw window using caller scratch
+    /// (encode into `scratch.s`, response into `scratch.y`, WTA) — the
+    /// zero-allocation serving hot path.
+    pub fn infer_winner_with(&self, x: &[f32], scratch: &mut SimScratch) -> i32 {
+        self.encode_into(x, &mut scratch.s);
+        self.response_parts(&scratch.s, &mut scratch.events, &mut scratch.v, &mut scratch.y);
+        wta_winner(&scratch.y, self.config.params.t_r, self.config.params.tie)
+    }
+
+    /// Inference for one already-encoded window. Winner-only callers
+    /// should prefer [`Self::infer_encoded_winner_with`], which skips the
+    /// output allocation entirely.
     pub fn infer_encoded(&self, s: &[i32]) -> StepOutput {
         let y = self.response(s);
-        let (winner, _) = wta(&y, self.config.params.t_r, self.config.params.tie);
+        let winner = wta_winner(&y, self.config.params.t_r, self.config.params.tie);
         StepOutput { winner, y }
     }
 
@@ -226,6 +327,19 @@ impl CycleSim {
         let (winner, gated) = wta(&y, self.config.params.t_r, self.config.params.tie);
         stdp_update(&mut self.weights, self.config.p, s, &gated, &self.config.params);
         StepOutput { winner, y }
+    }
+
+    /// One online STDP learning step on an already-encoded window using
+    /// caller scratch; returns the WTA winner. Bit-exact with
+    /// [`Self::step_encoded`] (same response, gate and update arithmetic)
+    /// with zero steady-state allocations — the batched training replay
+    /// loop and epoch sweeps run on this.
+    pub fn step_encoded_with(&mut self, s: &[i32], scratch: &mut SimScratch) -> i32 {
+        let params = self.config.params;
+        self.response_parts(s, &mut scratch.events, &mut scratch.v, &mut scratch.y);
+        let winner = wta_gate_into(&scratch.y, params.t_r, params.tie, &mut scratch.gated);
+        stdp_update(&mut self.weights, self.config.p, s, &scratch.gated, &params);
+        winner
     }
 
     /// One online STDP learning step.
@@ -459,6 +573,68 @@ mod tests {
             assert_eq!(rows[j].as_slice(), sim.row(j));
             for i in 0..sim.config.p {
                 assert_eq!(sim.weight(j, i), rows[j][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn potentials_into_is_the_flat_form_of_potentials() {
+        for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+            let mut params = TnnParams::default();
+            params.response = resp;
+            params.lif_decay = 0.5;
+            let w = vec![1.0, 0.5, 0.0, 2.0, 0.25, 1.5];
+            let s = vec![0, 3, 30];
+            let rows = potentials(&w, 3, &s, &params);
+            let mut flat = Vec::new();
+            potentials_into(&w, 3, &s, &params, &mut flat);
+            assert_eq!(flat, rows.concat(), "{resp:?}");
+            // Reuse keeps results bit-identical (buffer is cleared).
+            potentials_into(&w, 3, &s, &params, &mut flat);
+            assert_eq!(flat, rows.concat(), "{resp:?} (reused)");
+        }
+    }
+
+    #[test]
+    fn wta_winner_and_gate_into_agree_with_wta() {
+        for tie in [TieBreak::Low, TieBreak::High] {
+            for y in [vec![5, 3, 3, 9], vec![32, 32], vec![4, 4], vec![3, 5, 3, 3]] {
+                let (winner, gated) = wta(&y, 32, tie);
+                assert_eq!(wta_winner(&y, 32, tie), winner, "{y:?} {tie:?}");
+                let mut gated2 = vec![99; 1]; // stale contents must not leak
+                let w2 = wta_gate_into(&y, 32, tie, &mut gated2);
+                assert_eq!((w2, gated2), (winner, gated), "{y:?} {tie:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_paths_match_allocating_paths() {
+        for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+            let mut cfg = tiny();
+            cfg.params.response = resp;
+            let mut a = CycleSim::new(cfg.clone(), 5);
+            let mut b = a.clone();
+            let mut scratch = crate::sim::SimScratch::for_config(&cfg);
+            let xs: Vec<Vec<f32>> = (0..8)
+                .map(|k| (0..16).map(|i| ((i + k) as f32 * 0.7).sin()).collect())
+                .collect();
+            for x in &xs {
+                // Inference equivalence (raw and pre-encoded).
+                let expect = a.infer(x);
+                assert_eq!(b.infer_winner_with(x, &mut scratch), expect.winner, "{resp:?}");
+                assert_eq!(scratch.y, expect.y, "{resp:?}");
+                let s = a.encode(x);
+                assert_eq!(
+                    b.infer_encoded_winner_with(&s, &mut scratch),
+                    expect.winner,
+                    "{resp:?}"
+                );
+                // Training-step equivalence: same winner, same weights.
+                let out = a.step_encoded(&s);
+                let w = b.step_encoded_with(&s, &mut scratch);
+                assert_eq!(w, out.winner, "{resp:?}");
+                assert_eq!(a.weights, b.weights, "{resp:?}");
             }
         }
     }

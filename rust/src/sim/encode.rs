@@ -16,6 +16,23 @@ pub fn round_half_even(x: f32) -> f32 {
     }
 }
 
+/// [`encode_window`] into a caller buffer — the allocation-free form the
+/// batched/serving hot paths use (the buffer is cleared, then filled).
+pub fn encode_window_into(x: &[f32], t: i32, t_r: i32, cutoff: f32, out: &mut Vec<i32>) {
+    let lo = x.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-9);
+    out.clear();
+    out.extend(x.iter().map(|&v| {
+        let xh = (v - lo) / span;
+        if xh < cutoff {
+            t_r
+        } else {
+            round_half_even((1.0 - xh) * (t - 1) as f32) as i32
+        }
+    }));
+}
+
 /// Per-window min-max normalization followed by intensity-to-latency
 /// encoding: s_i = round_half_even((1 - x_hat_i) * (T - 1)).
 ///
@@ -25,19 +42,9 @@ pub fn round_half_even(x: f32) -> f32 {
 /// every synapse spikes every sample and all templates collapse onto pure
 /// timing, which destroys clustering (see EXPERIMENTS.md §TableII-tuning).
 pub fn encode_window(x: &[f32], t: i32, t_r: i32, cutoff: f32) -> Vec<i32> {
-    let lo = x.iter().cloned().fold(f32::INFINITY, f32::min);
-    let hi = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let span = (hi - lo).max(1e-9);
-    x.iter()
-        .map(|&v| {
-            let xh = (v - lo) / span;
-            if xh < cutoff {
-                t_r
-            } else {
-                round_half_even((1.0 - xh) * (t - 1) as f32) as i32
-            }
-        })
-        .collect()
+    let mut out = Vec::with_capacity(x.len());
+    encode_window_into(x, t, t_r, cutoff, &mut out);
+    out
 }
 
 #[cfg(test)]

@@ -15,19 +15,35 @@
 //! The input-spike event index ([`EventScratch`]) is shared by every neuron
 //! of a column and reusable across samples, so the batched engine
 //! (`sim::batch`) builds it once per sample per worker instead of once per
-//! neuron — same arithmetic, fewer allocations.
+//! neuron. The index is a flat counting-sort layout (offset arrays into one
+//! `spike_idx` vector, NOT per-time `Vec`s), so reloading it for the next
+//! sample touches only the buckets the previous sample dirtied — zero
+//! allocations and O(p + e·log e) work for p synapses and e distinct spike
+//! times — which is what keeps the batch/serve hot paths allocation-free.
 //!
 //! Must agree exactly with the cycle-accurate engine (`column::potentials` +
 //! `first_crossing`); `rust/tests/properties.rs` property-tests this.
 
 use crate::config::{Response, TnnParams};
 
-/// Input-spike event index for one encoded sample: spikes bucketed by time
-/// (counting sort over [0, T_R)) plus the sorted list of non-empty times.
-/// Reusable across samples via [`EventScratch::load`].
+/// Input-spike event index for one encoded sample, in a flat counting-sort
+/// layout: `spike_idx` holds the spiking synapse indices grouped by spike
+/// time (times ascending), and per-time offset arrays locate each group.
+/// Reusable across samples via [`EventScratch::load`] with zero
+/// steady-state allocations.
 pub struct EventScratch {
-    /// Synapse indices spiking at each time step.
-    by_time: Vec<Vec<usize>>,
+    /// Response-window length the index is sized for.
+    t_r: i32,
+    /// Start offset of time t's group in `spike_idx`. Only entries for
+    /// times present in `event_times` are meaningful; the rest are stale
+    /// by design (never read, never cleared — that is what makes `load`
+    /// O(p + events) instead of O(T_R)).
+    bucket_starts: Vec<u32>,
+    /// End offset of time t's group in `spike_idx` (same staleness rule).
+    /// Doubles as the per-bucket counter and scatter cursor during `load`.
+    bucket_ends: Vec<u32>,
+    /// Spiking synapse indices grouped by time, times ascending.
+    spike_idx: Vec<u32>,
     /// Times with at least one spike, ascending.
     event_times: Vec<i32>,
 }
@@ -35,29 +51,80 @@ pub struct EventScratch {
 impl EventScratch {
     /// Empty index sized for response windows of `t_r` time steps.
     pub fn new(t_r: i32) -> Self {
+        EventScratch::with_capacity(t_r, 0)
+    }
+
+    /// Empty index with `spike_idx` capacity reserved for `p` synapses,
+    /// so even the first [`EventScratch::load`] does not grow buffers.
+    pub fn with_capacity(t_r: i32, p: usize) -> Self {
+        let slots = t_r.max(0) as usize;
         EventScratch {
-            by_time: vec![Vec::new(); t_r as usize],
-            event_times: Vec::new(),
+            t_r,
+            bucket_starts: vec![0; slots],
+            bucket_ends: vec![0; slots],
+            spike_idx: Vec::with_capacity(p),
+            event_times: Vec::with_capacity(slots.min(p)),
         }
     }
 
     /// Rebuild the index for spike times `s` (clears the previous sample).
+    ///
+    /// Cost is O(p + e·log e) for p synapses and e distinct in-window
+    /// spike times: only the buckets the PREVIOUS sample dirtied are
+    /// cleared, so sparse samples never pay for the full [0, T_R) range.
+    /// Invariant between loads: `bucket_ends[t] == 0` exactly for the
+    /// times t NOT in `event_times`.
     pub fn load(&mut self, s: &[i32]) {
-        for bucket in &mut self.by_time {
-            bucket.clear();
+        for &t in &self.event_times {
+            self.bucket_ends[t as usize] = 0;
         }
         self.event_times.clear();
-        let t_r = self.by_time.len() as i32;
+        let t_r = self.t_r;
+        // Pass 1: count spikes per time; a first touch registers the time.
+        for &si in s {
+            if (0..t_r).contains(&si) {
+                let count = &mut self.bucket_ends[si as usize];
+                if *count == 0 {
+                    self.event_times.push(si);
+                }
+                *count += 1;
+            }
+        }
+        self.event_times.sort_unstable();
+        // Lay the groups out contiguously in time order. `bucket_ends`
+        // switches from per-time count to scatter cursor (== start), and
+        // finishes pass 2 as the end offset.
+        let mut total = 0u32;
+        for &t in &self.event_times {
+            let count = self.bucket_ends[t as usize];
+            self.bucket_starts[t as usize] = total;
+            self.bucket_ends[t as usize] = total;
+            total += count;
+        }
+        self.spike_idx.clear();
+        self.spike_idx.resize(total as usize, 0);
+        // Pass 2: scatter synapse indices into their time groups.
         for (i, &si) in s.iter().enumerate() {
             if (0..t_r).contains(&si) {
-                self.by_time[si as usize].push(i);
+                let cursor = &mut self.bucket_ends[si as usize];
+                self.spike_idx[*cursor as usize] = i as u32;
+                *cursor += 1;
             }
         }
-        for t in 0..t_r {
-            if !self.by_time[t as usize].is_empty() {
-                self.event_times.push(t);
-            }
-        }
+    }
+
+    /// Number of distinct in-window spike times in the loaded sample.
+    pub fn num_events(&self) -> usize {
+        self.event_times.len()
+    }
+
+    /// The loaded events in time order: `(time, spiking synapse indices)`.
+    pub fn events(&self) -> impl Iterator<Item = (i32, &[u32])> + '_ {
+        self.event_times.iter().map(move |&t| {
+            let lo = self.bucket_starts[t as usize] as usize;
+            let hi = self.bucket_ends[t as usize] as usize;
+            (t, &self.spike_idx[lo..hi])
+        })
     }
 }
 
@@ -65,7 +132,6 @@ impl EventScratch {
 /// event index. Returns first integer t with V(t) >= theta, else T_R.
 fn neuron_output_indexed(w: &[f32], scratch: &EventScratch, theta: f32, params: &TnnParams) -> i32 {
     let t_r = params.t_r;
-    let by_time = &scratch.by_time;
     if theta <= 0.0 {
         // Degenerate threshold: V(0) = 0 already crosses, exactly as the
         // cycle-accurate sweep reports.
@@ -75,9 +141,9 @@ fn neuron_output_indexed(w: &[f32], scratch: &EventScratch, theta: f32, params: 
     match params.response {
         Response::Snl => {
             let mut v = 0.0f32;
-            for &t in &scratch.event_times {
-                for &i in &by_time[t as usize] {
-                    v += w[i];
+            for (t, idxs) in scratch.events() {
+                for &i in idxs {
+                    v += w[i as usize];
                 }
                 if v >= theta {
                     return t;
@@ -91,7 +157,7 @@ fn neuron_output_indexed(w: &[f32], scratch: &EventScratch, theta: f32, params: 
             let mut arrived_w = 0.0f64; // slope
             let mut v = 0.0f64;
             let mut last_event = 0i32;
-            for &te in &scratch.event_times {
+            for (te, idxs) in scratch.events() {
                 // Window [last_event, te): slope `arrived_w`, start value `v`.
                 if arrived_w > 0.0 && v < theta as f64 {
                     let need = (theta as f64 - v) / arrived_w;
@@ -105,8 +171,8 @@ fn neuron_output_indexed(w: &[f32], scratch: &EventScratch, theta: f32, params: 
                 }
                 // Advance to the event.
                 v += arrived_w * (te - last_event) as f64;
-                for &i in &by_time[te as usize] {
-                    arrived_w += w[i] as f64;
+                for &i in idxs {
+                    arrived_w += w[i as usize] as f64;
                 }
                 last_event = te;
             }
@@ -129,10 +195,10 @@ fn neuron_output_indexed(w: &[f32], scratch: &EventScratch, theta: f32, params: 
             // its start.
             let mut v = 0.0f64;
             let mut last = 0i32;
-            for &t in &scratch.event_times {
+            for (t, idxs) in scratch.events() {
                 v *= (params.lif_decay as f64).powi(t - last);
-                for &i in &by_time[t as usize] {
-                    v += w[i] as f64;
+                for &i in idxs {
+                    v += w[i as usize] as f64;
                 }
                 last = t;
                 if v >= theta as f64 {
@@ -153,9 +219,27 @@ pub fn neuron_output_event(w: &[f32], s: &[i32], theta: f32, params: &TnnParams)
     neuron_output_indexed(w, &scratch, theta, params)
 }
 
+/// Event-driven response for a whole column (flat row-major weights,
+/// stride `p`) against an already-loaded event index, written into the
+/// caller's output buffer — the allocation-free core the batched engine
+/// and the serve shards run per sample.
+pub fn event_driven_indexed_into(
+    w: &[f32],
+    p: usize,
+    scratch: &EventScratch,
+    theta: f32,
+    params: &TnnParams,
+    y: &mut Vec<i32>,
+) {
+    y.clear();
+    y.extend(
+        w.chunks_exact(p)
+            .map(|row| neuron_output_indexed(row, scratch, theta, params)),
+    );
+}
+
 /// Event-driven response for a whole column (flat row-major weights, stride
-/// `p`) against an already-loaded event index. The batched engine reuses
-/// one scratch per worker.
+/// `p`) against an already-loaded event index, as a fresh vector.
 pub fn event_driven_indexed(
     w: &[f32],
     p: usize,
@@ -163,9 +247,9 @@ pub fn event_driven_indexed(
     theta: f32,
     params: &TnnParams,
 ) -> Vec<i32> {
-    w.chunks_exact(p)
-        .map(|row| neuron_output_indexed(row, scratch, theta, params))
-        .collect()
+    let mut y = Vec::with_capacity(w.len() / p.max(1));
+    event_driven_indexed_into(w, p, scratch, theta, params, &mut y);
+    y
 }
 
 /// Event-driven response for a whole column (flat row-major weights, stride
@@ -262,6 +346,17 @@ mod tests {
     }
 
     #[test]
+    fn counting_sort_layout_groups_indices_by_time() {
+        let mut scratch = EventScratch::new(8);
+        // Synapses: 0 @ t=5, 1 @ t=2, 2 @ t=5, 3 out of window, 4 @ t=2.
+        scratch.load(&[5, 2, 5, 32, 2]);
+        assert_eq!(scratch.num_events(), 2);
+        let events: Vec<(i32, Vec<u32>)> =
+            scratch.events().map(|(t, idxs)| (t, idxs.to_vec())).collect();
+        assert_eq!(events, vec![(2, vec![1, 4]), (5, vec![0, 2])]);
+    }
+
+    #[test]
     fn scratch_reuse_across_samples_matches_fresh_index() {
         let params = TnnParams::default();
         let mut rng = Rng::new(23);
@@ -275,6 +370,26 @@ mod tests {
             let reused = event_driven_indexed(&w, p, &scratch, theta, &params);
             let fresh = event_driven(&w, p, &s, theta, &params);
             assert_eq!(reused, fresh);
+        }
+        // Regression for the flat counting-sort layout: `load` clears only
+        // the buckets the PREVIOUS sample dirtied, so interleaving dense,
+        // sparse, single-event, fully-silent and out-of-range samples must
+        // stay bit-identical to a fresh index at every step.
+        let all_silent = vec![params.t_r; p];
+        let mut single = vec![params.t_r; p];
+        single[3] = 7;
+        let dense: Vec<i32> = (0..p).map(|i| (i % 4) as i32).collect();
+        let same_time = vec![0i32; p];
+        let negatives = vec![-1i32; p];
+        let sequence =
+            [&dense, &all_silent, &single, &same_time, &negatives, &dense, &all_silent];
+        for s in sequence {
+            for theta in [0.5f32, 2.0, 9.5] {
+                scratch.load(s);
+                let reused = event_driven_indexed(&w, p, &scratch, theta, &params);
+                let fresh = event_driven(&w, p, s, theta, &params);
+                assert_eq!(reused, fresh, "s={s:?} theta={theta}");
+            }
         }
     }
 }

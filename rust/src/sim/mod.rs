@@ -15,9 +15,17 @@
 //!
 //! On top of the per-sample [`column::CycleSim`], [`batch::BatchSim`] runs
 //! whole datasets at once: read-only phases (encode, response, WTA) fan out
-//! across samples on the coordinator worker pool, training replays cached
-//! spike trains. Batched results are bit-exact with the per-sample path for
-//! identical seeds, for any worker count.
+//! across samples on the PERSISTENT coordinator worker pool
+//! (`coordinator::pool`), training replays cached spike trains. Batched
+//! results are bit-exact with the per-sample path for identical seeds, for
+//! any worker count.
+//!
+//! The hot path is allocation-free in steady state: every per-sample stage
+//! has an `_into`/`_with` variant writing into a reusable [`SimScratch`]
+//! (event index in a flat counting-sort layout, potential/response/gate/
+//! encode buffers), and each pool worker chunk carries one scratch across
+//! its whole run of samples. `rust/tests/alloc.rs` pins the zero-allocation
+//! property with a counting global allocator.
 //!
 //! Weights are flat row-major `Vec<f32>` matrices (stride p), the same
 //! layout `runtime::column::init_weights_flat` produces.
@@ -27,8 +35,12 @@ pub mod column;
 pub mod encode;
 pub mod event;
 pub mod multilayer;
+pub mod scratch;
 
 pub use batch::BatchSim;
-pub use column::{first_crossing, potentials, stdp_update, wta, CycleSim, StepOutput};
+pub use column::{
+    first_crossing, potentials, stdp_update, wta, wta_winner, CycleSim, StepOutput,
+};
 pub use encode::encode_window;
 pub use multilayer::MultiLayerSim;
+pub use scratch::SimScratch;

@@ -63,9 +63,10 @@ impl MultiLayerSim {
     }
 
     /// Batched feed-forward inference over a whole dataset: samples are
-    /// independent, so the stack fans out across the coordinator worker
-    /// pool. Order-preserving and bit-exact with a per-sample [`Self::infer`]
-    /// loop for any worker count.
+    /// independent, so the stack fans out across the persistent coordinator
+    /// worker pool (no per-call thread spawn). Order-preserving and
+    /// bit-exact with a per-sample [`Self::infer`] loop for any worker
+    /// count.
     pub fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<StepOutput> {
         use crate::coordinator::jobs::{chunk_ranges, default_workers, parallel_map_workers};
         let workers = default_workers();

@@ -1,0 +1,74 @@
+//! Reusable per-worker simulation scratch.
+//!
+//! One [`SimScratch`] carries every buffer the per-sample hot path needs
+//! (event index, potential sweep, response output, WTA gate, encoded
+//! spikes), so a worker processing a run of samples allocates NOTHING in
+//! steady state: buffers grow to their high-water mark on the first
+//! sample and are reused afterwards (`rust/tests/alloc.rs` pins this with
+//! a counting global allocator). The batched engine (`sim::batch`) keeps
+//! one scratch per worker chunk; the serve shards and the training replay
+//! loop keep one per thread.
+
+use crate::config::ColumnConfig;
+
+use super::event::EventScratch;
+
+/// Per-worker scratch for the allocation-free sim hot path. All fields
+/// are owned buffers whose capacities persist across samples; the
+/// `_into`/`_with` entry points on `CycleSim` fill them in place.
+pub struct SimScratch {
+    /// Input-spike event index (flat counting-sort layout, reloaded per
+    /// sample).
+    pub events: EventScratch,
+    /// Flat potential buffer `[q * t_r]` for the LIF cycle-accurate sweep
+    /// (unused by the event-driven response families until first needed).
+    pub v: Vec<f32>,
+    /// Response output spike times, length q after a response call.
+    pub y: Vec<i32>,
+    /// WTA-gated spike times for the STDP path, length q after a step.
+    pub gated: Vec<i32>,
+    /// Encoded input spike times, length p (raw-window entry points).
+    pub s: Vec<i32>,
+}
+
+impl SimScratch {
+    /// Empty scratch for response windows of `t_r` steps; buffers grow to
+    /// their steady-state sizes on first use and are reused afterwards.
+    pub fn new(t_r: i32) -> Self {
+        SimScratch {
+            events: EventScratch::new(t_r),
+            v: Vec::new(),
+            y: Vec::new(),
+            gated: Vec::new(),
+            s: Vec::new(),
+        }
+    }
+
+    /// Scratch pre-sized for one column design, so even the first sample
+    /// allocates nothing.
+    pub fn for_config(cfg: &ColumnConfig) -> Self {
+        let t_r = cfg.params.t_r.max(0) as usize;
+        SimScratch {
+            events: EventScratch::with_capacity(cfg.params.t_r, cfg.p),
+            v: Vec::with_capacity(cfg.q * t_r),
+            y: Vec::with_capacity(cfg.q),
+            gated: Vec::with_capacity(cfg.q),
+            s: Vec::with_capacity(cfg.p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_config_pre_sizes_buffers() {
+        let cfg = ColumnConfig::new("Scratch", "synthetic", 24, 3);
+        let s = SimScratch::for_config(&cfg);
+        assert!(s.v.capacity() >= 3 * cfg.params.t_r as usize);
+        assert!(s.y.capacity() >= 3);
+        assert!(s.gated.capacity() >= 3);
+        assert!(s.s.capacity() >= 24);
+    }
+}

@@ -1,0 +1,105 @@
+//! Allocation-count smoke test for the sim hot path.
+//!
+//! A counting global allocator pins the PR-5 contract: once the
+//! per-worker [`SimScratch`] and the caller's output buffer are warm, the
+//! steady-state batched inference inner loop performs ZERO allocations —
+//! encode, event-index reload (flat counting sort), response and WTA all
+//! write into reused buffers. The full-output `infer_encoded_batch` API
+//! returns owned per-sample spike vectors by contract, so its inner loop
+//! is pinned to exactly that: one small allocation per sample (the
+//! returned `y`) and nothing else.
+//!
+//! This file is its own test binary with a single #[test] so no sibling
+//! test pollutes the allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use tnngen::config::{ColumnConfig, Response};
+use tnngen::sim::BatchSim;
+use tnngen::util::Rng;
+
+/// System allocator wrapper counting every allocation-producing call.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn windows(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect()
+}
+
+#[test]
+fn steady_state_batched_inference_does_not_allocate() {
+    for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+        let mut cfg = ColumnConfig::new("Alloc", "synthetic", 24, 3);
+        cfg.params.response = resp;
+        let n = 40;
+        let xs = windows(24, n, 7);
+        // workers=1 keeps the whole loop on this thread, so the counter
+        // sees exactly the per-sample work (pool dispatch bookkeeping is
+        // per-dispatch and covered by the scaling check below).
+        let batch = BatchSim::new(cfg, 7).with_workers(1);
+        let enc = batch.encode_batch(&xs);
+        let mut winners = Vec::new();
+
+        // Warm up: scratch + output buffers grow to their high-water mark.
+        batch.winners_encoded_into(&enc, &mut winners);
+        batch.winners_encoded_into(&enc, &mut winners);
+        let expected = winners.clone();
+
+        let before = ALLOC_CALLS.load(Relaxed);
+        batch.winners_encoded_into(&enc, &mut winners);
+        let delta = ALLOC_CALLS.load(Relaxed) - before;
+        assert_eq!(delta, 0, "{resp:?}: steady-state encoded-winner loop allocated");
+        assert_eq!(winners, expected, "{resp:?}");
+
+        // The raw-window path (encode included) is also allocation-free.
+        let mut raw = Vec::new();
+        batch.infer_winners_into(&xs, &mut raw);
+        batch.infer_winners_into(&xs, &mut raw);
+        let before = ALLOC_CALLS.load(Relaxed);
+        batch.infer_winners_into(&xs, &mut raw);
+        let delta = ALLOC_CALLS.load(Relaxed) - before;
+        assert_eq!(delta, 0, "{resp:?}: steady-state raw-winner loop allocated");
+        assert_eq!(raw, expected, "{resp:?}");
+
+        // Full-output inference owns its per-sample result by contract:
+        // the inner loop is pinned to ONE allocation per sample (the
+        // returned y vector) plus the result container itself.
+        let _ = batch.infer_encoded_batch(&enc); // warm the collect path
+        let before = ALLOC_CALLS.load(Relaxed);
+        let outs = batch.infer_encoded_batch(&enc);
+        let delta = ALLOC_CALLS.load(Relaxed) - before;
+        assert_eq!(outs.len(), n, "{resp:?}");
+        assert!(
+            delta <= n as u64 + 2,
+            "{resp:?}: infer_encoded_batch inner loop allocated {delta} times \
+             for {n} samples (expected <= n + 2: one owned y per sample + the container)"
+        );
+    }
+}

@@ -185,6 +185,52 @@ fn check_passes_improvements_with_exit_code_0() {
 }
 
 #[test]
+fn check_filter_narrows_the_gate_to_matching_rows() {
+    let dir = scratch("filtered");
+    let base = dir.join("base.json");
+    let cur = dir.join("cur.json");
+    // `b` regresses 4x, but the filter only gates the `a/*` rows.
+    write_artifact(&base, &artifact(vec![entry("a/1x1/e", 0.010), entry("b/1x1/e", 0.010)]));
+    write_artifact(&cur, &artifact(vec![entry("a/1x1/e", 0.010), entry("b/1x1/e", 0.040)]));
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+        "--filter",
+        "a/*/e",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "filtered-out regression must pass: {out:?}");
+    // Widening the filter to include `b` trips the gate again.
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+        "--filter",
+        "a/*/e,b/",
+    ]);
+    assert_eq!(out.status.code(), Some(3), "filtered-in regression must fail: {out:?}");
+    // A filter matching nothing in the baseline is an operational error.
+    let out = tnngen(&[
+        "bench",
+        "check",
+        "--against",
+        base.to_str().unwrap(),
+        "--current",
+        cur.to_str().unwrap(),
+        "--filter",
+        "zzz",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "empty filtered baseline must exit 1: {out:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn check_refuses_cross_profile_gating() {
     let dir = scratch("profiles");
     let base = dir.join("base.json");

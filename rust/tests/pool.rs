@@ -1,0 +1,159 @@
+//! Lifecycle and contract tests for the persistent worker pool
+//! (`coordinator::pool::WorkerPool`):
+//!
+//! * order preservation under uneven load;
+//! * result equality vs `workers/limit = 1` for map, try_map and map_rng;
+//! * reuse across many consecutive dispatches from ONE pool (the whole
+//!   point: spawn once, dispatch many);
+//! * drop joins every background thread (no leak under `cargo test`);
+//! * a panicking job surfaces its panic on the dispatcher and leaves the
+//!   pool fully usable (workers survive, no lock poisoning).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+
+use tnngen::coordinator::pool::WorkerPool;
+use tnngen::util::Rng;
+
+#[test]
+fn map_preserves_order_under_uneven_load() {
+    let pool = WorkerPool::new(8);
+    // Items deliberately sized so late items finish first.
+    let spin = |i: u64| {
+        let n = i * 3_000;
+        (0..n).fold(i, |a, b| a.wrapping_add(b))
+    };
+    let out = pool.map((0..50u64).rev().collect::<Vec<_>>(), 8, spin);
+    let expect: Vec<u64> = (0..50u64).rev().map(spin).collect();
+    assert_eq!(out, expect);
+}
+
+#[test]
+fn map_try_map_and_map_rng_match_single_worker() {
+    let pool = WorkerPool::new(6);
+    let f = |i: i64| i * i - 3;
+    let serial = pool.map((0..257).collect::<Vec<i64>>(), 1, f);
+    for limit in [2usize, 3, 8, 64] {
+        assert_eq!(pool.map((0..257).collect::<Vec<i64>>(), limit, f), serial, "map limit={limit}");
+    }
+
+    let try_serial = pool.try_map((0..64).collect::<Vec<i64>>(), 1, |i| Ok(i * 2)).unwrap();
+    for limit in [2usize, 5, 16] {
+        let got = pool.try_map((0..64).collect::<Vec<i64>>(), limit, |i| Ok(i * 2)).unwrap();
+        assert_eq!(got, try_serial, "try_map limit={limit}");
+        // First error in INPUT order wins for any concurrency.
+        let err = pool.try_map((0..64).collect::<Vec<i64>>(), limit, |i| {
+            if i % 5 == 2 {
+                Err(anyhow::anyhow!("boom {i}"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(err.unwrap_err().to_string(), "boom 2", "try_map limit={limit}");
+    }
+
+    let draw = |i: usize, rng: &mut Rng| (i, rng.next_u64(), rng.next_u64());
+    let rng_serial = pool.map_rng((0..40).collect::<Vec<usize>>(), 99, 1, draw);
+    for limit in [2usize, 5, 16] {
+        let got = pool.map_rng((0..40).collect::<Vec<usize>>(), 99, limit, draw);
+        assert_eq!(got, rng_serial, "map_rng limit={limit}");
+    }
+    // Streams are actually independent across items.
+    assert_ne!(rng_serial[0].1, rng_serial[1].1);
+}
+
+#[test]
+fn one_pool_is_reusable_across_many_dispatches() {
+    // Spawn once, dispatch many: 200 consecutive jobs of varying shapes
+    // through the same pool, all order-correct.
+    let pool = WorkerPool::new(4);
+    for round in 0..200usize {
+        let n = 1 + (round % 37);
+        let out = pool.map((0..n).collect::<Vec<usize>>(), 4, move |i| i * 31 + round);
+        let expect: Vec<usize> = (0..n).map(|i| i * 31 + round).collect();
+        assert_eq!(out, expect, "round {round}");
+    }
+    // Interleaved dispatch styles on the same pool.
+    let hits = AtomicUsize::new(0);
+    pool.dispatch(16, &|_| {
+        hits.fetch_add(1, Relaxed);
+    });
+    assert_eq!(hits.load(Relaxed), 16);
+}
+
+#[test]
+fn concurrent_dispatches_from_many_threads_share_one_pool() {
+    let pool = WorkerPool::new(4);
+    let expect: Vec<u64> = (0..120u64).map(|i| i * 7 + 1).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let pool = &pool;
+            let expect = &expect;
+            scope.spawn(move || {
+                for _ in 0..20 {
+                    let got = pool.map((0..120u64).collect::<Vec<_>>(), 4, |i| i * 7 + 1);
+                    assert_eq!(&got, expect);
+                }
+            });
+        }
+    });
+}
+
+/// Thread count from /proc/self/status (Linux); None elsewhere.
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn drop_joins_all_background_threads() {
+    let before = os_thread_count();
+    for round in 0..25usize {
+        let pool = WorkerPool::new(5);
+        let out = pool.map((0..64).collect::<Vec<usize>>(), 5, move |i| i + round);
+        assert_eq!(out[0], round);
+        drop(pool); // must join all 4 background threads
+    }
+    if let (Some(before), Some(after)) = (before, os_thread_count()) {
+        // 25 leaked pools would be ~100 extra threads; the generous slack
+        // covers sibling tests in this binary running concurrently (each
+        // holds at most a handful of pool threads at a time).
+        assert!(
+            after <= before + 32,
+            "thread leak: {before} threads before, {after} after"
+        );
+    }
+}
+
+#[test]
+fn panicking_job_surfaces_and_pool_survives() {
+    let pool = WorkerPool::new(4);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.map((0..32).collect::<Vec<i32>>(), 4, |i| {
+            assert!(i != 13, "boom 13");
+            i * 2
+        })
+    }));
+    let payload = result.expect_err("the job's panic must reach the dispatcher");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("boom 13"), "unexpected panic payload: {msg:?}");
+    // NOT poisoned: the same pool keeps serving jobs normally afterwards.
+    for limit in [1usize, 4] {
+        let ok = pool.map((0..20).collect::<Vec<i32>>(), limit, |i| i + 1);
+        assert_eq!(ok, (1..21).collect::<Vec<i32>>(), "limit={limit}");
+    }
+    // And a second panic is also clean.
+    let again = catch_unwind(AssertUnwindSafe(|| {
+        pool.map(vec![0i32], 1, |_| -> i32 { panic!("again") })
+    }));
+    assert!(again.is_err());
+    assert_eq!(pool.map(vec![5i32], 4, |i| i), vec![5]);
+}

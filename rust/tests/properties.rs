@@ -9,7 +9,9 @@ use tnngen::config::{toml, Response, TnnParams};
 use tnngen::eda::synthesis::{optimize, SynthStats};
 use tnngen::rtl::netlist::{Gate, GateKind, Netlist};
 use tnngen::rtl::GateSim;
-use tnngen::sim::column::{first_crossing, potentials, stdp_update, wta};
+use tnngen::sim::column::{
+    first_crossing, potentials, stdp_update, wta, wta_gate_into, wta_winner,
+};
 use tnngen::sim::encode_window;
 use tnngen::sim::event::event_driven;
 use tnngen::sim::{BatchSim, CycleSim};
@@ -332,6 +334,26 @@ fn prop_wta_winner_is_argmin() {
             let first = y.iter().position(|&v| v == min).unwrap();
             assert_eq!(winner as usize, first);
             assert_eq!(gated[winner as usize], min);
+        }
+    });
+}
+
+#[test]
+fn prop_wta_winner_agrees_with_wta() {
+    // The allocation-free winner path (used by every inference-only call
+    // site since PR 5) must agree with the gating WTA exactly, for both
+    // tie-break modes, including the no-fire sentinel.
+    check("wta_winner == wta().0", 200, |g: &mut Gen| {
+        let q = g.size(1, 30);
+        let t_r = 32;
+        let y: Vec<i32> = (0..q).map(|_| g.rng.range(0, 40) as i32).collect();
+        for tie in [tnngen::config::TieBreak::Low, tnngen::config::TieBreak::High] {
+            let (winner, gated) = wta(&y, t_r, tie);
+            assert_eq!(wta_winner(&y, t_r, tie), winner, "{y:?} {tie:?}");
+            let mut gated2 = Vec::new();
+            let w2 = wta_gate_into(&y, t_r, tie, &mut gated2);
+            assert_eq!(w2, winner, "{y:?} {tie:?}");
+            assert_eq!(gated2, gated, "{y:?} {tie:?}");
         }
     });
 }
