@@ -17,6 +17,9 @@
 //! * `response_event` / `response_cycle` — event-driven vs
 //!   cycle-accurate response evaluation on pre-encoded spikes.
 //! * `full_column` — encode → response → WTA inference per window.
+//! * `full_stack` — 2-layer column-stack inference (the design plus a
+//!   q→q second layer): per layer encode → response → WTA, chained by
+//!   the sentinel-aware spike-time→intensity handoff.
 //! * `clustering` — the full Table-II pipeline (train + infer + score).
 //! * `gate_level` — gate-level functional simulation of a small column
 //!   (construction + weight load + samples; see the entry comment).
@@ -27,8 +30,10 @@
 //!
 //! Engine glossary:
 //!
-//! * `cyclesim` — per-sample reference simulator ([`CycleSim`]).
-//! * `batchsim` — batched parallel engine ([`BatchSim`], worker pool).
+//! * `cyclesim` — per-sample reference simulator ([`CycleSim`]; for
+//!   `full_stack`, a per-sample [`MultiLayerSim`] loop).
+//! * `batchsim` — batched parallel engine ([`BatchSim`] /
+//!   [`MultiLayerBatchSim`], worker pool).
 //! * `serve` — the sharded micro-batching service driven closed-loop
 //!   ([`crate::serve::TnnService`], 2 shards, bounded in-flight).
 //! * `gatesim` — the event-driven gate-level simulator
@@ -52,7 +57,7 @@ use crate::report::experiments::{paper_flow_jobs, Effort};
 use crate::rtl::{generate_column, GateSim};
 use crate::serve::{run_closed_loop, ServeOpts, TnnService};
 use crate::sim::column::wta;
-use crate::sim::{BatchSim, CycleSim};
+use crate::sim::{BatchSim, CycleSim, MultiLayerBatchSim, MultiLayerSim};
 
 /// Master seed shared by every entry: datasets, weight init and the serve
 /// service all derive from it, so two runs measure identical work.
@@ -171,11 +176,19 @@ impl BenchEntry {
     }
 }
 
-/// The default engine × workload matrix (39 entries):
+/// The 2-deep stack the `full_stack` workload benches: the paper design
+/// itself plus a q→q second layer clustering its spike outputs.
+fn stack_of(cfg: &ColumnConfig) -> Vec<ColumnConfig> {
+    let l2 = ColumnConfig::new(&format!("{}-L2", cfg.name), &cfg.modality, cfg.q, cfg.q);
+    vec![cfg.clone(), l2]
+}
+
+/// The default engine × workload matrix (53 entries):
 ///
 /// * per paper design: `full_column` on `cyclesim`, `batchsim` and
-///   `serve`, plus `clustering` on `batchsim` — all seven designs appear
-///   under three distinct engines;
+///   `serve`, `full_stack` on `cyclesim` and `batchsim`, plus
+///   `clustering` on `batchsim` — all seven designs appear under three
+///   distinct engines;
 /// * hot-path micro workloads (`encode`/`stdp`/`wta` and the
 ///   event-driven vs cycle-accurate response pair) on the ECG200 (96x2)
 ///   representative design;
@@ -234,6 +247,37 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
                     })
                 },
             ));
+        }
+        {
+            let cfg = cfg.clone();
+            entries.push(BenchEntry::new("full_stack", tag.clone(), "cyclesim", units, move || {
+                let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                let ml = MultiLayerSim::new(&stack_of(&cfg), BENCH_SEED)
+                    .expect("the benched stack chains by construction");
+                Box::new(move || {
+                    for x in &xs {
+                        std::hint::black_box(ml.infer(x).winner);
+                    }
+                })
+            }));
+        }
+        {
+            let cfg = cfg.clone();
+            entries.push(BenchEntry::new("full_stack", tag.clone(), "batchsim", units, move || {
+                let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                let stack = MultiLayerSim::new(&stack_of(&cfg), BENCH_SEED)
+                    .expect("the benched stack chains by construction");
+                let batch = MultiLayerBatchSim::from_stack(stack);
+                // Warm outside the timed region (pool spawn + per-layer
+                // scratch growth), so the timed closure measures the
+                // zero-allocation dispatch-only stack path.
+                let mut winners = Vec::new();
+                batch.infer_winners_into(&xs, &mut winners);
+                Box::new(move || {
+                    batch.infer_winners_into(&xs, &mut winners);
+                    std::hint::black_box(winners.len());
+                })
+            }));
         }
         {
             let cfg = cfg.clone();
@@ -466,9 +510,24 @@ mod tests {
 
     #[test]
     fn registry_has_the_documented_entry_count() {
-        // 7 designs x 4 + 4 micro + 2 response + gate_level + 2 EDA
-        // stages + 2 campaigns.
-        assert_eq!(default_registry(Profile::Quick).len(), 7 * 4 + 4 + 2 + 1 + 2 + 2);
+        // 7 designs x (3 full_column + 2 full_stack + clustering) + 4
+        // micro + 2 response + gate_level + 2 EDA stages + 2 campaigns.
+        assert_eq!(
+            default_registry(Profile::Quick).len(),
+            7 * 4 + 7 * 2 + 4 + 2 + 1 + 2 + 2
+        );
+    }
+
+    #[test]
+    fn every_design_has_both_full_stack_engines() {
+        let entries = default_registry(Profile::Quick);
+        let names: BTreeSet<String> = entries.iter().map(|e| e.name()).collect();
+        for cfg in crate::config::presets::paper_configs() {
+            for engine in ["cyclesim", "batchsim"] {
+                let name = format!("full_stack/{}/{engine}", cfg.tag());
+                assert!(names.contains(&name), "missing registry entry {name}");
+            }
+        }
     }
 
     #[test]

@@ -12,6 +12,32 @@ use anyhow::{bail, Context, Result};
 
 use super::Dataset;
 
+/// Class labels in f64 are only trusted up to the range where every
+/// integer is exactly representable (2^53); beyond that a float label
+/// cannot be mapped to a unique class id.
+const MAX_FLOAT_LABEL: f64 = 9.0e15;
+
+/// Parse a class label. Accepts integers ("1", "-1") and integral floats
+/// ("1.0", some UCR sets store labels that way); rejects fractional
+/// ("1.5") and non-finite ("NaN") labels instead of truncating them to a
+/// wrong class via `as i64`.
+fn parse_label(field: &str) -> Result<i64> {
+    if let Ok(v) = field.parse::<i64>() {
+        return Ok(v);
+    }
+    let f: f64 = field.parse().with_context(|| format!("unparseable label {field:?}"))?;
+    if !f.is_finite() {
+        bail!("non-finite label {field:?}");
+    }
+    if f.fract() != 0.0 {
+        bail!("non-integral label {field:?} (class labels must be whole numbers)");
+    }
+    if f.abs() > MAX_FLOAT_LABEL {
+        bail!("label {field:?} is too large to be an exact class id");
+    }
+    Ok(f as i64)
+}
+
 /// Parse one UCR tsv split into (series, raw labels).
 pub fn parse_tsv(text: &str) -> Result<(Vec<Vec<f32>>, Vec<i64>)> {
     let mut xs = Vec::new();
@@ -22,14 +48,7 @@ pub fn parse_tsv(text: &str) -> Result<(Vec<Vec<f32>>, Vec<i64>)> {
             continue;
         }
         let mut fields = line.split_whitespace();
-        let label: i64 = fields
-            .next()
-            .context("empty row")?
-            .parse()
-            .or_else(|_| -> Result<i64, std::num::ParseFloatError> {
-                // Some UCR sets store labels as floats ("1.0").
-                Ok(line.split_whitespace().next().unwrap().parse::<f64>()? as i64)
-            })
+        let label: i64 = parse_label(fields.next().context("empty row")?)
             .with_context(|| format!("row {}: bad label", idx + 1))?;
         let series: Vec<f32> = fields
             .map(|f| f.parse::<f32>())
@@ -108,6 +127,31 @@ mod tests {
     fn parse_tsv_rejects_ragged() {
         assert!(parse_tsv("1\t0.5\n1\t0.5\t0.7\n").is_err());
         assert!(parse_tsv("").is_err());
+    }
+
+    #[test]
+    fn parse_tsv_accepts_integral_float_labels() {
+        // Some UCR sets store labels as floats; "1.0" is class 1, exactly.
+        let (_, ys) = parse_tsv("1.0\t0.5\t0.25\n-2.0\t1.0\t2.0\n").unwrap();
+        assert_eq!(ys, vec![1, -2]);
+    }
+
+    #[test]
+    fn parse_tsv_rejects_fractional_and_non_finite_labels() {
+        // "1.5" used to truncate to class 1 via `as i64`; now it is a
+        // row-numbered error.
+        let err = parse_tsv("1\t0.5\t0.25\n1.5\t1.0\t2.0\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("row 2"), "{msg}");
+        assert!(msg.contains("non-integral"), "{msg}");
+        // "NaN" used to truncate to class 0.
+        let err = parse_tsv("NaN\t0.5\t0.25\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("row 1"), "{msg}");
+        assert!(msg.contains("non-finite"), "{msg}");
+        // Huge float labels cannot name an exact class.
+        let err = parse_tsv("1e300\t0.5\n").unwrap_err();
+        assert!(format!("{err:#}").contains("too large"), "{err:#}");
     }
 
     #[test]

@@ -65,7 +65,7 @@ impl Forecaster {
     /// assert!(fc.area_fit.0 > 0.0); // area grows with synapse count
     /// ```
     pub fn train(reports: &[FlowReport]) -> anyhow::Result<Self> {
-        use anyhow::ensure;
+        use anyhow::{ensure, Context};
         ensure!(reports.len() >= 2, "need at least two flow runs to fit");
         let library = reports[0].library.clone();
         ensure!(
@@ -78,9 +78,12 @@ impl Forecaster {
         let pnrs: Vec<f64> = reports.iter().map(|r| r.runtimes.pnr_s()).collect();
         Ok(Forecaster {
             library,
-            area_fit: linear_fit(&xs, &areas),
-            leak_fit: linear_fit(&xs, &leaks),
-            pnr_fit: linear_fit(&xs, &pnrs),
+            area_fit: linear_fit(&xs, &areas)
+                .context("area fit failed: training flows need varying synapse counts")?,
+            leak_fit: linear_fit(&xs, &leaks)
+                .context("leakage fit failed: training flows need varying synapse counts")?,
+            pnr_fit: linear_fit(&xs, &pnrs)
+                .context("P&R-runtime fit failed: training flows need varying synapse counts")?,
             points: reports
                 .iter()
                 .map(|r| (r.synapse_count, r.die_area_um2, r.leakage_uw, r.runtimes.pnr_s()))
@@ -118,8 +121,11 @@ impl Forecaster {
     }
 
     /// Forecast errors vs an actual flow run: (area %err, leakage %err),
-    /// where %err = 100 * (forecast - actual) / actual.
-    pub fn errors(&self, actual: &FlowReport) -> (f64, f64) {
+    /// where %err = 100 * (forecast - actual) / actual. An error is `None`
+    /// when undefined (the actual metric is zero or non-finite); report
+    /// emitters render those as `null` / `n/a` rather than dropping the
+    /// field.
+    pub fn errors(&self, actual: &FlowReport) -> (Option<f64>, Option<f64>) {
         let f = self.predict(actual.synapse_count);
         (
             rel_err_pct(f.area_um2, actual.die_area_um2),
@@ -160,6 +166,7 @@ mod tests {
         let fc = Forecaster::train(&rs).unwrap();
         for r in &rs {
             let (ae, _) = fc.errors(r);
+            let ae = ae.expect("non-zero actual area has a defined error");
             assert!(ae.abs() < 25.0, "area err {ae}% for {}", r.synapse_count);
         }
     }
@@ -168,6 +175,28 @@ mod tests {
     fn train_rejects_mixed_or_tiny_sets() {
         let rs = reports(&[(8, 2)]);
         assert!(Forecaster::train(&rs).is_err());
+    }
+
+    #[test]
+    fn train_surfaces_degenerate_campaigns_cleanly() {
+        // A uniform campaign (every flow the same design) gives constant
+        // synapse counts: train must return an error, not panic.
+        let rs = reports(&[(8, 2), (8, 2), (8, 2)]);
+        let err = Forecaster::train(&rs).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("varying synapse counts"), "{msg}");
+        assert!(msg.contains("degenerate x values"), "{msg}");
+    }
+
+    #[test]
+    fn errors_are_none_when_actual_is_zero() {
+        let rs = reports(&[(8, 2), (16, 2)]);
+        let fc = Forecaster::train(&rs).unwrap();
+        let mut actual = rs[0].clone();
+        actual.leakage_uw = 0.0;
+        let (ae, le) = fc.errors(&actual);
+        assert!(ae.is_some(), "area error is still defined");
+        assert_eq!(le, None, "zero actual leakage has no relative error");
     }
 
     #[test]

@@ -68,8 +68,9 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   forecast [--syn N] [--full] [--workers N] [--cache-dir DIR] [--json]
   reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]
             [--workers N] [--cache-dir DIR] [--json] [--ucr-dir DIR]
-  serve <tag|name> [--shards N] [--batch N] [--wait-us US] [--queue N] [--learn-queue N]
-        [--snapshot-every K] [--bench --rps R --duration S [--learn-every K] [--json]]
+  serve <tag|name> [--stack q1[,q2...]] [--shards N] [--batch N] [--wait-us US] [--queue N]
+        [--learn-queue N] [--snapshot-every K]
+        [--bench --rps R --duration S [--learn-every K] [--json]]
         [--tcp ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
   bench [run|list] [--profile quick|full | --quick] [--filter PATTERNS]
         [--iters N] [--warmup N] [--json] [--out FILE]
@@ -89,6 +90,10 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   --ucr-dir points simulate/reproduce/serve at a real UCR archive
   (<DIR>/<Name>/<Name>_TRAIN.tsv); synthetic generators fill in when the
   files are absent.
+  serve --stack q1[,q2...] hosts a multi-layer stack: each value adds a
+  layer of that many neurons fed by the previous layer's outputs (shapes
+  chain automatically); requests stay windows of the base design's p and
+  replies carry the LAST layer's WTA winner.
   serve --bench drives the sharded micro-batching service with an
   open-loop load generator at --rps for --duration seconds and reports
   throughput + nearest-rank p50/p95/p99 latency (typed rejections count
@@ -460,6 +465,25 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => {
             let key = args.positional.first().context("serve needs a design tag/name")?;
             let cfg = resolve_config(key)?;
+            // --stack q1[,q2...] appends extra layers after the resolved
+            // design: each value is the next layer's neuron count, fed by
+            // the previous layer's q outputs (shapes chain automatically).
+            let mut cfgs = vec![cfg.clone()];
+            if let Some(spec) = args.flag("stack") {
+                for (k, field) in spec.split(',').enumerate() {
+                    let q: usize = field.trim().parse().with_context(|| {
+                        format!("--stack layer {}: bad neuron count {field:?}", k + 2)
+                    })?;
+                    ensure!(q > 0, "--stack layer {} needs at least one neuron", k + 2);
+                    let prev_q = cfgs.last().expect("stack starts with the base design").q;
+                    cfgs.push(ColumnConfig::new(
+                        &format!("{}-L{}", cfg.name, k + 2),
+                        &cfg.modality,
+                        prev_q,
+                        q,
+                    ));
+                }
+            }
             let opts = ServeOpts {
                 shards: args.flag_usize("shards", 2)?,
                 max_batch: args.flag_usize("batch", 16)?,
@@ -470,7 +494,12 @@ fn dispatch(args: &Args) -> Result<()> {
                 worker_delay: Duration::ZERO,
             };
             let seed = args.flag_u64("seed", 42)?;
-            let svc = std::sync::Arc::new(TnnService::start(cfg.clone(), seed, opts));
+            let svc = std::sync::Arc::new(TnnService::start_stack(&cfgs, seed, opts)?);
+            if cfgs.len() > 1 {
+                let shape: Vec<String> =
+                    cfgs.iter().map(|c| format!("{}x{}", c.p, c.q)).collect();
+                println!("hosting {}-layer stack: {}", cfgs.len(), shape.join(" -> "));
+            }
             let tcp = match args.flag("tcp") {
                 Some(addr) => {
                     let front = TcpFront::spawn(svc.clone(), addr)?;

@@ -540,14 +540,15 @@ pub fn campaign_json(
                 if fc.library == r.library && natural_floorplan(r) {
                     let (area_err, leak_err) = fc.errors(r);
                     let f = fc.predict(r.synapse_count);
+                    let err_json = |e: Option<f64>| e.map(Json::Num).unwrap_or(Json::Null);
                     if let Json::Obj(entries) = &mut doc {
                         entries.push((
                             "forecast".to_string(),
                             Json::obj(vec![
                                 ("area_um2", Json::Num(f.area_um2)),
                                 ("leakage_uw", Json::Num(f.leakage_uw)),
-                                ("area_err_pct", Json::Num(area_err)),
-                                ("leakage_err_pct", Json::Num(leak_err)),
+                                ("area_err_pct", err_json(area_err)),
+                                ("leakage_err_pct", err_json(leak_err)),
                             ]),
                         ));
                     }

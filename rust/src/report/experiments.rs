@@ -469,6 +469,10 @@ pub fn table5_fig4_with(
         "leakage err",
     ]);
     let mut t5_rows: Vec<Json> = Vec::new();
+    // Undefined relative errors (actual metric is zero) render as "n/a"
+    // in the table and `null` in JSON — the field is never dropped.
+    let pct_or_na = |e: Option<f64>| e.map(pct).unwrap_or_else(|| "n/a".to_string());
+    let err_json = |e: Option<f64>| e.map(Json::Num).unwrap_or(Json::Null);
     for cfg in effort.configs() {
         let Some(actual) = find(flows, &cfg.tag(), "TNN7") else { continue };
         let f = fc.predict(cfg.synapse_count());
@@ -477,19 +481,19 @@ pub fn table5_fig4_with(
             cfg.name.clone(),
             cfg.synapse_count().to_string(),
             f2(f.area_um2),
-            pct(ae),
+            pct_or_na(ae),
             f2(f.leakage_uw),
-            pct(le),
+            pct_or_na(le),
         ]);
         t5_rows.push(Json::obj(vec![
             ("benchmark", Json::Str(cfg.name.clone())),
             ("synapses", Json::Int(cfg.synapse_count() as i64)),
             ("forecast_area_um2", Json::Num(f.area_um2)),
             ("actual_area_um2", Json::Num(actual.die_area_um2)),
-            ("area_err_pct", Json::Num(ae)),
+            ("area_err_pct", err_json(ae)),
             ("forecast_leakage_uw", Json::Num(f.leakage_uw)),
             ("actual_leakage_uw", Json::Num(actual.leakage_uw)),
-            ("leakage_err_pct", Json::Num(le)),
+            ("leakage_err_pct", err_json(le)),
         ]));
     }
     // Fig 4 data: training points + fit lines.

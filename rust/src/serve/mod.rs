@@ -11,9 +11,11 @@
 //!   rejects with the typed [`SubmitError::QueueFull`] instead of ever
 //!   blocking the accept path.
 //! * [`shard`] — N reader-shard replicas, each owning a
-//!   [`sim::BatchSim`](crate::sim::BatchSim) with reusable scratch, plus
-//!   one single-writer learner applying online STDP and publishing
-//!   epoch-versioned weight snapshots.
+//!   [`sim::MultiLayerBatchSim`](crate::sim::MultiLayerBatchSim) with
+//!   reusable per-layer scratch, plus one single-writer learner applying
+//!   greedy layer-wise online STDP and publishing epoch-versioned weight
+//!   snapshots. A single column is served as the 1-layer special case;
+//!   [`TnnService::start_stack`] hosts deeper stacks.
 //! * [`metrics`] — lock-free counters and a log-linear latency histogram
 //!   with nearest-rank p50/p95/p99 queries.
 //! * [`loadgen`] — a load generator (open-loop at a target rate, or
@@ -42,7 +44,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::ColumnConfig;
 use crate::coordinator::jobs::spawn_worker;
-use crate::sim::CycleSim;
+use crate::sim::MultiLayerSim;
 
 use batcher::Batcher;
 use metrics::ServeMetrics;
@@ -162,7 +164,9 @@ impl Default for ServeOpts {
 /// All methods take `&self`, so the service can be wrapped in an `Arc` and
 /// shared with front-ends ([`tcp::TcpFront`]) or load generators.
 pub struct TnnService {
-    cfg: ColumnConfig,
+    /// Hosted stack configs, input layer first (length 1 for a single
+    /// column).
+    cfgs: Vec<ColumnConfig>,
     opts: ServeOpts,
     infer_q: Arc<Batcher<InferRequest>>,
     learn_q: Arc<Batcher<LearnRequest>>,
@@ -173,12 +177,26 @@ pub struct TnnService {
 }
 
 impl TnnService {
-    /// Initialize the column like [`CycleSim::new`] (same seed -> same
-    /// epoch-0 weights) and start the shard + learner threads.
+    /// Initialize the column like `CycleSim::new` (same seed -> same
+    /// epoch-0 weights) and start the shard + learner threads. Serves the
+    /// column as a 1-layer stack — byte-identical snapshots and replies to
+    /// the pre-stack service.
     pub fn start(cfg: ColumnConfig, seed: u64, opts: ServeOpts) -> Self {
+        Self::start_stack(&[cfg], seed, opts).expect("a single column is always a valid stack")
+    }
+
+    /// Host a whole multi-layer column stack (input layer first; shapes
+    /// must chain, `cfgs[k+1].p == cfgs[k].q`). Weights initialize like
+    /// [`MultiLayerSim::new`] with `seed`; requests are windows of the
+    /// INPUT layer's `p`, and replies carry the LAST layer's WTA winner.
+    pub fn start_stack(
+        cfgs: &[ColumnConfig],
+        seed: u64,
+        opts: ServeOpts,
+    ) -> anyhow::Result<Self> {
         let shards = opts.shards.max(1);
-        let learner_sim = CycleSim::new(cfg.clone(), seed);
-        let weights = Arc::new(SharedWeights::new(learner_sim.weights.clone()));
+        let learner_stack = MultiLayerSim::new(cfgs, seed)?;
+        let weights = Arc::new(SharedWeights::new(learner_stack.flat_weights()));
         let metrics = Arc::new(ServeMetrics::new());
         let infer_q =
             Arc::new(Batcher::new(opts.queue_capacity, opts.max_batch, opts.max_wait));
@@ -186,22 +204,22 @@ impl TnnService {
             Arc::new(Batcher::new(opts.learn_queue_capacity, opts.max_batch, opts.max_wait));
         let mut workers = Vec::with_capacity(shards + 1);
         for i in 0..shards {
-            let (cfg, q, w, m) =
-                (cfg.clone(), infer_q.clone(), weights.clone(), metrics.clone());
+            let (cfgs, q, w, m) =
+                (cfgs.to_vec(), infer_q.clone(), weights.clone(), metrics.clone());
             let delay = opts.worker_delay;
             workers.push(spawn_worker(&format!("tnn-serve-shard-{i}"), move || {
-                reader_loop(cfg, q, w, m, delay);
+                reader_loop(cfgs, q, w, m, delay);
             }));
         }
         {
             let (q, w, m) = (learn_q.clone(), weights.clone(), metrics.clone());
             let every = opts.snapshot_every;
             workers.push(spawn_worker("tnn-serve-learner", move || {
-                learner_loop(learner_sim, q, w, m, every);
+                learner_loop(learner_stack, q, w, m, every);
             }));
         }
-        TnnService {
-            cfg,
+        Ok(TnnService {
+            cfgs: cfgs.to_vec(),
             opts,
             infer_q,
             learn_q,
@@ -209,12 +227,18 @@ impl TnnService {
             metrics,
             next_id: AtomicU64::new(0),
             workers: Mutex::new(workers),
-        }
+        })
     }
 
-    /// The served column design.
+    /// The served input-layer design (request windows use its `p`).
     pub fn config(&self) -> &ColumnConfig {
-        &self.cfg
+        &self.cfgs[0]
+    }
+
+    /// Every hosted layer config, input side first (length 1 for a
+    /// single-column service).
+    pub fn layer_configs(&self) -> &[ColumnConfig] {
+        &self.cfgs
     }
 
     /// Reader-shard count.
@@ -246,8 +270,8 @@ impl TnnService {
         window: Vec<f32>,
         reply: mpsc::Sender<InferReply>,
     ) -> Result<u64, SubmitError> {
-        if window.len() != self.cfg.p {
-            return Err(SubmitError::WindowLen { expected: self.cfg.p, got: window.len() });
+        if window.len() != self.cfgs[0].p {
+            return Err(SubmitError::WindowLen { expected: self.cfgs[0].p, got: window.len() });
         }
         let id = self.next_id.fetch_add(1, Relaxed);
         let req = InferRequest { id, window, submitted: Instant::now(), reply };
@@ -267,8 +291,8 @@ impl TnnService {
 
     /// Admit one online-STDP learn request (fire-and-forget write path).
     pub fn submit_learn(&self, window: Vec<f32>) -> Result<(), SubmitError> {
-        if window.len() != self.cfg.p {
-            return Err(SubmitError::WindowLen { expected: self.cfg.p, got: window.len() });
+        if window.len() != self.cfgs[0].p {
+            return Err(SubmitError::WindowLen { expected: self.cfgs[0].p, got: window.len() });
         }
         match self.learn_q.submit(LearnRequest { window }) {
             Ok(()) => {
@@ -342,6 +366,31 @@ mod tests {
         assert_eq!(err, SubmitError::WindowLen { expected: 12, got: 5 });
         assert_eq!(svc.submit_learn(vec![0.0; 5]), Err(SubmitError::WindowLen { expected: 12, got: 5 }));
         svc.shutdown();
+    }
+
+    #[test]
+    fn stack_service_serves_the_last_layer_winner() {
+        let cfgs = vec![
+            ColumnConfig::new("ServeStackL1", "synthetic", 12, 6),
+            ColumnConfig::new("ServeStackL2", "synthetic", 6, 2),
+        ];
+        let svc =
+            TnnService::start_stack(&cfgs, 9, ServeOpts { shards: 2, ..Default::default() })
+                .unwrap();
+        assert_eq!(svc.layer_configs().len(), 2);
+        assert_eq!(svc.config().p, 12, "requests are windows of the INPUT layer");
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).cos()).collect();
+        let r = svc.infer_blocking(x.clone()).unwrap();
+        let offline = crate::sim::MultiLayerSim::new(&cfgs, 9).unwrap();
+        assert_eq!(r.winner, offline.infer(&x).winner);
+        assert_eq!(svc.snapshot().weights, offline.flat_weights());
+        svc.shutdown();
+        // Mismatched layer shapes are a typed startup error, not a panic.
+        let bad = vec![
+            ColumnConfig::new("BadL1", "synthetic", 12, 6),
+            ColumnConfig::new("BadL2", "synthetic", 5, 2),
+        ];
+        assert!(TnnService::start_stack(&bad, 9, ServeOpts::default()).is_err());
     }
 
     #[test]

@@ -1,15 +1,17 @@
-//! Column replicas and the single-writer / multi-reader weight store.
+//! Column-stack replicas and the single-writer / multi-reader weight
+//! store.
 //!
 //! The serving pool is N **reader shards** — each a thread owning its own
-//! [`BatchSim`] replica of the column (private scratch, zero sharing on
-//! the hot path) — plus one designated **learner**: the only thread that
-//! ever mutates weights. The learner applies online STDP in strict
-//! request-arrival order and periodically publishes an immutable,
+//! [`MultiLayerBatchSim`] replica of the hosted stack (a single column is
+//! the 1-layer special case; private scratch, zero sharing on the hot
+//! path) — plus one designated **learner**: the only thread that ever
+//! mutates weights. The learner applies greedy layer-wise online STDP in
+//! strict request-arrival order and periodically publishes an immutable,
 //! epoch-versioned [`Snapshot`] through [`SharedWeights`]; readers adopt
 //! the newest snapshot at micro-batch boundaries, so every sample within
 //! one batch is served from exactly one epoch and reader results are
-//! always bit-identical to running [`BatchSim`] offline on that epoch's
-//! weights (proven by `rust/tests/serve.rs`).
+//! always bit-identical to running the batched engine offline on that
+//! epoch's weights (proven by `rust/tests/serve.rs`).
 //!
 //! The single-writer discipline is what makes online learning safe
 //! without per-weight locks: readers never observe a torn update because
@@ -22,19 +24,21 @@ use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use crate::config::ColumnConfig;
-use crate::sim::{BatchSim, CycleSim};
+use crate::sim::{MultiLayerBatchSim, MultiLayerScratch, MultiLayerSim};
 
 use super::batcher::Batcher;
 use super::metrics::ServeMetrics;
 use super::{InferReply, InferRequest, LearnRequest};
 
-/// One immutable, epoch-versioned copy of the column weights. Epoch 0 is
+/// One immutable, epoch-versioned copy of the stack weights. Epoch 0 is
 /// the seed initialization; each learner publish increments it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Snapshot {
     /// Publish generation (0 = initial weights).
     pub epoch: u64,
-    /// Flat row-major `[q * p]` weights, the `sim::CycleSim` layout.
+    /// Per-layer flat row-major `[q * p]` weight matrices concatenated in
+    /// layer order (`MultiLayerSim::flat_weights`). For a single-column
+    /// service this is exactly the `sim::CycleSim` flat layout.
     pub weights: Vec<f32>,
 }
 
@@ -71,22 +75,24 @@ impl SharedWeights {
 /// reply. Exits when the queue is closed and drained. `throttle` is a
 /// test-only delay simulating a slow shard (Duration::ZERO in production).
 ///
-/// The loop owns one [`BatchSim`] replica (workers pinned to 1 — shard
-/// parallelism lives at the shard count) plus reusable meta/window/winner
-/// buffers, so steady-state serving performs no engine rebuilds and no
-/// per-sample allocations: snapshot adoption copies weight VALUES into
-/// the existing engine (same geometry), and inference runs the
-/// zero-allocation [`BatchSim::infer_winners_into`] path.
+/// The loop owns one [`MultiLayerBatchSim`] replica (workers pinned to 1
+/// — shard parallelism lives at the shard count) plus reusable
+/// meta/window/winner buffers, so steady-state serving performs no engine
+/// rebuilds and no per-sample allocations: snapshot adoption copies
+/// weight VALUES into the existing engine (same geometry), and inference
+/// runs the zero-allocation [`MultiLayerBatchSim::infer_winners_into`]
+/// path.
 pub(crate) fn reader_loop(
-    cfg: ColumnConfig,
+    cfgs: Vec<ColumnConfig>,
     queue: Arc<Batcher<InferRequest>>,
     weights: Arc<SharedWeights>,
     metrics: Arc<ServeMetrics>,
     throttle: Duration,
 ) {
     let mut snap = weights.load();
-    let mut engine =
-        BatchSim::from_sim(CycleSim::from_flat(cfg, snap.weights.clone())).with_workers(1);
+    let mut stack = MultiLayerSim::new(&cfgs, 0).expect("stack validated at service start");
+    stack.load_flat_weights(&snap.weights);
+    let mut engine = MultiLayerBatchSim::from_stack(stack).with_workers(1);
     let mut metas: Vec<(u64, std::time::Instant, std::sync::mpsc::Sender<InferReply>)> =
         Vec::new();
     let mut windows: Vec<Vec<f32>> = Vec::new();
@@ -98,9 +104,9 @@ pub(crate) fn reader_loop(
         let latest = weights.load();
         if latest.epoch != snap.epoch {
             snap = latest;
-            // Same column geometry across epochs: adopting a snapshot is a
+            // Same stack geometry across epochs: adopting a snapshot is a
             // value copy into the live engine, not a rebuild.
-            engine.sim.weights.clone_from(&snap.weights);
+            engine.stack.load_flat_weights(&snap.weights);
         }
         let n = batch.len();
         metas.clear();
@@ -122,36 +128,39 @@ pub(crate) fn reader_loop(
     }
 }
 
-/// Learner worker loop: apply online STDP steps in strict arrival order,
-/// publish a snapshot every `snapshot_every` steps, and always publish
-/// once more on shutdown if steps are pending — so after a drained
-/// shutdown the published snapshot is exactly the serial STDP trajectory
-/// over every accepted learn request.
+/// Learner worker loop: apply greedy layer-wise online STDP steps in
+/// strict arrival order through one reused [`MultiLayerScratch`] (zero
+/// steady-state allocations beyond the published snapshots), publish a
+/// snapshot every `snapshot_every` steps, and always publish once more on
+/// shutdown if steps are pending — so after a drained shutdown the
+/// published snapshot is exactly the serial STDP trajectory over every
+/// accepted learn request.
 pub(crate) fn learner_loop(
-    mut sim: CycleSim,
+    mut stack: MultiLayerSim,
     queue: Arc<Batcher<LearnRequest>>,
     weights: Arc<SharedWeights>,
     metrics: Arc<ServeMetrics>,
     snapshot_every: usize,
 ) {
     let every = snapshot_every.max(1);
+    let mut scratch = MultiLayerScratch::for_stack(&stack);
     let mut steps = 0usize;
     let mut dirty = false;
     while let Some(batch) = queue.next_batch() {
         for req in batch {
-            sim.step(&req.window);
+            stack.step_with(&req.window, &mut scratch);
             steps += 1;
             dirty = true;
             metrics.learned.fetch_add(1, Relaxed);
             if steps % every == 0 {
-                weights.publish(sim.weights.clone());
+                weights.publish(stack.flat_weights());
                 metrics.snapshots_published.fetch_add(1, Relaxed);
                 dirty = false;
             }
         }
     }
     if dirty {
-        weights.publish(sim.weights.clone());
+        weights.publish(stack.flat_weights());
         metrics.snapshots_published.fetch_add(1, Relaxed);
     }
 }

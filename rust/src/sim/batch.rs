@@ -28,7 +28,8 @@ use crate::coordinator::pool::{self, FillBuf, SlicePtr};
 use crate::util::Rng;
 
 use super::column::{wta_winner, CycleSim, StepOutput};
-use super::scratch::SimScratch;
+use super::multilayer::MultiLayerSim;
+use super::scratch::{MultiLayerScratch, SimScratch};
 
 /// Batched executor wrapping one column simulator.
 pub struct BatchSim {
@@ -60,8 +61,75 @@ fn scratch_slots(cfg: &ColumnConfig, workers: usize) -> Vec<Mutex<SimScratch>> {
 /// internal invariant, performs no panicking operation mid-update) — so
 /// the slot stays safe to reuse and the engine keeps the pool's
 /// "a panicking job never bricks the machinery" contract.
-fn lock_scratch(slot: &Mutex<SimScratch>) -> MutexGuard<'_, SimScratch> {
+fn lock_scratch<S>(slot: &Mutex<S>) -> MutexGuard<'_, S> {
     slot.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Run `per_sample` over `0..n` in order-preserving parallel chunks on the
+/// shared pool, collecting the results. Each chunk holds one scratch slot
+/// for its whole run of samples; `workers` bounds the chunk count (single
+/// chunk runs serially on the caller thread). Shared by [`BatchSim`]
+/// (per-column [`SimScratch`]) and [`MultiLayerBatchSim`] (per-stack
+/// [`MultiLayerScratch`]).
+fn map_chunked<S, R, F>(scratch: &[Mutex<S>], workers: usize, n: usize, per_sample: F) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    F: Fn(usize, &mut S) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = workers.min(n);
+    if chunks <= 1 {
+        let mut slot = lock_scratch(&scratch[0]);
+        return (0..n).map(|i| per_sample(i, &mut slot)).collect();
+    }
+    let ranges = chunk_ranges(n, chunks);
+    let out = FillBuf::new(n);
+    pool::shared().dispatch(ranges.len(), &|c| {
+        let (lo, hi) = ranges[c];
+        let mut slot = lock_scratch(&scratch[c]);
+        for i in lo..hi {
+            // SAFETY: ranges are disjoint and each chunk is claimed
+            // once, so every index is written exactly once.
+            unsafe { out.set(i, per_sample(i, &mut slot)) };
+        }
+    });
+    // SAFETY: the dispatch completed, so every slot 0..n was written.
+    unsafe { out.into_vec() }
+}
+
+/// [`map_chunked`] for `Copy` results written into a reused caller buffer
+/// — the zero-allocation winner paths.
+fn fill_chunked<S, R, F>(scratch: &[Mutex<S>], workers: usize, out: &mut [R], per_sample: F)
+where
+    S: Send,
+    R: Copy + Send,
+    F: Fn(usize, &mut S) -> R + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let chunks = workers.min(n);
+    if chunks <= 1 {
+        let mut slot = lock_scratch(&scratch[0]);
+        for (i, item) in out.iter_mut().enumerate() {
+            *item = per_sample(i, &mut slot);
+        }
+        return;
+    }
+    let ranges = chunk_ranges(n, chunks);
+    let out = SlicePtr::new(out);
+    pool::shared().dispatch(ranges.len(), &|c| {
+        let (lo, hi) = ranges[c];
+        let mut slot = lock_scratch(&scratch[c]);
+        for i in lo..hi {
+            // SAFETY: ranges are disjoint and within out's length.
+            unsafe { out.set(i, per_sample(i, &mut slot)) };
+        }
+    });
 }
 
 impl BatchSim {
@@ -110,27 +178,7 @@ impl BatchSim {
         R: Send,
         F: Fn(usize, &mut SimScratch) -> R + Sync,
     {
-        if n == 0 {
-            return Vec::new();
-        }
-        let chunks = self.workers.min(n);
-        if chunks <= 1 {
-            let mut scratch = lock_scratch(&self.scratch[0]);
-            return (0..n).map(|i| per_sample(i, &mut scratch)).collect();
-        }
-        let ranges = chunk_ranges(n, chunks);
-        let out = FillBuf::new(n);
-        pool::shared().dispatch(ranges.len(), &|c| {
-            let (lo, hi) = ranges[c];
-            let mut scratch = lock_scratch(&self.scratch[c]);
-            for i in lo..hi {
-                // SAFETY: ranges are disjoint and each chunk is claimed
-                // once, so every index is written exactly once.
-                unsafe { out.set(i, per_sample(i, &mut scratch)) };
-            }
-        });
-        // SAFETY: the dispatch completed, so every slot 0..n was written.
-        unsafe { out.into_vec() }
+        map_chunked(&self.scratch, self.workers, n, per_sample)
     }
 
     /// [`Self::map_samples`] for `Copy` results written into a reused
@@ -140,28 +188,7 @@ impl BatchSim {
         R: Copy + Send,
         F: Fn(usize, &mut SimScratch) -> R + Sync,
     {
-        let n = out.len();
-        if n == 0 {
-            return;
-        }
-        let chunks = self.workers.min(n);
-        if chunks <= 1 {
-            let mut scratch = lock_scratch(&self.scratch[0]);
-            for (i, slot) in out.iter_mut().enumerate() {
-                *slot = per_sample(i, &mut scratch);
-            }
-            return;
-        }
-        let ranges = chunk_ranges(n, chunks);
-        let out = SlicePtr::new(out);
-        pool::shared().dispatch(ranges.len(), &|c| {
-            let (lo, hi) = ranges[c];
-            let mut scratch = lock_scratch(&self.scratch[c]);
-            for i in lo..hi {
-                // SAFETY: ranges are disjoint and within out's length.
-                unsafe { out.set(i, per_sample(i, &mut scratch)) };
-            }
-        });
+        fill_chunked(&self.scratch, self.workers, out, per_sample)
     }
 
     /// Encode every window (parallel; encoding is pure and
@@ -271,6 +298,110 @@ impl BatchSim {
             child.shuffle(&mut order);
             for &i in &order {
                 self.sim.step_encoded_with(&enc[i], &mut scratch);
+            }
+        }
+    }
+}
+
+/// Batched executor wrapping a whole multi-layer column stack.
+///
+/// Every entry point runs the stack's feed-forward (or greedy-training)
+/// path through per-worker-chunk [`MultiLayerScratch`] — one
+/// [`SimScratch`] per layer plus the reused spike-time→intensity handoff
+/// buffer — dispatched in order-preserving chunks onto the persistent
+/// coordinator worker pool, so a whole stack inference performs zero
+/// steady-state allocations (`rust/tests/alloc.rs` pins this).
+/// Bit-exact with a per-sample [`MultiLayerSim::infer`] loop for any
+/// worker count (`rust/tests/batch_conformance.rs` pins this on all
+/// seven paper designs stacked 2–3 deep).
+pub struct MultiLayerBatchSim {
+    /// The wrapped per-sample stack (weights are shared exactly).
+    pub stack: MultiLayerSim,
+    workers: usize,
+    /// One stack scratch per worker chunk; same locking discipline as the
+    /// `BatchSim` scratch slots.
+    scratch: Vec<Mutex<MultiLayerScratch>>,
+}
+
+fn stack_scratch_slots(stack: &MultiLayerSim, workers: usize) -> Vec<Mutex<MultiLayerScratch>> {
+    (0..workers.max(1)).map(|_| Mutex::new(MultiLayerScratch::for_stack(stack))).collect()
+}
+
+impl MultiLayerBatchSim {
+    /// Initialize like [`MultiLayerSim::new`] (same seeds -> same weights)
+    /// with the default worker count.
+    pub fn new(cfgs: &[ColumnConfig], seed: u64) -> anyhow::Result<Self> {
+        Ok(MultiLayerBatchSim::from_stack(MultiLayerSim::new(cfgs, seed)?))
+    }
+
+    /// Wrap an existing per-sample stack (shares its weights exactly).
+    pub fn from_stack(stack: MultiLayerSim) -> Self {
+        let workers = default_workers();
+        let scratch = stack_scratch_slots(&stack, workers);
+        MultiLayerBatchSim { stack, workers, scratch }
+    }
+
+    /// Pin the worker count (1 = caller thread only). Like
+    /// [`BatchSim::with_workers`], this is a dispatch concurrency limit on
+    /// the shared pool, not a thread spawn.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self.scratch = stack_scratch_slots(&self.stack, self.workers);
+        self
+    }
+
+    /// The pinned worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Unwrap back into the per-sample stack (weights preserved).
+    pub fn into_stack(self) -> MultiLayerSim {
+        self.stack
+    }
+
+    /// Full-stack inference for every raw window (parallel feed-forward;
+    /// the returned y is the last layer's spike-time vector).
+    pub fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<StepOutput> {
+        map_chunked(&self.scratch, self.workers, xs.len(), |i, scratch| {
+            let winner = self.stack.infer_winner_with(&xs[i], scratch);
+            let y = scratch.layers.last().expect("stack is non-empty").y.clone();
+            StepOutput { winner, y }
+        })
+    }
+
+    /// Last-layer winners only, for raw windows. Allocation-free per
+    /// sample (only the returned vector is allocated);
+    /// [`Self::infer_winners_into`] reuses even that.
+    pub fn infer_winners(&self, xs: &[Vec<f32>]) -> Vec<i32> {
+        let mut out = vec![-1i32; xs.len()];
+        fill_chunked(&self.scratch, self.workers, &mut out, |i, scratch| {
+            self.stack.infer_winner_with(&xs[i], scratch)
+        });
+        out
+    }
+
+    /// Winners for raw windows written into a reused caller buffer: the
+    /// steady-state stack serving hot path, with ZERO allocations once
+    /// the scratch and `out` are warm.
+    pub fn infer_winners_into(&self, xs: &[Vec<f32>], out: &mut Vec<i32>) {
+        out.clear();
+        out.resize(xs.len(), -1);
+        fill_chunked(&self.scratch, self.workers, out, |i, scratch| {
+            self.stack.infer_winner_with(&xs[i], scratch)
+        });
+    }
+
+    /// `epochs` greedy layer-wise online-STDP epochs. The STDP weight
+    /// recurrence is serial by definition (sample k+1 sees sample k's
+    /// weights in every layer), so the replay runs on the caller thread
+    /// through scratch slot 0 — bit-exact with a per-sample
+    /// [`MultiLayerSim::step`] loop, with zero steady-state allocations.
+    pub fn train_epochs(&mut self, xs: &[Vec<f32>], epochs: usize) {
+        let mut scratch = lock_scratch(&self.scratch[0]);
+        for _ in 0..epochs {
+            for x in xs {
+                self.stack.step_with(x, &mut scratch);
             }
         }
     }
@@ -429,5 +560,62 @@ mod tests {
         b.infer_winners_into(&[], &mut out);
         assert!(out.is_empty());
         b.train_epochs(&[], 3);
+    }
+
+    fn stack_cfgs() -> Vec<ColumnConfig> {
+        vec![
+            ColumnConfig::new("MB1", "synthetic", 16, 8),
+            ColumnConfig::new("MB2", "synthetic", 8, 2),
+        ]
+    }
+
+    #[test]
+    fn stack_batched_inference_matches_per_sample_exactly() {
+        let xs = windows(16, 27, 6);
+        let ml = MultiLayerSim::new(&stack_cfgs(), 9).unwrap();
+        let per_sample: Vec<StepOutput> = xs.iter().map(|x| ml.infer(x)).collect();
+        let per_sample_winners: Vec<i32> = per_sample.iter().map(|o| o.winner).collect();
+        for workers in [1usize, 2, 8] {
+            let batch = MultiLayerBatchSim::new(&stack_cfgs(), 9).unwrap().with_workers(workers);
+            assert_eq!(batch.infer_batch(&xs), per_sample, "workers={workers}");
+            assert_eq!(batch.infer_winners(&xs), per_sample_winners, "workers={workers}");
+            let mut out = vec![7i32; 50]; // stale contents/length must not leak
+            batch.infer_winners_into(&xs, &mut out);
+            assert_eq!(out, per_sample_winners, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn stack_batched_training_matches_per_sample_trajectory() {
+        let xs = windows(16, 20, 12);
+        let mut a = MultiLayerSim::new(&stack_cfgs(), 4).unwrap();
+        let mut b = MultiLayerBatchSim::new(&stack_cfgs(), 4).unwrap().with_workers(4);
+        for _ in 0..3 {
+            for x in &xs {
+                a.step(x);
+            }
+        }
+        b.train_epochs(&xs, 3);
+        for (k, (la, lb)) in a.layers.iter().zip(&b.stack.layers).enumerate() {
+            assert_eq!(la.weights, lb.weights, "layer {k} training trajectory diverged");
+        }
+        // Post-training inference agrees too.
+        let per_sample: Vec<i32> = xs.iter().map(|x| a.infer(x).winner).collect();
+        assert_eq!(b.infer_winners(&xs), per_sample);
+    }
+
+    #[test]
+    fn stack_empty_dataset_and_shape_errors() {
+        let mut b = MultiLayerBatchSim::new(&stack_cfgs(), 1).unwrap();
+        assert!(b.infer_batch(&[]).is_empty());
+        let mut out = vec![1, 2, 3];
+        b.infer_winners_into(&[], &mut out);
+        assert!(out.is_empty());
+        b.train_epochs(&[], 2);
+        let bad = vec![
+            ColumnConfig::new("BadA", "synthetic", 16, 4),
+            ColumnConfig::new("BadB", "synthetic", 8, 2),
+        ];
+        assert!(MultiLayerBatchSim::new(&bad, 1).is_err(), "shape mismatch must surface");
     }
 }

@@ -348,6 +348,21 @@ impl CycleSim {
         self.step_encoded(&s)
     }
 
+    /// One online STDP learning step on a raw window using caller scratch
+    /// (encode into `scratch.s`, then the [`Self::step_encoded_with`]
+    /// arithmetic); returns the WTA winner and leaves the raw response in
+    /// `scratch.y`. Bit-exact with [`Self::step`] with zero steady-state
+    /// allocations — the multi-layer greedy training replay runs on this.
+    pub fn step_with(&mut self, x: &[f32], scratch: &mut SimScratch) -> i32 {
+        let params = self.config.params;
+        let SimScratch { events, v, y, gated, s } = scratch;
+        self.encode_into(x, s);
+        self.response_parts(s, events, v, y);
+        let winner = wta_gate_into(y, params.t_r, params.tie, gated);
+        stdp_update(&mut self.weights, self.config.p, s, gated, &params);
+        winner
+    }
+
     /// One SUPERVISED STDP step (paper §II-A: "STDP learning in both
     /// supervised and unsupervised modes"). Teacher forcing:
     /// * the labeled neuron is treated as the firing output (its own spike

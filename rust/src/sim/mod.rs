@@ -20,6 +20,13 @@
 //! results are bit-exact with the per-sample path for identical seeds, for
 //! any worker count.
 //!
+//! Multi-layer stacks ([`multilayer::MultiLayerSim`]) chain columns with a
+//! sentinel-aware spike-time→intensity handoff (silent neurons — the `t_r`
+//! no-fire sentinel or the supervised `-1` gate — become intensity `0.0`,
+//! never the strongest input), and [`batch::MultiLayerBatchSim`] runs whole
+//! stacks on the same pool with a per-chunk [`MultiLayerScratch`], keeping
+//! both the bit-exactness and the zero-allocation contracts.
+//!
 //! The hot path is allocation-free in steady state: every per-sample stage
 //! has an `_into`/`_with` variant writing into a reusable [`SimScratch`]
 //! (event index in a flat counting-sort layout, potential/response/gate/
@@ -37,10 +44,10 @@ pub mod event;
 pub mod multilayer;
 pub mod scratch;
 
-pub use batch::BatchSim;
+pub use batch::{BatchSim, MultiLayerBatchSim};
 pub use column::{
     first_crossing, potentials, stdp_update, wta, wta_winner, CycleSim, StepOutput,
 };
 pub use encode::encode_window;
 pub use multilayer::MultiLayerSim;
-pub use scratch::SimScratch;
+pub use scratch::{MultiLayerScratch, SimScratch};

@@ -5,6 +5,7 @@
 use crate::config::ColumnConfig;
 
 use super::column::{CycleSim, StepOutput};
+use super::scratch::MultiLayerScratch;
 
 /// A stack of columns: layer k's output spike vector feeds layer k+1's
 /// encoder (spike times converted back to intensities, early = strong).
@@ -34,9 +35,32 @@ impl MultiLayerSim {
         })
     }
 
-    /// Spike-time vector -> intensity vector for the next layer's encoder.
+    /// Spike-time vector -> intensity vector for the next layer's encoder,
+    /// written into a reused buffer (the zero-allocation handoff).
+    ///
+    /// Firing times in `[0, t_r)` map to `(t_r - t) / t_r` — early spike,
+    /// strong intensity. Anything outside that window is a SILENT neuron
+    /// (the inference no-fire sentinel `t_r`, or the supervised-gating
+    /// sentinel `-1`) and maps to intensity `0.0`, the weakest possible
+    /// input; mapping `-1` through the linear form would instead yield
+    /// `(t_r + 1) / t_r > 1`, making silent neurons the *strongest*
+    /// inputs to the next layer.
+    fn to_intensity_into(y: &[i32], t_r: i32, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(y.iter().map(|&t| {
+            if (0..t_r).contains(&t) {
+                (t_r - t) as f32 / t_r as f32
+            } else {
+                0.0
+            }
+        }));
+    }
+
+    /// Allocating wrapper over [`Self::to_intensity_into`].
     fn to_intensity(y: &[i32], t_r: i32) -> Vec<f32> {
-        y.iter().map(|&t| (t_r - t) as f32 / t_r as f32).collect()
+        let mut out = Vec::with_capacity(y.len());
+        Self::to_intensity_into(y, t_r, &mut out);
+        out
     }
 
     /// Feed-forward inference; returns the last layer's output.
@@ -62,14 +86,86 @@ impl MultiLayerSim {
         out
     }
 
+    /// Winner-only feed-forward inference through reusable scratch: zero
+    /// steady-state allocations. Layer k's spike times are converted into
+    /// `scratch.h` with the sentinel-aware handoff and fed to layer k+1;
+    /// the conversion after the last layer is skipped (nothing consumes
+    /// it). The last layer's spike times stay readable in the last
+    /// `scratch.layers` slot. Winner semantics are bit-exact with
+    /// [`Self::infer`].
+    pub fn infer_winner_with(&self, x: &[f32], scratch: &mut MultiLayerScratch) -> i32 {
+        let last = self.layers.len() - 1;
+        let MultiLayerScratch { layers: slots, h } = scratch;
+        let mut winner = -1;
+        for (k, (layer, ls)) in self.layers.iter().zip(slots.iter_mut()).enumerate() {
+            let input: &[f32] = if k == 0 { x } else { &**h };
+            winner = layer.infer_winner_with(input, ls);
+            if k < last {
+                Self::to_intensity_into(&ls.y, layer.config.params.t_r, h);
+            }
+        }
+        winner
+    }
+
+    /// Greedy layer-wise online STDP through reusable scratch: each layer
+    /// learns on its own input, bit-exact with [`Self::step`], with zero
+    /// steady-state allocations (the batched training replay runs on
+    /// this). Returns the last layer's WTA winner.
+    pub fn step_with(&mut self, x: &[f32], scratch: &mut MultiLayerScratch) -> i32 {
+        let last = self.layers.len() - 1;
+        let MultiLayerScratch { layers: slots, h } = scratch;
+        let mut winner = -1;
+        for (k, (layer, ls)) in self.layers.iter_mut().zip(slots.iter_mut()).enumerate() {
+            let input: &[f32] = if k == 0 { x } else { &**h };
+            winner = layer.step_with(input, ls);
+            if k < last {
+                Self::to_intensity_into(&ls.y, layer.config.params.t_r, h);
+            }
+        }
+        winner
+    }
+
+    /// Concatenated per-layer weight matrices, input layer first — the
+    /// serve snapshot wire format for stacks (a single column is the
+    /// 1-layer special case, where this is exactly its flat `[q * p]`
+    /// matrix).
+    pub fn flat_weights(&self) -> Vec<f32> {
+        let total = self.layers.iter().map(|l| l.weights.len()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for layer in &self.layers {
+            flat.extend_from_slice(&layer.weights);
+        }
+        flat
+    }
+
+    /// Load weights from the concatenated [`Self::flat_weights`] layout.
+    pub fn load_flat_weights(&mut self, flat: &[f32]) {
+        let total: usize = self.layers.iter().map(|l| l.weights.len()).sum();
+        assert_eq!(flat.len(), total, "flat weight length mismatch");
+        let mut off = 0;
+        for layer in &mut self.layers {
+            let n = layer.weights.len();
+            layer.weights.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+
     /// Batched feed-forward inference over a whole dataset: samples are
     /// independent, so the stack fans out across the persistent coordinator
     /// worker pool (no per-call thread spawn). Order-preserving and
     /// bit-exact with a per-sample [`Self::infer`] loop for any worker
     /// count.
     pub fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<StepOutput> {
-        use crate::coordinator::jobs::{chunk_ranges, default_workers, parallel_map_workers};
-        let workers = default_workers();
+        self.infer_batch_with_workers(xs, crate::coordinator::jobs::default_workers())
+    }
+
+    /// [`Self::infer_batch`] with an explicit worker count, so the CLI
+    /// `--workers` semantics apply to stacks exactly as they do to
+    /// `BatchSim::with_workers`. `workers <= 1` runs serially on the
+    /// caller thread.
+    pub fn infer_batch_with_workers(&self, xs: &[Vec<f32>], workers: usize) -> Vec<StepOutput> {
+        use crate::coordinator::jobs::{chunk_ranges, parallel_map_workers};
+        let workers = workers.max(1);
         let ranges = chunk_ranges(xs.len(), workers);
         let chunks: Vec<Vec<StepOutput>> = parallel_map_workers(ranges, workers, |(lo, hi)| {
             (lo..hi).map(|i| self.infer(&xs[i])).collect()
@@ -127,6 +223,46 @@ mod tests {
             .collect();
         let per_sample: Vec<StepOutput> = xs.iter().map(|x| ml.infer(x)).collect();
         assert_eq!(ml.infer_batch(&xs), per_sample);
+        // Explicit worker counts (the CLI `--workers` path) must agree too.
+        for workers in [1usize, 2, 8] {
+            assert_eq!(ml.infer_batch_with_workers(&xs, workers), per_sample, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn silent_neurons_map_to_zero_intensity() {
+        // Both no-fire sentinels (inference `t_r`, supervised gating `-1`)
+        // are silent and must hand the weakest intensity to the next
+        // layer; in-window times keep the early-is-strong linear map.
+        let t_r = 8;
+        let h = MultiLayerSim::to_intensity(&[-1, 0, 1, t_r - 1, t_r], t_r);
+        assert_eq!(h[0], 0.0, "-1 sentinel must be silent, not (t_r+1)/t_r");
+        assert_eq!(h[1], 1.0, "t=0 is the strongest firing input");
+        assert!((h[2] - 7.0 / 8.0).abs() < 1e-6);
+        assert!(h[3] > 0.0, "last in-window time still registers");
+        assert_eq!(h[4], 0.0, "t_r sentinel is silent");
+    }
+
+    #[test]
+    fn silent_layer1_neuron_never_dominates_layer2_encoding() {
+        // Layer 1: neuron 0 has all-zero weights -> its potential never
+        // crosses threshold, so it is guaranteed silent (spike time t_r)
+        // on every input, while neurons 1 and 2 fire strongly.
+        let l1_cfg = ColumnConfig::new("Silent1", "synthetic", 8, 3);
+        let w_max = l1_cfg.params.w_max as f32;
+        let rows = vec![vec![0.0; 8], vec![w_max; 8], vec![w_max; 8]];
+        let l1 = CycleSim::from_weights(l1_cfg.clone(), rows);
+        let x: Vec<f32> = (0..8).map(|i| 0.2 + 0.1 * i as f32).collect();
+        let out = l1.infer(&x);
+        let t_r = l1_cfg.params.t_r;
+        assert_eq!(out.y[0], t_r, "zero-weight neuron must stay silent");
+        assert!(out.y[1] < t_r && out.y[2] < t_r, "driven neurons fire: {:?}", out.y);
+        let h = MultiLayerSim::to_intensity(&out.y, t_r);
+        assert_eq!(h[0], 0.0, "silent neuron must be the weakest layer-2 input");
+        assert!(
+            h[0] < h[1] && h[0] < h[2],
+            "silent neuron must never encode stronger than a firing one: {h:?}"
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use crate::config::ColumnConfig;
 
 use super::event::EventScratch;
+use super::multilayer::MultiLayerSim;
 
 /// Per-worker scratch for the allocation-free sim hot path. All fields
 /// are owned buffers whose capacities persist across samples; the
@@ -58,6 +59,30 @@ impl SimScratch {
     }
 }
 
+/// Per-worker scratch for a whole column stack: one [`SimScratch`] per
+/// layer plus the reused spike-time→intensity handoff buffer that carries
+/// layer k's output into layer k+1's encoder. With this, a full stack
+/// inference (or greedy training step) allocates nothing in steady state.
+pub struct MultiLayerScratch {
+    /// Per-layer scratch, input side first.
+    pub layers: Vec<SimScratch>,
+    /// Inter-layer intensity handoff buffer (the `to_intensity_into`
+    /// target), sized to the widest layer output.
+    pub h: Vec<f32>,
+}
+
+impl MultiLayerScratch {
+    /// Scratch pre-sized for every layer of a stack, so even the first
+    /// sample allocates nothing.
+    pub fn for_stack(stack: &MultiLayerSim) -> Self {
+        let widest = stack.layers.iter().map(|l| l.config.q).max().unwrap_or(0);
+        MultiLayerScratch {
+            layers: stack.layers.iter().map(|l| SimScratch::for_config(&l.config)).collect(),
+            h: Vec::with_capacity(widest),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +95,17 @@ mod tests {
         assert!(s.y.capacity() >= 3);
         assert!(s.gated.capacity() >= 3);
         assert!(s.s.capacity() >= 24);
+    }
+
+    #[test]
+    fn for_stack_pre_sizes_every_layer() {
+        let l1 = ColumnConfig::new("S1", "synthetic", 16, 8);
+        let l2 = ColumnConfig::new("S2", "synthetic", 8, 2);
+        let ml = MultiLayerSim::new(&[l1, l2], 1).unwrap();
+        let s = MultiLayerScratch::for_stack(&ml);
+        assert_eq!(s.layers.len(), 2);
+        assert!(s.layers[0].s.capacity() >= 16);
+        assert!(s.layers[1].s.capacity() >= 8);
+        assert!(s.h.capacity() >= 8, "handoff sized to the widest layer output");
     }
 }

@@ -1,6 +1,8 @@
 //! Small statistics helpers shared by metrics, forecasting and the bench
 //! harness.
 
+use anyhow::{ensure, Result};
+
 /// Arithmetic mean (0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -63,15 +65,28 @@ pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
 }
 
 /// Ordinary least squares fit y = a*x + b; returns (a, b, r2).
-pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
-    assert_eq!(xs.len(), ys.len());
-    assert!(xs.len() >= 2, "need at least two points for a line");
-    let n = xs.len() as f64;
+///
+/// Degenerate inputs (mismatched lengths, fewer than two points, constant
+/// x values) are reported as errors instead of panics so callers such as
+/// `Forecaster::train` can surface them cleanly — a uniform flow campaign
+/// where every design shares one synapse count is user input, not a bug.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Result<(f64, f64, f64)> {
+    ensure!(
+        xs.len() == ys.len(),
+        "linear fit needs paired samples: {} x values vs {} y values",
+        xs.len(),
+        ys.len()
+    );
+    ensure!(xs.len() >= 2, "need at least two points for a line, got {}", xs.len());
     let mx = mean(xs);
     let my = mean(ys);
     let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
     let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
-    assert!(sxx > 0.0, "degenerate x values in linear fit");
+    ensure!(
+        sxx > 0.0,
+        "degenerate x values in linear fit: all {} points share x = {mx}",
+        xs.len()
+    );
     let a = sxy / sxx;
     let b = my - a * mx;
     let ss_res: f64 = xs
@@ -84,13 +99,20 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
         .sum();
     let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
     let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
-    let _ = n;
-    (a, b, r2)
+    Ok((a, b, r2))
 }
 
 /// Relative error in percent: 100 * (pred - actual) / actual.
-pub fn rel_err_pct(pred: f64, actual: f64) -> f64 {
-    100.0 * (pred - actual) / actual
+///
+/// Returns `None` when the reference value is zero or either argument is
+/// non-finite: the relative error is undefined there, and an explicit
+/// `None` lets report emitters write `null` instead of silently dropping
+/// the field on a ±inf/NaN.
+pub fn rel_err_pct(pred: f64, actual: f64) -> Option<f64> {
+    if actual == 0.0 || !pred.is_finite() || !actual.is_finite() {
+        return None;
+    }
+    Some(100.0 * (pred - actual) / actual)
 }
 
 #[cfg(test)]
@@ -152,15 +174,39 @@ mod tests {
     fn linear_fit_recovers_exact_line() {
         let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
         let ys: Vec<f64> = xs.iter().map(|x| 5.56 * x - 94.9).collect();
-        let (a, b, r2) = linear_fit(&xs, &ys);
+        let (a, b, r2) = linear_fit(&xs, &ys).unwrap();
         assert!((a - 5.56).abs() < 1e-9);
         assert!((b + 94.9).abs() < 1e-9);
         assert!((r2 - 1.0).abs() < 1e-12);
     }
 
     #[test]
+    fn linear_fit_reports_degenerate_input_as_errors() {
+        // Constant x values: slope is undefined, not a panic.
+        let err = linear_fit(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]).unwrap_err();
+        assert!(format!("{err}").contains("degenerate x values"), "{err}");
+        // Too few points and mismatched lengths are errors too.
+        let err = linear_fit(&[1.0], &[1.0]).unwrap_err();
+        assert!(format!("{err}").contains("at least two points"), "{err}");
+        let err = linear_fit(&[1.0, 2.0], &[1.0]).unwrap_err();
+        assert!(format!("{err}").contains("paired samples"), "{err}");
+    }
+
+    #[test]
     fn rel_err_sign() {
-        assert!((rel_err_pct(110.0, 100.0) - 10.0).abs() < 1e-12);
-        assert!((rel_err_pct(90.0, 100.0) + 10.0).abs() < 1e-12);
+        assert!((rel_err_pct(110.0, 100.0).unwrap() - 10.0).abs() < 1e-12);
+        assert!((rel_err_pct(90.0, 100.0).unwrap() + 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_is_none_when_undefined() {
+        // Zero reference: division by zero is reported, not emitted as inf.
+        assert_eq!(rel_err_pct(5.0, 0.0), None);
+        assert_eq!(rel_err_pct(0.0, 0.0), None);
+        // Non-finite inputs have no meaningful relative error either.
+        assert_eq!(rel_err_pct(f64::NAN, 100.0), None);
+        assert_eq!(rel_err_pct(100.0, f64::INFINITY), None);
+        // Negative references are fine — only zero/non-finite are excluded.
+        assert!((rel_err_pct(-110.0, -100.0).unwrap() - 10.0).abs() < 1e-12);
     }
 }

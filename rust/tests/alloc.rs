@@ -7,7 +7,10 @@
 //! write into reused buffers. The full-output `infer_encoded_batch` API
 //! returns owned per-sample spike vectors by contract, so its inner loop
 //! is pinned to exactly that: one small allocation per sample (the
-//! returned `y`) and nothing else.
+//! returned `y`) and nothing else. Multi-layer stacks
+//! ([`MultiLayerBatchSim`]) carry the same zero-allocation contract
+//! through the per-layer scratch and the reused inter-layer handoff
+//! buffer.
 //!
 //! This file is its own test binary with a single #[test] so no sibling
 //! test pollutes the allocation counter.
@@ -16,7 +19,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use tnngen::config::{ColumnConfig, Response};
-use tnngen::sim::BatchSim;
+use tnngen::sim::{BatchSim, MultiLayerBatchSim};
 use tnngen::util::Rng;
 
 /// System allocator wrapper counting every allocation-producing call.
@@ -101,5 +104,29 @@ fn steady_state_batched_inference_does_not_allocate() {
             "{resp:?}: infer_encoded_batch inner loop allocated {delta} times \
              for {n} samples (expected <= n + 2: one owned y per sample + the container)"
         );
+    }
+
+    // Multi-layer stacks keep the same contract: once the per-layer
+    // scratch (including the reused spike-time -> intensity handoff
+    // buffer) and the output vector are warm, whole-stack batched
+    // inference performs ZERO steady-state allocations.
+    {
+        let cfgs = [
+            ColumnConfig::new("AllocStackL1", "synthetic", 24, 6),
+            ColumnConfig::new("AllocStackL2", "synthetic", 6, 2),
+        ];
+        let n = 40;
+        let xs = windows(24, n, 7);
+        let engine = MultiLayerBatchSim::new(&cfgs, 7).unwrap().with_workers(1);
+        let mut winners = Vec::new();
+        engine.infer_winners_into(&xs, &mut winners);
+        engine.infer_winners_into(&xs, &mut winners);
+        let expected = winners.clone();
+
+        let before = ALLOC_CALLS.load(Relaxed);
+        engine.infer_winners_into(&xs, &mut winners);
+        let delta = ALLOC_CALLS.load(Relaxed) - before;
+        assert_eq!(delta, 0, "steady-state stack inference allocated");
+        assert_eq!(winners, expected);
     }
 }

@@ -9,12 +9,12 @@
 //!   order-preservation and the per-item (not per-thread) RNG discipline.
 
 use tnngen::cluster::pipeline::TnnClustering;
-use tnngen::config::presets::test_configs;
+use tnngen::config::presets::{paper_configs, test_configs};
 use tnngen::config::{ColumnConfig, Response};
 use tnngen::coordinator::explorer::{explore_with_workers, sweep_csv, SweepSpace};
 use tnngen::coordinator::jobs::{parallel_map_rng, parallel_map_workers};
 use tnngen::data::generate;
-use tnngen::sim::{BatchSim, CycleSim, MultiLayerSim};
+use tnngen::sim::{BatchSim, CycleSim, MultiLayerBatchSim, MultiLayerSim};
 use tnngen::util::Rng;
 
 fn windows(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -136,4 +136,61 @@ fn multilayer_infer_batch_matches_per_sample() {
     let xs = windows(16, 29, 3);
     let per_sample: Vec<_> = xs.iter().map(|x| ml.infer(x)).collect();
     assert_eq!(ml.infer_batch(&xs), per_sample);
+    for workers in [1usize, 2, 8] {
+        assert_eq!(ml.infer_batch_with_workers(&xs, workers), per_sample, "workers={workers}");
+    }
+}
+
+/// A 2- or 3-deep stack over a paper design: a q->q second layer, plus an
+/// optional third layer halving the neuron count (floor 2), so both
+/// depths from the scale-up plan appear across the seven-design matrix.
+fn paper_stack(cfg: &ColumnConfig, three_deep: bool) -> Vec<ColumnConfig> {
+    let mut cfgs = vec![
+        cfg.clone(),
+        ColumnConfig::new(&format!("{}-L2", cfg.name), &cfg.modality, cfg.q, cfg.q),
+    ];
+    if three_deep {
+        let q3 = (cfg.q / 2).max(2);
+        cfgs.push(ColumnConfig::new(&format!("{}-L3", cfg.name), &cfg.modality, cfg.q, q3));
+    }
+    cfgs
+}
+
+#[test]
+fn stack_engine_bit_exact_on_all_paper_designs_for_any_worker_count() {
+    for (i, cfg) in paper_configs().iter().enumerate() {
+        let cfgs = paper_stack(cfg, i % 2 == 1);
+        let xs = windows(cfg.p, 8, 31 + i as u64);
+
+        // Per-sample reference trajectory: greedy layer-wise training,
+        // then feed-forward inference on the trained stack.
+        let mut reference = MultiLayerSim::new(&cfgs, 19).unwrap();
+        for x in &xs {
+            reference.step(x);
+        }
+        let per_sample: Vec<_> = xs.iter().map(|x| reference.infer(x)).collect();
+        let winners: Vec<i32> = per_sample.iter().map(|o| o.winner).collect();
+
+        for workers in [1usize, 2, 8] {
+            let tag = format!("{} ({} layers, workers={workers})", cfg.tag(), cfgs.len());
+            let mut engine = MultiLayerBatchSim::new(&cfgs, 19).unwrap().with_workers(workers);
+            engine.train_epochs(&xs, 1);
+            for (k, (a, b)) in
+                reference.layers.iter().zip(engine.stack.layers.iter()).enumerate()
+            {
+                assert_eq!(a.weights, b.weights, "{tag}: layer {k} training diverged");
+            }
+            assert_eq!(engine.infer_batch(&xs), per_sample, "{tag}: infer_batch");
+            assert_eq!(engine.infer_winners(&xs), winners, "{tag}: infer_winners");
+            // The reused-buffer path must fully overwrite stale contents.
+            let mut reused = vec![99i32; 3];
+            engine.infer_winners_into(&xs, &mut reused);
+            assert_eq!(reused, winners, "{tag}: infer_winners_into");
+            assert_eq!(
+                reference.infer_batch_with_workers(&xs, workers),
+                per_sample,
+                "{tag}: MultiLayerSim::infer_batch_with_workers"
+            );
+        }
+    }
 }

@@ -94,13 +94,18 @@ fn registry_is_deterministic_and_covers_the_paper_matrix() {
         a.iter().map(|e| e.units_per_iter).collect::<Vec<_>>(),
         b.iter().map(|e| e.units_per_iter).collect::<Vec<_>>()
     );
-    // 7 designs x (3 full_column engines + clustering) + 4 micro
-    // + 2 response + gate_level + 2 EDA stages + 2 campaigns.
-    assert_eq!(names.len(), 7 * 4 + 4 + 2 + 1 + 2 + 2);
+    // 7 designs x (3 full_column engines + 2 full_stack engines +
+    // clustering) + 4 micro + 2 response + gate_level + 2 EDA stages
+    // + 2 campaigns.
+    assert_eq!(names.len(), 7 * 4 + 7 * 2 + 4 + 2 + 1 + 2 + 2);
     for cfg in tnngen::config::presets::paper_configs() {
         let tag = cfg.tag();
         for engine in ["cyclesim", "batchsim", "serve"] {
             let want = format!("full_column/{tag}/{engine}");
+            assert!(names.contains(&want), "registry is missing {want}");
+        }
+        for engine in ["cyclesim", "batchsim"] {
+            let want = format!("full_stack/{tag}/{engine}");
             assert!(names.contains(&want), "registry is missing {want}");
         }
         assert!(names.contains(&format!("clustering/{tag}/batchsim")));

@@ -139,7 +139,7 @@ fn forecaster_errors_exact_on_known_inputs() {
     let pred = fc.predict(actual.synapse_count);
     actual.die_area_um2 = pred.area_um2;
     actual.leakage_uw = pred.leakage_uw;
-    assert_eq!(fc.errors(&actual), (0.0, 0.0));
+    assert_eq!(fc.errors(&actual), (Some(0.0), Some(0.0)));
 
     // actual area = prediction / 2  ->  +100% exactly (halving is exact
     // in binary floating point, and (p - p/2) / (p/2) == 1 exactly).
@@ -147,14 +147,20 @@ fn forecaster_errors_exact_on_known_inputs() {
     actual.die_area_um2 = pred.area_um2 / 2.0;
     actual.leakage_uw = pred.leakage_uw * 2.0;
     let (area_err, leak_err) = fc.errors(&actual);
-    assert_eq!(area_err, 100.0);
-    assert_eq!(leak_err, -50.0);
+    assert_eq!(area_err, Some(100.0));
+    assert_eq!(leak_err, Some(-50.0));
 
     // actual area = prediction / 4  ->  +300% (to rounding: 0.75*p is
     // generally not exactly representable, unlike the halving above).
     actual.die_area_um2 = pred.area_um2 / 4.0;
     let (area_err, _) = fc.errors(&actual);
+    let area_err = area_err.unwrap();
     assert!((area_err - 300.0).abs() < 1e-9, "{area_err}");
+
+    // A zero actual has no defined relative error: None, never ±inf.
+    actual.die_area_um2 = 0.0;
+    let (area_err, _) = fc.errors(&actual);
+    assert_eq!(area_err, None);
 }
 
 #[test]
