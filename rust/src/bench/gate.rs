@@ -302,6 +302,143 @@ pub fn render_diff(rows: &[DiffRow], spec: &GateSpec) -> String {
     t.render()
 }
 
+/// Engine-name suffix marking a row as the vector-backend counterpart of
+/// a scalar row: `encode/96x2/cyclesim-vec` pairs with
+/// `encode/96x2/cyclesim`. The pairing is purely name-driven so the
+/// speedup gate needs no registry knowledge.
+pub const VEC_SUFFIX: &str = "-vec";
+
+/// One scalar↔vector pair aligned WITHIN a single artifact (same run,
+/// same machine, same profile — the apples-to-apples the cross-artifact
+/// `bench check` can never give, because it compares different runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedupRow {
+    /// Scalar-side entry name (the pairing target).
+    pub scalar_name: String,
+    /// Vector-side entry name (the `-vec` row).
+    pub vector_name: String,
+    /// Scalar median seconds.
+    pub scalar_s: f64,
+    /// Vector median seconds.
+    pub vector_s: f64,
+    /// Work sizes (`units_per_iter`) on the two sides; a mismatch makes
+    /// the pair incomparable (never judged), same as `bench check`.
+    pub units: (usize, usize),
+}
+
+impl SpeedupRow {
+    /// `scalar / vector` (>1 = the vector backend is faster), when the
+    /// pair is judgeable.
+    pub fn speedup(&self) -> Option<f64> {
+        if self.units.0 == self.units.1 && self.vector_s > 0.0 {
+            Some(self.scalar_s / self.vector_s)
+        } else {
+            None
+        }
+    }
+}
+
+/// Pair every `-vec` row in the artifact with its scalar counterpart
+/// (same `workload/design`, engine minus the suffix), in artifact order.
+/// `-vec` rows without a counterpart are dropped — the CLI insists on at
+/// least one surviving pair, so an over-narrow `--filter` fails loudly
+/// instead of vacuously passing.
+///
+/// Unlike [`check`], NO noise floor applies here: the paired micro rows
+/// sit at microsecond scale by design, and this gate demands a measured
+/// improvement rather than guarding against regressions — suppressing
+/// sub-floor rows would silently exempt exactly the rows the gate
+/// exists for. Timer noise is handled by the runner's fixed
+/// median-of-N-iterations policy instead.
+pub fn speedups(artifact: &BenchArtifact) -> Vec<SpeedupRow> {
+    let by_name: BTreeMap<&str, (f64, usize)> = artifact
+        .entries
+        .iter()
+        .map(|e| (e.name.as_str(), (e.timing.median_s, e.units_per_iter)))
+        .collect();
+    let mut rows = Vec::new();
+    for e in &artifact.entries {
+        let Some(base_engine) = e.engine.strip_suffix(VEC_SUFFIX) else { continue };
+        let scalar_name = format!("{}/{}/{}", e.workload, e.design, base_engine);
+        if let Some(&(scalar_s, scalar_units)) = by_name.get(scalar_name.as_str()) {
+            rows.push(SpeedupRow {
+                scalar_name,
+                vector_name: e.name.clone(),
+                scalar_s,
+                vector_s: e.timing.median_s,
+                units: (scalar_units, e.units_per_iter),
+            });
+        }
+    }
+    rows
+}
+
+/// Aggregate verdict of the speedup gate (`bench speedup`).
+#[derive(Debug, Clone, Default)]
+pub struct SpeedupOutcome {
+    /// Every judged pair, in artifact order.
+    pub rows: Vec<SpeedupRow>,
+    /// Pairs whose speedup fell below the demanded minimum.
+    pub failures: Vec<SpeedupRow>,
+    /// Pairs with mismatched work sizes; listed, never judged.
+    pub incomparable: Vec<SpeedupRow>,
+}
+
+impl SpeedupOutcome {
+    /// The gate passes iff every judgeable pair met the minimum.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// One-line summary for logs and CI.
+    pub fn summary(&self, min: f64) -> String {
+        format!(
+            "{} pair(s) vs {min:.2}x minimum: {} below, {} incomparable",
+            self.rows.len(),
+            self.failures.len(),
+            self.incomparable.len()
+        )
+    }
+}
+
+/// Run the speedup gate over one artifact: every scalar↔vector pair must
+/// show at least `min`× (scalar median / vector median).
+pub fn check_speedup(artifact: &BenchArtifact, min: f64) -> SpeedupOutcome {
+    let mut out = SpeedupOutcome::default();
+    for row in speedups(artifact) {
+        match row.speedup() {
+            Some(s) => {
+                if s < min {
+                    out.failures.push(row.clone());
+                }
+                out.rows.push(row);
+            }
+            None => out.incomparable.push(row),
+        }
+    }
+    out
+}
+
+/// Render speedup pairs as an ASCII table (the `bench speedup` output).
+pub fn render_speedup(rows: &[SpeedupRow], min: f64) -> String {
+    let mut t = Table::new(&["pair", "scalar ms", "vector ms", "speedup", "verdict"]);
+    for row in rows {
+        let (speedup, verdict) = match row.speedup() {
+            Some(s) if s >= min => (format!("{s:.2}x"), "ok"),
+            Some(s) => (format!("{s:.2}x"), "BELOW MINIMUM"),
+            None => ("-".to_string(), "units-mismatch"),
+        };
+        t.row(&[
+            row.scalar_name.clone(),
+            ms(Some(row.scalar_s)),
+            ms(Some(row.vector_s)),
+            speedup,
+            verdict.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,6 +573,44 @@ mod tests {
         ] {
             assert!(!name_matches(list, name), "{name}");
         }
+    }
+
+    #[test]
+    fn speedup_pairs_and_judges_within_one_artifact() {
+        let art = artifact(vec![
+            entry("encode/96x2/cyclesim", 40e-6),
+            entry("encode/96x2/cyclesim-vec", 10e-6), // 4.0x
+            entry("wta/96x2/cyclesim", 3e-6),
+            entry("wta/96x2/cyclesim-vec", 2e-6), // 1.5x
+            entry("full_column/96x2/batchsim", 1e-3), // unpaired: ignored
+        ]);
+        let rows = speedups(&art);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].scalar_name, "encode/96x2/cyclesim");
+        assert_eq!(rows[0].vector_name, "encode/96x2/cyclesim-vec");
+        let out = check_speedup(&art, 2.0);
+        assert!(!out.passed());
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].vector_name, "wta/96x2/cyclesim-vec");
+        // NO noise floor here: these medians all sit far below the 100 µs
+        // regression-gate floor and must be judged anyway.
+        assert!(check_speedup(&art, 1.2).passed());
+        let rendered = render_speedup(&rows, 2.0);
+        assert!(rendered.contains("4.00x"), "{rendered}");
+        assert!(rendered.contains("BELOW MINIMUM"), "{rendered}");
+    }
+
+    #[test]
+    fn speedup_units_mismatch_is_never_judged() {
+        let mut vec_row = entry("encode/96x2/cyclesim-vec", 1e-6);
+        vec_row.units_per_iter = 3;
+        let art = artifact(vec![entry("encode/96x2/cyclesim", 40e-6), vec_row]);
+        let out = check_speedup(&art, 2.0);
+        assert!(out.passed(), "a 40x 'speedup' over a third of the work is not a verdict");
+        assert!(out.rows.is_empty());
+        assert_eq!(out.incomparable.len(), 1);
+        let rendered = render_speedup(&speedups(&art), 2.0);
+        assert!(rendered.contains("units-mismatch"), "{rendered}");
     }
 
     #[test]

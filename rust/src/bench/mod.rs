@@ -19,7 +19,9 @@
 //!   emit is byte-stable).
 //! * [`gate`] — `bench diff` / `bench check`: compare two artifacts,
 //!   classify per-entry ratios against a fail threshold, and gate CI on
-//!   regressions (exit 3) while staying quiet about timer noise.
+//!   regressions (exit 3) while staying quiet about timer noise. `bench
+//!   speedup` additionally pairs scalar↔vector engine rows WITHIN one
+//!   artifact and demands a minimum cross-backend speedup (exit 3).
 //!
 //! The committed seed baseline lives at the repo root (`BENCH_seed.json`)
 //! and CI runs `tnngen bench check --against BENCH_seed.json` in
@@ -37,6 +39,9 @@ pub mod runner;
 pub use artifact::{
     bench_json, load_bench, parse_bench, BenchArtifact, EntryResult, Timing, BENCH_SCHEMA,
 };
-pub use gate::{check, diff, name_matches, render_diff, DiffRow, GateOutcome, GateSpec};
+pub use gate::{
+    check, check_speedup, diff, name_matches, render_diff, render_speedup, speedups, DiffRow,
+    GateOutcome, GateSpec, SpeedupOutcome, SpeedupRow,
+};
 pub use registry::{default_registry, BenchEntry, Profile};
 pub use runner::{render_row, row_header, run_all, run_entry, RunnerOpts};

@@ -57,7 +57,10 @@ use crate::report::experiments::{paper_flow_jobs, Effort};
 use crate::rtl::{generate_column, GateSim};
 use crate::serve::{run_closed_loop, ServeOpts, TnnService};
 use crate::sim::column::wta;
-use crate::sim::{BatchSim, CycleSim, MultiLayerBatchSim, MultiLayerSim};
+use crate::sim::{
+    engine_of, BatchSim, CycleSim, Engine, EngineKind, MultiLayerBatchSim, MultiLayerSim,
+    SimScratch,
+};
 
 /// Master seed shared by every entry: datasets, weight init and the serve
 /// service all derive from it, so two runs measure identical work.
@@ -183,7 +186,7 @@ fn stack_of(cfg: &ColumnConfig) -> Vec<ColumnConfig> {
     vec![cfg.clone(), l2]
 }
 
-/// The default engine × workload matrix (53 entries):
+/// The default engine × workload matrix (58 entries):
 ///
 /// * per paper design: `full_column` on `cyclesim`, `batchsim` and
 ///   `serve`, `full_stack` on `cyclesim` and `batchsim`, plus
@@ -191,7 +194,9 @@ fn stack_of(cfg: &ColumnConfig) -> Vec<ColumnConfig> {
 ///   distinct engines;
 /// * hot-path micro workloads (`encode`/`stdp`/`wta` and the
 ///   event-driven vs cycle-accurate response pair) on the ECG200 (96x2)
-///   representative design;
+///   representative design — each `cyclesim` row pinned to the scalar
+///   kernel backend plus a `cyclesim-vec` twin on the vector backend
+///   (the `bench speedup` gate pairs the twins);
 /// * the hardware side: gate-level simulation (12x2), isolated
 ///   synthesis/placement stages (65x2), and the fast-effort flow
 ///   campaign cold and warm-cache.
@@ -294,7 +299,13 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
         }
     }
 
-    // Hot-path micro workloads on the ECG200 representative design.
+    // Hot-path micro workloads on the ECG200 representative design. The
+    // `cyclesim` rows are pinned to the SCALAR kernel backend (allocating
+    // reference APIs, matching how the seed baseline was recorded); each
+    // has a `cyclesim-vec` twin running the vector backend through the
+    // zero-allocation scratch APIs. `bench speedup` pairs the twins by
+    // name and gates the cross-backend ratio (docs/BENCHMARKS.md spells
+    // out what each side measures).
     let micro = by_tag("96x2").expect("the ECG200 96x2 preset exists");
     let n = profile.n_per_split(micro.q);
     let units = 2 * n;
@@ -302,7 +313,7 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
         let cfg = micro.clone();
         entries.push(BenchEntry::new("encode", micro.tag(), "cyclesim", units, move || {
             let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
-            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Scalar);
             Box::new(move || {
                 for x in &xs {
                     std::hint::black_box(sim.encode(x).len());
@@ -312,9 +323,23 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
     }
     {
         let cfg = micro.clone();
+        entries.push(BenchEntry::new("encode", micro.tag(), "cyclesim-vec", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Vector);
+            let mut out = Vec::with_capacity(cfg.p);
+            Box::new(move || {
+                for x in &xs {
+                    sim.encode_into(x, &mut out);
+                    std::hint::black_box(out.len());
+                }
+            })
+        }));
+    }
+    {
+        let cfg = micro.clone();
         entries.push(BenchEntry::new("encode", micro.tag(), "batchsim", units, move || {
             let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
-            let batch = BatchSim::new(cfg.clone(), BENCH_SEED);
+            let batch = BatchSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Scalar);
             Box::new(move || {
                 std::hint::black_box(batch.encode_batch(&xs).len());
             })
@@ -324,11 +349,25 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
         let cfg = micro.clone();
         entries.push(BenchEntry::new("stdp", micro.tag(), "cyclesim", units, move || {
             let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
-            let mut sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let mut sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Scalar);
             let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
             Box::new(move || {
                 for s in &enc {
                     std::hint::black_box(sim.step_encoded(s).winner);
+                }
+            })
+        }));
+    }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("stdp", micro.tag(), "cyclesim-vec", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let mut sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Vector);
+            let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+            let mut scratch = SimScratch::for_config(&cfg);
+            Box::new(move || {
+                for s in &enc {
+                    std::hint::black_box(sim.step_encoded_with(s, &mut scratch));
                 }
             })
         }));
@@ -348,6 +387,22 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
             })
         }));
     }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("wta", micro.tag(), "cyclesim-vec", units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let ys: Vec<Vec<i32>> = xs.iter().map(|x| sim.response(&sim.encode(x))).collect();
+            let t_r = cfg.params.t_r;
+            let tie = cfg.params.tie;
+            let eng: &'static dyn Engine = engine_of(EngineKind::Vector);
+            Box::new(move || {
+                for y in &ys {
+                    std::hint::black_box(eng.wta_winner(y, t_r, tie));
+                }
+            })
+        }));
+    }
 
     // Event-driven vs cycle-accurate response evaluation on pre-encoded
     // spikes (the engine-dispatch comparison the old perf bench printed).
@@ -355,7 +410,7 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
         let cfg = micro.clone();
         entries.push(BenchEntry::new("response_event", micro.tag(), "cyclesim", units, move || {
             let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
-            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Scalar);
             let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
             Box::new(move || {
                 for s in &enc {
@@ -366,9 +421,30 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
     }
     {
         let cfg = micro.clone();
+        entries.push(BenchEntry::new(
+            "response_event",
+            micro.tag(),
+            "cyclesim-vec",
+            units,
+            move || {
+                let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                let sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Vector);
+                let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+                let mut scratch = SimScratch::for_config(&cfg);
+                Box::new(move || {
+                    for s in &enc {
+                        sim.response_into(s, &mut scratch);
+                        std::hint::black_box(scratch.y.len());
+                    }
+                })
+            },
+        ));
+    }
+    {
+        let cfg = micro.clone();
         entries.push(BenchEntry::new("response_cycle", micro.tag(), "cyclesim", units, move || {
             let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
-            let sim = CycleSim::new(cfg.clone(), BENCH_SEED);
+            let sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Scalar);
             let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
             Box::new(move || {
                 for s in &enc {
@@ -376,6 +452,28 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
                 }
             })
         }));
+    }
+    {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new(
+            "response_cycle",
+            micro.tag(),
+            "cyclesim-vec",
+            units,
+            move || {
+                let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+                let sim = CycleSim::new(cfg.clone(), BENCH_SEED).with_engine(EngineKind::Vector);
+                let enc: Vec<Vec<i32>> = xs.iter().map(|x| sim.encode(x)).collect();
+                let mut v = Vec::new();
+                let mut y = Vec::new();
+                Box::new(move || {
+                    for s in &enc {
+                        sim.response_cycle_into(s, &mut v, &mut y);
+                        std::hint::black_box(y.len());
+                    }
+                })
+            },
+        ));
     }
 
     // Gate-level functional simulation (the Xcelium substitute). GateSim
@@ -510,12 +608,30 @@ mod tests {
 
     #[test]
     fn registry_has_the_documented_entry_count() {
-        // 7 designs x (3 full_column + 2 full_stack + clustering) + 4
-        // micro + 2 response + gate_level + 2 EDA stages + 2 campaigns.
+        // 7 designs x (3 full_column + 2 full_stack + clustering) + 7
+        // micro (encode x3, stdp x2, wta x2) + 4 response (2 paths x 2
+        // backends) + gate_level + 2 EDA stages + 2 campaigns.
         assert_eq!(
             default_registry(Profile::Quick).len(),
-            7 * 4 + 7 * 2 + 4 + 2 + 1 + 2 + 2
+            7 * 4 + 7 * 2 + 7 + 4 + 1 + 2 + 2
         );
+    }
+
+    #[test]
+    fn every_scalar_micro_row_has_a_vector_twin_with_identical_units() {
+        // The `bench speedup` gate pairs `<workload>/96x2/cyclesim` with
+        // `<workload>/96x2/cyclesim-vec`; a missing twin or a units
+        // mismatch would silently shrink the gate's coverage.
+        let entries = default_registry(Profile::Quick);
+        let units: BTreeMap<String, usize> =
+            entries.iter().map(|e| (e.name(), e.units_per_iter)).collect();
+        for workload in ["encode", "stdp", "wta", "response_event", "response_cycle"] {
+            let scalar = format!("{workload}/96x2/cyclesim");
+            let vector = format!("{workload}/96x2/cyclesim-vec");
+            let su = units.get(&scalar).unwrap_or_else(|| panic!("missing {scalar}"));
+            let vu = units.get(&vector).unwrap_or_else(|| panic!("missing {vector}"));
+            assert_eq!(su, vu, "{workload}: twins must measure identical work");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!   forecast [--syn N]            train forecaster + predict without EDA
 //!   reproduce --table N | --fig N | --all
 //!   serve <tag|name>              streaming inference service (+ bench/TCP)
-//!   bench [run|list|record|diff|check]   rebar-style benchmark harness
+//!   bench [run|list|record|diff|check|speedup]   rebar-style benchmark harness
 //!
 //! The flow-heavy commands (`flow`, `forecast`, `reproduce`) run on the
 //! parallel, cached flow-campaign runner: `--workers N` pins the worker
@@ -44,6 +44,7 @@ use tnngen::report::experiments::{self, Effort};
 use tnngen::report::{f2, f3, Table};
 use tnngen::rtl::{generate_column, verilog::emit_verilog};
 use tnngen::serve::{run_open_loop, LoadSpec, ServeOpts, TcpFront, TnnService};
+use tnngen::sim::engine::{set_default_kind, EngineKind};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -78,6 +79,13 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   bench diff <baseline.json> <current.json>
   bench check --against <baseline.json> [--current <artifact.json>]
         [--filter PATTERNS] [--fail-threshold R] [--report-only] [run flags]
+  bench speedup [--current <artifact.json>] [--min R] [--filter PATTERNS]
+        [--report-only] [run flags]
+
+  --engine scalar|vector (any command) pins the kernel backend every
+  simulator defaults to; TNNGEN_ENGINE does the same from the
+  environment, and the auto-detected default is vector. Backends are
+  bit-identical (differentially tested); the choice only affects speed.
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
@@ -109,7 +117,11 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   globs matched against the whole workload/design/engine name); on
   `bench check` it narrows BOTH sides of the gate, which is how CI
   hard-gates the sim hot-path rows at 1.25x while the full matrix stays
-  report-only. See docs/BENCHMARKS.md for the methodology and schema.";
+  report-only. `bench speedup` pairs each scalar micro row with its
+  `-vec` twin INSIDE one artifact and exits 3 unless every pair shows at
+  least --min x (default 2.0) scalar/vector speedup — the same-run,
+  same-machine vector-backend gate. See docs/BENCHMARKS.md for the
+  methodology and schema.";
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -167,6 +179,16 @@ fn backend_of(args: &Args) -> Result<(SimBackend, Coordinator)> {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // --engine pins the process-default kernel backend before anything
+    // builds a simulator (the per-sim `with_engine` overrides still win).
+    // Without the flag the default comes from TNNGEN_ENGINE, falling back
+    // to the auto-detected vector backend; results are identical either
+    // way (the backends are differentially conformance-tested).
+    if let Some(name) = args.flag("engine") {
+        let kind = EngineKind::parse(name)
+            .with_context(|| format!("unknown engine {name:?} (scalar|vector)"))?;
+        set_default_kind(kind);
+    }
     match args.command.as_str() {
         "list" => {
             let mut t = Table::new(&["tag", "benchmark", "modality", "p", "q", "synapses"]);
@@ -586,9 +608,9 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-/// The `tnngen bench` subcommands (run/list/record/diff/check). `check`
-/// exits the process with code 3 when the regression gate trips, unless
-/// `--report-only` demotes the gate to a report.
+/// The `tnngen bench` subcommands (run/list/record/diff/check/speedup).
+/// `check` and `speedup` exit the process with code 3 when their gate
+/// trips, unless `--report-only` demotes the gate to a report.
 fn bench_cmd(args: &Args) -> Result<()> {
     let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("run");
     let profile = if args.flag_bool("quick") {
@@ -711,6 +733,41 @@ fn bench_cmd(args: &Args) -> Result<()> {
                         "bench check failed: {} regression(s) above {:.2}x",
                         outcome.regressions.len(),
                         spec.fail_threshold
+                    );
+                    std::process::exit(3);
+                }
+            }
+            Ok(())
+        }
+        "speedup" => {
+            // Cross-backend gate WITHIN one artifact: every scalar micro
+            // row must have its `-vec` twin at least --min x faster. No
+            // baseline file is involved, so the verdict is same-run,
+            // same-machine — immune to hardware drift between recordings.
+            let min = args.flag_f64("min", 2.0)?;
+            ensure!(min > 1.0, "--min must be > 1.0");
+            let filter = args.flag_str("filter", "");
+            let mut artifact = match args.flag("current") {
+                Some(p) => bench::load_bench(std::path::Path::new(p))?,
+                None => bench_run(args, profile, true)?,
+            };
+            artifact.entries.retain(|e| bench::name_matches(filter, &e.name));
+            let rows = bench::speedups(&artifact);
+            ensure!(
+                !rows.is_empty(),
+                "no scalar/vector row pairs to judge (a `--filter` must keep BOTH a \
+                 `cyclesim` row and its `cyclesim-vec` twin; try `tnngen bench list`)"
+            );
+            print!("{}", bench::render_speedup(&rows, min));
+            let outcome = bench::check_speedup(&artifact, min);
+            println!("bench speedup: {}", outcome.summary(min));
+            if !outcome.passed() {
+                if args.flag_bool("report-only") {
+                    println!("report-only: speedup gate NOT enforced");
+                } else {
+                    eprintln!(
+                        "bench speedup failed: {} pair(s) below the {min:.2}x minimum",
+                        outcome.failures.len()
                     );
                     std::process::exit(3);
                 }

@@ -24,6 +24,7 @@ use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use crate::config::ColumnConfig;
+use crate::sim::engine::default_kind;
 use crate::sim::{MultiLayerBatchSim, MultiLayerScratch, MultiLayerSim};
 
 use super::batcher::Batcher;
@@ -90,7 +91,12 @@ pub(crate) fn reader_loop(
     throttle: Duration,
 ) {
     let mut snap = weights.load();
-    let mut stack = MultiLayerSim::new(&cfgs, 0).expect("stack validated at service start");
+    // Replicas route their kernels through the process-default backend
+    // (`TNNGEN_ENGINE` / `--engine`); results are engine-invariant, so all
+    // shards agree regardless of which backend computes them.
+    let mut stack = MultiLayerSim::new(&cfgs, 0)
+        .expect("stack validated at service start")
+        .with_engine(default_kind());
     stack.load_flat_weights(&snap.weights);
     let mut engine = MultiLayerBatchSim::from_stack(stack).with_workers(1);
     let mut metas: Vec<(u64, std::time::Instant, std::sync::mpsc::Sender<InferReply>)> =
@@ -143,6 +149,10 @@ pub(crate) fn learner_loop(
     snapshot_every: usize,
 ) {
     let every = snapshot_every.max(1);
+    // STDP runs on the process-default backend too; the learner trajectory
+    // is engine-invariant (conformance-pinned), so snapshots match the
+    // scalar reference bit for bit.
+    stack.set_engine(default_kind());
     let mut scratch = MultiLayerScratch::for_stack(&stack);
     let mut steps = 0usize;
     let mut dirty = false;

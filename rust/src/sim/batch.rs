@@ -27,7 +27,8 @@ use crate::coordinator::jobs::{chunk_ranges, default_workers};
 use crate::coordinator::pool::{self, FillBuf, SlicePtr};
 use crate::util::Rng;
 
-use super::column::{wta_winner, CycleSim, StepOutput};
+use super::column::{CycleSim, StepOutput};
+use super::engine::EngineKind;
 use super::multilayer::MultiLayerSim;
 use super::scratch::{MultiLayerScratch, SimScratch};
 
@@ -160,6 +161,19 @@ impl BatchSim {
         self.workers
     }
 
+    /// Re-point the wrapped simulator at a specific kernel backend
+    /// (builder style; results are bit-identical across backends, see
+    /// `sim::engine`).
+    pub fn with_engine(mut self, kind: EngineKind) -> Self {
+        self.sim.set_engine(kind);
+        self
+    }
+
+    /// The kernel backend the wrapped simulator dispatches to.
+    pub fn engine_kind(&self) -> EngineKind {
+        self.sim.engine_kind()
+    }
+
     /// The simulated column design.
     pub fn config(&self) -> &ColumnConfig {
         &self.sim.config
@@ -208,10 +222,8 @@ impl BatchSim {
 
     /// Inference for every pre-encoded sample (parallel).
     pub fn infer_encoded_batch(&self, spikes: &[Vec<i32>]) -> Vec<StepOutput> {
-        let params = &self.sim.config.params;
         self.map_samples(spikes.len(), |i, scratch| {
-            self.sim.response_into(&spikes[i], scratch);
-            let winner = wta_winner(&scratch.y, params.t_r, params.tie);
+            let winner = self.sim.infer_encoded_winner_with(&spikes[i], scratch);
             StepOutput { winner, y: scratch.y.clone() }
         })
     }
@@ -353,6 +365,13 @@ impl MultiLayerBatchSim {
     /// The pinned worker count.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Re-point every layer of the wrapped stack at a specific kernel
+    /// backend (builder style; results are bit-identical across backends).
+    pub fn with_engine(mut self, kind: EngineKind) -> Self {
+        self.stack.set_engine(kind);
+        self
     }
 
     /// Unwrap back into the per-sample stack (weights preserved).

@@ -8,8 +8,8 @@
 
 use crate::config::{ColumnConfig, Response, TieBreak, TnnParams};
 
-use super::encode::{encode_window, encode_window_into};
-use super::event::{event_driven_indexed_into, EventScratch};
+use super::engine::{default_kind, engine_of, ColumnView, Engine, EngineKind};
+use super::event::EventScratch;
 use super::scratch::SimScratch;
 
 /// Membrane potentials for flat row-major weights `w` (stride `p`) and
@@ -150,12 +150,20 @@ pub struct StepOutput {
 
 /// Cycle-accurate native simulator for one column; the drop-in counterpart
 /// of `runtime::TnnColumn` used for cross-validation and fast sweeps.
+///
+/// Every kernel call (encode, response, WTA, STDP) is routed through the
+/// simulator's [`Engine`] backend — the process default at construction
+/// time, overridable per instance with [`CycleSim::with_engine`]. All
+/// backends are bit-exact with each other (see `sim::engine`), so the
+/// choice only affects speed.
 #[derive(Clone)]
 pub struct CycleSim {
     /// The simulated column design (geometry + TNN hyper-parameters).
     pub config: ColumnConfig,
     /// Real (unpadded) weights, flat row-major `[q * p]`, stride `p`.
     pub weights: Vec<f32>,
+    /// Which kernel backend this simulator dispatches to.
+    engine: EngineKind,
 }
 
 impl CycleSim {
@@ -164,7 +172,7 @@ impl CycleSim {
     /// unpad/repad dance.
     pub fn new(config: ColumnConfig, seed: u64) -> Self {
         let weights = crate::runtime::column::init_weights_flat(&config, seed);
-        CycleSim { config, weights }
+        CycleSim { config, weights, engine: default_kind() }
     }
 
     /// Construct from a row-per-neuron weight matrix (used by RTL
@@ -175,13 +183,48 @@ impl CycleSim {
             assert_eq!(row.len(), config.p);
         }
         let weights = rows.concat();
-        CycleSim { config, weights }
+        CycleSim { config, weights, engine: default_kind() }
     }
 
     /// Construct directly from flat row-major weights `[q * p]`.
     pub fn from_flat(config: ColumnConfig, weights: Vec<f32>) -> Self {
         assert_eq!(weights.len(), config.q * config.p);
-        CycleSim { config, weights }
+        CycleSim { config, weights, engine: default_kind() }
+    }
+
+    /// Re-point this simulator at a specific kernel backend (builder
+    /// style). Results are bit-identical across backends; the differential
+    /// tests use this so they never mutate the process-wide default.
+    pub fn with_engine(mut self, kind: EngineKind) -> Self {
+        self.set_engine(kind);
+        self
+    }
+
+    /// In-place form of [`CycleSim::with_engine`] (used by the batched and
+    /// multi-layer wrappers, which own their sims by field).
+    pub fn set_engine(&mut self, kind: EngineKind) {
+        self.engine = kind;
+    }
+
+    /// The kernel backend this simulator dispatches to.
+    pub fn engine_kind(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// The backend implementation (a stateless `'static` object, so it can
+    /// be held across a later `&mut self.weights` borrow).
+    fn eng(&self) -> &'static dyn Engine {
+        engine_of(self.engine)
+    }
+
+    /// Borrowed kernel view of this column's state.
+    fn view(&self) -> ColumnView<'_> {
+        ColumnView {
+            w: &self.weights,
+            p: self.config.p,
+            theta: self.config.theta(),
+            params: &self.config.params,
+        }
     }
 
     /// Weight row for neuron `j`.
@@ -200,19 +243,16 @@ impl CycleSim {
     }
 
     /// Temporal encoding of one raw window under the column's parameters
-    /// (see [`encode_window`]).
+    /// (see [`encode_window`](super::encode::encode_window)).
     pub fn encode(&self, x: &[f32]) -> Vec<i32> {
-        encode_window(
-            x,
-            self.config.params.t,
-            self.config.params.t_r,
-            self.config.params.sparse_cutoff,
-        )
+        let mut out = Vec::with_capacity(x.len());
+        self.encode_into(x, &mut out);
+        out
     }
 
     /// [`Self::encode`] into a caller buffer (alloc-free once warm).
     pub fn encode_into(&self, x: &[f32], out: &mut Vec<i32>) {
-        encode_window_into(
+        self.eng().encode_into(
             x,
             self.config.params.t,
             self.config.params.t_r,
@@ -229,28 +269,27 @@ impl CycleSim {
     /// property-tested equal to the cycle-accurate sweep. LIF keeps the
     /// cycle-accurate sweep (non-monotone potentials).
     pub fn response(&self, s: &[i32]) -> Vec<i32> {
-        let params = &self.config.params;
-        let theta = self.config.theta();
-        match params.response {
-            Response::Rnl | Response::Snl => {
-                super::event::event_driven(&self.weights, self.config.p, s, theta, params)
-            }
-            Response::Lif => potentials(&self.weights, self.config.p, s, params)
-                .iter()
-                .map(|v| first_crossing(v, theta, params.t_r))
-                .collect(),
-        }
+        let mut events = EventScratch::new(self.config.params.t_r);
+        let mut v = Vec::new();
+        let mut y = Vec::new();
+        self.response_parts(s, &mut events, &mut v, &mut y);
+        y
     }
 
     /// Cycle-accurate response (the direct-implementation reference used by
     /// the cross-validation tests).
     pub fn response_cycle_accurate(&self, s: &[i32]) -> Vec<i32> {
-        let params = &self.config.params;
-        let theta = self.config.theta();
-        potentials(&self.weights, self.config.p, s, params)
-            .iter()
-            .map(|v| first_crossing(v, theta, params.t_r))
-            .collect()
+        let mut v = Vec::new();
+        let mut y = Vec::new();
+        self.response_cycle_into(s, &mut v, &mut y);
+        y
+    }
+
+    /// [`Self::response_cycle_accurate`] into caller buffers (`v` receives
+    /// the potential sweep, `y` the first crossings); allocation-free once
+    /// the buffers are warm — the cycle-path bench rows run on this.
+    pub fn response_cycle_into(&self, s: &[i32], v: &mut Vec<f32>, y: &mut Vec<i32>) {
+        self.eng().response_cycle_parts(self.view(), s, v, y);
     }
 
     /// The response core writing into caller buffers: `events` and `v`
@@ -264,23 +303,7 @@ impl CycleSim {
         v: &mut Vec<f32>,
         y: &mut Vec<i32>,
     ) {
-        let params = &self.config.params;
-        let theta = self.config.theta();
-        match params.response {
-            Response::Rnl | Response::Snl => {
-                events.load(s);
-                event_driven_indexed_into(&self.weights, self.config.p, events, theta, params, y);
-            }
-            Response::Lif => {
-                potentials_into(&self.weights, self.config.p, s, params, v);
-                let t_r = params.t_r;
-                y.clear();
-                y.extend(
-                    v.chunks_exact(t_r.max(1) as usize)
-                        .map(|row| first_crossing(row, theta, t_r)),
-                );
-            }
-        }
+        self.eng().response_parts(self.view(), s, events, v, y);
     }
 
     /// [`Self::response`] into caller scratch (fills `scratch.y`);
@@ -294,7 +317,7 @@ impl CycleSim {
     /// allocation anywhere on the path.
     pub fn infer_encoded_winner_with(&self, s: &[i32], scratch: &mut SimScratch) -> i32 {
         self.response_into(s, scratch);
-        wta_winner(&scratch.y, self.config.params.t_r, self.config.params.tie)
+        self.eng().wta_winner(&scratch.y, self.config.params.t_r, self.config.params.tie)
     }
 
     /// Winner-only inference for one raw window using caller scratch
@@ -303,7 +326,7 @@ impl CycleSim {
     pub fn infer_winner_with(&self, x: &[f32], scratch: &mut SimScratch) -> i32 {
         self.encode_into(x, &mut scratch.s);
         self.response_parts(&scratch.s, &mut scratch.events, &mut scratch.v, &mut scratch.y);
-        wta_winner(&scratch.y, self.config.params.t_r, self.config.params.tie)
+        self.eng().wta_winner(&scratch.y, self.config.params.t_r, self.config.params.tie)
     }
 
     /// Inference for one already-encoded window. Winner-only callers
@@ -311,7 +334,7 @@ impl CycleSim {
     /// output allocation entirely.
     pub fn infer_encoded(&self, s: &[i32]) -> StepOutput {
         let y = self.response(s);
-        let winner = wta_winner(&y, self.config.params.t_r, self.config.params.tie);
+        let winner = self.eng().wta_winner(&y, self.config.params.t_r, self.config.params.tie);
         StepOutput { winner, y }
     }
 
@@ -323,9 +346,12 @@ impl CycleSim {
 
     /// One online STDP learning step on an already-encoded window.
     pub fn step_encoded(&mut self, s: &[i32]) -> StepOutput {
+        let params = self.config.params;
+        let eng = self.eng();
         let y = self.response(s);
-        let (winner, gated) = wta(&y, self.config.params.t_r, self.config.params.tie);
-        stdp_update(&mut self.weights, self.config.p, s, &gated, &self.config.params);
+        let mut gated = Vec::with_capacity(y.len());
+        let winner = eng.wta_gate_into(&y, params.t_r, params.tie, &mut gated);
+        eng.stdp_update(&mut self.weights, self.config.p, s, &gated, &params);
         StepOutput { winner, y }
     }
 
@@ -336,9 +362,10 @@ impl CycleSim {
     /// loop and epoch sweeps run on this.
     pub fn step_encoded_with(&mut self, s: &[i32], scratch: &mut SimScratch) -> i32 {
         let params = self.config.params;
+        let eng = self.eng();
         self.response_parts(s, &mut scratch.events, &mut scratch.v, &mut scratch.y);
-        let winner = wta_gate_into(&scratch.y, params.t_r, params.tie, &mut scratch.gated);
-        stdp_update(&mut self.weights, self.config.p, s, &scratch.gated, &params);
+        let winner = eng.wta_gate_into(&scratch.y, params.t_r, params.tie, &mut scratch.gated);
+        eng.stdp_update(&mut self.weights, self.config.p, s, &scratch.gated, &params);
         winner
     }
 
@@ -355,11 +382,12 @@ impl CycleSim {
     /// allocations — the multi-layer greedy training replay runs on this.
     pub fn step_with(&mut self, x: &[f32], scratch: &mut SimScratch) -> i32 {
         let params = self.config.params;
+        let eng = self.eng();
         let SimScratch { events, v, y, gated, s } = scratch;
         self.encode_into(x, s);
         self.response_parts(s, events, v, y);
-        let winner = wta_gate_into(y, params.t_r, params.tie, gated);
-        stdp_update(&mut self.weights, self.config.p, s, gated, &params);
+        let winner = eng.wta_gate_into(y, params.t_r, params.tie, gated);
+        eng.stdp_update(&mut self.weights, self.config.p, s, gated, &params);
         winner
     }
 
@@ -373,9 +401,10 @@ impl CycleSim {
     pub fn step_supervised(&mut self, x: &[f32], label: usize) -> StepOutput {
         assert!(label < self.config.q, "label out of range");
         let params = self.config.params;
+        let eng = self.eng();
         let s = self.encode(x);
         let y = self.response(&s);
-        let (winner, _) = wta(&y, params.t_r, params.tie);
+        let winner = eng.wta_winner(&y, params.t_r, params.tie);
         let mut gated = vec![params.t_r; self.config.q];
         gated[label] = y[label].min(params.t_r - 1);
         for (j, g) in gated.iter_mut().enumerate() {
@@ -383,7 +412,7 @@ impl CycleSim {
                 *g = -1; // fired on the wrong class: backoff all synapses
             }
         }
-        stdp_update(&mut self.weights, self.config.p, &s, &gated, &params);
+        eng.stdp_update(&mut self.weights, self.config.p, &s, &gated, &params);
         StepOutput { winner, y }
     }
 
@@ -620,6 +649,77 @@ mod tests {
                 let w2 = wta_gate_into(&y, 32, tie, &mut gated2);
                 assert_eq!((w2, gated2), (winner, gated), "{y:?} {tie:?}");
             }
+        }
+    }
+
+    /// Independent WTA reference: plain argmin with first/last tie
+    /// position, -1 when nothing fires before `t_r`.
+    fn ref_winner(y: &[i32], t_r: i32, tie: TieBreak) -> i32 {
+        match y.iter().copied().min() {
+            None => -1,
+            Some(min) if min >= t_r => -1,
+            Some(min) => {
+                let pos = match tie {
+                    TieBreak::Low => y.iter().position(|&v| v == min).unwrap(),
+                    TieBreak::High => y.iter().rposition(|&v| v == min).unwrap(),
+                };
+                pos as i32
+            }
+        }
+    }
+
+    #[test]
+    fn wta_tie_breaks_exhaustive_small_domain() {
+        // EVERY spike-time combination for columns of 1..=4 neurons over
+        // the value domain [0, t_r] with a small window (t_r = 3): this
+        // includes all-silent columns (every y == t_r), all-equal-at-t_r
+        // ties, every mixed tie layout and every fired/silent interleaving.
+        // Pins wta_winner / wta_gate_into / wta mutual agreement, the
+        // independent argmin reference, and both Engine backends.
+        use crate::sim::engine::{Engine, ScalarEngine, VectorEngine};
+        let t_r = 3i32;
+        let domain = t_r + 1; // values 0..=t_r
+        for len in 1usize..=4 {
+            let combos = (domain as usize).pow(len as u32);
+            for code in 0..combos {
+                let mut y = Vec::with_capacity(len);
+                let mut rest = code;
+                for _ in 0..len {
+                    y.push((rest % domain as usize) as i32);
+                    rest /= domain as usize;
+                }
+                for tie in [TieBreak::Low, TieBreak::High] {
+                    let expect = ref_winner(&y, t_r, tie);
+                    let (winner, gated) = wta(&y, t_r, tie);
+                    assert_eq!(winner, expect, "{y:?} {tie:?}");
+                    assert_eq!(wta_winner(&y, t_r, tie), expect, "{y:?} {tie:?}");
+                    let mut gated2 = Vec::new();
+                    let w2 = wta_gate_into(&y, t_r, tie, &mut gated2);
+                    assert_eq!((w2, &gated2), (expect, &gated), "{y:?} {tie:?}");
+                    // Gated semantics: winner keeps its time, rest silenced.
+                    for (j, (&g, &yj)) in gated.iter().zip(&y).enumerate() {
+                        if j as i32 == winner {
+                            assert_eq!(g, yj, "{y:?} {tie:?}");
+                        } else {
+                            assert_eq!(g, t_r, "{y:?} {tie:?}");
+                        }
+                    }
+                    assert_eq!(winner == -1, y.iter().all(|&v| v >= t_r), "{y:?}");
+                    // Both backends agree with the free functions.
+                    for e in [&ScalarEngine as &dyn Engine, &VectorEngine] {
+                        assert_eq!(e.wta_winner(&y, t_r, tie), expect, "{y:?} {tie:?}");
+                        let mut g3 = vec![-7]; // stale contents must not leak
+                        let w3 = e.wta_gate_into(&y, t_r, tie, &mut g3);
+                        assert_eq!((w3, &g3), (expect, &gated), "{y:?} {tie:?}");
+                    }
+                }
+            }
+        }
+        // Degenerate empty column: no winner, empty gate.
+        for tie in [TieBreak::Low, TieBreak::High] {
+            assert_eq!(wta_winner(&[], t_r, tie), -1);
+            let (w, g) = wta(&[], t_r, tie);
+            assert_eq!((w, g), (-1, Vec::new()));
         }
     }
 

@@ -1,0 +1,833 @@
+//! Pluggable columnar simulation backends behind one [`Engine`] trait.
+//!
+//! The four TNN kernels (encode → response → WTA → STDP) used to be free
+//! functions called directly by [`CycleSim`](super::CycleSim) and everything
+//! stacked on top of it. This module turns them into trait methods over
+//! columnar state so alternative backends can slot in underneath the whole
+//! sim/batch/serve tower without touching any call site above the column:
+//!
+//! * [`ScalarEngine`] — the reference backend. Pure delegation to the
+//!   original free functions in [`encode`](super::encode),
+//!   [`event`](super::event) and [`column`](super::column); by construction
+//!   it cannot drift from them.
+//! * [`VectorEngine`] — manually unrolled lane loops (fixed [`LANES`]-wide
+//!   blocks of independent f32/f64/i32 chains) over the same flat row-major
+//!   weight layout. Event-driven responses vectorize ACROSS NEURONS (one
+//!   lane per neuron row, each lane replaying the exact scalar event walk),
+//!   cycle-accurate sweeps vectorize along the contiguous TIME axis of each
+//!   potential row, and encode/WTA/STDP are elementwise or reduction loops
+//!   written so the compiler can keep whole blocks in SIMD registers.
+//!
+//! # Exactness contract
+//!
+//! `VectorEngine` is BIT-EXACT with `ScalarEngine`, not merely close. Each
+//! kernel preserves the scalar per-element operation order:
+//!
+//! * encode — min/max are associative-commutative selections (exact under
+//!   any reassociation, including the `f32::min`/`f32::max` NaN rules), the
+//!   per-element map is unchanged, and [`f32::round_ties_even`] computes the
+//!   same IEEE roundTiesToEven as `encode::round_half_even` (asserted
+//!   against each other by the conformance harness).
+//! * response (event path) — lanes hold whole neurons; each lane performs
+//!   the identical accumulate/solve sequence in the identical event order,
+//!   so no floating-point sum is ever reassociated. After a lane crosses,
+//!   its result is pinned; later lane arithmetic cannot change it.
+//! * response (cycle path) — per potential element, synapse contributions
+//!   arrive in the same ascending-synapse order as the scalar sweep; the
+//!   LIF decay table stores `lif_decay.powi(d)` — the very values the
+//!   scalar sweep computes per element.
+//! * WTA — integer selection, exact by construction.
+//! * STDP — the per-synapse update is the same arithmetic with the
+//!   branch on the OUTPUT spike hoisted out of the inner loop.
+//!
+//! `rust/tests/engine_conformance.rs` pins all of this differentially
+//! (randomized geometries, edge cases, all paper designs, stack depths and
+//! worker counts). The comparator there also supports tolerance bounds so a
+//! future backend that genuinely reassociates (e.g. an accelerator) can
+//! document its drift instead of silently failing, but both in-tree
+//! backends assert exact equality.
+//!
+//! # Selection
+//!
+//! The process-wide default backend is resolved once from the
+//! `TNNGEN_ENGINE` environment variable (`scalar` or `vector`), falling
+//! back to [`EngineKind::Vector`] — the lane kernels are portable scalar
+//! Rust, so there is no CPU feature to probe; "auto-detected" means the
+//! fastest always-available backend. The `--engine` CLI flag overrides it
+//! via [`set_default_kind`]. Sim objects snapshot the default at
+//! construction and can be re-pointed per instance with
+//! `CycleSim::with_engine` (and the `with_engine` builders layered above
+//! it), which is what the differential tests use so they never mutate
+//! process state.
+
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+
+use crate::config::{Response, TieBreak, TnnParams};
+
+use super::column;
+use super::encode;
+use super::event::{self, EventScratch};
+
+/// Lane width of the vector backend's unrolled blocks. Four independent
+/// chains is enough to hide FP add latency on current x86/aarch64 cores
+/// while keeping the row-remainder handling trivial.
+pub const LANES: usize = 4;
+
+/// Borrowed view of one column's read-only state, bundling what every
+/// response kernel needs (weights + geometry + threshold + parameters).
+#[derive(Clone, Copy)]
+pub struct ColumnView<'a> {
+    /// Flat row-major weights `[q * p]`, stride `p`.
+    pub w: &'a [f32],
+    /// Synapses per neuron (the row stride of `w`).
+    pub p: usize,
+    /// Firing threshold theta.
+    pub theta: f32,
+    /// TNN hyper-parameters.
+    pub params: &'a TnnParams,
+}
+
+/// One simulation backend: the four TNN kernels plus a composed inference
+/// entry point, all over columnar state and caller-owned scratch buffers
+/// (zero steady-state allocations, same contract as the PR 5 hot path).
+///
+/// Implementations MUST be semantically interchangeable: the differential
+/// conformance harness (`rust/tests/engine_conformance.rs`) runs every
+/// backend against [`ScalarEngine`] and the docs above state how close
+/// "interchangeable" has to be (bit-exact for the in-tree backends).
+pub trait Engine: Send + Sync {
+    /// Stable backend name (what `--engine` accepts, lowercase).
+    fn name(&self) -> &'static str;
+
+    /// Temporal encoding of one raw window into `out` (cleared first):
+    /// min-max normalize, intensity→latency map, sparse cutoff to the
+    /// `t_r` no-spike sentinel. Must match `encode::encode_window_into`.
+    fn encode_into(&self, x: &[f32], t: i32, t_r: i32, cutoff: f32, out: &mut Vec<i32>);
+
+    /// Response with the production engine dispatch (event-driven walk for
+    /// SNL/RNL, cycle-accurate sweep for LIF): output spike times into `y`.
+    /// `events` and `v` are working scratch; `s` is the encoded input.
+    fn response_parts(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        events: &mut EventScratch,
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    );
+
+    /// Cycle-accurate response for ALL response families (the
+    /// direct-implementation reference semantics): potential sweep into
+    /// `v`, first crossings into `y`.
+    fn response_cycle_parts(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    );
+
+    /// 1-WTA winner (or -1 when nothing fired before `t_r`). Must match
+    /// `column::wta_winner`.
+    fn wta_winner(&self, y: &[i32], t_r: i32, tie: TieBreak) -> i32;
+
+    /// 1-WTA with the gated spike times written into caller scratch (the
+    /// STDP path needs them); returns the winner. Provided in terms of
+    /// [`Engine::wta_winner`] — the gating itself is a trivial select.
+    fn wta_gate_into(&self, y: &[i32], t_r: i32, tie: TieBreak, gated: &mut Vec<i32>) -> i32 {
+        let winner = self.wta_winner(y, t_r, tie);
+        gated.clear();
+        gated.extend(
+            y.iter()
+                .enumerate()
+                .map(|(j, &yj)| if j as i32 == winner { yj } else { t_r }),
+        );
+        winner
+    }
+
+    /// Expected-value STDP update in place over flat row-major weights
+    /// (stride `p`, one row per entry of `gated`). Must match
+    /// `column::stdp_update`.
+    fn stdp_update(&self, w: &mut [f32], p: usize, s: &[i32], gated: &[i32], params: &TnnParams);
+
+    /// Winner-only inference for one already-encoded window: response into
+    /// `y`, then WTA. Provided by composing the kernels above.
+    fn infer_encoded_winner(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        events: &mut EventScratch,
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) -> i32 {
+        self.response_parts(col, s, events, v, y);
+        self.wta_winner(y, col.params.t_r, col.params.tie)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Which [`Engine`] backend to use. `Copy` so sims can snapshot it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EngineKind {
+    /// Reference scalar backend ([`ScalarEngine`]).
+    Scalar = 0,
+    /// Unrolled lane-loop backend ([`VectorEngine`]).
+    Vector = 1,
+}
+
+impl EngineKind {
+    /// Parse a backend name (`scalar` / `vector`, case-insensitive) — the
+    /// `--engine` flag and the `TNNGEN_ENGINE` environment variable.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(EngineKind::Scalar),
+            "vector" => Some(EngineKind::Vector),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (inverse of [`EngineKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Scalar => "scalar",
+            EngineKind::Vector => "vector",
+        }
+    }
+
+    /// Every available backend, scalar (the reference) first.
+    pub fn all() -> [EngineKind; 2] {
+        [EngineKind::Scalar, EngineKind::Vector]
+    }
+}
+
+/// Sentinel: the process default has not been resolved yet.
+const KIND_UNSET: u8 = u8::MAX;
+
+static DEFAULT_KIND: AtomicU8 = AtomicU8::new(KIND_UNSET);
+
+/// The process-wide default backend: an explicit [`set_default_kind`] call
+/// wins, else the `TNNGEN_ENGINE` environment variable (resolved once),
+/// else [`EngineKind::Vector`]. Sims snapshot this at construction.
+pub fn default_kind() -> EngineKind {
+    match DEFAULT_KIND.load(Relaxed) {
+        0 => EngineKind::Scalar,
+        1 => EngineKind::Vector,
+        _ => {
+            let kind = std::env::var("TNNGEN_ENGINE")
+                .ok()
+                .and_then(|v| EngineKind::parse(&v))
+                .unwrap_or(EngineKind::Vector);
+            DEFAULT_KIND.store(kind as u8, Relaxed);
+            kind
+        }
+    }
+}
+
+/// Override the process-wide default backend (the `--engine` CLI flag).
+/// Only affects sims constructed AFTER the call; existing instances keep
+/// the kind they snapshotted.
+pub fn set_default_kind(kind: EngineKind) {
+    DEFAULT_KIND.store(kind as u8, Relaxed);
+}
+
+/// The backend implementation for a kind. Backends are stateless unit
+/// structs, so a `'static` borrow is always available.
+pub fn engine_of(kind: EngineKind) -> &'static dyn Engine {
+    match kind {
+        EngineKind::Scalar => &ScalarEngine,
+        EngineKind::Vector => &VectorEngine,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference backend
+// ---------------------------------------------------------------------------
+
+/// The reference backend: pure delegation to the original scalar kernels.
+/// By construction it cannot drift from the free functions the rest of the
+/// crate (and the property/conformance suites) treat as ground truth.
+pub struct ScalarEngine;
+
+impl Engine for ScalarEngine {
+    fn name(&self) -> &'static str {
+        EngineKind::Scalar.name()
+    }
+
+    fn encode_into(&self, x: &[f32], t: i32, t_r: i32, cutoff: f32, out: &mut Vec<i32>) {
+        encode::encode_window_into(x, t, t_r, cutoff, out);
+    }
+
+    fn response_parts(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        events: &mut EventScratch,
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) {
+        match col.params.response {
+            Response::Rnl | Response::Snl => {
+                events.load(s);
+                event::event_driven_indexed_into(col.w, col.p, events, col.theta, col.params, y);
+            }
+            Response::Lif => self.response_cycle_parts(col, s, v, y),
+        }
+    }
+
+    fn response_cycle_parts(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) {
+        column::potentials_into(col.w, col.p, s, col.params, v);
+        let t_r = col.params.t_r;
+        y.clear();
+        y.extend(
+            v.chunks_exact(t_r.max(1) as usize)
+                .map(|row| column::first_crossing(row, col.theta, t_r)),
+        );
+    }
+
+    fn wta_winner(&self, y: &[i32], t_r: i32, tie: TieBreak) -> i32 {
+        column::wta_winner(y, t_r, tie)
+    }
+
+    fn wta_gate_into(&self, y: &[i32], t_r: i32, tie: TieBreak, gated: &mut Vec<i32>) -> i32 {
+        column::wta_gate_into(y, t_r, tie, gated)
+    }
+
+    fn stdp_update(&self, w: &mut [f32], p: usize, s: &[i32], gated: &[i32], params: &TnnParams) {
+        column::stdp_update(w, p, s, gated, params);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector backend
+// ---------------------------------------------------------------------------
+
+/// Unrolled lane-loop backend over the flat row-major (struct-of-arrays
+/// per column) weight layout. See the module docs for the per-kernel
+/// vectorization strategy and the bit-exactness argument.
+pub struct VectorEngine;
+
+impl Engine for VectorEngine {
+    fn name(&self) -> &'static str {
+        EngineKind::Vector.name()
+    }
+
+    fn encode_into(&self, x: &[f32], t: i32, t_r: i32, cutoff: f32, out: &mut Vec<i32>) {
+        let (lo, hi) = minmax_lanes(x);
+        let span = (hi - lo).max(1e-9);
+        let t1 = (t - 1) as f32;
+        out.clear();
+        out.extend(x.iter().map(|&v| {
+            let xh = (v - lo) / span;
+            if xh < cutoff {
+                t_r
+            } else {
+                // f32::round_ties_even is IEEE roundTiesToEven — the same
+                // function encode::round_half_even computes branchily; the
+                // conformance harness asserts them equal.
+                ((1.0 - xh) * t1).round_ties_even() as i32
+            }
+        }));
+    }
+
+    fn response_parts(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        events: &mut EventScratch,
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) {
+        match col.params.response {
+            Response::Rnl | Response::Snl => {
+                events.load(s);
+                response_event_lanes(col, events, y);
+            }
+            Response::Lif => self.response_cycle_parts(col, s, v, y),
+        }
+    }
+
+    fn response_cycle_parts(
+        &self,
+        col: ColumnView<'_>,
+        s: &[i32],
+        v: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) {
+        potentials_time_lanes(col, s, v);
+        let t_r = col.params.t_r;
+        y.clear();
+        y.extend(
+            v.chunks_exact(t_r.max(1) as usize)
+                .map(|row| column::first_crossing(row, col.theta, t_r)),
+        );
+    }
+
+    fn wta_winner(&self, y: &[i32], t_r: i32, tie: TieBreak) -> i32 {
+        // Integer argmin with the tie-break comparison hoisted out of the
+        // loop: two branch-free scan bodies instead of a per-element match.
+        let mut best = i32::MAX;
+        let mut winner = -1i32;
+        match tie {
+            TieBreak::Low => {
+                for (j, &yj) in y.iter().enumerate() {
+                    let better = yj < best;
+                    best = if better { yj } else { best };
+                    winner = if better { j as i32 } else { winner };
+                }
+            }
+            TieBreak::High => {
+                for (j, &yj) in y.iter().enumerate() {
+                    let better = yj <= best;
+                    best = if better { yj } else { best };
+                    winner = if better { j as i32 } else { winner };
+                }
+            }
+        }
+        if best >= t_r {
+            winner = -1;
+        }
+        winner
+    }
+
+    fn stdp_update(&self, w: &mut [f32], p: usize, s: &[i32], gated: &[i32], params: &TnnParams) {
+        debug_assert_eq!(w.len(), p * gated.len());
+        let (t, t_r, w_max) = (params.t, params.t_r, params.w_max as f32);
+        for (row, &yj) in w.chunks_exact_mut(p).zip(gated) {
+            // Hoist the per-ROW output-spike branch so each inner loop is a
+            // pure elementwise select + add + clamp over the synapse lane —
+            // identical per-element arithmetic to the scalar quadrants.
+            if yj < t_r {
+                let (cap, back) = (params.mu_capture, -params.mu_backoff);
+                for (wi, &si) in row.iter_mut().zip(s) {
+                    let dw = if si < t && si <= yj { cap } else { back };
+                    *wi = (*wi + dw).clamp(0.0, w_max);
+                }
+            } else {
+                let mu = params.mu_search;
+                for (wi, &si) in row.iter_mut().zip(s) {
+                    let dw = if si < t { mu } else { 0.0 };
+                    *wi = (*wi + dw).clamp(0.0, w_max);
+                }
+            }
+        }
+    }
+}
+
+/// Lane-parallel min/max reduction. Min/max are associative and
+/// commutative selections (including the `f32::min`/`f32::max` NaN-ignoring
+/// rule), so splitting the fold across [`LANES`] accumulators is exact —
+/// same result as the sequential fold in `encode_window_into`.
+fn minmax_lanes(x: &[f32]) -> (f32, f32) {
+    let mut lo = [f32::INFINITY; LANES];
+    let mut hi = [f32::NEG_INFINITY; LANES];
+    let mut chunks = x.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for ((l, h), &v) in lo.iter_mut().zip(hi.iter_mut()).zip(c) {
+            *l = l.min(v);
+            *h = h.max(v);
+        }
+    }
+    for (&v, (l, h)) in chunks.remainder().iter().zip(lo.iter_mut().zip(hi.iter_mut())) {
+        *l = l.min(v);
+        *h = h.max(v);
+    }
+    let lo = lo.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+    let hi = hi.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    (lo, hi)
+}
+
+/// Event-driven response vectorized ACROSS NEURONS: blocks of up to
+/// [`LANES`] rows walk the shared event index together, one lane per
+/// neuron. Every lane performs exactly the scalar
+/// `event::neuron_output_indexed` operation sequence (same event order,
+/// same f32/f64 accumulators, same window solves), so each neuron's output
+/// is bit-identical; the lanes only interleave INDEPENDENT chains.
+fn response_event_lanes(col: ColumnView<'_>, events: &EventScratch, y: &mut Vec<i32>) {
+    let p = col.p.max(1);
+    let q = col.w.len() / p;
+    let t_r = col.params.t_r;
+    y.clear();
+    if col.theta <= 0.0 {
+        // Degenerate threshold: V(0) = 0 already crosses (scalar parity).
+        y.resize(q, 0);
+        return;
+    }
+    for block in col.w.chunks(p * LANES) {
+        let n = block.len() / p;
+        let mut rows: [&[f32]; LANES] = [&[]; LANES];
+        for (slot, row) in rows.iter_mut().zip(block.chunks_exact(p)) {
+            *slot = row;
+        }
+        let mut out = [t_r; LANES];
+        match col.params.response {
+            Response::Snl => snl_event_block(&rows[..n], events, col.theta, t_r, &mut out),
+            Response::Rnl => rnl_event_block(&rows[..n], events, col.theta, t_r, &mut out),
+            Response::Lif => {
+                lif_event_block(&rows[..n], events, col.theta, col.params, t_r, &mut out)
+            }
+        }
+        y.extend_from_slice(&out[..n]);
+    }
+}
+
+/// SNL lanes: piecewise-constant potentials, one running f32 sum per lane,
+/// crossing checked at each event. A crossed lane's output is pinned;
+/// its (now unused) accumulator keeps running, which cannot change it.
+fn snl_event_block(
+    rows: &[&[f32]],
+    events: &EventScratch,
+    theta: f32,
+    t_r: i32,
+    out: &mut [i32; LANES],
+) {
+    let n = rows.len();
+    let mut v = [0.0f32; LANES];
+    let mut done = [false; LANES];
+    let mut remaining = n;
+    for (t, idxs) in events.events() {
+        for &i in idxs {
+            let i = i as usize;
+            for (vl, row) in v[..n].iter_mut().zip(rows) {
+                *vl += row[i];
+            }
+        }
+        for l in 0..n {
+            if !done[l] && v[l] >= theta {
+                done[l] = true;
+                out[l] = t;
+                remaining -= 1;
+            }
+        }
+        if remaining == 0 {
+            return;
+        }
+    }
+    for l in 0..n {
+        if !done[l] {
+            out[l] = t_r;
+        }
+    }
+}
+
+/// RNL lanes: piecewise-linear potentials in f64 (slope = arrived weight),
+/// per-window linear crossing solve — the identical window algebra of the
+/// scalar walk, replicated per lane with frozen state once a lane crosses.
+fn rnl_event_block(
+    rows: &[&[f32]],
+    events: &EventScratch,
+    theta: f32,
+    t_r: i32,
+    out: &mut [i32; LANES],
+) {
+    let n = rows.len();
+    let th = theta as f64;
+    let mut arrived = [0.0f64; LANES];
+    let mut v = [0.0f64; LANES];
+    let mut done = [false; LANES];
+    let mut last_event = 0i32;
+    for (te, idxs) in events.events() {
+        for l in 0..n {
+            if done[l] {
+                continue;
+            }
+            // Window [last_event, te): slope `arrived[l]`, start value `v[l]`.
+            if arrived[l] > 0.0 && v[l] < th {
+                let need = (th - v[l]) / arrived[l];
+                let tc_int = (last_event as f64 + need).ceil() as i32;
+                if tc_int < te {
+                    out[l] = tc_int;
+                    done[l] = true;
+                    continue;
+                }
+            } else if v[l] >= th {
+                out[l] = last_event;
+                done[l] = true;
+                continue;
+            }
+            v[l] += arrived[l] * (te - last_event) as f64;
+        }
+        for &i in idxs {
+            let i = i as usize;
+            for l in 0..n {
+                if !done[l] {
+                    arrived[l] += rows[l][i] as f64;
+                }
+            }
+        }
+        last_event = te;
+    }
+    // Tail window [last_event, T_R).
+    for l in 0..n {
+        if done[l] {
+            continue;
+        }
+        if v[l] >= th {
+            out[l] = last_event;
+            continue;
+        }
+        out[l] = t_r;
+        if arrived[l] > 0.0 {
+            let need = (th - v[l]) / arrived[l];
+            let tc_int = (last_event as f64 + need).ceil() as i32;
+            if tc_int < t_r {
+                out[l] = tc_int;
+            }
+        }
+    }
+}
+
+/// LIF lanes: f64 potentials decaying between events (weights are >= 0, so
+/// a window's maximum is at its start), crossing checked at each event.
+/// The decay factor `lif_decay^(t - last)` is hoisted per event — the same
+/// `powi` value every lane (and the scalar walk) computes.
+fn lif_event_block(
+    rows: &[&[f32]],
+    events: &EventScratch,
+    theta: f32,
+    params: &TnnParams,
+    t_r: i32,
+    out: &mut [i32; LANES],
+) {
+    let n = rows.len();
+    let th = theta as f64;
+    let decay = params.lif_decay as f64;
+    let mut v = [0.0f64; LANES];
+    let mut done = [false; LANES];
+    let mut last = 0i32;
+    for (t, idxs) in events.events() {
+        let dpow = decay.powi(t - last);
+        for vl in &mut v[..n] {
+            *vl *= dpow;
+        }
+        for &i in idxs {
+            let i = i as usize;
+            for (vl, row) in v[..n].iter_mut().zip(rows) {
+                *vl += row[i] as f64;
+            }
+        }
+        last = t;
+        for l in 0..n {
+            if !done[l] && v[l] >= th {
+                done[l] = true;
+                out[l] = t;
+            }
+        }
+    }
+    for l in 0..n {
+        if !done[l] {
+            out[l] = t_r;
+        }
+    }
+}
+
+/// Largest response window the stack-resident LIF decay table covers;
+/// longer windows (or negative spike times) fall back to computing
+/// `powi` per element, exactly as the scalar sweep does everywhere.
+const DECAY_TABLE_MAX: usize = 64;
+
+/// Cycle-accurate potential sweep vectorized along the TIME axis: for each
+/// (row, synapse) pair the inner loop runs over the contiguous tail
+/// `vrow[max(si,0)..]` of the potential row — splat-add (SNL), linear ramp
+/// (RNL) or decay-table multiply (LIF). Per potential element the synapse
+/// contributions arrive in the same ascending-synapse order as the scalar
+/// `column::potentials_into`, so every sum is bit-identical.
+fn potentials_time_lanes(col: ColumnView<'_>, s: &[i32], v: &mut Vec<f32>) {
+    let p = col.p.max(1);
+    debug_assert_eq!(col.w.len() % p, 0);
+    let params = col.params;
+    let t_r = params.t_r.max(0) as usize;
+    let q = col.w.len() / p;
+    v.clear();
+    v.resize(q * t_r, 0.0);
+    // LIF decay powers d -> lif_decay^d, the exact per-element values the
+    // scalar sweep computes with `powi`. Stack-resident so this path stays
+    // allocation-free; windows beyond the table use `powi` directly.
+    let mut decay_pow = [0.0f32; DECAY_TABLE_MAX];
+    if matches!(params.response, Response::Lif) {
+        for (d, slot) in decay_pow.iter_mut().enumerate().take(t_r.min(DECAY_TABLE_MAX)) {
+            *slot = params.lif_decay.powi(d as i32);
+        }
+    }
+    for (row, vrow) in col.w.chunks_exact(p).zip(v.chunks_exact_mut(t_r.max(1))) {
+        for (i, &wi) in row.iter().enumerate() {
+            if wi == 0.0 {
+                continue;
+            }
+            let si = s[i];
+            if si >= t_r as i32 {
+                continue;
+            }
+            let lo = si.max(0) as usize;
+            match params.response {
+                Response::Snl => {
+                    for vt in &mut vrow[lo..] {
+                        *vt += wi;
+                    }
+                }
+                Response::Rnl => {
+                    for (t, vt) in vrow.iter_mut().enumerate().skip(lo) {
+                        let d = t as i64 - si as i64;
+                        *vt += wi * d as f32;
+                    }
+                }
+                Response::Lif => {
+                    if si >= 0 && t_r <= DECAY_TABLE_MAX {
+                        for (dp, vt) in decay_pow[..t_r - lo].iter().zip(&mut vrow[lo..]) {
+                            *vt += wi * dp;
+                        }
+                    } else {
+                        for (t, vt) in vrow.iter_mut().enumerate().skip(lo) {
+                            let d = t as i64 - si as i64;
+                            *vt += wi * params.lif_decay.powi(d as i32);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ColumnConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn kind_parse_roundtrips_and_rejects_junk() {
+        for kind in EngineKind::all() {
+            assert_eq!(EngineKind::parse(kind.name()), Some(kind));
+            assert_eq!(engine_of(kind).name(), kind.name());
+        }
+        assert_eq!(EngineKind::parse("VECTOR"), Some(EngineKind::Vector));
+        assert_eq!(EngineKind::parse("simd"), None);
+        assert_eq!(EngineKind::parse(""), None);
+    }
+
+    fn view<'a>(w: &'a [f32], p: usize, theta: f32, params: &'a TnnParams) -> ColumnView<'a> {
+        ColumnView { w, p, theta, params }
+    }
+
+    /// Quick in-module smoke of the differential contract; the exhaustive
+    /// randomized version lives in `rust/tests/engine_conformance.rs`.
+    #[test]
+    fn vector_kernels_match_scalar_on_random_columns() {
+        let mut rng = Rng::new(0xE9E1);
+        for case in 0..200 {
+            let mut params = TnnParams::default();
+            params.response = match case % 3 {
+                0 => Response::Snl,
+                1 => Response::Rnl,
+                _ => Response::Lif,
+            };
+            params.lif_decay = 0.5 + rng.f32() * 0.45;
+            params.tie = if rng.chance(0.5) { TieBreak::Low } else { TieBreak::High };
+            let p = rng.below(24) + 1;
+            let q = rng.below(9) + 1;
+            let w: Vec<f32> = (0..q * p).map(|_| rng.below(57) as f32 * 0.125).collect();
+            let s: Vec<i32> = (0..p).map(|_| rng.range(-1, 34) as i32).collect();
+            let theta = rng.below(240) as f32 * 0.25 + 0.25;
+            let col = view(&w, p, theta, &params);
+
+            let (mut ev_a, mut ev_b) =
+                (EventScratch::new(params.t_r), EventScratch::new(params.t_r));
+            let (mut va, mut vb) = (Vec::new(), Vec::new());
+            let (mut ya, mut yb) = (Vec::new(), Vec::new());
+            ScalarEngine.response_parts(col, &s, &mut ev_a, &mut va, &mut ya);
+            VectorEngine.response_parts(col, &s, &mut ev_b, &mut vb, &mut yb);
+            assert_eq!(ya, yb, "event response case {case}");
+
+            ScalarEngine.response_cycle_parts(col, &s, &mut va, &mut ya);
+            VectorEngine.response_cycle_parts(col, &s, &mut vb, &mut yb);
+            assert_eq!(va, vb, "potentials case {case}");
+            assert_eq!(ya, yb, "cycle response case {case}");
+
+            let t_r = params.t_r;
+            assert_eq!(
+                ScalarEngine.wta_winner(&ya, t_r, params.tie),
+                VectorEngine.wta_winner(&ya, t_r, params.tie),
+                "wta case {case}"
+            );
+            let (mut ga, mut gb) = (Vec::new(), Vec::new());
+            ScalarEngine.wta_gate_into(&ya, t_r, params.tie, &mut ga);
+            VectorEngine.wta_gate_into(&ya, t_r, params.tie, &mut gb);
+            assert_eq!(ga, gb, "gate case {case}");
+
+            let mut wa = w.clone();
+            let mut wb = w.clone();
+            ScalarEngine.stdp_update(&mut wa, p, &s, &ga, &params);
+            VectorEngine.stdp_update(&mut wb, p, &s, &gb, &params);
+            assert_eq!(wa, wb, "stdp case {case}");
+        }
+    }
+
+    #[test]
+    fn vector_encode_matches_scalar_including_ties_and_sparse() {
+        let mut rng = Rng::new(0xE9C0);
+        for case in 0..200 {
+            let p = rng.below(65) + 1;
+            let x: Vec<f32> = (0..p).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let cutoff = if rng.chance(0.3) { 0.0 } else { rng.f32() * 0.9 };
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            ScalarEngine.encode_into(&x, 8, 32, cutoff, &mut a);
+            VectorEngine.encode_into(&x, 8, 32, cutoff, &mut b);
+            assert_eq!(a, b, "case {case}");
+        }
+        // Exact .5 ties (the round-half-even branch) and degenerate spans.
+        let ties = vec![0.0f32, 1.0, 0.5, 0.25, 0.75];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        ScalarEngine.encode_into(&ties, 8, 32, 0.0, &mut a);
+        VectorEngine.encode_into(&ties, 8, 32, 0.0, &mut b);
+        assert_eq!(a, b);
+        ScalarEngine.encode_into(&[4.2; 6], 8, 32, 0.5, &mut a);
+        VectorEngine.encode_into(&[4.2; 6], 8, 32, 0.5, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn degenerate_theta_fires_everything_at_zero_on_both_backends() {
+        let params = TnnParams::default();
+        let w = vec![0.5f32; 6];
+        let s = vec![32i32, 32, 32];
+        let col = view(&w, 3, 0.0, &params);
+        for kind in EngineKind::all() {
+            let e = engine_of(kind);
+            let mut events = EventScratch::new(params.t_r);
+            let (mut v, mut y) = (Vec::new(), Vec::new());
+            e.response_parts(col, &s, &mut events, &mut v, &mut y);
+            assert_eq!(y, vec![0, 0], "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn default_kind_snapshot_is_a_valid_backend() {
+        // Never mutate the process default here (tests share the process);
+        // just check the resolved default maps to a working backend.
+        let kind = default_kind();
+        let e = engine_of(kind);
+        assert_eq!(e.name(), kind.name());
+    }
+
+    #[test]
+    fn with_engine_repoints_a_sim_without_touching_process_state() {
+        let cfg = ColumnConfig::new("EngineTest", "synthetic", 16, 2);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let before = default_kind();
+        let a = crate::sim::CycleSim::new(cfg.clone(), 3).with_engine(EngineKind::Scalar);
+        let b = crate::sim::CycleSim::new(cfg, 3).with_engine(EngineKind::Vector);
+        assert_eq!(a.engine_kind(), EngineKind::Scalar);
+        assert_eq!(b.engine_kind(), EngineKind::Vector);
+        assert_eq!(a.infer(&x), b.infer(&x));
+        assert_eq!(default_kind(), before);
+    }
+}

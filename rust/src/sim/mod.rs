@@ -34,12 +34,22 @@
 //! its whole run of samples. `rust/tests/alloc.rs` pins the zero-allocation
 //! property with a counting global allocator.
 //!
+//! All four kernels are routed through the pluggable [`engine::Engine`]
+//! trait: [`engine::ScalarEngine`] is the reference backend (the original
+//! scalar free functions), [`engine::VectorEngine`] the manually unrolled
+//! lane-loop backend — bit-exact with the reference by construction and
+//! differentially pinned by `rust/tests/engine_conformance.rs`. The
+//! backend is picked per sim (`CycleSim::with_engine` and the builders
+//! layered above it) or process-wide (`TNNGEN_ENGINE` env / `--engine`
+//! CLI flag, see [`engine::default_kind`]).
+//!
 //! Weights are flat row-major `Vec<f32>` matrices (stride p), the same
 //! layout `runtime::column::init_weights_flat` produces.
 
 pub mod batch;
 pub mod column;
 pub mod encode;
+pub mod engine;
 pub mod event;
 pub mod multilayer;
 pub mod scratch;
@@ -49,5 +59,6 @@ pub use column::{
     first_crossing, potentials, stdp_update, wta, wta_winner, CycleSim, StepOutput,
 };
 pub use encode::encode_window;
+pub use engine::{engine_of, Engine, EngineKind, ScalarEngine, VectorEngine};
 pub use multilayer::MultiLayerSim;
 pub use scratch::{MultiLayerScratch, SimScratch};

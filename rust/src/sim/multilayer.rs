@@ -5,6 +5,7 @@
 use crate::config::ColumnConfig;
 
 use super::column::{CycleSim, StepOutput};
+use super::engine::EngineKind;
 use super::scratch::MultiLayerScratch;
 
 /// A stack of columns: layer k's output spike vector feeds layer k+1's
@@ -33,6 +34,29 @@ impl MultiLayerSim {
                 .map(|(k, c)| CycleSim::new(c.clone(), seed.wrapping_add(k as u64)))
                 .collect(),
         })
+    }
+
+    /// Builder form of [`Self::set_engine`]: route every layer's kernels
+    /// through the given [`EngineKind`] backend.
+    pub fn with_engine(mut self, kind: EngineKind) -> Self {
+        self.set_engine(kind);
+        self
+    }
+
+    /// Repoint every layer at the given [`EngineKind`] backend in place.
+    /// Layer outputs are engine-invariant (the backends are differentially
+    /// pinned against each other), so this never changes results — only
+    /// which kernel implementation computes them.
+    pub fn set_engine(&mut self, kind: EngineKind) {
+        for layer in &mut self.layers {
+            layer.set_engine(kind);
+        }
+    }
+
+    /// The backend the stack's layers currently route through (all layers
+    /// share one kind; this reads the first).
+    pub fn engine_kind(&self) -> EngineKind {
+        self.layers[0].engine_kind()
     }
 
     /// Spike-time vector -> intensity vector for the next layer's encoder,

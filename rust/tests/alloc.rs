@@ -19,7 +19,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use tnngen::config::{ColumnConfig, Response};
-use tnngen::sim::{BatchSim, MultiLayerBatchSim};
+use tnngen::sim::{BatchSim, EngineKind, MultiLayerBatchSim};
 use tnngen::util::Rng;
 
 /// System allocator wrapper counting every allocation-producing call.
@@ -58,66 +58,73 @@ fn windows(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
 
 #[test]
 fn steady_state_batched_inference_does_not_allocate() {
-    for resp in [Response::Snl, Response::Rnl, Response::Lif] {
-        let mut cfg = ColumnConfig::new("Alloc", "synthetic", 24, 3);
-        cfg.params.response = resp;
-        let n = 40;
-        let xs = windows(24, n, 7);
-        // workers=1 keeps the whole loop on this thread, so the counter
-        // sees exactly the per-sample work (pool dispatch bookkeeping is
-        // per-dispatch and covered by the scaling check below).
-        let batch = BatchSim::new(cfg, 7).with_workers(1);
-        let enc = batch.encode_batch(&xs);
-        let mut winners = Vec::new();
+    // Both backends carry the zero-allocation contract: the Engine trait
+    // writes into caller scratch, so swapping the kernel implementation
+    // must not reintroduce hidden buffers.
+    for kind in EngineKind::all() {
+        for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+            let mut cfg = ColumnConfig::new("Alloc", "synthetic", 24, 3);
+            cfg.params.response = resp;
+            let n = 40;
+            let xs = windows(24, n, 7);
+            // workers=1 keeps the whole loop on this thread, so the counter
+            // sees exactly the per-sample work (pool dispatch bookkeeping is
+            // per-dispatch and covered by the scaling check below).
+            let batch = BatchSim::new(cfg, 7).with_workers(1).with_engine(kind);
+            let tag = format!("{resp:?}/{}", kind.name());
+            let enc = batch.encode_batch(&xs);
+            let mut winners = Vec::new();
 
-        // Warm up: scratch + output buffers grow to their high-water mark.
-        batch.winners_encoded_into(&enc, &mut winners);
-        batch.winners_encoded_into(&enc, &mut winners);
-        let expected = winners.clone();
+            // Warm up: scratch + output buffers grow to their high-water mark.
+            batch.winners_encoded_into(&enc, &mut winners);
+            batch.winners_encoded_into(&enc, &mut winners);
+            let expected = winners.clone();
 
-        let before = ALLOC_CALLS.load(Relaxed);
-        batch.winners_encoded_into(&enc, &mut winners);
-        let delta = ALLOC_CALLS.load(Relaxed) - before;
-        assert_eq!(delta, 0, "{resp:?}: steady-state encoded-winner loop allocated");
-        assert_eq!(winners, expected, "{resp:?}");
+            let before = ALLOC_CALLS.load(Relaxed);
+            batch.winners_encoded_into(&enc, &mut winners);
+            let delta = ALLOC_CALLS.load(Relaxed) - before;
+            assert_eq!(delta, 0, "{tag}: steady-state encoded-winner loop allocated");
+            assert_eq!(winners, expected, "{tag}");
 
-        // The raw-window path (encode included) is also allocation-free.
-        let mut raw = Vec::new();
-        batch.infer_winners_into(&xs, &mut raw);
-        batch.infer_winners_into(&xs, &mut raw);
-        let before = ALLOC_CALLS.load(Relaxed);
-        batch.infer_winners_into(&xs, &mut raw);
-        let delta = ALLOC_CALLS.load(Relaxed) - before;
-        assert_eq!(delta, 0, "{resp:?}: steady-state raw-winner loop allocated");
-        assert_eq!(raw, expected, "{resp:?}");
+            // The raw-window path (encode included) is also allocation-free.
+            let mut raw = Vec::new();
+            batch.infer_winners_into(&xs, &mut raw);
+            batch.infer_winners_into(&xs, &mut raw);
+            let before = ALLOC_CALLS.load(Relaxed);
+            batch.infer_winners_into(&xs, &mut raw);
+            let delta = ALLOC_CALLS.load(Relaxed) - before;
+            assert_eq!(delta, 0, "{tag}: steady-state raw-winner loop allocated");
+            assert_eq!(raw, expected, "{tag}");
 
-        // Full-output inference owns its per-sample result by contract:
-        // the inner loop is pinned to ONE allocation per sample (the
-        // returned y vector) plus the result container itself.
-        let _ = batch.infer_encoded_batch(&enc); // warm the collect path
-        let before = ALLOC_CALLS.load(Relaxed);
-        let outs = batch.infer_encoded_batch(&enc);
-        let delta = ALLOC_CALLS.load(Relaxed) - before;
-        assert_eq!(outs.len(), n, "{resp:?}");
-        assert!(
-            delta <= n as u64 + 2,
-            "{resp:?}: infer_encoded_batch inner loop allocated {delta} times \
-             for {n} samples (expected <= n + 2: one owned y per sample + the container)"
-        );
+            // Full-output inference owns its per-sample result by contract:
+            // the inner loop is pinned to ONE allocation per sample (the
+            // returned y vector) plus the result container itself.
+            let _ = batch.infer_encoded_batch(&enc); // warm the collect path
+            let before = ALLOC_CALLS.load(Relaxed);
+            let outs = batch.infer_encoded_batch(&enc);
+            let delta = ALLOC_CALLS.load(Relaxed) - before;
+            assert_eq!(outs.len(), n, "{tag}");
+            assert!(
+                delta <= n as u64 + 2,
+                "{tag}: infer_encoded_batch inner loop allocated {delta} times \
+                 for {n} samples (expected <= n + 2: one owned y per sample + the container)"
+            );
+        }
     }
 
-    // Multi-layer stacks keep the same contract: once the per-layer
-    // scratch (including the reused spike-time -> intensity handoff
-    // buffer) and the output vector are warm, whole-stack batched
+    // Multi-layer stacks keep the same contract on both backends: once
+    // the per-layer scratch (including the reused spike-time -> intensity
+    // handoff buffer) and the output vector are warm, whole-stack batched
     // inference performs ZERO steady-state allocations.
-    {
+    for kind in EngineKind::all() {
         let cfgs = [
             ColumnConfig::new("AllocStackL1", "synthetic", 24, 6),
             ColumnConfig::new("AllocStackL2", "synthetic", 6, 2),
         ];
         let n = 40;
         let xs = windows(24, n, 7);
-        let engine = MultiLayerBatchSim::new(&cfgs, 7).unwrap().with_workers(1);
+        let engine =
+            MultiLayerBatchSim::new(&cfgs, 7).unwrap().with_workers(1).with_engine(kind);
         let mut winners = Vec::new();
         engine.infer_winners_into(&xs, &mut winners);
         engine.infer_winners_into(&xs, &mut winners);
@@ -126,7 +133,7 @@ fn steady_state_batched_inference_does_not_allocate() {
         let before = ALLOC_CALLS.load(Relaxed);
         engine.infer_winners_into(&xs, &mut winners);
         let delta = ALLOC_CALLS.load(Relaxed) - before;
-        assert_eq!(delta, 0, "steady-state stack inference allocated");
-        assert_eq!(winners, expected);
+        assert_eq!(delta, 0, "{}: steady-state stack inference allocated", kind.name());
+        assert_eq!(winners, expected, "{}", kind.name());
     }
 }

@@ -8,6 +8,9 @@
 //!   regardless of worker count — this pins both `parallel_map`'s
 //!   order-preservation and the per-item (not per-thread) RNG discipline.
 
+mod common;
+
+use common::{paper_stack, windows};
 use tnngen::cluster::pipeline::TnnClustering;
 use tnngen::config::presets::{paper_configs, test_configs};
 use tnngen::config::{ColumnConfig, Response};
@@ -16,11 +19,6 @@ use tnngen::coordinator::jobs::{parallel_map_rng, parallel_map_workers};
 use tnngen::data::generate;
 use tnngen::sim::{BatchSim, CycleSim, MultiLayerBatchSim, MultiLayerSim};
 use tnngen::util::Rng;
-
-fn windows(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
-    let mut rng = Rng::new(seed);
-    (0..n).map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect()
-}
 
 // ---------------------------------------------------------------------------
 // BatchSim vs CycleSim on the shipped presets
@@ -141,25 +139,12 @@ fn multilayer_infer_batch_matches_per_sample() {
     }
 }
 
-/// A 2- or 3-deep stack over a paper design: a q->q second layer, plus an
-/// optional third layer halving the neuron count (floor 2), so both
-/// depths from the scale-up plan appear across the seven-design matrix.
-fn paper_stack(cfg: &ColumnConfig, three_deep: bool) -> Vec<ColumnConfig> {
-    let mut cfgs = vec![
-        cfg.clone(),
-        ColumnConfig::new(&format!("{}-L2", cfg.name), &cfg.modality, cfg.q, cfg.q),
-    ];
-    if three_deep {
-        let q3 = (cfg.q / 2).max(2);
-        cfgs.push(ColumnConfig::new(&format!("{}-L3", cfg.name), &cfg.modality, cfg.q, q3));
-    }
-    cfgs
-}
-
 #[test]
 fn stack_engine_bit_exact_on_all_paper_designs_for_any_worker_count() {
     for (i, cfg) in paper_configs().iter().enumerate() {
-        let cfgs = paper_stack(cfg, i % 2 == 1);
+        // Alternate 2- and 3-deep stacks across the seven-design matrix
+        // (common::paper_stack; depth 3 halves the neuron count).
+        let cfgs = paper_stack(cfg, 2 + i % 2);
         let xs = windows(cfg.p, 8, 31 + i as u64);
 
         // Per-sample reference trajectory: greedy layer-wise training,

@@ -1,0 +1,56 @@
+//! Generators shared across the integration-test tree (`mod common;`).
+//!
+//! Each test binary compiles this module independently and uses a
+//! different subset of it, so every item carries `#[allow(dead_code)]`.
+//!
+//! Seeding: generators take explicit seeds derived from
+//! [`base_seed`] (re-exported from `util::prop`), so the whole tree
+//! honors `TNNGEN_TEST_SEED` — set it to sweep fresh input streams;
+//! assertion messages include the seeds needed to replay a failure.
+
+use tnngen::config::ColumnConfig;
+use tnngen::util::Rng;
+
+#[allow(unused_imports)]
+pub use tnngen::util::prop::base_seed;
+
+/// `n` raw input windows of length `p`, values in [-1, 1).
+#[allow(dead_code)]
+pub fn windows(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect()
+}
+
+/// A 1-, 2- or 3-deep stack over a paper design: the design itself, then
+/// a q→q second layer, then a third layer halving the neuron count
+/// (floor 2) — the depths the multi-layer scale-up plan exercises.
+#[allow(dead_code)]
+pub fn paper_stack(cfg: &ColumnConfig, depth: usize) -> Vec<ColumnConfig> {
+    assert!((1..=3).contains(&depth), "supported stack depths are 1..=3");
+    let mut cfgs = vec![cfg.clone()];
+    if depth >= 2 {
+        cfgs.push(ColumnConfig::new(&format!("{}-L2", cfg.name), &cfg.modality, cfg.q, cfg.q));
+    }
+    if depth >= 3 {
+        let q3 = (cfg.q / 2).max(2);
+        cfgs.push(ColumnConfig::new(&format!("{}-L3", cfg.name), &cfg.modality, cfg.q, q3));
+    }
+    cfgs
+}
+
+/// A randomized column config: geometry, response function, tie-break,
+/// threshold fraction, sparse cutoff and LIF decay all drawn from `rng`.
+/// Covers every response family over small-to-medium p×q shapes.
+#[allow(dead_code)]
+pub fn random_config(rng: &mut Rng) -> ColumnConfig {
+    use tnngen::config::{Response, TieBreak};
+    let p = rng.below(32) + 1;
+    let q = rng.below(10) + 1;
+    let mut cfg = ColumnConfig::new("Rand", "synthetic", p, q);
+    cfg.params.response = *rng.choose(&[Response::Snl, Response::Rnl, Response::Lif]);
+    cfg.params.tie = if rng.chance(0.5) { TieBreak::Low } else { TieBreak::High };
+    cfg.params.theta_frac = rng.f32() * 0.5 + 0.05;
+    cfg.params.sparse_cutoff = rng.f32() * 0.8;
+    cfg.params.lif_decay = 0.5 + rng.f32() * 0.45;
+    cfg
+}

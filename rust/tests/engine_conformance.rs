@@ -1,0 +1,244 @@
+//! Differential conformance harness: every kernel of every [`Engine`]
+//! backend pinned against the scalar reference.
+//!
+//! Contract (documented in `sim::engine` and docs/ARCHITECTURE.md): the
+//! vector backend is engineered for BIT-exactness — its lane loops keep
+//! the scalar per-element accumulation order, so no floating-point
+//! reassociation occurs and the tolerance bound is exact equality. The
+//! harness therefore asserts the contract both ways: f32 buffers are
+//! compared BITWISE (`to_bits`, which also distinguishes `-0.0` from
+//! `0.0` and would surface a NaN), and the integer spike outputs with
+//! plain equality. If a future backend ever needs a documented
+//! reassociation tolerance, these assertions are the ones to loosen — in
+//! both directions, never just one.
+//!
+//! Coverage:
+//! * randomized geometries/parameters over all response functions and
+//!   tie-breaks (seeded from `TNNGEN_TEST_SEED` via `common::base_seed`);
+//! * no-fire, saturation, degenerate-theta and sentinel edges;
+//! * all seven paper designs × stack depths {1,2,3} × workers {1,2,8},
+//!   training AND inference, through the batched wrappers.
+
+mod common;
+
+use common::{base_seed, paper_stack, random_config, windows};
+use tnngen::config::presets::paper_configs;
+use tnngen::config::{ColumnConfig, Response};
+use tnngen::sim::encode::round_half_even;
+use tnngen::sim::engine::{ColumnView, Engine, EngineKind, ScalarEngine, VectorEngine};
+use tnngen::sim::event::EventScratch;
+use tnngen::sim::{CycleSim, MultiLayerBatchSim, MultiLayerSim};
+use tnngen::util::Rng;
+
+const SCALAR: &ScalarEngine = &ScalarEngine;
+const VECTOR: &VectorEngine = &VectorEngine;
+
+/// Bitwise f32 buffer equality — the exactness contract, asserted in the
+/// representation domain so `-0.0`/`0.0` and NaN payloads can't hide.
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: index {i} ({x} vs {y})");
+    }
+}
+
+/// Random spike train of length `p` over `[-1, t_r]`: in-window times,
+/// the supervised `-1` sentinel, and the `t_r` no-fire sentinel.
+fn random_spikes(rng: &mut Rng, p: usize, t_r: i32) -> Vec<i32> {
+    (0..p).map(|_| rng.range(-1, t_r as i64 + 1) as i32).collect()
+}
+
+#[test]
+fn round_ties_even_agrees_with_the_reference_rounding_everywhere() {
+    // The vector encode kernel uses `f32::round_ties_even`; the scalar
+    // reference uses the branchy `round_half_even`. Pin them equal (and
+    // even at ties) over a dense quarter-step sweep — which hits every
+    // representable *.5 tie in the range — plus random values.
+    for k in -20_000i32..=20_000 {
+        let x = k as f32 * 0.25;
+        let a = round_half_even(x);
+        let b = x.round_ties_even();
+        assert_eq!(a.to_bits(), b.to_bits(), "x={x}");
+        if (x - x.floor() - 0.5).abs() < f32::EPSILON && x.fract() != 0.0 {
+            assert_eq!(a as i64 % 2, 0, "tie at {x} must round to even, got {a}");
+        }
+    }
+    let mut rng = Rng::new(base_seed());
+    for _ in 0..10_000 {
+        let x = (rng.f32() - 0.5) * 1e4;
+        assert_eq!(round_half_even(x).to_bits(), x.round_ties_even().to_bits(), "x={x}");
+    }
+}
+
+#[test]
+fn every_kernel_is_bit_exact_across_backends_on_randomized_geometries() {
+    let base = base_seed();
+    let mut rng = Rng::new(base ^ 0xC0FF_EE00);
+    for case in 0..250u64 {
+        let cfg = random_config(&mut rng);
+        let tag = format!("case={case} base_seed={base:#x} cfg={}x{}", cfg.p, cfg.q);
+        let sim = CycleSim::new(cfg.clone(), rng.next_u64());
+        let params = cfg.params;
+        let col = ColumnView { w: &sim.weights, p: cfg.p, theta: cfg.theta(), params: &params };
+
+        // encode: identical spike trains from identical raw windows.
+        let x: Vec<f32> = (0..cfg.p).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let (mut es, mut ev) = (vec![7i32], vec![-9i32]); // stale contents must not leak
+        SCALAR.encode_into(&x, params.t, params.t_r, params.sparse_cutoff, &mut es);
+        VECTOR.encode_into(&x, params.t, params.t_r, params.sparse_cutoff, &mut ev);
+        assert_eq!(es, ev, "{tag}: encode");
+
+        // response (event path): spike outputs AND potential buffers.
+        let s = random_spikes(&mut rng, cfg.p, params.t_r);
+        let mut events = EventScratch::new(params.t_r);
+        let (mut vs, mut ys) = (Vec::new(), Vec::new());
+        let (mut vv, mut yv) = (Vec::new(), Vec::new());
+        SCALAR.response_parts(col, &s, &mut events, &mut vs, &mut ys);
+        VECTOR.response_parts(col, &s, &mut events, &mut vv, &mut yv);
+        assert_eq!(ys, yv, "{tag}: response_parts y");
+
+        // response (cycle path): the full potential sweep is part of the
+        // contract, compared bitwise.
+        SCALAR.response_cycle_parts(col, &s, &mut vs, &mut ys);
+        VECTOR.response_cycle_parts(col, &s, &mut vv, &mut yv);
+        assert_eq!(ys, yv, "{tag}: response_cycle_parts y");
+        assert_bits_eq(&vs, &vv, &format!("{tag}: response_cycle_parts v"));
+
+        // wta: winner and gated vector.
+        let winner_s = SCALAR.wta_winner(&ys, params.t_r, params.tie);
+        let winner_v = VECTOR.wta_winner(&ys, params.t_r, params.tie);
+        assert_eq!(winner_s, winner_v, "{tag}: wta_winner");
+        let (mut gs, mut gv) = (vec![3i32], vec![-5i32]);
+        let ws = SCALAR.wta_gate_into(&ys, params.t_r, params.tie, &mut gs);
+        let wv = VECTOR.wta_gate_into(&ys, params.t_r, params.tie, &mut gv);
+        assert_eq!((ws, &gs), (wv, &gv), "{tag}: wta_gate_into");
+
+        // stdp: weight trajectories compared bitwise.
+        let mut w_s = sim.weights.clone();
+        let mut w_v = sim.weights.clone();
+        SCALAR.stdp_update(&mut w_s, cfg.p, &s, &gs, &params);
+        VECTOR.stdp_update(&mut w_v, cfg.p, &s, &gv, &params);
+        assert_bits_eq(&w_s, &w_v, &format!("{tag}: stdp_update"));
+
+        // end-to-end winner entry point.
+        assert_eq!(
+            SCALAR.infer_encoded_winner(col, &s, &mut events, &mut vs, &mut ys),
+            VECTOR.infer_encoded_winner(col, &s, &mut events, &mut vv, &mut yv),
+            "{tag}: infer_encoded_winner"
+        );
+    }
+}
+
+#[test]
+fn no_fire_saturation_and_sentinel_edges_agree_across_backends() {
+    let t_r_of = |cfg: &ColumnConfig| cfg.params.t_r;
+    for resp in [Response::Snl, Response::Rnl, Response::Lif] {
+        let mut cfg = ColumnConfig::new("Edge", "synthetic", 9, 3);
+        cfg.params.response = resp;
+        let w_max = cfg.params.w_max as f32;
+        let t_r = t_r_of(&cfg);
+        // (label, weights, theta override) — each row is a named edge.
+        let cases: Vec<(&str, Vec<f32>, Option<f32>)> = vec![
+            ("all-zero weights never fire", vec![0.0; 27], None),
+            ("saturated weights", vec![w_max; 27], None),
+            ("degenerate theta fires everything at t=0", vec![1.0; 27], Some(0.0)),
+            ("unreachable theta never fires", vec![1.0; 27], Some(1e9)),
+        ];
+        for (label, w, theta_override) in cases {
+            let params = cfg.params;
+            let theta = theta_override.unwrap_or_else(|| cfg.theta());
+            let col = ColumnView { w: &w, p: cfg.p, theta, params: &params };
+            // Spike-train edges: all silent (t_r), all supervised (-1),
+            // all simultaneous at 0, and a mixed sentinel interleaving.
+            let trains: Vec<Vec<i32>> = vec![
+                vec![t_r; 9],
+                vec![-1; 9],
+                vec![0; 9],
+                (0..9).map(|i| [0, -1, t_r, 3][i % 4]).collect(),
+            ];
+            for s in &trains {
+                let tag = format!("{resp:?}: {label}, s={s:?}");
+                let mut events = EventScratch::new(t_r);
+                let (mut vs, mut ys) = (Vec::new(), Vec::new());
+                let (mut vv, mut yv) = (Vec::new(), Vec::new());
+                SCALAR.response_parts(col, s, &mut events, &mut vs, &mut ys);
+                VECTOR.response_parts(col, s, &mut events, &mut vv, &mut yv);
+                assert_eq!(ys, yv, "{tag}: event y");
+                SCALAR.response_cycle_parts(col, s, &mut vs, &mut ys);
+                VECTOR.response_cycle_parts(col, s, &mut vv, &mut yv);
+                assert_eq!(ys, yv, "{tag}: cycle y");
+                assert_bits_eq(&vs, &vv, &format!("{tag}: cycle v"));
+                for e in [SCALAR as &dyn Engine, VECTOR] {
+                    // Silence must surface as the no-fire winner on both.
+                    if ys.iter().all(|&t| t >= t_r) {
+                        assert_eq!(e.wta_winner(&ys, t_r, params.tie), -1, "{tag}");
+                    }
+                }
+                let (mut gs, mut gv) = (Vec::new(), Vec::new());
+                SCALAR.wta_gate_into(&ys, t_r, params.tie, &mut gs);
+                VECTOR.wta_gate_into(&ys, t_r, params.tie, &mut gv);
+                assert_eq!(gs, gv, "{tag}: gate");
+                let mut w_s = w.clone();
+                let mut w_v = w.clone();
+                SCALAR.stdp_update(&mut w_s, cfg.p, s, &gs, &params);
+                VECTOR.stdp_update(&mut w_v, cfg.p, s, &gv, &params);
+                assert_bits_eq(&w_s, &w_v, &format!("{tag}: stdp"));
+            }
+        }
+        // Encode edges: constant window (span clamp), full sparse cutoff.
+        let mut sparse = cfg.clone();
+        sparse.params.sparse_cutoff = 0.999;
+        for (label, cfg, x) in [
+            ("constant window", &cfg, vec![0.25; 9]),
+            ("near-total sparse cutoff", &sparse, (0..9).map(|i| i as f32 * 0.1).collect()),
+        ] {
+            let p = cfg.params;
+            let (mut es, mut ev) = (Vec::new(), Vec::new());
+            SCALAR.encode_into(&x, p.t, p.t_r, p.sparse_cutoff, &mut es);
+            VECTOR.encode_into(&x, p.t, p.t_r, p.sparse_cutoff, &mut ev);
+            assert_eq!(es, ev, "{resp:?}: encode {label}");
+        }
+    }
+}
+
+#[test]
+fn paper_designs_stack_depths_and_worker_counts_agree_cross_engine() {
+    let base = base_seed();
+    for (i, cfg) in paper_configs().iter().enumerate() {
+        for depth in 1usize..=3 {
+            let cfgs = paper_stack(cfg, depth);
+            let seed = base ^ (i as u64 * 31 + depth as u64);
+            let xs = windows(cfg.p, 6, seed);
+
+            // Scalar per-sample reference trajectory: greedy layer-wise
+            // training, then feed-forward inference on the trained stack.
+            let mut reference =
+                MultiLayerSim::new(&cfgs, seed).unwrap().with_engine(EngineKind::Scalar);
+            for x in &xs {
+                reference.step(x);
+            }
+            let per_sample: Vec<_> = xs.iter().map(|x| reference.infer(x)).collect();
+
+            for kind in EngineKind::all() {
+                for workers in [1usize, 2, 8] {
+                    let tag = format!(
+                        "{} depth={depth} {} workers={workers} base_seed={base:#x}",
+                        cfg.tag(),
+                        kind.name()
+                    );
+                    let mut engine = MultiLayerBatchSim::new(&cfgs, seed)
+                        .unwrap()
+                        .with_workers(workers)
+                        .with_engine(kind);
+                    engine.train_epochs(&xs, 1);
+                    for (k, (a, b)) in
+                        reference.layers.iter().zip(engine.stack.layers.iter()).enumerate()
+                    {
+                        assert_bits_eq(&a.weights, &b.weights, &format!("{tag}: layer {k}"));
+                    }
+                    assert_eq!(engine.infer_batch(&xs), per_sample, "{tag}: infer_batch");
+                }
+            }
+        }
+    }
+}

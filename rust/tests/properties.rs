@@ -2,6 +2,11 @@
 //! coordinator-side invariants: clustering metrics, k-means, netlist
 //! optimization equivalence, placement legality, simulator-engine
 //! agreement, encoding, STDP bounds, and the TOML parser.
+//!
+//! Seeds: every `check` call derives its per-case seeds from
+//! `util::prop::base_seed()` — fixed by default, overridable with
+//! `TNNGEN_TEST_SEED=<u64>` to sweep fresh input streams; failures print
+//! the base seed so they replay exactly.
 
 use tnngen::cluster::metrics::{adjusted_rand_index, nmi, purity, rand_index};
 use tnngen::cluster::kmeans::kmeans;
