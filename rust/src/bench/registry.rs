@@ -21,6 +21,8 @@
 //!   q→q second layer): per layer encode → response → WTA, chained by
 //!   the sentinel-aware spike-time→intensity handoff.
 //! * `clustering` — the full Table-II pipeline (train + infer + score).
+//! * `obs_overhead` — warm batched inference with span tracing forced
+//!   off vs on (the report-only instrumentation-cost probe).
 //! * `gate_level` — gate-level functional simulation of a small column
 //!   (construction + weight load + samples; see the entry comment).
 //! * `synthesis` / `placement` — isolated EDA stage hot paths.
@@ -53,6 +55,7 @@ use crate::coordinator::jobs::default_workers;
 use crate::data::generate;
 use crate::eda::synthesis::{optimize, SynthStats};
 use crate::eda::{place, synthesize, tnn7, FlowCampaign, PlaceOpts};
+use crate::obs::trace;
 use crate::report::experiments::{paper_flow_jobs, Effort};
 use crate::rtl::{generate_column, GateSim};
 use crate::serve::{run_closed_loop, ServeOpts, TnnService};
@@ -186,7 +189,7 @@ fn stack_of(cfg: &ColumnConfig) -> Vec<ColumnConfig> {
     vec![cfg.clone(), l2]
 }
 
-/// The default engine × workload matrix (58 entries):
+/// The default engine × workload matrix (60 entries):
 ///
 /// * per paper design: `full_column` on `cyclesim`, `batchsim` and
 ///   `serve`, `full_stack` on `cyclesim` and `batchsim`, plus
@@ -197,6 +200,8 @@ fn stack_of(cfg: &ColumnConfig) -> Vec<ColumnConfig> {
 ///   representative design — each `cyclesim` row pinned to the scalar
 ///   kernel backend plus a `cyclesim-vec` twin on the vector backend
 ///   (the `bench speedup` gate pairs the twins);
+/// * the `obs_overhead` traced/untraced pair quantifying the span-tracing
+///   cost on warm batched inference (report-only);
 /// * the hardware side: gate-level simulation (12x2), isolated
 ///   synthesis/placement stages (65x2), and the fast-effort flow
 ///   campaign cold and warm-cache.
@@ -476,6 +481,28 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
         ));
     }
 
+    // Tracing-overhead probe: identical warm single-worker batched
+    // inference, measured with span tracing force-disabled vs
+    // force-enabled around each iteration. The pair quantifies the
+    // instrumentation cost on the hot path; `obs_overhead/*` matches no
+    // gate filter, so the rows stay report-only (docs/OBSERVABILITY.md).
+    for (engine, traced) in [("untraced", false), ("traced", true)] {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("obs_overhead", micro.tag(), engine, units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let batch = BatchSim::new(cfg.clone(), BENCH_SEED).with_workers(1);
+            let mut winners = Vec::new();
+            batch.infer_winners_into(&xs, &mut winners);
+            Box::new(move || {
+                let was = trace::enabled();
+                trace::set_enabled(traced);
+                batch.infer_winners_into(&xs, &mut winners);
+                trace::set_enabled(was);
+                std::hint::black_box(winners.len());
+            })
+        }));
+    }
+
     // Gate-level functional simulation (the Xcelium substitute). GateSim
     // borrows the netlist, so construction + weight load sit inside the
     // timed region by design: the entry measures end-to-end gate-level
@@ -610,10 +637,11 @@ mod tests {
     fn registry_has_the_documented_entry_count() {
         // 7 designs x (3 full_column + 2 full_stack + clustering) + 7
         // micro (encode x3, stdp x2, wta x2) + 4 response (2 paths x 2
-        // backends) + gate_level + 2 EDA stages + 2 campaigns.
+        // backends) + 2 obs_overhead + gate_level + 2 EDA stages + 2
+        // campaigns.
         assert_eq!(
             default_registry(Profile::Quick).len(),
-            7 * 4 + 7 * 2 + 7 + 4 + 1 + 2 + 2
+            7 * 4 + 7 * 2 + 7 + 4 + 2 + 1 + 2 + 2
         );
     }
 

@@ -8,6 +8,7 @@
 //! the same profile always execute identical work (the run-to-run
 //! determinism contract pinned by `rust/tests/bench.rs`).
 
+use crate::obs::trace;
 use crate::util::timer::time_iters;
 
 use super::artifact::{EntryResult, Timing};
@@ -38,11 +39,24 @@ impl RunnerOpts {
 /// calls, and fold the samples into an [`EntryResult`].
 pub fn run_entry(entry: &BenchEntry, opts: &RunnerOpts) -> EntryResult {
     let mut f = entry.prepare();
-    for _ in 0..opts.warmup_iters {
-        f();
+    // The span category carries the entry name (interned: span categories
+    // must be 'static); interning is skipped entirely when tracing is off.
+    let cat: &'static str = if trace::enabled() {
+        trace::intern(&entry.name())
+    } else {
+        "bench"
+    };
+    {
+        let _s = trace::span_cat("bench.warmup", cat);
+        for _ in 0..opts.warmup_iters {
+            f();
+        }
     }
     let iters = opts.iters.max(1);
-    let samples = time_iters(iters, || f());
+    let samples = {
+        let _s = trace::span_cat("bench.measure", cat);
+        time_iters(iters, || f())
+    };
     let timing = Timing::from_sorted_seconds(&samples);
     let throughput_per_s = if timing.median_s > 0.0 {
         entry.units_per_iter as f64 / timing.median_s

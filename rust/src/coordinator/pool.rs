@@ -39,13 +39,46 @@
 //! (`sim::BatchSim`, `serve` shards, `eda::flow::FlowCampaign`) dispatch
 //! onto it instead of owning threads. Tests construct private pools to
 //! exercise lifecycle (drop joins every thread).
+//!
+//! Observability: every dispatch opens a `pool.dispatch` span and each
+//! claimed chunk a `pool.chunk` span (`crate::obs::trace`, free when
+//! tracing is off), and the global metrics registry accumulates
+//! `tnngen_pool_dispatches_total`, `tnngen_pool_chunks_claimed_total`
+//! and `tnngen_pool_busy_ns_total` (worker busy time, metered once per
+//! dispatch participation).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
+use crate::obs::metrics::{self, Counter};
+use crate::obs::trace;
 use crate::util::Rng;
+
+/// Process-global pool instrumentation: dispatch / chunk-claim counters
+/// plus accumulated worker busy time, registered once in the global
+/// metrics registry ([`metrics::global`]). After the one-time
+/// registration every event is a single relaxed atomic add, so the
+/// dispatch hot path stays lock-free.
+struct PoolStats {
+    dispatches: Arc<Counter>,
+    chunks_claimed: Arc<Counter>,
+    busy_ns: Arc<Counter>,
+}
+
+fn stats() -> &'static PoolStats {
+    static STATS: OnceLock<PoolStats> = OnceLock::new();
+    STATS.get_or_init(|| {
+        let reg = metrics::global();
+        PoolStats {
+            dispatches: reg.counter("tnngen_pool_dispatches_total"),
+            chunks_claimed: reg.counter("tnngen_pool_chunks_claimed_total"),
+            busy_ns: reg.counter("tnngen_pool_busy_ns_total"),
+        }
+    })
+}
 
 /// One dispatched job: a borrowed chunk closure plus claim/completion
 /// state. The closure reference is lifetime-erased; it is only ever
@@ -94,12 +127,21 @@ fn run_chunks(job: &Job) {
         job.active.fetch_sub(1, Ordering::Release);
         return;
     }
+    // Busy time is metered once per participation (two clock reads), not
+    // per chunk, so fine-grained dispatches stay cheap.
+    let pool_stats = stats();
+    let busy_from = Instant::now();
+    let mut claimed = 0u64;
     loop {
         let c = job.next.fetch_add(1, Ordering::Relaxed);
         if c >= job.chunks {
             break;
         }
-        let result = catch_unwind(AssertUnwindSafe(|| (job.run)(c)));
+        claimed += 1;
+        let result = {
+            let _s = trace::span_cat("pool.chunk", "pool");
+            catch_unwind(AssertUnwindSafe(|| (job.run)(c)))
+        };
         let mut st = job.state.lock().unwrap();
         if let Err(payload) = result {
             if st.panic.is_none() {
@@ -110,6 +152,12 @@ fn run_chunks(job: &Job) {
         if st.completed == job.chunks {
             job.finished.notify_all();
         }
+    }
+    if claimed > 0 {
+        pool_stats.chunks_claimed.add(claimed);
+        pool_stats
+            .busy_ns
+            .add(u64::try_from(busy_from.elapsed().as_nanos()).unwrap_or(u64::MAX));
     }
     job.active.fetch_sub(1, Ordering::Release);
 }
@@ -190,6 +238,11 @@ impl WorkerPool {
         if chunks == 0 {
             return;
         }
+        stats().dispatches.inc();
+        // One span per dispatch (enqueue through completion), covering the
+        // inline fast path too — the trace then shows pool.chunk children
+        // only when the dispatch actually fanned out.
+        let _dispatch_span = trace::span_cat("pool.dispatch", "pool");
         if chunks == 1 || self.handles.is_empty() || limit <= 1 {
             for c in 0..chunks {
                 f(c);

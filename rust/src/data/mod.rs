@@ -60,9 +60,9 @@ pub fn load_benchmark(name: &str, len: usize, classes: usize, n_per_split: usize
 
 /// [`load_benchmark`] with an explicit UCR-archive root (the CLI's
 /// `--ucr-dir DIR`). Real `<root>/<name>/<name>_{TRAIN,TEST}.tsv` files win
-/// when they load; otherwise the synthetic generator is used — with a note
-/// on stderr when a root was explicitly requested, so a typo'd path never
-/// silently swaps real data for synthetic.
+/// when they load; otherwise the synthetic generator is used — with a
+/// [`crate::obs::log`] warning when a root was explicitly requested, so a
+/// typo'd path never silently swaps real data for synthetic.
 pub fn load_benchmark_from(
     ucr_root: Option<&std::path::Path>,
     name: &str,
@@ -76,9 +76,12 @@ pub fn load_benchmark_from(
         Ok(ds) => ds,
         Err(e) => {
             if ucr_root.is_some() {
-                eprintln!(
-                    "note: no loadable UCR data for {name} under {} ({e:#}); using the synthetic {name} generator",
-                    root.display()
+                crate::obs::log::warn(
+                    "data",
+                    format_args!(
+                        "no loadable UCR data for {name} under {} ({e:#}); using the synthetic {name} generator",
+                        root.display()
+                    ),
                 );
             }
             generate(name, len, classes, n_per_split, seed)

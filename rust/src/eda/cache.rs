@@ -17,10 +17,12 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::ColumnConfig;
+use crate::obs::metrics::Counter;
 use crate::report::artifacts::{flow_report_json, parse, Json};
 
 use super::flow::{FlowOpts, FlowReport, StageRuntimes};
@@ -52,6 +54,11 @@ pub struct FlowCache {
     hits: AtomicUsize,
     misses: AtomicUsize,
     tmp_seq: AtomicUsize,
+    // Process-wide mirrors of the per-cache counters, so `tnngen serve
+    // --metrics` / trace consumers see cache traffic without holding a
+    // cache reference.
+    hits_metric: Arc<Counter>,
+    misses_metric: Arc<Counter>,
 }
 
 impl FlowCache {
@@ -60,11 +67,14 @@ impl FlowCache {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating flow cache dir {}", dir.display()))?;
+        let reg = crate::obs::metrics::global();
         Ok(FlowCache {
             dir,
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             tmp_seq: AtomicUsize::new(0),
+            hits_metric: reg.counter("tnngen_flow_cache_hits_total"),
+            misses_metric: reg.counter("tnngen_flow_cache_misses_total"),
         })
     }
 
@@ -99,10 +109,12 @@ impl FlowCache {
         match self.try_read(key) {
             Some(r) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits_metric.inc();
                 Some(r)
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses_metric.inc();
                 None
             }
         }

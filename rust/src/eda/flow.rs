@@ -17,6 +17,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::ColumnConfig;
+use crate::obs::trace;
 use crate::rtl::{generate_column_silicon, ColumnRtl};
 
 use super::cache::FlowCache;
@@ -124,8 +125,17 @@ pub struct FlowOpts {
 pub fn run_flow(cfg: &ColumnConfig, lib: &CellLibrary, opts: &FlowOpts) -> Result<FlowReport> {
     let t0 = Instant::now();
     let rtl = generate_column_silicon(cfg)?;
-    let rtl_gen_s = t0.elapsed().as_secs_f64();
+    let rtl_gen_s = stage_s("eda.rtl_gen", t0);
     run_flow_on_rtl(&rtl, lib, opts, rtl_gen_s)
+}
+
+/// Close one flow stage: record an `eda.*` trace span from `start` to now
+/// (free when tracing is off) and return the stage wall-clock in seconds —
+/// the span and the [`StageRuntimes`] figure are the same measurement.
+fn stage_s(name: &'static str, start: Instant) -> f64 {
+    let end = Instant::now();
+    trace::record_range(name, "eda", start, end);
+    end.duration_since(start).as_secs_f64()
 }
 
 /// Run the flow on pre-generated RTL (lets benches reuse the netlist).
@@ -139,25 +149,25 @@ pub fn run_flow_on_rtl(
 
     let t = Instant::now();
     let design: MappedDesign = synthesize(&rtl.netlist, lib);
-    let synthesis_s = t.elapsed().as_secs_f64();
+    let synthesis_s = stage_s("eda.synthesis", t);
 
     let t = Instant::now();
     let placement: Placement = place(&design, &opts.place);
-    let placement_s = t.elapsed().as_secs_f64();
+    let placement_s = stage_s("eda.placement", t);
 
     let t = Instant::now();
     let routing: RoutingResult = route(&design, &placement);
-    let routing_s = t.elapsed().as_secs_f64();
+    let routing_s = stage_s("eda.routing", t);
 
     let t = Instant::now();
     let timing = sta_analyze(&design, lib, &routing)?;
-    let sta_s = t.elapsed().as_secs_f64();
+    let sta_s = stage_s("eda.sta", t);
 
     let t = Instant::now();
     let freq = opts.freq_mhz.unwrap_or(timing.fmax_mhz);
     let activity = opts.activity.unwrap_or(DEFAULT_ACTIVITY);
     let power = power::analyze(&design, lib, &routing, freq, activity);
-    let power_s = t.elapsed().as_secs_f64();
+    let power_s = stage_s("eda.power", t);
 
     let latency_ns = computation_latency_ns(timing.clock_period_ps, cfg.params.t_r);
 
@@ -198,9 +208,12 @@ pub fn run_flow_cached(
 ) -> Result<FlowReport> {
     let Some(cache) = cache else { return run_flow(cfg, lib, opts) };
     let key = FlowCache::key(cfg, lib, opts);
+    let t = Instant::now();
     if let Some(report) = cache.lookup(key) {
+        trace::record_range("eda.cache_hit", "eda", t, Instant::now());
         return Ok(report);
     }
+    trace::record_range("eda.cache_miss", "eda", t, Instant::now());
     let report = run_flow(cfg, lib, opts)?;
     cache.store(key, &report)?;
     Ok(report)

@@ -27,6 +27,12 @@
 //! * [`forecast`] — the paper's forecasting feature: linear-regression
 //!   prediction of post-layout area/leakage (and P&R runtime) from synapse
 //!   count.
+//! * [`obs`] — the unified observability layer: near-zero-overhead span
+//!   tracing exported as `tnngen.trace/v1` Chrome Trace artifacts
+//!   (`--trace-out`), a named-instrument metrics registry (counters,
+//!   gauges, HDR histograms) with Prometheus/JSON renderings served live
+//!   by `tnngen serve --metrics`, and the `TNNGEN_LOG`-leveled logger
+//!   (see `docs/OBSERVABILITY.md`).
 //! * [`serve`] — the streaming inference service: sharded micro-batching
 //!   execution over trained columns with online STDP on a single-writer
 //!   learner shard, epoch-versioned weight snapshots, typed backpressure,
@@ -62,6 +68,8 @@ pub mod data;
 pub mod eda;
 #[warn(missing_docs)]
 pub mod forecast;
+#[warn(missing_docs)]
+pub mod obs;
 #[warn(missing_docs)]
 pub mod report;
 pub mod rtl;

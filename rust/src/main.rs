@@ -23,6 +23,11 @@
 //! (`bench::default_registry`), records `tnngen.bench/v1` artifacts and
 //! gates regressions against a recorded baseline (exit 3 on a tripped
 //! gate; see docs/BENCHMARKS.md).
+//!
+//! Observability: `--trace-out FILE` (any command) records span tracing
+//! for the run and writes a `tnngen.trace/v1` Chrome Trace artifact on
+//! exit; `serve --metrics ADDR` exposes the metrics registries as
+//! Prometheus text + JSON over HTTP (see docs/OBSERVABILITY.md).
 
 use std::time::Duration;
 
@@ -39,6 +44,7 @@ use tnngen::coordinator::{Coordinator, SimBackend};
 use tnngen::data::{load_benchmark_from, Dataset};
 use tnngen::eda::{all_libraries, tnn7, FlowCampaign, FlowOpts, FlowReport};
 use tnngen::forecast::Forecaster;
+use tnngen::obs;
 use tnngen::report::artifacts;
 use tnngen::report::experiments::{self, Effort};
 use tnngen::report::{f2, f3, Table};
@@ -72,7 +78,7 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   serve <tag|name> [--stack q1[,q2...]] [--shards N] [--batch N] [--wait-us US] [--queue N]
         [--learn-queue N] [--snapshot-every K]
         [--bench --rps R --duration S [--learn-every K] [--json]]
-        [--tcp ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
+        [--tcp ADDR] [--metrics ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
   bench [run|list] [--profile quick|full | --quick] [--filter PATTERNS]
         [--iters N] [--warmup N] [--json] [--out FILE]
   bench record [--out FILE] [run flags]       (defaults to BENCH_<profile>.json)
@@ -86,6 +92,14 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   simulator defaults to; TNNGEN_ENGINE does the same from the
   environment, and the auto-detected default is vector. Backends are
   bit-identical (differentially tested); the choice only affects speed.
+
+  --trace-out FILE (any command) records span tracing for the whole run
+  and writes a tnngen.trace/v1 Chrome Trace Event JSON artifact on exit
+  (load it in Perfetto / chrome://tracing). serve --metrics ADDR serves
+  the live metrics registries over HTTP: /metrics is Prometheus text
+  exposition, /metrics.json a JSON snapshot. TNNGEN_LOG=error|warn|info|
+  debug|off controls the structured stderr logger. All three are
+  documented in docs/OBSERVABILITY.md.
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
@@ -189,6 +203,24 @@ fn dispatch(args: &Args) -> Result<()> {
             .with_context(|| format!("unknown engine {name:?} (scalar|vector)"))?;
         set_default_kind(kind);
     }
+    // --trace-out FILE turns span tracing on for the whole run and writes
+    // the tnngen.trace/v1 Chrome Trace artifact once the command returns
+    // (also after a command error, so partial runs still yield a trace).
+    let trace_out = args.flag("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        obs::trace::enable();
+    }
+    let result = run_command(args);
+    if let Some(path) = &trace_out {
+        match obs::trace::write_chrome_trace(path) {
+            Ok(n) => eprintln!("wrote {}: {n} trace events (tnngen.trace/v1)", path.display()),
+            Err(e) => eprintln!("error writing trace {}: {e:#}", path.display()),
+        }
+    }
+    result
+}
+
+fn run_command(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "list" => {
             let mut t = Table::new(&["tag", "benchmark", "modality", "p", "q", "synapses"]);
@@ -521,6 +553,20 @@ fn dispatch(args: &Args) -> Result<()> {
                 let shape: Vec<String> =
                     cfgs.iter().map(|c| format!("{}x{}", c.p, c.q)).collect();
                 println!("hosting {}-layer stack: {}", cfgs.len(), shape.join(" -> "));
+            }
+            if let Some(addr) = args.flag("metrics") {
+                // The scrape merges the per-service registry with the
+                // process-global one (pool + flow-cache instruments). The
+                // accept loop runs on a detached worker for the process
+                // lifetime.
+                let srv = obs::scrape::MetricsServer::spawn(
+                    addr,
+                    vec![svc.metrics().registry(), obs::metrics::global()],
+                )?;
+                println!(
+                    "metrics on http://{0}/metrics (Prometheus text) and http://{0}/metrics.json",
+                    srv.local_addr()
+                );
             }
             let tcp = match args.flag("tcp") {
                 Some(addr) => {

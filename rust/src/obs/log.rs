@@ -1,0 +1,130 @@
+//! Minimal leveled stderr logger, controlled by `TNNGEN_LOG`.
+//!
+//! Library code must never print unconditionally: every diagnostic
+//! goes through this module so users (and tests) can silence or
+//! amplify it with `TNNGEN_LOG=off|error|warn|info|debug`. The default
+//! threshold is `warn`, so degraded-behavior notes (e.g. the synthetic
+//! UCR-data fallback in `data::`) still surface out of the box while
+//! routine lifecycle chatter stays hidden.
+//!
+//! CLI output in `main.rs` (usage text, command results) is *not*
+//! logging and intentionally bypasses this module.
+
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or data-affecting problems.
+    Error = 0,
+    /// Degraded behavior the user should know about (default threshold).
+    Warn = 1,
+    /// High-level lifecycle events.
+    Info = 2,
+    /// Per-operation detail.
+    Debug = 3,
+}
+
+impl Level {
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// Threshold meaning "emit nothing, not even errors" (`TNNGEN_LOG=off`).
+const SILENT: u8 = 100;
+/// Sentinel: threshold not yet resolved from the environment.
+const UNSET: u8 = u8::MAX;
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+
+fn parse_level(s: &str) -> u8 {
+    match s.to_ascii_lowercase().as_str() {
+        "off" | "none" | "silent" => SILENT,
+        "error" => Level::Error as u8,
+        "warn" | "warning" => Level::Warn as u8,
+        "info" => Level::Info as u8,
+        "debug" | "trace" => Level::Debug as u8,
+        _ => Level::Warn as u8,
+    }
+}
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Relaxed);
+    if t != UNSET {
+        return t;
+    }
+    let resolved = match std::env::var("TNNGEN_LOG") {
+        Ok(v) => parse_level(&v),
+        Err(_) => Level::Warn as u8,
+    };
+    THRESHOLD.store(resolved, Relaxed);
+    resolved
+}
+
+/// Override the threshold programmatically (tests, future CLI flags);
+/// `None` silences everything. Wins over `TNNGEN_LOG`.
+pub fn set_level(level: Option<Level>) {
+    THRESHOLD.store(level.map_or(SILENT, |l| l as u8), Relaxed);
+}
+
+/// True when events at `level` would be emitted — check this before
+/// building an expensive message.
+pub fn level_enabled(level: Level) -> bool {
+    (level as u8) <= threshold()
+}
+
+/// Emit one event as `tnngen[LEVEL] target: message` on stderr.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !level_enabled(level) {
+        return;
+    }
+    eprintln!("tnngen[{}] {target}: {args}", level.name());
+}
+
+/// Error-level event (see [`log`]).
+pub fn error(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Error, target, args);
+}
+
+/// Warn-level event (see [`log`]).
+pub fn warn(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Warn, target, args);
+}
+
+/// Info-level event (see [`log`]).
+pub fn info(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Info, target, args);
+}
+
+/// Debug-level event (see [`log`]).
+pub fn debug(target: &str, args: std::fmt::Arguments<'_>) {
+    log(Level::Debug, target, args);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_spellings() {
+        assert_eq!(parse_level("off"), SILENT);
+        assert_eq!(parse_level("ERROR"), Level::Error as u8);
+        assert_eq!(parse_level("warning"), Level::Warn as u8);
+        assert_eq!(parse_level("Info"), Level::Info as u8);
+        assert_eq!(parse_level("debug"), Level::Debug as u8);
+        assert_eq!(parse_level("garbage"), Level::Warn as u8, "unknown values mean warn");
+    }
+}

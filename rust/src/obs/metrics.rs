@@ -1,0 +1,472 @@
+//! Named-instrument metrics registry: lock-free counters, gauges and
+//! log-linear HDR histograms.
+//!
+//! This generalizes what `serve::metrics` pioneered — relaxed-atomic
+//! counters and a 16-sub-buckets-per-octave microsecond histogram —
+//! into instruments any subsystem can register by name: serve keeps
+//! its per-service registry (snapshots stay bit-identical), while the
+//! worker pool and the flow cache publish into the process-global
+//! [`global`] registry. A registry renders as Prometheus text
+//! exposition ([`Registry::render_prometheus`]) or as a
+//! `tnngen.metrics/v1` JSON snapshot, both served live by
+//! [`crate::obs::scrape::MetricsServer`].
+//!
+//! Instrument handles are `Arc`s: subsystems resolve names once at
+//! construction time and then touch only their own atomics, so the
+//! registry's `Mutex` is never on a hot path.
+//!
+//! The histogram is HDR-style: 16 linear sub-buckets per power-of-two
+//! octave of microseconds bound relative error at ~6% across the full
+//! `u64` range while `record` stays three relaxed atomic adds.
+//! Percentiles use the same nearest-rank definition as `util::stats`
+//! and report a bucket's lower bound — a slight underestimate, never
+//! an interpolated fiction. Samples landing in the unbounded top
+//! bucket are additionally counted as [`Histogram::saturated`], so
+//! top-bucket saturation is visible instead of silently flattening
+//! the tail.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::report::artifacts::Json;
+use crate::util::stats::nearest_rank_index;
+
+/// Schema tag of the JSON metrics snapshot document.
+pub const METRICS_SCHEMA: &str = "tnngen.metrics/v1";
+
+/// Linear sub-buckets per octave.
+pub const SUB_BUCKETS: u64 = 16;
+/// Total bucket count: values 0..16 map 1:1, then 16 buckets per octave
+/// for octaves 4..=63 — covers every `u64` microsecond value.
+pub const BUCKETS: usize = ((63 - 3) * SUB_BUCKETS + SUB_BUCKETS) as usize;
+
+/// Index of the histogram bucket containing `v` (microseconds).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS {
+        return v as usize;
+    }
+    let msb = 63 - u64::from(v.leading_zeros()); // >= 4
+    let group = msb - 3;
+    let sub = (v >> (msb - 4)) - SUB_BUCKETS; // 0..16
+    ((group * SUB_BUCKETS + sub) as usize).min(BUCKETS - 1)
+}
+
+/// Smallest microsecond value that lands in bucket `idx` (the value the
+/// percentile query reports for that bucket).
+pub fn bucket_floor_us(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB_BUCKETS {
+        return idx;
+    }
+    let group = idx / SUB_BUCKETS;
+    let sub = idx % SUB_BUCKETS;
+    (sub + SUB_BUCKETS) << (group - 1)
+}
+
+/// Monotonically increasing counter (relaxed atomic adds).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-value / high-water instrument.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Raise the value to at least `v` (high-water mark).
+    #[inline]
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Lock-free log-linear histogram of microsecond values (see the
+/// module docs for the bucket layout and error bound).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    saturated: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            saturated: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one duration sample (saturated to whole microseconds).
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one microsecond sample.
+    pub fn record_us(&self, us: u64) {
+        let idx = bucket_index(us);
+        if idx == BUCKETS - 1 {
+            // The top bucket is unbounded above: its floor no longer
+            // carries the ~6% relative-error guarantee, so count these
+            // samples explicitly instead of flattening them silently.
+            self.saturated.fetch_add(1, Relaxed);
+        }
+        self.buckets[idx].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+    }
+
+    /// Total samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// Sum of all recorded microsecond values.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Relaxed)
+    }
+
+    /// Samples that landed in the unbounded top bucket.
+    pub fn saturated(&self) -> u64 {
+        self.saturated.load(Relaxed)
+    }
+
+    /// Mean recorded value in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Relaxed) as f64 / n as f64
+    }
+
+    /// Nearest-rank p-th percentile in microseconds (0 when empty). The
+    /// rank is resolved against cumulative bucket counts and the bucket's
+    /// lower bound is reported.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = nearest_rank_index(n as usize, p) as u64;
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum > target {
+                return bucket_floor_us(idx) as f64;
+            }
+        }
+        bucket_floor_us(BUCKETS - 1) as f64
+    }
+}
+
+#[derive(Debug)]
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Named-instrument registry. Instruments are registered get-or-create
+/// by name and keep insertion order in every rendering, so output is
+/// deterministic for a given registration sequence.
+#[derive(Debug, Default)]
+pub struct Registry {
+    instruments: Mutex<Vec<(String, Instrument)>>,
+}
+
+impl Registry {
+    /// Fresh empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Get or create the counter `name`.
+    ///
+    /// # Panics
+    /// Panics if `name` is already registered as a different kind.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut ins = self.instruments.lock().expect("metrics registry poisoned");
+        for (n, i) in ins.iter() {
+            if n == name {
+                if let Instrument::Counter(c) = i {
+                    return Arc::clone(c);
+                }
+                panic!("metric {name} is already registered with a different kind");
+            }
+        }
+        let c = Arc::new(Counter::default());
+        ins.push((name.to_string(), Instrument::Counter(Arc::clone(&c))));
+        c
+    }
+
+    /// Get or create the gauge `name`.
+    ///
+    /// # Panics
+    /// Panics if `name` is already registered as a different kind.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut ins = self.instruments.lock().expect("metrics registry poisoned");
+        for (n, i) in ins.iter() {
+            if n == name {
+                if let Instrument::Gauge(g) = i {
+                    return Arc::clone(g);
+                }
+                panic!("metric {name} is already registered with a different kind");
+            }
+        }
+        let g = Arc::new(Gauge::default());
+        ins.push((name.to_string(), Instrument::Gauge(Arc::clone(&g))));
+        g
+    }
+
+    /// Get or create the histogram `name`.
+    ///
+    /// # Panics
+    /// Panics if `name` is already registered as a different kind.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut ins = self.instruments.lock().expect("metrics registry poisoned");
+        for (n, i) in ins.iter() {
+            if n == name {
+                if let Instrument::Histogram(h) = i {
+                    return Arc::clone(h);
+                }
+                panic!("metric {name} is already registered with a different kind");
+            }
+        }
+        let h = Arc::new(Histogram::default());
+        ins.push((name.to_string(), Instrument::Histogram(Arc::clone(&h))));
+        h
+    }
+
+    /// Render every instrument in Prometheus text exposition format.
+    /// Histograms render as summaries (quantile labels + `_sum` +
+    /// `_count`) plus a `<name>_saturated_total` counter.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        self.render_prometheus_into(&mut out);
+        out
+    }
+
+    fn render_prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let ins = self.instruments.lock().expect("metrics registry poisoned");
+        for (name, i) in ins.iter() {
+            match i {
+                Instrument::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Instrument::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Instrument::Histogram(h) => {
+                    let _ = writeln!(out, "# TYPE {name} summary");
+                    for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                        let _ =
+                            writeln!(out, "{name}{{quantile=\"{q}\"}} {}", h.percentile_us(p));
+                    }
+                    let _ = writeln!(out, "{name}_sum {}", h.sum_us());
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                    let _ = writeln!(out, "# TYPE {name}_saturated_total counter");
+                    let _ = writeln!(out, "{name}_saturated_total {}", h.saturated());
+                }
+            }
+        }
+    }
+
+    fn collect_json(
+        &self,
+        counters: &mut Vec<(String, Json)>,
+        gauges: &mut Vec<(String, Json)>,
+        histograms: &mut Vec<(String, Json)>,
+    ) {
+        let ins = self.instruments.lock().expect("metrics registry poisoned");
+        for (name, i) in ins.iter() {
+            match i {
+                Instrument::Counter(c) => {
+                    counters.push((name.clone(), Json::Int(c.get().min(i64::MAX as u64) as i64)));
+                }
+                Instrument::Gauge(g) => {
+                    gauges.push((name.clone(), Json::Int(g.get().min(i64::MAX as u64) as i64)));
+                }
+                Instrument::Histogram(h) => {
+                    histograms.push((
+                        name.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Int(h.count().min(i64::MAX as u64) as i64)),
+                            ("sum_us", Json::Int(h.sum_us().min(i64::MAX as u64) as i64)),
+                            ("saturated", Json::Int(h.saturated().min(i64::MAX as u64) as i64)),
+                            ("p50_us", Json::Num(h.percentile_us(50.0))),
+                            ("p95_us", Json::Num(h.percentile_us(95.0))),
+                            ("p99_us", Json::Num(h.percentile_us(99.0))),
+                            ("mean_us", Json::Num(h.mean_us())),
+                        ]),
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Render every instrument as a `tnngen.metrics/v1` JSON snapshot.
+    pub fn render_json(&self) -> Json {
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut histograms = Vec::new();
+        self.collect_json(&mut counters, &mut gauges, &mut histograms);
+        metrics_doc(counters, gauges, histograms)
+    }
+}
+
+fn metrics_doc(
+    counters: Vec<(String, Json)>,
+    gauges: Vec<(String, Json)>,
+    histograms: Vec<(String, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(METRICS_SCHEMA.to_string())),
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+        ("histograms", Json::Obj(histograms)),
+    ])
+}
+
+/// Render several registries as one Prometheus exposition document
+/// (concatenated in order; registries must not share metric names).
+pub fn render_prometheus_merged(sources: &[Arc<Registry>]) -> String {
+    let mut out = String::new();
+    for r in sources {
+        r.render_prometheus_into(&mut out);
+    }
+    out
+}
+
+/// Render several registries as one `tnngen.metrics/v1` JSON snapshot.
+pub fn render_json_merged(sources: &[Arc<Registry>]) -> Json {
+    let mut counters = Vec::new();
+    let mut gauges = Vec::new();
+    let mut histograms = Vec::new();
+    for r in sources {
+        r.collect_json(&mut counters, &mut gauges, &mut histograms);
+    }
+    metrics_doc(counters, gauges, histograms)
+}
+
+/// Process-wide registry for subsystems without a per-instance home
+/// (the worker pool, the flow cache). Serve creates per-service
+/// registries instead so concurrent services never mix counts.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(Registry::new())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_the_same_instrument() {
+        let r = Registry::new();
+        let a = r.counter("t_total");
+        let b = r.counter("t_total");
+        a.add(2);
+        b.inc();
+        assert_eq!(a.get(), 3);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("t_mixed");
+        let _ = r.gauge("t_mixed");
+    }
+
+    #[test]
+    fn gauge_high_water_only_goes_up() {
+        let g = Gauge::default();
+        g.record_max(5);
+        g.record_max(3);
+        assert_eq!(g.get(), 5);
+        g.set(1);
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn histogram_counts_top_bucket_saturation() {
+        let h = Histogram::default();
+        h.record_us(42);
+        assert_eq!(h.saturated(), 0);
+        h.record_us(u64::MAX);
+        h.record(Duration::from_secs(u64::MAX / 1000));
+        assert_eq!(h.saturated(), 2, "top-bucket samples must be counted explicitly");
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_every_kind() {
+        let r = Registry::new();
+        r.counter("t_served_total").add(7);
+        r.gauge("t_depth").set(3);
+        let h = r.histogram("t_latency_us");
+        h.record_us(10);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE t_served_total counter"), "{text}");
+        assert!(text.contains("t_served_total 7"), "{text}");
+        assert!(text.contains("# TYPE t_depth gauge"), "{text}");
+        assert!(text.contains("t_depth 3"), "{text}");
+        assert!(text.contains("t_latency_us{quantile=\"0.5\"} 10"), "{text}");
+        assert!(text.contains("t_latency_us_count 1"), "{text}");
+        assert!(text.contains("t_latency_us_saturated_total 0"), "{text}");
+    }
+
+    #[test]
+    fn json_rendering_merges_registries_with_a_schema_tag() {
+        let a = Arc::new(Registry::new());
+        let b = Arc::new(Registry::new());
+        a.counter("t_a_total").inc();
+        b.gauge("t_b_depth").set(9);
+        let doc = render_json_merged(&[Arc::clone(&a), Arc::clone(&b)]);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(METRICS_SCHEMA));
+        let counters = doc.get("counters").expect("counters section");
+        assert_eq!(counters.get("t_a_total").and_then(Json::as_i64), Some(1));
+        let gauges = doc.get("gauges").expect("gauges section");
+        assert_eq!(gauges.get("t_b_depth").and_then(Json::as_i64), Some(9));
+    }
+}

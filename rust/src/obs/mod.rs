@@ -1,0 +1,30 @@
+//! Unified observability: span tracing, a metrics registry, a leveled
+//! logger, and a live scrape endpoint.
+//!
+//! Before this module the repo measured time four disconnected ways
+//! (serve counters, EDA stopwatch laps, bench iteration clocks, ad-hoc
+//! prints). `obs` replaces them with three pillars that every hot
+//! subsystem shares:
+//!
+//! * [`trace`] — RAII spans recorded into lock-free per-thread ring
+//!   buffers, exported as a versioned `tnngen.trace/v1` Chrome Trace
+//!   Event artifact (`--trace-out FILE`, loadable in Perfetto /
+//!   `chrome://tracing`). Disabled cost is a single relaxed atomic
+//!   load, so spans live permanently on the sim/serve/pool hot paths
+//!   (pinned by `tests/alloc.rs`).
+//! * [`metrics`] — named lock-free instruments (counters, gauges,
+//!   log-linear HDR histograms) in per-service and process-global
+//!   registries, rendered as Prometheus text exposition or a
+//!   `tnngen.metrics/v1` JSON snapshot.
+//! * [`log`] — a leveled, `TNNGEN_LOG`-controlled stderr logger so
+//!   library code never prints unconditionally; plus [`scrape`], a
+//!   tiny HTTP endpoint (`tnngen serve --metrics ADDR`) that serves
+//!   both metrics renderings live.
+//!
+//! See `docs/OBSERVABILITY.md` for the span model, overhead
+//! guarantees, and artifact schemas.
+
+pub mod log;
+pub mod metrics;
+pub mod scrape;
+pub mod trace;

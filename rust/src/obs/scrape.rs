@@ -1,0 +1,132 @@
+//! Live metrics endpoint: a tiny HTTP/1.0 responder over
+//! [`Registry`] renderings.
+//!
+//! `tnngen serve ... --metrics ADDR` binds this endpoint next to the
+//! (framed, binary) serve front-end. It follows the same
+//! spawn-detached-accept-loop shape as `serve::tcp::TcpFront`, but
+//! speaks just enough HTTP that `curl`, Prometheus and a browser can
+//! scrape it directly:
+//!
+//! * `GET /metrics.json` → the merged `tnngen.metrics/v1` JSON snapshot
+//! * any other path (canonically `GET /metrics`) → Prometheus text
+//!   exposition
+//!
+//! Responses are `Connection: close`; every scrape is one short-lived
+//! connection, which keeps the responder stateless and dependency-free.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::coordinator::jobs::spawn_worker;
+use crate::obs::metrics::{render_json_merged, render_prometheus_merged, Registry};
+use crate::Result;
+
+/// Cap on the request head we are willing to buffer.
+const MAX_HEAD: usize = 4096;
+
+/// Running metrics endpoint. The accept loop and per-connection
+/// threads are detached and live until process exit.
+pub struct MetricsServer {
+    local_addr: SocketAddr,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9464"`, port 0 for ephemeral) and
+    /// serve scrapes of `sources` (rendered merged, in order).
+    pub fn spawn(addr: &str, sources: Vec<Arc<Registry>>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics endpoint on {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let sources = Arc::new(sources);
+        spawn_worker("tnngen-metrics-accept", move || {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(s) => {
+                        let sources = Arc::clone(&sources);
+                        spawn_worker("tnngen-metrics-conn", move || {
+                            let _ = serve_conn(s, &sources);
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(MetricsServer { local_addr })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, sources: &[Arc<Registry>]) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 512];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > MAX_HEAD {
+            break;
+        }
+    }
+    let request = String::from_utf8_lossy(&head);
+    let path = request.split_whitespace().nth(1).unwrap_or("/metrics");
+    let (content_type, body) = if path.starts_with("/metrics.json") {
+        ("application/json", render_json_merged(sources).pretty())
+    } else {
+        ("text/plain; version=0.0.4", render_prometheus_merged(sources))
+    };
+    let header = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::artifacts;
+
+    fn scrape(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("response has a header block");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_prometheus_text_and_json_snapshot() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("t_scrape_total").add(5);
+        let srv = MetricsServer::spawn("127.0.0.1:0", vec![Arc::clone(&reg)]).unwrap();
+
+        let (head, body) = scrape(srv.local_addr(), "/metrics");
+        assert!(head.starts_with("HTTP/1.0 200 OK"), "{head}");
+        assert!(head.contains("text/plain"), "{head}");
+        assert!(body.contains("t_scrape_total 5"), "{body}");
+
+        reg.counter("t_scrape_total").inc();
+        let (head, body) = scrape(srv.local_addr(), "/metrics.json");
+        assert!(head.contains("application/json"), "{head}");
+        let doc = artifacts::parse(&body).expect("JSON snapshot parses");
+        assert_eq!(
+            doc.get("counters").and_then(|c| c.get("t_scrape_total")).and_then(|v| v.as_i64()),
+            Some(6),
+            "scrape must reflect live counter state"
+        );
+    }
+}

@@ -1,0 +1,422 @@
+//! Span tracing: near-zero-overhead timed spans exported as a
+//! versioned Chrome Trace Event artifact (`tnngen.trace/v1`).
+//!
+//! Design:
+//!
+//! * One global `AtomicBool` gates everything. While tracing is
+//!   disabled (the default) [`span`] costs a single relaxed atomic
+//!   load — no clock read, no allocation — so spans can sit
+//!   permanently on the sim/serve/pool hot paths (`tests/alloc.rs`
+//!   pins this).
+//! * While enabled, each recording thread appends finished spans to
+//!   its own fixed-capacity ring buffer. Appends are wait-free for the
+//!   owning thread; every slot carries a seqlock-style sequence
+//!   counter so [`snapshot`] (callable from any thread) discards torn
+//!   reads instead of ever blocking a writer. A wrapped ring
+//!   overwrites its oldest events and reports them as dropped.
+//! * Span and category names are `&'static str`, so recording never
+//!   copies strings; dynamic names can be leaked once via [`intern`]
+//!   (call it behind an [`enabled`] check on hot paths).
+//!
+//! The export format is the Chrome Trace Event Format — an object with
+//! a `traceEvents` array of phase-`"X"` (complete) events, timestamps
+//! and durations in microseconds — loadable directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>. A `schema` tag
+//! versions the artifact like every other tnngen JSON document, and
+//! emit → parse → emit is byte-stable (shortest-round-trip float
+//! rendering, same contract as the bench artifact).
+
+use std::cell::{RefCell, UnsafeCell};
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{ensure, Context};
+
+use crate::report::artifacts::{self, Json};
+use crate::Result;
+
+/// Schema tag stamped into every exported trace artifact.
+pub const TRACE_SCHEMA: &str = "tnngen.trace/v1";
+
+/// Events kept per recording thread before the ring wraps.
+const RING_SLOTS: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Base instant all span timestamps are measured against; fixed by the
+/// first enable so trace timestamps start near zero.
+static BASE: OnceLock<Instant> = OnceLock::new();
+
+/// True when spans are being recorded — one relaxed atomic load.
+/// Callers use it to skip building dynamic span metadata.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Turn recording on or off without touching already-recorded events.
+/// The first enable fixes the trace's base timestamp.
+pub fn set_enabled(on: bool) {
+    if on {
+        BASE.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Relaxed);
+}
+
+/// Enable recording (see [`set_enabled`]).
+pub fn enable() {
+    set_enabled(true);
+}
+
+/// Disable recording; recorded events stay available to [`snapshot`].
+pub fn disable() {
+    set_enabled(false);
+}
+
+/// A finished span as stored in the ring: plain `Copy` data so a torn
+/// cross-thread read is detectable-garbage, never undefined pointers
+/// (names are `'static`, so even a torn read dereferences validly —
+/// the seqlock check below still discards it).
+#[derive(Clone, Copy)]
+struct RawEvent {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    dur_ns: u64,
+}
+
+const EMPTY_EVENT: RawEvent = RawEvent { name: "", cat: "", start_ns: 0, dur_ns: 0 };
+
+struct Slot {
+    /// Seqlock sequence: 0 = never written, odd = write in progress.
+    seq: AtomicU64,
+    event: UnsafeCell<RawEvent>,
+}
+
+/// Single-producer ring buffer owned by one recording thread.
+struct ThreadRing {
+    /// Trace-local thread id (registration order).
+    tid: u64,
+    /// Monotonic count of events ever pushed by the owning thread.
+    written: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+// SAFETY: each `event` cell is written only by the ring's owning thread
+// (rings are handed out through a thread-local). Readers validate the
+// per-slot `seq` counter before and after copying and discard torn
+// reads, so cross-thread access never treats a partial write as valid.
+unsafe impl Sync for ThreadRing {}
+
+impl ThreadRing {
+    fn new(tid: u64) -> Self {
+        let slots = (0..RING_SLOTS)
+            .map(|_| Slot { seq: AtomicU64::new(0), event: UnsafeCell::new(EMPTY_EVENT) })
+            .collect();
+        ThreadRing { tid, written: AtomicU64::new(0), slots }
+    }
+
+    /// Owning-thread-only append (wait-free; wraps over oldest events).
+    fn push(&self, ev: RawEvent) {
+        let i = self.written.load(Relaxed);
+        let slot = &self.slots[(i as usize) % RING_SLOTS];
+        let seq = slot.seq.load(Relaxed);
+        // Classic seqlock write protocol: odd marks in-progress, the
+        // fences order the data write between the two seq stores.
+        slot.seq.store(seq.wrapping_add(1), Relaxed);
+        fence(Release);
+        // SAFETY: only the owning thread writes this cell (see the
+        // `Sync` impl); the volatile write keeps the compiler from
+        // folding it across the seq stores.
+        unsafe { std::ptr::write_volatile(slot.event.get(), ev) };
+        fence(Release);
+        slot.seq.store(seq.wrapping_add(2), Release);
+        self.written.store(i + 1, Release);
+    }
+
+    /// Copy out every valid event; returns how many were lost to
+    /// wrap-around. Callable from any thread.
+    fn read_into(&self, out: &mut Vec<RawEvent>) -> u64 {
+        let written = self.written.load(Acquire);
+        let dropped = written.saturating_sub(RING_SLOTS as u64);
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // never written, or mid-write
+            }
+            // SAFETY: a concurrent write tears at worst; the seq
+            // re-check below rejects exactly that case.
+            let ev = unsafe { std::ptr::read_volatile(slot.event.get()) };
+            fence(Acquire);
+            if slot.seq.load(Relaxed) == s1 {
+                out.push(ev);
+            }
+        }
+        dropped
+    }
+}
+
+fn ring_registry() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<Arc<ThreadRing>>> = const { RefCell::new(None) };
+}
+
+/// Run `f` against this thread's ring, registering (and allocating) it
+/// on first use. Only called while tracing is enabled, so the one-time
+/// allocation never lands on a traced-out hot path.
+fn with_local_ring(f: impl FnOnce(&ThreadRing)) {
+    LOCAL_RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let mut all = ring_registry().lock().expect("trace ring registry poisoned");
+            let ring = Arc::new(ThreadRing::new(all.len() as u64));
+            all.push(Arc::clone(&ring));
+            *slot = Some(ring);
+        }
+        if let Some(ring) = slot.as_ref() {
+            f(ring);
+        }
+    });
+}
+
+/// Record a completed span from explicit endpoints — used where the
+/// natural start lives on another thread (request queue wait) or where
+/// a stage already measured its own `Instant` pair (EDA flow stages).
+pub fn record_range(name: &'static str, cat: &'static str, start: Instant, end: Instant) {
+    if !enabled() {
+        return;
+    }
+    let Some(base) = BASE.get() else { return };
+    let start_ns = start.saturating_duration_since(*base).as_nanos().min(u64::MAX as u128) as u64;
+    let dur_ns = end.saturating_duration_since(start).as_nanos().min(u64::MAX as u128) as u64;
+    with_local_ring(|ring| ring.push(RawEvent { name, cat, start_ns, dur_ns }));
+}
+
+/// RAII guard recording one complete span when dropped (see [`span`]).
+#[must_use = "a span is recorded on Drop; binding it to _ drops it immediately"]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            record_range(self.name, self.cat, start, Instant::now());
+        }
+    }
+}
+
+/// Open a span in the default category. The span closes — and is
+/// recorded — when the returned guard drops. While tracing is disabled
+/// this is one relaxed atomic load: no clock read, no allocation.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    span_cat(name, "tnngen")
+}
+
+/// Open a span with an explicit category (subsystem name).
+#[inline]
+pub fn span_cat(name: &'static str, cat: &'static str) -> SpanGuard {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    SpanGuard { name, cat, start }
+}
+
+/// Intern a dynamic string as `&'static str` for use as a span name or
+/// category. Each distinct string leaks exactly once; call this behind
+/// an [`enabled`] check on hot paths.
+pub fn intern(s: &str) -> &'static str {
+    static INTERNED: OnceLock<Mutex<BTreeSet<&'static str>>> = OnceLock::new();
+    let table = INTERNED.get_or_init(|| Mutex::new(BTreeSet::new()));
+    let mut table = table.lock().expect("intern table poisoned");
+    if let Some(hit) = table.get(s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+    table.insert(leaked);
+    leaked
+}
+
+/// One complete (phase-`"X"`) event of a Chrome Trace artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Span name (e.g. `serve.infer`).
+    pub name: String,
+    /// Category — the subsystem that recorded the span.
+    pub cat: String,
+    /// Start time in microseconds from the trace base.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Process id (always 1 for in-process traces).
+    pub pid: i64,
+    /// Recording thread's trace-local id.
+    pub tid: i64,
+}
+
+/// Copy out every recorded span, sorted by (timestamp, thread, name)
+/// for deterministic rendering, plus the number of events lost to
+/// ring wrap-around across all threads. Non-destructive; best called
+/// at quiescence (concurrent appends may or may not be included).
+pub fn snapshot() -> (Vec<TraceEvent>, u64) {
+    let rings: Vec<Arc<ThreadRing>> =
+        ring_registry().lock().expect("trace ring registry poisoned").clone();
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    let mut raw = Vec::new();
+    for ring in rings {
+        raw.clear();
+        dropped += ring.read_into(&mut raw);
+        for ev in &raw {
+            events.push(TraceEvent {
+                name: ev.name.to_string(),
+                cat: ev.cat.to_string(),
+                ts_us: ev.start_ns as f64 / 1000.0,
+                dur_us: ev.dur_ns as f64 / 1000.0,
+                pid: 1,
+                tid: ring.tid as i64,
+            });
+        }
+    }
+    events.sort_by(|a, b| {
+        a.ts_us
+            .total_cmp(&b.ts_us)
+            .then(a.tid.cmp(&b.tid))
+            .then_with(|| a.name.cmp(&b.name))
+    });
+    (events, dropped)
+}
+
+/// Render events as a `tnngen.trace/v1` Chrome Trace Event document.
+pub fn trace_json(events: &[TraceEvent], dropped: u64) -> Json {
+    let rows = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("cat", Json::Str(e.cat.clone())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(e.ts_us)),
+                ("dur", Json::Num(e.dur_us)),
+                ("pid", Json::Int(e.pid)),
+                ("tid", Json::Int(e.tid)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str(TRACE_SCHEMA.to_string())),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("droppedEvents", Json::Int(dropped.min(i64::MAX as u64) as i64)),
+        ("traceEvents", Json::Arr(rows)),
+    ])
+}
+
+/// Parse a `tnngen.trace/v1` document (inverse of [`trace_json`]).
+/// Returns the events and the recorded dropped-event count.
+pub fn parse_trace(text: &str) -> Result<(Vec<TraceEvent>, u64)> {
+    let doc = artifacts::parse(text).context("parsing trace artifact")?;
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+    ensure!(
+        schema == TRACE_SCHEMA,
+        "unsupported trace schema {schema:?} (this build reads {TRACE_SCHEMA})"
+    );
+    let dropped = doc.get("droppedEvents").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+    let rows = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("trace artifact has no traceEvents array")?;
+    let mut events = Vec::with_capacity(rows.len());
+    for row in rows {
+        events.push(TraceEvent {
+            name: row.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            cat: row.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+            ts_us: row.get("ts").and_then(Json::as_f64).context("trace event missing ts")?,
+            dur_us: row.get("dur").and_then(Json::as_f64).context("trace event missing dur")?,
+            pid: row.get("pid").and_then(Json::as_i64).unwrap_or(1),
+            tid: row.get("tid").and_then(Json::as_i64).unwrap_or(0),
+        });
+    }
+    Ok((events, dropped))
+}
+
+/// Snapshot the recorded spans and write them to `path` as a Chrome
+/// trace file. Returns the number of events written.
+pub fn write_chrome_trace(path: &Path) -> Result<usize> {
+    let (events, dropped) = snapshot();
+    let doc = trace_json(&events, dropped);
+    std::fs::write(path, doc.pretty())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                name: "serve.infer".to_string(),
+                cat: "serve".to_string(),
+                ts_us: 12.345,
+                dur_us: 0.1,
+                pid: 1,
+                tid: 0,
+            },
+            TraceEvent {
+                name: "pool.chunk".to_string(),
+                cat: "pool".to_string(),
+                ts_us: 12345678.9,
+                dur_us: 4242.0,
+                pid: 1,
+                tid: 3,
+            },
+        ]
+    }
+
+    #[test]
+    fn emit_parse_emit_is_byte_stable() {
+        let first = trace_json(&sample_events(), 7).pretty();
+        let (parsed, dropped) = parse_trace(&first).unwrap();
+        assert_eq!(parsed, sample_events());
+        assert_eq!(dropped, 7);
+        let second = trace_json(&parsed, dropped).pretty();
+        assert_eq!(first, second, "trace artifact must round-trip byte-identically");
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let doc = trace_json(&sample_events(), 0).pretty();
+        let wrong = doc.replace(TRACE_SCHEMA, "tnngen.trace/v999");
+        let err = parse_trace(&wrong).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported trace schema"), "{err:#}");
+    }
+
+    #[test]
+    fn intern_dedups_and_returns_stable_pointers() {
+        let a = intern("dyn.name.a");
+        let b = intern("dyn.name.a");
+        assert!(std::ptr::eq(a, b), "same string must intern to the same allocation");
+        assert_eq!(intern("dyn.name.b"), "dyn.name.b");
+    }
+
+    #[test]
+    fn disabled_guard_records_nothing_even_if_tracing_turns_on_later() {
+        // A guard opened while tracing is off holds no start instant,
+        // so its Drop is inert regardless of later global state.
+        let g = SpanGuard { name: "test.inert", cat: "test", start: None };
+        drop(g);
+        let (events, _) = snapshot();
+        assert!(events.iter().all(|e| e.name != "test.inert"));
+    }
+}

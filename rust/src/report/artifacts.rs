@@ -636,6 +636,7 @@ pub fn serve_bench_json(r: &crate::serve::BenchReport) -> Json {
                         ("p99", Json::Num(m.service_p99_us)),
                         ("mean", Json::Num(m.service_mean_us)),
                         ("recorded", Json::Int(m.recorded as i64)),
+                        ("saturated", Json::Int(m.saturated as i64)),
                     ]),
                 ),
             ]),

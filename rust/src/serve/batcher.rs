@@ -19,8 +19,10 @@
 //! [`close`]: Batcher::close
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::obs::metrics::Gauge;
 
 use super::SubmitError;
 
@@ -36,6 +38,7 @@ pub struct Batcher<T> {
     capacity: usize,
     max_batch: usize,
     max_wait: Duration,
+    depth_gauge: Option<Arc<Gauge>>,
 }
 
 impl<T> Batcher<T> {
@@ -49,7 +52,15 @@ impl<T> Batcher<T> {
             capacity: capacity.max(1),
             max_batch: max_batch.max(1),
             max_wait,
+            depth_gauge: None,
         }
+    }
+
+    /// Publish the queue-depth high-water mark into `gauge` (one relaxed
+    /// `fetch_max` per admission, while the queue lock is already held).
+    pub fn with_depth_gauge(mut self, gauge: Arc<Gauge>) -> Self {
+        self.depth_gauge = Some(gauge);
+        self
     }
 
     /// The admission bound (`capacity` passed to [`Batcher::new`]).
@@ -81,6 +92,9 @@ impl<T> Batcher<T> {
             return Err(SubmitError::QueueFull { capacity: self.capacity });
         }
         s.items.push_back(item);
+        if let Some(g) = &self.depth_gauge {
+            g.record_max(s.items.len() as u64);
+        }
         drop(s);
         self.not_empty.notify_one();
         Ok(())
@@ -201,6 +215,18 @@ mod tests {
         b.submit(7).unwrap();
         b.submit(8).unwrap();
         assert_eq!(b.next_batch(), Some(vec![7, 8]));
+    }
+
+    #[test]
+    fn depth_gauge_tracks_high_water() {
+        let g = Arc::new(crate::obs::metrics::Gauge::default());
+        let b = batcher(8, 4, 50).with_depth_gauge(Arc::clone(&g));
+        for i in 0..3 {
+            b.submit(i).unwrap();
+        }
+        assert_eq!(b.next_batch(), Some(vec![0, 1, 2]));
+        b.submit(9).unwrap();
+        assert_eq!(g.get(), 3, "gauge keeps the high-water mark, not the current depth");
     }
 
     #[test]

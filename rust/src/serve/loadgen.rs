@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 
 use crate::eda::cache::fnv1a64;
 use crate::util::stats::{mean, nearest_rank_index};
+use crate::util::timer::sort_samples;
 
 use super::metrics::MetricsSnapshot;
 use super::{InferReply, TnnService};
@@ -154,7 +155,7 @@ impl Tally {
         // without re-sorting per quantile).
         let mut lat: Vec<f64> =
             self.replies.iter().map(|r| r.latency.as_secs_f64() * 1e6).collect();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_samples(&mut lat);
         let (p50, p95, p99, mean_us, max_us) = if lat.is_empty() {
             (0.0, 0.0, 0.0, 0.0, 0.0)
         } else {

@@ -1,140 +1,89 @@
-//! Lock-free service metrics: monotonically increasing atomic counters and
-//! a log-linear latency histogram, sampled into an immutable
-//! [`MetricsSnapshot`] for reporting (`report::artifacts::serve_bench_json`).
+//! Service metrics on top of the [`crate::obs::metrics`] registry:
+//! named lock-free counters and a log-linear latency histogram, sampled
+//! into an immutable [`MetricsSnapshot`] for reporting
+//! (`report::artifacts::serve_bench_json`).
 //!
-//! The histogram is HDR-style: 16 linear sub-buckets per power-of-two
-//! octave of microseconds, so relative error is bounded at ~6% across the
-//! full `u64` range while `record` stays a single atomic increment —
-//! shard workers never contend on a lock to report a latency. Percentiles
-//! use the same nearest-rank definition as `util::stats`
-//! ([`crate::util::stats::nearest_rank_index`]); the reported value is a
+//! Every instrument lives in a **per-service**
+//! [`Registry`](crate::obs::metrics::Registry) (tests start several
+//! services per process, so a global registry would mix their counts).
+//! The registry is what `tnngen serve --metrics ADDR` scrapes; the
+//! typed fields below are the same `Arc` handles, so the scrape and
+//! [`ServeMetrics::snapshot`] always agree.
+//!
+//! The histogram is HDR-style (16 linear sub-buckets per power-of-two
+//! octave of microseconds — see `obs::metrics` for the layout):
+//! relative error is bounded at ~6% across the full `u64` range while
+//! `record` stays a few relaxed atomic adds, so shard workers never
+//! contend on a lock to report a latency. Percentiles use the same
+//! nearest-rank definition as `util::stats`; the reported value is a
 //! bucket's lower bound, i.e. a slight underestimate, never an
-//! interpolated fiction.
+//! interpolated fiction. Samples in the unbounded top bucket are
+//! surfaced as [`MetricsSnapshot::saturated`] instead of silently
+//! flattening the tail.
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::util::stats::nearest_rank_index;
+use crate::obs::metrics::{Counter, Gauge, Histogram, Registry};
 
-/// Linear sub-buckets per octave.
-const SUB_BUCKETS: u64 = 16;
-/// Total bucket count: values 0..16 map 1:1, then 16 buckets per octave
-/// for octaves 4..=63 — covers every `u64` microsecond value.
-const BUCKETS: usize = ((63 - 3) * SUB_BUCKETS + SUB_BUCKETS) as usize;
-
-/// Index of the histogram bucket containing `v` (microseconds).
-fn bucket_index(v: u64) -> usize {
-    if v < SUB_BUCKETS {
-        return v as usize;
-    }
-    let msb = 63 - u64::from(v.leading_zeros()); // >= 4
-    let group = msb - 3;
-    let sub = (v >> (msb - 4)) - SUB_BUCKETS; // 0..16
-    ((group * SUB_BUCKETS + sub) as usize).min(BUCKETS - 1)
-}
-
-/// Smallest microsecond value that lands in bucket `idx` (the value the
-/// percentile query reports for that bucket).
-fn bucket_floor_us(idx: usize) -> u64 {
-    let idx = idx as u64;
-    if idx < SUB_BUCKETS {
-        return idx;
-    }
-    let group = idx / SUB_BUCKETS;
-    let sub = idx % SUB_BUCKETS;
-    (sub + SUB_BUCKETS) << (group - 1)
-}
-
-/// Lock-free log-linear latency histogram (microsecond resolution).
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_us: AtomicU64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram {
-            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-        }
-    }
-}
-
-impl LatencyHistogram {
-    /// Record one latency sample (saturated to whole microseconds).
-    pub fn record(&self, d: Duration) {
-        let us = d.as_micros().min(u64::MAX as u128) as u64;
-        self.buckets[bucket_index(us)].fetch_add(1, Relaxed);
-        self.count.fetch_add(1, Relaxed);
-        self.sum_us.fetch_add(us, Relaxed);
-    }
-
-    /// Total samples recorded so far.
-    pub fn count(&self) -> u64 {
-        self.count.load(Relaxed)
-    }
-
-    /// Mean recorded latency in microseconds (0 when empty).
-    pub fn mean_us(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        self.sum_us.load(Relaxed) as f64 / n as f64
-    }
-
-    /// Nearest-rank p-th percentile in microseconds (0 when empty). The
-    /// rank is resolved against cumulative bucket counts and the bucket's
-    /// lower bound is reported.
-    pub fn percentile_us(&self, p: f64) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        let target = nearest_rank_index(n as usize, p) as u64;
-        let mut cum = 0u64;
-        for (idx, b) in self.buckets.iter().enumerate() {
-            cum += b.load(Relaxed);
-            if cum > target {
-                return bucket_floor_us(idx) as f64;
-            }
-        }
-        bucket_floor_us(BUCKETS - 1) as f64
-    }
-}
+/// Backwards-compatible alias: the latency histogram now lives in
+/// [`crate::obs::metrics`] as the general [`Histogram`] instrument.
+pub type LatencyHistogram = Histogram;
 
 /// Counters shared by the batcher, shard workers and the learner. All
-/// fields are monotonic; read them via [`ServeMetrics::snapshot`].
-#[derive(Default)]
+/// counter fields are monotonic; read them via [`ServeMetrics::snapshot`]
+/// or scrape the [`ServeMetrics::registry`].
 pub struct ServeMetrics {
+    registry: Arc<Registry>,
     /// Inference requests admitted into the queue.
-    pub accepted: AtomicU64,
+    pub accepted: Arc<Counter>,
     /// Inference requests rejected by admission control (queue full).
-    pub rejected: AtomicU64,
+    pub rejected: Arc<Counter>,
     /// Inference requests completed (reply produced by a shard).
-    pub completed: AtomicU64,
+    pub completed: Arc<Counter>,
     /// Learn requests admitted into the learner queue.
-    pub learn_accepted: AtomicU64,
+    pub learn_accepted: Arc<Counter>,
     /// Learn requests rejected by admission control.
-    pub learn_rejected: AtomicU64,
+    pub learn_rejected: Arc<Counter>,
     /// Online-STDP steps applied by the learner.
-    pub learned: AtomicU64,
+    pub learned: Arc<Counter>,
     /// Weight snapshots published to the reader shards.
-    pub snapshots_published: AtomicU64,
+    pub snapshots_published: Arc<Counter>,
     /// Micro-batches flushed by shard workers.
-    pub batches: AtomicU64,
+    pub batches: Arc<Counter>,
     /// Samples served across all flushed batches.
-    pub batched_samples: AtomicU64,
+    pub batched_samples: Arc<Counter>,
+    /// High-water mark of the inference queue depth.
+    pub queue_depth_high_water: Arc<Gauge>,
     /// End-to-end (submit -> reply) latency, recorded by shard workers.
-    pub latency: LatencyHistogram,
+    pub latency: Arc<Histogram>,
 }
 
 impl ServeMetrics {
-    /// Fresh zeroed counters and an empty histogram.
+    /// Fresh zeroed counters and an empty histogram in a new
+    /// per-service registry.
     pub fn new() -> Self {
-        Self::default()
+        let registry = Arc::new(Registry::new());
+        ServeMetrics {
+            accepted: registry.counter("tnngen_serve_accepted_total"),
+            rejected: registry.counter("tnngen_serve_rejected_total"),
+            completed: registry.counter("tnngen_serve_completed_total"),
+            learn_accepted: registry.counter("tnngen_serve_learn_accepted_total"),
+            learn_rejected: registry.counter("tnngen_serve_learn_rejected_total"),
+            learned: registry.counter("tnngen_serve_learned_total"),
+            snapshots_published: registry.counter("tnngen_serve_snapshots_published_total"),
+            batches: registry.counter("tnngen_serve_batches_total"),
+            batched_samples: registry.counter("tnngen_serve_batched_samples_total"),
+            queue_depth_high_water: registry.gauge("tnngen_serve_queue_depth_high_water"),
+            latency: registry.histogram("tnngen_serve_latency_us"),
+            registry,
+        }
+    }
+
+    /// The per-service registry behind the typed fields — what the
+    /// `--metrics` scrape endpoint renders.
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
     }
 
     /// Record one served request's end-to-end latency.
@@ -147,21 +96,28 @@ impl ServeMetrics {
     /// for reporting).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            accepted: self.accepted.load(Relaxed),
-            rejected: self.rejected.load(Relaxed),
-            completed: self.completed.load(Relaxed),
-            learn_accepted: self.learn_accepted.load(Relaxed),
-            learn_rejected: self.learn_rejected.load(Relaxed),
-            learned: self.learned.load(Relaxed),
-            snapshots_published: self.snapshots_published.load(Relaxed),
-            batches: self.batches.load(Relaxed),
-            batched_samples: self.batched_samples.load(Relaxed),
+            accepted: self.accepted.get(),
+            rejected: self.rejected.get(),
+            completed: self.completed.get(),
+            learn_accepted: self.learn_accepted.get(),
+            learn_rejected: self.learn_rejected.get(),
+            learned: self.learned.get(),
+            snapshots_published: self.snapshots_published.get(),
+            batches: self.batches.get(),
+            batched_samples: self.batched_samples.get(),
             service_p50_us: self.latency.percentile_us(50.0),
             service_p95_us: self.latency.percentile_us(95.0),
             service_p99_us: self.latency.percentile_us(99.0),
             service_mean_us: self.latency.mean_us(),
             recorded: self.latency.count(),
+            saturated: self.latency.saturated(),
         }
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
     }
 }
 
@@ -196,6 +152,10 @@ pub struct MetricsSnapshot {
     pub service_mean_us: f64,
     /// Samples behind the percentile figures.
     pub recorded: u64,
+    /// Latency samples that landed in the histogram's unbounded top
+    /// bucket (their percentile contribution is a floor, not a ~6%
+    /// approximation).
+    pub saturated: u64,
 }
 
 impl MetricsSnapshot {
@@ -211,6 +171,7 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::metrics::{bucket_floor_us, bucket_index, BUCKETS};
     use crate::util::stats::percentile_nearest_rank;
 
     #[test]
@@ -270,14 +231,35 @@ mod tests {
     #[test]
     fn snapshot_copies_counters() {
         let m = ServeMetrics::new();
-        m.accepted.fetch_add(3, Relaxed);
-        m.batches.fetch_add(2, Relaxed);
-        m.batched_samples.fetch_add(7, Relaxed);
+        m.accepted.add(3);
+        m.batches.add(2);
+        m.batched_samples.add(7);
         m.record_latency(Duration::from_micros(42));
         let s = m.snapshot();
         assert_eq!(s.accepted, 3);
         assert_eq!(s.recorded, 1);
+        assert_eq!(s.saturated, 0);
         assert!((s.mean_batch() - 3.5).abs() < 1e-12);
         assert!(s.service_p50_us <= 42.0 && s.service_p50_us >= 40.0);
+    }
+
+    #[test]
+    fn snapshot_surfaces_top_bucket_saturation() {
+        let m = ServeMetrics::new();
+        m.record_latency(Duration::from_micros(100));
+        m.latency.record_us(u64::MAX);
+        let s = m.snapshot();
+        assert_eq!(s.recorded, 2);
+        assert_eq!(s.saturated, 1, "top-bucket samples must be reported, not silent");
+    }
+
+    #[test]
+    fn registry_scrape_agrees_with_snapshot() {
+        let m = ServeMetrics::new();
+        m.accepted.add(4);
+        m.record_latency(Duration::from_micros(8));
+        let text = m.registry().render_prometheus();
+        assert!(text.contains("tnngen_serve_accepted_total 4"), "{text}");
+        assert!(text.contains("tnngen_serve_latency_us_count 1"), "{text}");
     }
 }

@@ -17,7 +17,9 @@
 //!   snapshots. A single column is served as the 1-layer special case;
 //!   [`TnnService::start_stack`] hosts deeper stacks.
 //! * [`metrics`] — lock-free counters and a log-linear latency histogram
-//!   with nearest-rank p50/p95/p99 queries.
+//!   (nearest-rank p50/p95/p99 queries), hosted in a per-service
+//!   [`obs::metrics`](crate::obs::metrics) registry so
+//!   `tnngen serve --metrics ADDR` can scrape it live.
 //! * [`loadgen`] — a load generator (open-loop at a target rate, or
 //!   closed-loop with bounded in-flight) producing the
 //!   [`BenchReport`](loadgen::BenchReport) behind `tnngen serve --bench`.
@@ -198,8 +200,10 @@ impl TnnService {
         let learner_stack = MultiLayerSim::new(cfgs, seed)?;
         let weights = Arc::new(SharedWeights::new(learner_stack.flat_weights()));
         let metrics = Arc::new(ServeMetrics::new());
-        let infer_q =
-            Arc::new(Batcher::new(opts.queue_capacity, opts.max_batch, opts.max_wait));
+        let infer_q = Arc::new(
+            Batcher::new(opts.queue_capacity, opts.max_batch, opts.max_wait)
+                .with_depth_gauge(Arc::clone(&metrics.queue_depth_high_water)),
+        );
         let learn_q =
             Arc::new(Batcher::new(opts.learn_queue_capacity, opts.max_batch, opts.max_wait));
         let mut workers = Vec::with_capacity(shards + 1);
@@ -277,12 +281,12 @@ impl TnnService {
         let req = InferRequest { id, window, submitted: Instant::now(), reply };
         match self.infer_q.submit(req) {
             Ok(()) => {
-                self.metrics.accepted.fetch_add(1, Relaxed);
+                self.metrics.accepted.inc();
                 Ok(id)
             }
             Err(e) => {
                 if matches!(e, SubmitError::QueueFull { .. }) {
-                    self.metrics.rejected.fetch_add(1, Relaxed);
+                    self.metrics.rejected.inc();
                 }
                 Err(e)
             }
@@ -296,12 +300,12 @@ impl TnnService {
         }
         match self.learn_q.submit(LearnRequest { window }) {
             Ok(()) => {
-                self.metrics.learn_accepted.fetch_add(1, Relaxed);
+                self.metrics.learn_accepted.inc();
                 Ok(())
             }
             Err(e) => {
                 if matches!(e, SubmitError::QueueFull { .. }) {
-                    self.metrics.learn_rejected.fetch_add(1, Relaxed);
+                    self.metrics.learn_rejected.inc();
                 }
                 Err(e)
             }

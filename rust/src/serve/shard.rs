@@ -19,11 +19,11 @@
 //! briefly-held `RwLock`), and the learner never observes reader state at
 //! all.
 
-use std::sync::atomic::Ordering::Relaxed;
 use std::sync::{Arc, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::ColumnConfig;
+use crate::obs::trace;
 use crate::sim::engine::default_kind;
 use crate::sim::{MultiLayerBatchSim, MultiLayerScratch, MultiLayerSim};
 
@@ -104,33 +104,58 @@ pub(crate) fn reader_loop(
     let mut windows: Vec<Vec<f32>> = Vec::new();
     let mut winners: Vec<i32> = Vec::new();
     while let Some(batch) = queue.next_batch() {
+        // Queue wait as experienced by this batch: from the earliest
+        // admission among its requests to the moment the shard picked it
+        // up. Recorded retroactively because the wait starts on the
+        // producer's thread.
+        if trace::enabled() {
+            if let Some(first) = batch.iter().map(|r| r.submitted).min() {
+                trace::record_range("serve.queue_wait", "serve", first, Instant::now());
+            }
+        }
         if !throttle.is_zero() {
             std::thread::sleep(throttle);
         }
-        let latest = weights.load();
-        if latest.epoch != snap.epoch {
-            snap = latest;
-            // Same stack geometry across epochs: adopting a snapshot is a
-            // value copy into the live engine, not a rebuild.
-            engine.stack.load_flat_weights(&snap.weights);
+        {
+            // Recorded every batch (usually ~ns for the epoch check) so a
+            // trace always shows where snapshot adoption would happen;
+            // adopting a fresh epoch makes the span visibly longer.
+            let _s = trace::span_cat("serve.snapshot_adopt", "serve");
+            let latest = weights.load();
+            if latest.epoch != snap.epoch {
+                snap = latest;
+                // Same stack geometry across epochs: adopting a snapshot
+                // is a value copy into the live engine, not a rebuild.
+                engine.stack.load_flat_weights(&snap.weights);
+            }
         }
         let n = batch.len();
-        metas.clear();
-        windows.clear();
-        for r in batch {
-            metas.push((r.id, r.submitted, r.reply));
-            windows.push(r.window);
+        {
+            let _s = trace::span_cat("serve.batch_assembly", "serve");
+            metas.clear();
+            windows.clear();
+            for r in batch {
+                metas.push((r.id, r.submitted, r.reply));
+                windows.push(r.window);
+            }
         }
-        engine.infer_winners_into(&windows, &mut winners);
-        for ((id, submitted, reply), &winner) in metas.drain(..).zip(winners.iter()) {
-            let latency = submitted.elapsed();
-            metrics.record_latency(latency);
-            metrics.completed.fetch_add(1, Relaxed);
-            // A dropped receiver (client gone) is not an error for the shard.
-            let _ = reply.send(InferReply { id, winner, epoch: snap.epoch, latency });
+        {
+            let _s = trace::span_cat("serve.infer", "serve");
+            engine.infer_winners_into(&windows, &mut winners);
         }
-        metrics.batches.fetch_add(1, Relaxed);
-        metrics.batched_samples.fetch_add(n as u64, Relaxed);
+        {
+            let _s = trace::span_cat("serve.reply", "serve");
+            for ((id, submitted, reply), &winner) in metas.drain(..).zip(winners.iter()) {
+                let latency = submitted.elapsed();
+                metrics.record_latency(latency);
+                metrics.completed.inc();
+                // A dropped receiver (client gone) is not an error for the
+                // shard.
+                let _ = reply.send(InferReply { id, winner, epoch: snap.epoch, latency });
+            }
+        }
+        metrics.batches.inc();
+        metrics.batched_samples.add(n as u64);
     }
 }
 
@@ -161,17 +186,18 @@ pub(crate) fn learner_loop(
             stack.step_with(&req.window, &mut scratch);
             steps += 1;
             dirty = true;
-            metrics.learned.fetch_add(1, Relaxed);
+            metrics.learned.inc();
             if steps % every == 0 {
+                let _s = trace::span_cat("serve.snapshot_publish", "serve");
                 weights.publish(stack.flat_weights());
-                metrics.snapshots_published.fetch_add(1, Relaxed);
+                metrics.snapshots_published.inc();
                 dirty = false;
             }
         }
     }
     if dirty {
         weights.publish(stack.flat_weights());
-        metrics.snapshots_published.fetch_add(1, Relaxed);
+        metrics.snapshots_published.inc();
     }
 }
 

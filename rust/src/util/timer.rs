@@ -40,6 +40,14 @@ impl Stopwatch {
     }
 }
 
+/// Sort float samples ascending by IEEE-754 total order. Unlike a
+/// `partial_cmp(..).unwrap()` comparator, this never panics: a NaN that
+/// sneaks into a measurement (e.g. a derived rate over a zero interval)
+/// sorts after every real number instead of aborting the run.
+pub fn sort_samples(samples: &mut [f64]) {
+    samples.sort_by(f64::total_cmp);
+}
+
 /// Run `f` `iters` times, returning per-iteration seconds (sorted ascending).
 pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> Vec<f64> {
     let mut samples = Vec::with_capacity(iters);
@@ -48,7 +56,7 @@ pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> Vec<f64> {
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_samples(&mut samples);
     samples
 }
 
@@ -63,6 +71,16 @@ mod tests {
         sw.lap("b");
         assert_eq!(sw.laps().len(), 2);
         assert!(sw.total() >= sw.laps()[0].1);
+    }
+
+    #[test]
+    fn sort_samples_is_nan_safe() {
+        // The old partial_cmp(..).unwrap() comparator aborted on NaN;
+        // total order must sort it after every real number instead.
+        let mut xs = vec![3.0, f64::NAN, -1.0, 2.0];
+        sort_samples(&mut xs);
+        assert_eq!(&xs[..3], &[-1.0, 2.0, 3.0]);
+        assert!(xs[3].is_nan());
     }
 
     #[test]

@@ -12,8 +12,13 @@
 //! through the per-layer scratch and the reused inter-layer handoff
 //! buffer.
 //!
+//! The same binary also pins the observability contract: with span
+//! tracing compiled in but DISABLED (the default), an instrumented hot
+//! path costs one relaxed atomic load per span — no ring registration,
+//! no event, ZERO allocations.
+//!
 //! This file is its own test binary with a single #[test] so no sibling
-//! test pollutes the allocation counter.
+//! test pollutes the allocation counter (or flips the global trace flag).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
@@ -135,5 +140,30 @@ fn steady_state_batched_inference_does_not_allocate() {
         let delta = ALLOC_CALLS.load(Relaxed) - before;
         assert_eq!(delta, 0, "{}: steady-state stack inference allocated", kind.name());
         assert_eq!(winners, expected, "{}", kind.name());
+    }
+
+    // Observability pin: tracing is compiled into the hot paths (the
+    // worker pool's dispatch/chunk spans and this explicit probe span)
+    // but disabled by default, and a disabled span must stay at one
+    // relaxed atomic load — no ring registration, no event, and
+    // crucially no allocation.
+    assert!(
+        !tnngen::obs::trace::enabled(),
+        "tracing must be off by default in the alloc test binary"
+    );
+    {
+        let cfg = ColumnConfig::new("AllocObs", "synthetic", 24, 3);
+        let xs = windows(24, 40, 7);
+        let batch = BatchSim::new(cfg, 7).with_workers(1);
+        let mut winners = Vec::new();
+        batch.infer_winners_into(&xs, &mut winners);
+        batch.infer_winners_into(&xs, &mut winners);
+        let before = ALLOC_CALLS.load(Relaxed);
+        {
+            let _span = tnngen::obs::trace::span("alloc.probe");
+            batch.infer_winners_into(&xs, &mut winners);
+        }
+        let delta = ALLOC_CALLS.load(Relaxed) - before;
+        assert_eq!(delta, 0, "disabled tracing must keep the hot path allocation-free");
     }
 }

@@ -95,9 +95,9 @@ fn registry_is_deterministic_and_covers_the_paper_matrix() {
         b.iter().map(|e| e.units_per_iter).collect::<Vec<_>>()
     );
     // 7 designs x (3 full_column engines + 2 full_stack engines +
-    // clustering) + 4 micro + 2 response + gate_level + 2 EDA stages
-    // + 2 campaigns.
-    assert_eq!(names.len(), 7 * 4 + 7 * 2 + 4 + 2 + 1 + 2 + 2);
+    // clustering) + 7 micro + 4 response + 2 obs_overhead + gate_level
+    // + 2 EDA stages + 2 campaigns.
+    assert_eq!(names.len(), 7 * 4 + 7 * 2 + 7 + 4 + 2 + 1 + 2 + 2);
     for cfg in tnngen::config::presets::paper_configs() {
         let tag = cfg.tag();
         for engine in ["cyclesim", "batchsim", "serve"] {

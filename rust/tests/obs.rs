@@ -1,0 +1,229 @@
+//! Acceptance tests for the observability layer (ISSUE 8):
+//!
+//! (a) the `tnngen.trace/v1` Chrome Trace artifact survives an
+//!     emit -> parse -> emit round trip byte-for-byte, both on
+//!     hand-built events and on a trace recorded end-to-end through
+//!     the global span machinery and `write_chrome_trace`;
+//! (b) the HDR histogram bucket mapping is exact at every octave
+//!     boundary, round-trips over every bucket index, and its floor
+//!     under-estimates random values by at most one sub-bucket
+//!     (~6% relative error) — checked property-style via `util::prop`;
+//! (c) a live `--metrics` scrape (Prometheus text AND the JSON
+//!     snapshot) of a served workload agrees exactly with the
+//!     in-process [`MetricsSnapshot`] the bench report embeds.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use tnngen::config::ColumnConfig;
+use tnngen::obs::metrics::{bucket_floor_us, bucket_index, BUCKETS, METRICS_SCHEMA, SUB_BUCKETS};
+use tnngen::obs::scrape::MetricsServer;
+use tnngen::obs::trace::{self, TraceEvent, TRACE_SCHEMA};
+use tnngen::report::artifacts;
+use tnngen::serve::{ServeOpts, TnnService};
+use tnngen::util::prop::check;
+use tnngen::util::Rng;
+
+fn cfg() -> ColumnConfig {
+    ColumnConfig::new("ObsTest", "synthetic", 24, 3)
+}
+
+fn windows(n: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect()
+}
+
+// ---------------------------------------------------------------- traces
+
+#[test]
+fn trace_artifact_round_trips_byte_for_byte() {
+    let events = vec![
+        TraceEvent {
+            name: "serve.queue_wait".to_string(),
+            cat: "serve".to_string(),
+            ts_us: 0.25,
+            dur_us: 12.5,
+            pid: 1,
+            tid: 1,
+        },
+        TraceEvent {
+            name: "pool.dispatch".to_string(),
+            cat: "pool".to_string(),
+            ts_us: 3.0,
+            dur_us: 1000.125,
+            pid: 1,
+            tid: 2,
+        },
+        TraceEvent {
+            name: "eda.synthesis".to_string(),
+            cat: "eda".to_string(),
+            ts_us: 2048.0,
+            dur_us: 0.0,
+            pid: 1,
+            tid: 1,
+        },
+    ];
+    let first = trace::trace_json(&events, 7).pretty();
+    assert!(first.contains(TRACE_SCHEMA), "artifact must carry its schema tag");
+    let (parsed, dropped) = trace::parse_trace(&first).expect("emitted artifact must parse");
+    assert_eq!(parsed, events, "parse must reconstruct the events exactly");
+    assert_eq!(dropped, 7, "the dropped-events count rides along");
+    let second = trace::trace_json(&parsed, dropped).pretty();
+    assert_eq!(first, second, "emit -> parse -> emit must be byte-stable");
+}
+
+#[test]
+fn recorded_spans_reach_the_trace_file_end_to_end() {
+    let path = std::env::temp_dir().join(format!("tnngen_obs_trace_{}.json", std::process::id()));
+    trace::enable();
+    {
+        let _outer = trace::span_cat("obs_test.outer", "obs_test");
+        let _inner = trace::span("obs_test.inner");
+        std::hint::black_box((0..100).sum::<u64>());
+    }
+    let written = trace::write_chrome_trace(&path).expect("trace file writes");
+    trace::set_enabled(false);
+    assert!(written >= 2, "both probe spans must be in the artifact (got {written})");
+    let text = std::fs::read_to_string(&path).expect("trace file reads back");
+    std::fs::remove_file(&path).ok();
+    let (events, _dropped) = trace::parse_trace(&text).expect("trace file parses");
+    let find = |name: &str| {
+        events
+            .iter()
+            .find(|e| e.name == name)
+            .unwrap_or_else(|| panic!("span {name} missing from trace"))
+    };
+    let outer = find("obs_test.outer");
+    let inner = find("obs_test.inner");
+    assert_eq!(outer.cat, "obs_test", "span_cat category must be preserved");
+    assert_eq!(inner.cat, "tnngen", "plain span() gets the default category");
+    assert_eq!(outer.tid, inner.tid, "same thread, same trace-local tid");
+    assert!(outer.dur_us >= inner.dur_us, "outer span encloses the inner one");
+}
+
+// ------------------------------------------------------ histogram buckets
+
+#[test]
+fn bucket_floor_is_exact_at_every_octave_boundary() {
+    for v in 0..SUB_BUCKETS {
+        assert_eq!(bucket_floor_us(bucket_index(v)), v, "values below {SUB_BUCKETS} are exact");
+    }
+    for k in 4..64u32 {
+        let v = 1u64 << k;
+        assert_eq!(bucket_floor_us(bucket_index(v)), v, "octave boundary 2^{k}");
+    }
+}
+
+#[test]
+fn bucket_index_and_floor_round_trip_over_every_bucket() {
+    for idx in 0..BUCKETS {
+        assert_eq!(bucket_index(bucket_floor_us(idx)), idx, "bucket {idx}");
+    }
+}
+
+#[test]
+fn bucket_floor_under_estimates_by_at_most_one_sub_bucket() {
+    check("histogram floor error is bounded by 1/SUB_BUCKETS", 500, |g| {
+        // Shift a full-width draw right by a random amount so every
+        // octave (not just the top few) is exercised.
+        let shift = g.rng.below(64) as u32;
+        let v = g.rng.next_u64() >> shift;
+        let floor = bucket_floor_us(bucket_index(v));
+        assert!(floor <= v, "floor {floor} must never exceed the value {v}");
+        if v < SUB_BUCKETS {
+            assert_eq!(floor, v, "small values map exactly");
+        } else {
+            assert!(
+                v - floor <= floor / SUB_BUCKETS,
+                "error {} at {v} exceeds one sub-bucket ({})",
+                v - floor,
+                floor / SUB_BUCKETS
+            );
+        }
+    });
+}
+
+// ------------------------------------------------------------ live scrape
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect to metrics endpoint");
+    write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").expect("send request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("response has a header block");
+    assert!(head.starts_with("HTTP/1.0 200 OK"), "{head}");
+    body.to_string()
+}
+
+/// The value of sample line `name <value>` in a Prometheus text
+/// exposition (exact name match, so `foo` never matches `foo_count`).
+fn prom_value(text: &str, name: &str) -> u64 {
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        if parts.next() == Some(name) {
+            return parts.next().expect("sample value").parse().expect("integer sample");
+        }
+    }
+    panic!("metric {name} not found in scrape:\n{text}");
+}
+
+#[test]
+fn metrics_scrape_agrees_with_the_in_process_snapshot() {
+    let xs = windows(16, 24, 41);
+    let svc = TnnService::start(cfg(), 9, ServeOpts { shards: 2, ..Default::default() });
+    let (tx, rx) = mpsc::channel();
+    for x in &xs {
+        svc.submit_infer(x.clone(), tx.clone()).expect("submit");
+    }
+    for _ in 0..xs.len() {
+        rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+    }
+    svc.submit_learn(xs[0].clone()).expect("learn submit");
+    // Graceful shutdown joins every worker, so the counters are
+    // quiescent: the scrape and the snapshot must agree EXACTLY.
+    svc.shutdown();
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.accepted, 16);
+    assert_eq!(snap.completed, 16);
+    assert_eq!(snap.learn_accepted, 1);
+
+    let srv = MetricsServer::spawn("127.0.0.1:0", vec![svc.metrics().registry()])
+        .expect("bind ephemeral metrics endpoint");
+
+    let text = http_get(srv.local_addr(), "/metrics");
+    for (name, want) in [
+        ("tnngen_serve_accepted_total", snap.accepted),
+        ("tnngen_serve_rejected_total", snap.rejected),
+        ("tnngen_serve_completed_total", snap.completed),
+        ("tnngen_serve_learn_accepted_total", snap.learn_accepted),
+        ("tnngen_serve_learned_total", snap.learned),
+        ("tnngen_serve_snapshots_published_total", snap.snapshots_published),
+        ("tnngen_serve_batches_total", snap.batches),
+        ("tnngen_serve_batched_samples_total", snap.batched_samples),
+        ("tnngen_serve_latency_us_count", snap.recorded),
+        ("tnngen_serve_latency_us_saturated_total", snap.saturated),
+    ] {
+        assert_eq!(prom_value(&text, name), want, "{name} must match the snapshot");
+    }
+
+    let body = http_get(srv.local_addr(), "/metrics.json");
+    let doc = artifacts::parse(&body).expect("JSON snapshot parses");
+    assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some(METRICS_SCHEMA));
+    let counters = doc.get("counters").expect("counters section");
+    assert_eq!(
+        counters.get("tnngen_serve_completed_total").and_then(|v| v.as_i64()),
+        Some(snap.completed as i64)
+    );
+    let hist = doc
+        .get("histograms")
+        .and_then(|h| h.get("tnngen_serve_latency_us"))
+        .expect("latency histogram in JSON snapshot");
+    assert_eq!(hist.get("count").and_then(|v| v.as_i64()), Some(snap.recorded as i64));
+    assert_eq!(hist.get("saturated").and_then(|v| v.as_i64()), Some(snap.saturated as i64));
+    assert_eq!(hist.get("p99_us").and_then(|v| v.as_f64()), Some(snap.service_p99_us));
+}
