@@ -1,0 +1,470 @@
+//! Multi-process distributed serving bench: a [`Cluster`] of real
+//! `tnngen` child processes (registry + learner + reader nodes) driven
+//! closed-loop through the client-side [`RouterCore`]/[`RouterClient`],
+//! with optional chaos injection (SIGKILL a reader mid-run, or kill and
+//! restart the learner).
+//!
+//! This lives outside the in-process bench registry on purpose: registry
+//! entries all run inside one test process
+//! (`tests/bench.rs::prepared_closures_run`), while this harness spawns
+//! OS processes — `tnngen dbench` and `tests/distributed.rs` are its
+//! entry points, pointing it at the binary via `std::env::current_exe`
+//! or `CARGO_BIN_EXE_tnngen` respectively.
+//!
+//! Children are spawned with stdout piped just long enough to read the
+//! one-line announce (`tnngen node listening on ADDR`); they inherit the
+//! environment, so `TNNGEN_ENGINE` set by a test or the CI matrix
+//! selects the kernel backend inside every child too.
+
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::presets::by_tag;
+use crate::coordinator::jobs::spawn_worker;
+use crate::eda::cache::fnv1a64;
+use crate::serve::loadgen::BenchReport;
+use crate::serve::metrics::MetricsSnapshot;
+use crate::serve::proto::{ROLE_LEARNER, ROLE_READER};
+use crate::serve::registry::RegistryClient;
+use crate::serve::router::{RouterClient, RouterCore, RouterOpts};
+use crate::serve::tcp::STATUS_OK;
+use crate::util::stats::{mean, nearest_rank_index};
+use crate::util::timer::sort_samples;
+use crate::util::Rng;
+
+/// Stdout announce prefix printed by `tnngen registry`.
+pub const ANNOUNCE_REGISTRY: &str = "tnngen registry listening on ";
+/// Stdout announce prefix printed by `tnngen serve --join`.
+pub const ANNOUNCE_NODE: &str = "tnngen node listening on ";
+
+/// Chaos injected while the closed loop is running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Chaos {
+    /// No failures: plain multi-process closed loop.
+    None,
+    /// SIGKILL one reader node at ~50% completion; the router must
+    /// reroute and the run must finish with zero lost requests.
+    KillReader,
+    /// SIGKILL the learner at ~33% completion and immediately respawn
+    /// it; readers must converge to the new learner's snapshot epoch.
+    RestartLearner,
+}
+
+/// Parameters for one distributed bench run.
+#[derive(Debug, Clone)]
+pub struct DistOpts {
+    /// Path to the `tnngen` binary to spawn nodes from.
+    pub bin: PathBuf,
+    /// Served design tag (e.g. `16x2`; see `tnngen list`).
+    pub design: String,
+    /// Weight-init seed shared by every node (same seed = same epoch-0
+    /// weights on every process).
+    pub seed: u64,
+    /// Reader-node count.
+    pub readers: usize,
+    /// Reader shards *inside* each node process.
+    pub shards: usize,
+    /// Micro-batch cap inside each node. Scaling runs want 1 here:
+    /// batching amortizes `worker_delay_us` across queued requests, so a
+    /// single node with a big batch matches N nodes — capping the batch
+    /// makes per-node throughput finite and node-count scaling visible.
+    pub max_batch: usize,
+    /// Total closed-loop requests.
+    pub requests: usize,
+    /// Concurrent client threads (each with its own connections).
+    pub clients: usize,
+    /// Every k-th request is a learn request (0 = inference only).
+    pub learn_every: usize,
+    /// Learner steps between snapshot publishes (passed to the learner).
+    pub snapshot_every: usize,
+    /// Node heartbeat interval in ms.
+    pub heartbeat_ms: u64,
+    /// Reader snapshot-poll interval in ms.
+    pub replicate_ms: u64,
+    /// Test-only per-batch delay inside node shard workers, to make
+    /// throughput compute-bound (and scaling measurable) on tiny designs.
+    pub worker_delay_us: u64,
+    /// Chaos mode.
+    pub chaos: Chaos,
+}
+
+impl DistOpts {
+    /// Defaults sized for a quick smoke run of `design` using `bin`.
+    pub fn new(bin: PathBuf, design: &str) -> Self {
+        DistOpts {
+            bin,
+            design: design.to_string(),
+            seed: 42,
+            readers: 2,
+            shards: 1,
+            max_batch: 16,
+            requests: 400,
+            clients: 4,
+            learn_every: 0,
+            snapshot_every: 8,
+            heartbeat_ms: 200,
+            replicate_ms: 50,
+            worker_delay_us: 0,
+            chaos: Chaos::None,
+        }
+    }
+}
+
+/// One spawned child process plus the data-plane address it announced.
+pub struct Proc {
+    /// The announced listen address.
+    pub addr: String,
+    child: Child,
+}
+
+impl Proc {
+    /// SIGKILL the process (no drain — that is the point) and reap it.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `bin args...` and block until it announces its listen address
+/// on stdout with `prefix`.
+fn spawn_proc(bin: &Path, args: &[String], prefix: &str) -> Result<Proc> {
+    let mut child = Command::new(bin)
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning {}", bin.display()))?;
+    let stdout = child.stdout.take().expect("stdout is piped");
+    for line in std::io::BufReader::new(stdout).lines() {
+        let line = line?;
+        if let Some(addr) = line.strip_prefix(prefix) {
+            return Ok(Proc { addr: addr.trim().to_string(), child });
+        }
+    }
+    let _ = child.kill();
+    let _ = child.wait();
+    anyhow::bail!("child {} exited without announcing `{prefix}...`", bin.display())
+}
+
+/// A running multi-process cluster: registry, learner, reader nodes.
+pub struct Cluster {
+    /// The registry's control address.
+    pub registry_addr: String,
+    opts: DistOpts,
+    _registry: Proc,
+    learner: Option<Proc>,
+    readers: Vec<Proc>,
+}
+
+impl Cluster {
+    /// Spawn registry + learner + `opts.readers` reader processes and
+    /// wait for each announce.
+    pub fn launch(opts: &DistOpts) -> Result<Cluster> {
+        let registry = spawn_proc(
+            &opts.bin,
+            &["registry".to_string(), "--listen".to_string(), "127.0.0.1:0".to_string()],
+            ANNOUNCE_REGISTRY,
+        )?;
+        let registry_addr = registry.addr.clone();
+        let learner = spawn_node(opts, &registry_addr, ROLE_LEARNER)?;
+        let readers = (0..opts.readers)
+            .map(|_| spawn_node(opts, &registry_addr, ROLE_READER))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Cluster {
+            registry_addr,
+            opts: opts.clone(),
+            _registry: registry,
+            learner: Some(learner),
+            readers,
+        })
+    }
+
+    /// Live reader count.
+    pub fn reader_count(&self) -> usize {
+        self.readers.len()
+    }
+
+    /// SIGKILL reader `i` (it stays in the registry until its TTL
+    /// expires — exactly the window the router must reroute through).
+    pub fn kill_reader(&mut self, i: usize) {
+        if i < self.readers.len() {
+            self.readers.remove(i).kill();
+        }
+    }
+
+    /// SIGKILL the learner and spawn a replacement (fresh process, fresh
+    /// address, fresh registration generation, epoch counter back to 0).
+    pub fn restart_learner(&mut self) -> Result<()> {
+        if let Some(mut l) = self.learner.take() {
+            l.kill();
+        }
+        self.learner = Some(spawn_node(&self.opts, &self.registry_addr, ROLE_LEARNER)?);
+        Ok(())
+    }
+}
+
+fn spawn_node(opts: &DistOpts, registry_addr: &str, role: u8) -> Result<Proc> {
+    let role_s = if role == ROLE_LEARNER { "learner" } else { "reader" };
+    let mut args: Vec<String> = vec![
+        "serve".to_string(),
+        opts.design.clone(),
+        "--join".to_string(),
+        registry_addr.to_string(),
+        "--role".to_string(),
+        role_s.to_string(),
+        "--listen".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--seed".to_string(),
+        opts.seed.to_string(),
+        "--shards".to_string(),
+        opts.shards.to_string(),
+        "--batch".to_string(),
+        opts.max_batch.to_string(),
+        "--snapshot-every".to_string(),
+        opts.snapshot_every.to_string(),
+        "--heartbeat-ms".to_string(),
+        opts.heartbeat_ms.to_string(),
+        "--replicate-ms".to_string(),
+        opts.replicate_ms.to_string(),
+    ];
+    if opts.worker_delay_us > 0 {
+        args.push("--worker-delay-us".to_string());
+        args.push(opts.worker_delay_us.to_string());
+    }
+    spawn_proc(&opts.bin, &args, ANNOUNCE_NODE)
+}
+
+/// Outcome of one distributed run: the standard serve bench report (so
+/// `tnngen.serve.bench/v1` tooling applies unchanged) plus
+/// router-observed failure counts.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    /// Standard serve bench report. `shards` holds the READER NODE
+    /// count; `metrics` is empty (service counters live in the remote
+    /// node processes — scrape them via each node's `--metrics`).
+    pub report: BenchReport,
+    /// Inference requests that exhausted the router's retry budget
+    /// (must be 0 even under reader-kill chaos).
+    pub infer_failed: u64,
+    /// Learn requests that failed (non-zero only while the learner is
+    /// down in [`Chaos::RestartLearner`]).
+    pub learn_failed: u64,
+    /// Router reroutes (node quarantined after a failure).
+    pub reroutes: u64,
+    /// Router retry attempts beyond each request's first.
+    pub retries: u64,
+    /// Epoch every live reader converged to after a learner restart
+    /// (`Some` only for [`Chaos::RestartLearner`] runs).
+    pub converged_epoch: Option<u64>,
+}
+
+/// Deterministic synthetic request windows for `design`.
+pub fn bench_windows(design: &str, n: usize, seed: u64) -> Result<Vec<Vec<f32>>> {
+    let cfg = by_tag(design).with_context(|| format!("unknown design tag {design:?}"))?;
+    let mut rng = Rng::new(seed);
+    Ok((0..n).map(|_| (0..cfg.p).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect())
+}
+
+/// Launch a cluster per `opts`, drive it closed-loop from `opts.clients`
+/// router threads, inject the configured chaos, and report.
+pub fn run_dist_bench(opts: &DistOpts) -> Result<DistReport> {
+    let mut cluster = Cluster::launch(opts)?;
+    let core = Arc::new(RouterCore::new(&cluster.registry_addr, RouterOpts::default()));
+    core.refresh(true);
+    let windows = Arc::new(bench_windows(&opts.design, 64, opts.seed)?);
+
+    let requests = opts.requests.max(1);
+    let next = Arc::new(AtomicUsize::new(0));
+    let progress = Arc::new(AtomicU64::new(0));
+    let infer_failed = Arc::new(AtomicU64::new(0));
+    let learn_failed = Arc::new(AtomicU64::new(0));
+    // (request id, winner, client latency in us) per completed inference.
+    let replies: Arc<Mutex<Vec<(u64, i32, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..opts.clients.max(1) {
+        let (core, windows, next) = (Arc::clone(&core), Arc::clone(&windows), Arc::clone(&next));
+        let (progress, replies) = (Arc::clone(&progress), Arc::clone(&replies));
+        let (infer_failed, learn_failed) = (Arc::clone(&infer_failed), Arc::clone(&learn_failed));
+        let learn_every = opts.learn_every;
+        handles.push(spawn_worker(&format!("tnn-dist-client-{t}"), move || {
+            let mut client = RouterClient::new(core);
+            let mut local: Vec<(u64, i32, f64)> = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Relaxed);
+                if i >= requests {
+                    break;
+                }
+                let window = &windows[i % windows.len()];
+                let is_learn = learn_every > 0 && i % learn_every == learn_every - 1;
+                if is_learn {
+                    match client.learn(window) {
+                        Ok(r) if r.status == STATUS_OK => {}
+                        _ => {
+                            learn_failed.fetch_add(1, Relaxed);
+                        }
+                    }
+                } else {
+                    let t0 = Instant::now();
+                    match client.infer(window) {
+                        Ok(r) if r.status == STATUS_OK => {
+                            let us = t0.elapsed().as_secs_f64() * 1e6;
+                            local.push((i as u64, r.winner, us));
+                        }
+                        _ => {
+                            infer_failed.fetch_add(1, Relaxed);
+                        }
+                    }
+                }
+                progress.fetch_add(1, Relaxed);
+            }
+            replies.lock().unwrap().extend(local);
+        }));
+    }
+
+    // Chaos controller: trigger on observed progress, not wall time, so
+    // the injection lands mid-run at any machine speed.
+    let chaos_result: Result<()> = match opts.chaos {
+        Chaos::None => Ok(()),
+        Chaos::KillReader => {
+            wait_for_progress(&progress, (requests / 2) as u64);
+            cluster.kill_reader(0);
+            Ok(())
+        }
+        Chaos::RestartLearner => {
+            wait_for_progress(&progress, (requests / 3) as u64);
+            cluster.restart_learner()
+        }
+    };
+    for h in handles {
+        let _ = h.join();
+    }
+    chaos_result?;
+    let wall_s = start.elapsed().as_secs_f64();
+    // After a learner restart, hold the cluster open until every live
+    // reader has adopted the NEW learner's snapshot epoch.
+    let converged_epoch = if opts.chaos == Chaos::RestartLearner {
+        Some(await_epoch_convergence(&cluster.registry_addr, Duration::from_secs(15))?)
+    } else {
+        None
+    };
+
+    let mut replies = std::mem::take(&mut *replies.lock().unwrap());
+    replies.sort_by_key(|&(id, _, _)| id);
+    let mut bytes = Vec::with_capacity(replies.len() * 12);
+    for &(id, winner, _) in &replies {
+        bytes.extend_from_slice(&id.to_le_bytes());
+        bytes.extend_from_slice(&winner.to_le_bytes());
+    }
+    let mut lat: Vec<f64> = replies.iter().map(|&(_, _, us)| us).collect();
+    sort_samples(&mut lat);
+    let (p50, p95, p99, mean_us, max_us) = if lat.is_empty() {
+        (0.0, 0.0, 0.0, 0.0, 0.0)
+    } else {
+        let pick = |p: f64| lat[nearest_rank_index(lat.len(), p)];
+        (pick(50.0), pick(95.0), pick(99.0), mean(&lat), *lat.last().unwrap())
+    };
+    let completed = replies.len() as u64;
+    let learn_offered = if opts.learn_every > 0 {
+        (requests / opts.learn_every) as u64
+    } else {
+        0
+    };
+    let metrics = core.metrics();
+    let report = BenchReport {
+        design: opts.design.clone(),
+        shards: opts.readers,
+        max_batch: opts.max_batch,
+        queue_capacity: 0,
+        mode: "dist-closed-loop".to_string(),
+        target_rps: 0.0,
+        wall_s,
+        offered: requests as u64,
+        accepted: requests as u64 - learn_offered,
+        rejected: 0,
+        learn_offered,
+        learn_rejected: learn_failed.load(Relaxed),
+        completed,
+        lost: infer_failed.load(Relaxed),
+        no_fire: replies.iter().filter(|&&(_, w, _)| w < 0).count() as u64,
+        throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        latency_p50_us: p50,
+        latency_p95_us: p95,
+        latency_p99_us: p99,
+        latency_mean_us: mean_us,
+        latency_max_us: max_us,
+        winners_digest: format!("{:016x}", fnv1a64(&bytes)),
+        metrics: MetricsSnapshot::default(),
+    };
+    Ok(DistReport {
+        report,
+        infer_failed: infer_failed.load(Relaxed),
+        learn_failed: learn_failed.load(Relaxed),
+        reroutes: metrics.counter("tnngen_router_reroutes_total").get(),
+        retries: metrics.counter("tnngen_router_retries_total").get(),
+        converged_epoch,
+    })
+}
+
+fn wait_for_progress(progress: &AtomicU64, target: u64) {
+    while progress.load(Relaxed) < target {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Run the same drive against 1 reader node and `opts.readers` reader
+/// nodes (chaos off) and return both reports, single-node first — the
+/// throughput-scaling evidence behind the acceptance criterion.
+pub fn run_scaling(opts: &DistOpts) -> Result<(DistReport, DistReport)> {
+    let single = DistOpts { readers: 1, chaos: Chaos::None, ..opts.clone() };
+    let multi = DistOpts { chaos: Chaos::None, ..opts.clone() };
+    let one = run_dist_bench(&single)?;
+    let many = run_dist_bench(&multi)?;
+    Ok((one, many))
+}
+
+/// Poll the registry until every live reader reports the live learner's
+/// snapshot epoch (replication converged); returns that epoch.
+pub fn await_epoch_convergence(registry_addr: &str, timeout: Duration) -> Result<u64> {
+    let mut client = RegistryClient::new(registry_addr);
+    let deadline = Instant::now() + timeout;
+    let mut last = String::new();
+    loop {
+        if let Ok(nodes) = client.list() {
+            let learner_epoch = nodes
+                .iter()
+                .filter(|n| n.alive && n.role == ROLE_LEARNER)
+                .max_by_key(|n| n.generation)
+                .map(|n| n.epoch);
+            let readers: Vec<&_> =
+                nodes.iter().filter(|n| n.alive && n.role == ROLE_READER).collect();
+            if let Some(e) = learner_epoch {
+                if !readers.is_empty() && readers.iter().all(|n| n.epoch == e) {
+                    return Ok(e);
+                }
+            }
+            last = format!(
+                "learner epoch {learner_epoch:?}, reader epochs {:?}",
+                readers.iter().map(|n| n.epoch).collect::<Vec<_>>()
+            );
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "readers did not converge within {timeout:?} ({last})"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}

@@ -22,6 +22,11 @@
 //!   regressions (exit 3) while staying quiet about timer noise. `bench
 //!   speedup` additionally pairs scalar↔vector engine rows WITHIN one
 //!   artifact and demands a minimum cross-backend speedup (exit 3).
+//! * [`dist`] — multi-process distributed serving bench (`tnngen
+//!   dbench`): spawns registry + learner + reader child processes,
+//!   drives them closed-loop through [`serve::router`](crate::serve::router),
+//!   optionally SIGKILLs a node mid-run, and reports as
+//!   `tnngen.serve.bench/v1`.
 //!
 //! The committed seed baseline lives at the repo root (`BENCH_seed.json`)
 //! and CI runs `tnngen bench check --against BENCH_seed.json` in
@@ -32,6 +37,7 @@
 //! run to run. `rust/tests/bench.rs` pins the contract.
 
 pub mod artifact;
+pub mod dist;
 pub mod gate;
 pub mod registry;
 pub mod runner;

@@ -33,6 +33,7 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use tnngen::bench::dist::{self, Chaos, DistOpts};
 use tnngen::bench::{self, GateSpec, Profile, RunnerOpts};
 use tnngen::cli::Args;
 use tnngen::cluster::pipeline::TnnClustering;
@@ -49,6 +50,9 @@ use tnngen::report::artifacts;
 use tnngen::report::experiments::{self, Effort};
 use tnngen::report::{f2, f3, Table};
 use tnngen::rtl::{generate_column, verilog::emit_verilog};
+use tnngen::serve::node::{NodeOpts, ServeNode};
+use tnngen::serve::proto::{ROLE_LEARNER, ROLE_READER};
+use tnngen::serve::registry::{RegistryServer, DEFAULT_TTL_MS};
 use tnngen::serve::{run_open_loop, LoadSpec, ServeOpts, TcpFront, TnnService};
 use tnngen::sim::engine::{set_default_kind, EngineKind};
 
@@ -66,7 +70,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce|serve|bench> [args]
+const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|forecast|reproduce|serve|registry|dbench|bench> [args]
   simulate <tag|name> [--backend pjrt|native] [--epochs N] [--seed N] [--samples N]
            [--sequential|--shuffle] [--ucr-dir DIR]
   generate-rtl <tag> [--out file.v]
@@ -76,9 +80,16 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   reproduce [--table 2|3|4|5] [--fig 2|3|4] [--all] [--fast] [--backend pjrt|native]
             [--workers N] [--cache-dir DIR] [--json] [--ucr-dir DIR]
   serve <tag|name> [--stack q1[,q2...]] [--shards N] [--batch N] [--wait-us US] [--queue N]
-        [--learn-queue N] [--snapshot-every K]
+        [--learn-queue N] [--snapshot-every K] [--worker-delay-us US]
         [--bench --rps R --duration S [--learn-every K] [--json]]
         [--tcp ADDR] [--metrics ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
+  serve <tag|name> --join REGISTRY_ADDR [--role reader|learner] [--listen ADDR]
+        [--heartbeat-ms MS] [--replicate-ms MS] [serve flags]
+  registry [--listen ADDR] [--ttl-ms MS]
+  dbench <tag> [--readers N] [--requests N] [--clients N] [--learn-every K]
+         [--chaos none|kill-reader|restart-learner] [--scaling] [--shards N]
+         [--batch N] [--snapshot-every K] [--worker-delay-us US] [--seed N]
+         [--json]
   bench [run|list] [--profile quick|full | --quick] [--filter PATTERNS]
         [--iters N] [--warmup N] [--json] [--out FILE]
   bench record [--out FILE] [run flags]       (defaults to BENCH_<profile>.json)
@@ -116,6 +127,16 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   layer of that many neurons fed by the previous layer's outputs (shapes
   chain automatically); requests stay windows of the base design's p and
   replies carry the LAST layer's WTA winner.
+  serve --join REGISTRY_ADDR turns the process into a cluster node: it
+  registers with a `tnngen registry`, heartbeats its liveness and
+  snapshot epoch, answers the framed protocol on --listen, and (as a
+  reader) polls the live learner for weight snapshots. registry hosts
+  the in-memory node directory those processes coordinate through.
+  dbench spawns a whole cluster (registry + learner + --readers reader
+  processes) from this binary, drives it closed-loop through the fault-
+  tolerant client router, and reports tnngen.serve.bench/v1; --chaos
+  SIGKILLs a reader (or kills+restarts the learner) mid-run and --scaling
+  runs 1-reader vs N-reader back to back. See docs/DISTRIBUTED.md.
   serve --bench drives the sharded micro-batching service with an
   open-loop load generator at --rps for --duration seconds and reports
   throughput + nearest-rank p50/p95/p99 latency (typed rejections count
@@ -136,6 +157,22 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   least --min x (default 2.0) scalar/vector speedup — the same-run,
   same-machine vector-backend gate. See docs/BENCHMARKS.md for the
   methodology and schema.";
+
+fn print_dist_report(r: &dist::DistReport) {
+    let b = &r.report;
+    println!(
+        "dbench {} ({}): {} reader nodes — {} requests, completed {} lost {}, learn {}/{} failed",
+        b.design, b.mode, b.shards, b.offered, b.completed, b.lost, b.learn_rejected, b.learn_offered
+    );
+    println!(
+        "  throughput {:.0} rps | latency p50 {:.0} us p95 {:.0} us p99 {:.0} us max {:.0} us",
+        b.throughput_rps, b.latency_p50_us, b.latency_p95_us, b.latency_p99_us, b.latency_max_us
+    );
+    println!("  reroutes {} retries {} | digest {}", r.reroutes, r.retries, b.winners_digest);
+    if let Some(e) = r.converged_epoch {
+        println!("  readers converged to learner snapshot epoch {e}");
+    }
+}
 
 fn resolve_config(key: &str) -> Result<ColumnConfig> {
     if let Some(c) = by_tag(key) {
@@ -545,7 +582,9 @@ fn run_command(args: &Args) -> Result<()> {
                 queue_capacity: args.flag_usize("queue", 1024)?,
                 learn_queue_capacity: args.flag_usize("learn-queue", 1024)?,
                 snapshot_every: args.flag_usize("snapshot-every", 64)?,
-                worker_delay: Duration::ZERO,
+                // Test/bench-only per-batch stall, to make tiny designs
+                // compute-bound so node-count throughput scaling shows.
+                worker_delay: Duration::from_micros(args.flag_u64("worker-delay-us", 0)?),
             };
             let seed = args.flag_u64("seed", 42)?;
             let svc = std::sync::Arc::new(TnnService::start_stack(&cfgs, seed, opts)?);
@@ -567,6 +606,30 @@ fn run_command(args: &Args) -> Result<()> {
                     "metrics on http://{0}/metrics (Prometheus text) and http://{0}/metrics.json",
                     srv.local_addr()
                 );
+            }
+            if let Some(registry_addr) = args.flag("join") {
+                let role = match args.flag("role").unwrap_or("reader") {
+                    "reader" => ROLE_READER,
+                    "learner" => ROLE_LEARNER,
+                    other => bail!("--role must be reader or learner, got {other:?}"),
+                };
+                let node = ServeNode::spawn(
+                    svc.clone(),
+                    NodeOpts {
+                        role,
+                        listen: args.flag("listen").unwrap_or("127.0.0.1:0").to_string(),
+                        registry: registry_addr.to_string(),
+                        heartbeat: Duration::from_millis(args.flag_u64("heartbeat-ms", 500)?),
+                        replicate: Duration::from_millis(args.flag_u64("replicate-ms", 100)?),
+                    },
+                )?;
+                // This exact line is the contract `bench::dist` (and the CI
+                // smoke script) parse to learn the bound port.
+                println!("{}{}", dist::ANNOUNCE_NODE, node.local_addr());
+                // Serve until the process is killed.
+                loop {
+                    std::thread::park();
+                }
             }
             let tcp = match args.flag("tcp") {
                 Some(addr) => {
@@ -643,6 +706,66 @@ fn run_command(args: &Args) -> Result<()> {
                 }
             }
             svc.shutdown();
+            Ok(())
+        }
+        "registry" => {
+            let listen = args.flag("listen").unwrap_or("127.0.0.1:0");
+            let ttl_ms = args.flag_u64("ttl-ms", DEFAULT_TTL_MS)?;
+            ensure!(ttl_ms > 0, "--ttl-ms must be positive");
+            let srv = RegistryServer::spawn(listen, ttl_ms)?;
+            // This exact line is the contract `bench::dist` (and the CI
+            // smoke script) parse to learn the bound port.
+            println!("{}{}", dist::ANNOUNCE_REGISTRY, srv.local_addr());
+            // Serve until the process is killed.
+            loop {
+                std::thread::park();
+            }
+        }
+        "dbench" => {
+            let key = args.positional.first().context("dbench needs a design tag/name")?;
+            let cfg = resolve_config(key)?;
+            let bin = std::env::current_exe().context("locating the tnngen binary")?;
+            let mut opts = DistOpts::new(bin, &cfg.tag());
+            opts.seed = args.flag_u64("seed", 42)?;
+            opts.readers = args.flag_usize("readers", 2)?;
+            opts.shards = args.flag_usize("shards", 1)?;
+            opts.max_batch = args.flag_usize("batch", 16)?;
+            opts.requests = args.flag_usize("requests", 400)?;
+            opts.clients = args.flag_usize("clients", 4)?;
+            opts.learn_every = args.flag_usize("learn-every", 0)?;
+            opts.snapshot_every = args.flag_usize("snapshot-every", 8)?;
+            opts.worker_delay_us = args.flag_u64("worker-delay-us", 0)?;
+            opts.chaos = match args.flag("chaos").unwrap_or("none") {
+                "none" => Chaos::None,
+                "kill-reader" => Chaos::KillReader,
+                "restart-learner" => Chaos::RestartLearner,
+                other => bail!("--chaos must be none|kill-reader|restart-learner, got {other:?}"),
+            };
+            ensure!(opts.readers > 0, "--readers must be positive");
+            ensure!(opts.requests > 0, "--requests must be positive");
+            if args.flag_bool("scaling") {
+                ensure!(opts.readers > 1, "--scaling needs --readers > 1 to compare against");
+                let (one, many) = dist::run_scaling(&opts)?;
+                print_dist_report(&one);
+                print_dist_report(&many);
+                let ratio = many.report.throughput_rps / one.report.throughput_rps.max(1e-9);
+                println!(
+                    "scaling: {} readers at {:.2}x the 1-reader throughput",
+                    opts.readers, ratio
+                );
+            } else {
+                let r = dist::run_dist_bench(&opts)?;
+                if args.flag_bool("json") {
+                    print!("{}", artifacts::serve_bench_json(&r.report).pretty());
+                } else {
+                    print_dist_report(&r);
+                }
+                ensure!(
+                    r.infer_failed == 0,
+                    "{} inference requests exhausted the router's retries",
+                    r.infer_failed
+                );
+            }
             Ok(())
         }
         "bench" => bench_cmd(args),

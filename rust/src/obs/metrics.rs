@@ -64,6 +64,28 @@ pub fn bucket_floor_us(idx: usize) -> u64 {
     (sub + SUB_BUCKETS) << (group - 1)
 }
 
+/// Format an instrument name carrying one Prometheus label, e.g.
+/// `labeled("tnngen_router_requests_total", "node", addr)` →
+/// `tnngen_router_requests_total{node="127.0.0.1:7071"}`. Each distinct
+/// label value is its own instrument in the registry; the renderer emits
+/// one `# TYPE` line per base name (the part before `{`). Counters and
+/// gauges only — histogram rendering appends its own labels.
+pub fn labeled(name: &str, label: &str, value: &str) -> String {
+    let mut escaped = String::with_capacity(value.len());
+    for c in value.chars() {
+        if c == '\\' || c == '"' {
+            escaped.push('\\');
+        }
+        escaped.push(c);
+    }
+    format!("{name}{{{label}=\"{escaped}\"}}")
+}
+
+/// The metric name with any `{label="..."}` suffix stripped.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
 /// Monotonically increasing counter (relaxed atomic adds).
 #[derive(Debug, Default)]
 pub struct Counter(AtomicU64);
@@ -285,14 +307,25 @@ impl Registry {
     fn render_prometheus_into(&self, out: &mut String) {
         use std::fmt::Write as _;
         let ins = self.instruments.lock().expect("metrics registry poisoned");
+        // One `# TYPE` line per base name: labeled series like
+        // `foo{node="a"}` and `foo{node="b"}` share the type declaration
+        // of `foo`. Linear scan — registries hold tens of instruments.
+        let mut typed: Vec<&str> = Vec::new();
         for (name, i) in ins.iter() {
+            let base = base_name(name);
             match i {
                 Instrument::Counter(c) => {
-                    let _ = writeln!(out, "# TYPE {name} counter");
+                    if !typed.contains(&base) {
+                        typed.push(base);
+                        let _ = writeln!(out, "# TYPE {base} counter");
+                    }
                     let _ = writeln!(out, "{name} {}", c.get());
                 }
                 Instrument::Gauge(g) => {
-                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    if !typed.contains(&base) {
+                        typed.push(base);
+                        let _ = writeln!(out, "# TYPE {base} gauge");
+                    }
                     let _ = writeln!(out, "{name} {}", g.get());
                 }
                 Instrument::Histogram(h) => {
@@ -416,6 +449,19 @@ mod tests {
         let r = Registry::new();
         let _ = r.counter("t_mixed");
         let _ = r.gauge("t_mixed");
+    }
+
+    #[test]
+    fn labeled_series_share_one_type_line() {
+        let r = Registry::new();
+        r.counter(&labeled("t_routed_total", "node", "10.0.0.1:7071")).add(2);
+        r.counter(&labeled("t_routed_total", "node", "10.0.0.2:7071")).add(3);
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# TYPE t_routed_total counter").count(), 1);
+        assert!(text.contains("t_routed_total{node=\"10.0.0.1:7071\"} 2"));
+        assert!(text.contains("t_routed_total{node=\"10.0.0.2:7071\"} 3"));
+        // Quotes and backslashes in a label value are escaped.
+        assert_eq!(labeled("m", "k", "a\"b\\c"), "m{k=\"a\\\"b\\\\c\"}");
     }
 
     #[test]

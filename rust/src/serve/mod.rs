@@ -24,6 +24,22 @@
 //!   closed-loop with bounded in-flight) producing the
 //!   [`BenchReport`](loadgen::BenchReport) behind `tnngen serve --bench`.
 //!
+//! Four more pieces scale the service across OS processes (see
+//! `docs/DISTRIBUTED.md` and `rust/tests/{proto_fuzz,distributed}.rs`):
+//!
+//! * [`proto`] — control-plane frames (register/heartbeat/list/snapshot
+//!   fetch) riding the same transport; kinds start at
+//!   [`proto::CTRL_BASE`] so one listener serves both planes.
+//! * [`registry`] — the node directory (`tnngen registry`):
+//!   generation-stamped registration and TTL liveness as a pure
+//!   `(events, now_ms)` state machine behind a tiny TCP server.
+//! * [`node`] — `tnngen serve --join`: wraps a [`TnnService`] with the
+//!   dual-plane listener, heartbeats, and (for readers) pull replication
+//!   of the learner's epoch-versioned weight snapshots.
+//! * [`router`] — the fault-tolerant client side: health-checked
+//!   round-robin over live readers, per-request timeout, bounded
+//!   backoff, quarantine and rerouting on node loss.
+//!
 //! [`TnnService`] wires them together; [`tcp`] optionally exposes the
 //! service over a length-prefixed frame protocol. Contracts proven by
 //! `rust/tests/serve.rs`: reader results are bit-identical to offline
@@ -36,6 +52,10 @@
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
+pub mod node;
+pub mod proto;
+pub mod registry;
+pub mod router;
 pub mod shard;
 pub mod tcp;
 
@@ -264,6 +284,21 @@ impl TnnService {
     /// published).
     pub fn snapshot(&self) -> Arc<Snapshot> {
         self.weights.load()
+    }
+
+    /// Adopt a replicated weight snapshot under the remote learner's
+    /// epoch (the reader-node replication path). Shards pick it up at
+    /// their next batch boundary. Errors on a geometry mismatch instead
+    /// of serving from torn weights.
+    pub fn adopt_replica(&self, epoch: u64, weights: Vec<f32>) -> anyhow::Result<()> {
+        let expected: usize = self.cfgs.iter().map(|c| c.q * c.p).sum();
+        anyhow::ensure!(
+            weights.len() == expected,
+            "replica snapshot has {} weights, stack expects {expected}",
+            weights.len()
+        );
+        self.weights.publish_versioned(epoch, weights);
+        Ok(())
     }
 
     /// Admit one inference request; the reply is delivered on `reply`.

@@ -1,0 +1,383 @@
+//! One serve node: a [`TnnService`] process member of a distributed
+//! cluster (`tnngen serve --join REGISTRY_ADDR`).
+//!
+//! A node binds one data-plane listener speaking BOTH planes of the
+//! shared length-prefixed transport — payloads whose first byte is below
+//! [`CTRL_BASE`] are ordinary infer/learn requests ([`serve_request`]),
+//! everything at or above it is a control frame (today:
+//! [`Ctrl::FetchSnapshot`]) — and runs two background loops:
+//!
+//! * **heartbeat** (every role): register with the registry, then
+//!   heartbeat under the assigned `(id, generation)`, reporting the
+//!   node's current snapshot epoch. A refused heartbeat (the registry
+//!   restarted, or our generation was superseded) triggers
+//!   re-registration under a fresh generation.
+//! * **replication** (readers only): poll the learner discovered via the
+//!   registry with `FetchSnapshot{have_generation, have_epoch}` and adopt
+//!   any snapshot whose `(generation, epoch)` is lexicographically newer
+//!   via [`TnnService::adopt_replica`]. The generation component makes a
+//!   restarted learner — whose epoch counter starts over — still
+//!   propagate: its registration generation is strictly higher.
+//!
+//! Replication is pull-based and stateless on the learner side, so the
+//! learner never tracks reader membership and a reader that missed any
+//! number of polls converges in one round trip (snapshots are whole
+//! weight images, not deltas).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::coordinator::jobs::spawn_worker;
+use crate::obs::log;
+use crate::obs::metrics::{Counter, Gauge};
+
+use super::proto::{decode_ctrl, encode_ctrl, Ctrl, CTRL_BASE, ROLE_READER};
+use super::registry::RegistryClient;
+use super::tcp::{encode_reply, read_frame, serve_request, write_frame, MAX_FRAME};
+use super::TnnService;
+
+/// Per-call socket timeout for node-to-node control traffic, so a dying
+/// peer can only stall a background loop, never wedge it.
+const CTRL_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Distributed-node options.
+#[derive(Debug, Clone)]
+pub struct NodeOpts {
+    /// [`ROLE_READER`](super::proto::ROLE_READER) or
+    /// [`ROLE_LEARNER`](super::proto::ROLE_LEARNER).
+    pub role: u8,
+    /// Data-plane bind address (`host:port`, port 0 for ephemeral).
+    pub listen: String,
+    /// Registry address to join.
+    pub registry: String,
+    /// Heartbeat interval.
+    pub heartbeat: Duration,
+    /// Reader snapshot-poll interval.
+    pub replicate: Duration,
+}
+
+impl Default for NodeOpts {
+    fn default() -> Self {
+        NodeOpts {
+            role: ROLE_READER,
+            listen: "127.0.0.1:0".to_string(),
+            registry: "127.0.0.1:7171".to_string(),
+            heartbeat: Duration::from_millis(500),
+            replicate: Duration::from_millis(100),
+        }
+    }
+}
+
+/// The registry-assigned identity, shared between the heartbeat loop
+/// (which may refresh it on re-registration) and the data-plane
+/// connections (which stamp outgoing snapshots with the generation).
+struct Identity {
+    id: AtomicU64,
+    generation: AtomicU64,
+}
+
+/// A running distributed serve node.
+pub struct ServeNode {
+    svc: Arc<TnnService>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    loops: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ServeNode {
+    /// Bind the data plane, register with the registry (retrying briefly
+    /// while it comes up), and start the background loops.
+    pub fn spawn(svc: Arc<TnnService>, opts: NodeOpts) -> crate::Result<ServeNode> {
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding node data plane on {}", opts.listen))?;
+        let local_addr = listener.local_addr()?;
+        let advertised = local_addr.to_string();
+
+        let mut client = RegistryClient::new(&opts.registry);
+        let epoch0 = svc.snapshot().epoch;
+        let (id, generation) = register_with_retry(&mut client, opts.role, &advertised, epoch0)?;
+        let ident =
+            Arc::new(Identity { id: AtomicU64::new(id), generation: AtomicU64::new(generation) });
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Data-plane accept loop (detached, like TcpFront's).
+        {
+            let (svc, ident) = (Arc::clone(&svc), Arc::clone(&ident));
+            spawn_worker("tnn-node-accept", move || {
+                for stream in listener.incoming() {
+                    match stream {
+                        Ok(s) => {
+                            let (svc, ident) = (Arc::clone(&svc), Arc::clone(&ident));
+                            spawn_worker("tnn-node-conn", move || {
+                                let _ = handle_node_conn(&svc, &ident, s);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+
+        let mut loops = Vec::new();
+        {
+            let (svc, ident, stop) = (Arc::clone(&svc), Arc::clone(&ident), Arc::clone(&stop));
+            let (role, advertised, interval) = (opts.role, advertised.clone(), opts.heartbeat);
+            loops.push(spawn_worker("tnn-node-heartbeat", move || {
+                heartbeat_loop(&svc, &ident, &stop, &mut client, role, &advertised, interval);
+            }));
+        }
+        if opts.role == ROLE_READER {
+            let (svc, stop) = (Arc::clone(&svc), Arc::clone(&stop));
+            let (registry, interval) = (opts.registry.clone(), opts.replicate);
+            loops.push(spawn_worker("tnn-node-replicate", move || {
+                replicate_loop(&svc, &stop, &registry, interval);
+            }));
+        }
+        Ok(ServeNode { svc, local_addr, stop, loops: Mutex::new(loops) })
+    }
+
+    /// The bound data-plane address (resolves an ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop the background loops, then shut the service down gracefully.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Relaxed);
+        let mut loops = self.loops.lock().unwrap();
+        for h in loops.drain(..) {
+            let _ = h.join();
+        }
+        self.svc.shutdown();
+    }
+}
+
+fn register_with_retry(
+    client: &mut RegistryClient,
+    role: u8,
+    addr: &str,
+    epoch: u64,
+) -> anyhow::Result<(u64, u64)> {
+    let mut last = None;
+    for _ in 0..100 {
+        match client.register(role, addr, epoch) {
+            Ok(id_gen) => return Ok(id_gen),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    Err(last.unwrap_or_else(|| anyhow::anyhow!("registry unreachable")))
+}
+
+/// Interruptible sleep: naps in small slices so shutdown stays snappy.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
+    let slice = Duration::from_millis(25);
+    let mut left = total;
+    while !stop.load(Relaxed) && !left.is_zero() {
+        let nap = left.min(slice);
+        std::thread::sleep(nap);
+        left = left.saturating_sub(nap);
+    }
+}
+
+fn heartbeat_loop(
+    svc: &TnnService,
+    ident: &Identity,
+    stop: &AtomicBool,
+    client: &mut RegistryClient,
+    role: u8,
+    advertised: &str,
+    interval: Duration,
+) {
+    let reg = svc.metrics().registry();
+    let beats: Arc<Counter> = reg.counter("tnngen_node_heartbeats_total");
+    let refused: Arc<Counter> = reg.counter("tnngen_node_heartbeats_refused_total");
+    while !stop.load(Relaxed) {
+        let epoch = svc.snapshot().epoch;
+        let (id, generation) = (ident.id.load(Relaxed), ident.generation.load(Relaxed));
+        match client.heartbeat(id, generation, epoch) {
+            Ok(true) => beats.inc(),
+            Ok(false) => {
+                // Superseded or forgotten: rejoin under a fresh identity.
+                refused.inc();
+                if let Ok((id, generation)) = client.register(role, advertised, epoch) {
+                    ident.id.store(id, Relaxed);
+                    ident.generation.store(generation, Relaxed);
+                }
+            }
+            Err(e) => {
+                log::debug("serve.node", format_args!("heartbeat error (will retry): {e:#}"));
+            }
+        }
+        sleep_unless_stopped(stop, interval);
+    }
+}
+
+fn replicate_loop(svc: &TnnService, stop: &AtomicBool, registry: &str, interval: Duration) {
+    let reg = svc.metrics().registry();
+    let fetched: Arc<Counter> = reg.counter("tnngen_node_snapshots_fetched_total");
+    let errors: Arc<Counter> = reg.counter("tnngen_node_replication_errors_total");
+    let lag: Arc<Gauge> = reg.gauge("tnngen_node_replication_lag_epochs");
+    let mut client = RegistryClient::new(registry);
+    // (generation, epoch) of the newest ADOPTED remote snapshot; (0, 0)
+    // orders below any live learner's stamp, so the first poll adopts.
+    let mut held = (0u64, 0u64);
+    while !stop.load(Relaxed) {
+        sleep_unless_stopped(stop, interval);
+        if stop.load(Relaxed) {
+            break;
+        }
+        let learner = match client.learner_addr() {
+            Ok(Some(addr)) => addr,
+            Ok(None) => continue,
+            Err(_) => {
+                errors.inc();
+                continue;
+            }
+        };
+        match fetch_snapshot(&learner, held) {
+            Ok(Some((generation, epoch, weights))) => {
+                if (generation, epoch) > held {
+                    // Lag as the learner's epoch lead over what we serve,
+                    // measured just before adoption closes it.
+                    lag.set(epoch.saturating_sub(svc.snapshot().epoch));
+                    match svc.adopt_replica(epoch, weights) {
+                        Ok(()) => {
+                            held = (generation, epoch);
+                            fetched.inc();
+                            lag.set(0);
+                        }
+                        Err(e) => {
+                            errors.inc();
+                            log::warn("serve.node", format_args!("replica rejected: {e:#}"));
+                        }
+                    }
+                }
+            }
+            Ok(None) => lag.set(0),
+            Err(_) => errors.inc(),
+        }
+    }
+}
+
+/// One-shot snapshot fetch from a learner's data plane. `Ok(None)` means
+/// the learner confirmed our held `(generation, epoch)` is current.
+fn fetch_snapshot(addr: &str, held: (u64, u64)) -> anyhow::Result<Option<(u64, u64, Vec<f32>)>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(CTRL_TIMEOUT))?;
+    stream.set_write_timeout(Some(CTRL_TIMEOUT))?;
+    let req = Ctrl::FetchSnapshot { have_generation: held.0, have_epoch: held.1 };
+    write_frame(&mut stream, &encode_ctrl(&req))?;
+    let payload = read_frame(&mut stream)?
+        .ok_or_else(|| anyhow::anyhow!("learner {addr} closed the connection"))?;
+    match decode_ctrl(&payload)? {
+        Ctrl::SnapshotFrame { generation, epoch, weights } => {
+            Ok(Some((generation, epoch, weights)))
+        }
+        Ctrl::NotModified => Ok(None),
+        other => anyhow::bail!("unexpected snapshot reply {other:?}"),
+    }
+}
+
+/// Serve one data-plane connection, dispatching control frames by their
+/// kind byte and everything else through [`serve_request`].
+fn handle_node_conn(
+    svc: &TnnService,
+    ident: &Identity,
+    mut stream: TcpStream,
+) -> std::io::Result<()> {
+    while let Some(payload) = read_frame(&mut stream)? {
+        if payload.first().copied().unwrap_or(0) >= CTRL_BASE {
+            let reply = ctrl_reply(svc, ident, &payload);
+            write_frame(&mut stream, &encode_ctrl(&reply))?;
+        } else {
+            let reply = serve_request(svc, &payload);
+            write_frame(&mut stream, &encode_reply(&reply))?;
+        }
+    }
+    Ok(())
+}
+
+fn ctrl_reply(svc: &TnnService, ident: &Identity, payload: &[u8]) -> Ctrl {
+    match decode_ctrl(payload) {
+        Ok(Ctrl::FetchSnapshot { have_generation, have_epoch }) => {
+            let generation = ident.generation.load(Relaxed);
+            let snap = svc.snapshot();
+            if (generation, snap.epoch) == (have_generation, have_epoch) {
+                return Ctrl::NotModified;
+            }
+            // 1 kind + 2 u64 stamps + u32 count + 4 bytes per weight.
+            let frame_bytes = 21 + 4 * snap.weights.len();
+            if frame_bytes > MAX_FRAME {
+                log::warn(
+                    "serve.node",
+                    format_args!("snapshot of {frame_bytes} bytes exceeds the frame cap"),
+                );
+                return Ctrl::NotModified;
+            }
+            Ctrl::SnapshotFrame { generation, epoch: snap.epoch, weights: snap.weights.clone() }
+        }
+        Ok(other) => Ctrl::Refused { reason: format!("unexpected frame {other:?}") },
+        Err(e) => Ctrl::Refused { reason: format!("malformed frame: {e:#}") },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::proto::ROLE_LEARNER;
+    use super::super::registry::{RegistryServer, DEFAULT_TTL_MS};
+    use super::super::ServeOpts;
+    use super::*;
+    use crate::config::ColumnConfig;
+
+    fn cfg() -> ColumnConfig {
+        ColumnConfig::new("NodeUnit", "synthetic", 10, 2)
+    }
+
+    #[test]
+    fn a_node_registers_and_serves_both_planes() {
+        let registry = RegistryServer::spawn("127.0.0.1:0", DEFAULT_TTL_MS).unwrap();
+        let svc =
+            Arc::new(TnnService::start(cfg(), 5, ServeOpts { shards: 1, ..Default::default() }));
+        let node = ServeNode::spawn(
+            Arc::clone(&svc),
+            NodeOpts {
+                role: ROLE_LEARNER,
+                registry: registry.local_addr().to_string(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let nodes = registry.nodes();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].role, ROLE_LEARNER);
+        assert_eq!(nodes[0].addr, node.local_addr().to_string());
+
+        // Data plane still answers plain requests...
+        let mut conn = TcpStream::connect(node.local_addr()).unwrap();
+        let x: Vec<f32> = (0..10).map(|i| (i as f32 * 0.3).sin()).collect();
+        let req = super::super::tcp::encode_request(super::super::tcp::KIND_INFER, &x);
+        write_frame(&mut conn, &req).unwrap();
+        let reply = read_frame(&mut conn).unwrap().unwrap();
+        let wire = super::super::tcp::decode_reply(&reply).unwrap();
+        assert_eq!(wire.status, super::super::tcp::STATUS_OK);
+
+        // ...and control frames on the same connection.
+        let fetch = fetch_snapshot(&node.local_addr().to_string(), (0, 0)).unwrap();
+        let (generation, epoch, weights) = fetch.expect("unseen snapshot must be sent");
+        assert_eq!(epoch, 0, "nothing learned yet");
+        assert_eq!(weights, svc.snapshot().weights);
+        assert_eq!(
+            fetch_snapshot(&node.local_addr().to_string(), (generation, epoch)).unwrap(),
+            None,
+            "held stamp is current -> NotModified"
+        );
+        node.shutdown();
+    }
+}

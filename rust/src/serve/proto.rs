@@ -1,0 +1,403 @@
+//! Control-plane frame codec for the distributed serving layer.
+//!
+//! Control frames ride the same length-prefixed transport as the data
+//! plane ([`super::tcp`]): `u32 payload_len | payload`. The first payload
+//! byte is the frame kind. Data-plane kinds stay in their historical
+//! range (`1` = infer, `2` = learn); every control kind lives at or above
+//! [`CTRL_BASE`], so a node's listener can dispatch on the first byte
+//! without a version handshake.
+//!
+//! ```text
+//! 0x10 Register      role u8 | addr str | epoch u64        node -> registry
+//! 0x11 Registered    id u64 | generation u64               registry -> node
+//! 0x12 Heartbeat     id u64 | generation u64 | epoch u64   node -> registry
+//! 0x13 HeartbeatOk                                         registry -> node
+//! 0x14 Refused       reason str                            registry -> node
+//! 0x15 List                                                client -> registry
+//! 0x16 NodeList      count u32 | node...                   registry -> client
+//! 0x17 FetchSnapshot have_generation u64 | have_epoch u64  reader -> learner
+//! 0x18 SnapshotFrame generation u64 | epoch u64 | weights  learner -> reader
+//! 0x19 NotModified                                         learner -> reader
+//! ```
+//!
+//! `str` is `u32 byte-length | utf-8 bytes`; `weights` is
+//! `u32 count | f32-LE...`; a `node` record is
+//! `id u64 | generation u64 | role u8 | alive u8 | epoch u64 | addr str`.
+//! All integers are little-endian.
+//!
+//! Decoding is total: every read is bounds-checked through a cursor, a
+//! frame with trailing bytes is rejected, and malformed input of any
+//! shape returns `Err` — never a panic (pinned by the fuzz suite in
+//! `tests/proto_fuzz.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+use super::tcp::MAX_FRAME;
+
+/// Node role: shard reader — serves inference, replicates snapshots.
+pub const ROLE_READER: u8 = 0;
+/// Node role: learner — owns the training stream, sources snapshots.
+pub const ROLE_LEARNER: u8 = 1;
+
+/// Lowest control-frame kind byte; data-plane kinds are all below it.
+pub const CTRL_BASE: u8 = 0x10;
+
+const K_REGISTER: u8 = 0x10;
+const K_REGISTERED: u8 = 0x11;
+const K_HEARTBEAT: u8 = 0x12;
+const K_HEARTBEAT_OK: u8 = 0x13;
+const K_REFUSED: u8 = 0x14;
+const K_LIST: u8 = 0x15;
+const K_NODE_LIST: u8 = 0x16;
+const K_FETCH_SNAPSHOT: u8 = 0x17;
+const K_SNAPSHOT_FRAME: u8 = 0x18;
+const K_NOT_MODIFIED: u8 = 0x19;
+
+/// One registry entry as reported to routers via [`Ctrl::NodeList`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeInfo {
+    /// Registry-assigned node id (stable across heartbeats).
+    pub id: u64,
+    /// Liveness generation; bumped on every (re-)registration.
+    pub generation: u64,
+    /// [`ROLE_READER`] or [`ROLE_LEARNER`].
+    pub role: u8,
+    /// Whether the node's heartbeat is within the liveness TTL.
+    pub alive: bool,
+    /// Latest snapshot epoch the node reported.
+    pub epoch: u64,
+    /// The node's data-plane listen address (`host:port`).
+    pub addr: String,
+}
+
+/// A decoded control frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Ctrl {
+    /// Join (or re-join) the cluster under `role`, serving at `addr`.
+    Register {
+        /// [`ROLE_READER`] or [`ROLE_LEARNER`].
+        role: u8,
+        /// Data-plane listen address of the registering node.
+        addr: String,
+        /// Snapshot epoch the node currently holds.
+        epoch: u64,
+    },
+    /// Registration accepted: the node's id and fresh generation.
+    Registered {
+        /// Registry-assigned node id.
+        id: u64,
+        /// Generation stamped on this registration.
+        generation: u64,
+    },
+    /// Periodic liveness report; also refreshes the node's `epoch`.
+    Heartbeat {
+        /// Node id from [`Ctrl::Registered`].
+        id: u64,
+        /// Generation from [`Ctrl::Registered`].
+        generation: u64,
+        /// Snapshot epoch the node currently holds.
+        epoch: u64,
+    },
+    /// Heartbeat accepted.
+    HeartbeatOk,
+    /// Registration or heartbeat refused (e.g. stale generation); the
+    /// node must re-register.
+    Refused {
+        /// Human-readable refusal reason.
+        reason: String,
+    },
+    /// Ask the registry for the current node table.
+    List,
+    /// The registry's node table.
+    NodeList {
+        /// All known nodes, dead ones included (`alive = false`).
+        nodes: Vec<NodeInfo>,
+    },
+    /// Reader asks the learner for a newer snapshot than the one it
+    /// holds, identified by `(have_generation, have_epoch)`.
+    FetchSnapshot {
+        /// Learner generation of the reader's current snapshot.
+        have_generation: u64,
+        /// Epoch of the reader's current snapshot.
+        have_epoch: u64,
+    },
+    /// A full weight snapshot, stamped with the learner's generation so
+    /// a restarted learner (fresh epoch counter) still wins.
+    SnapshotFrame {
+        /// The serving learner's registration generation.
+        generation: u64,
+        /// Snapshot epoch within that generation.
+        epoch: u64,
+        /// Flattened layer-0 weight matrix.
+        weights: Vec<f32>,
+    },
+    /// The reader's snapshot is already current.
+    NotModified,
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_node(out: &mut Vec<u8>, n: &NodeInfo) {
+    out.extend_from_slice(&n.id.to_le_bytes());
+    out.extend_from_slice(&n.generation.to_le_bytes());
+    out.push(n.role);
+    out.push(n.alive as u8);
+    out.extend_from_slice(&n.epoch.to_le_bytes());
+    put_str(out, &n.addr);
+}
+
+/// Encode a control frame payload (first byte = kind).
+pub fn encode_ctrl(c: &Ctrl) -> Vec<u8> {
+    let mut p = Vec::new();
+    match c {
+        Ctrl::Register { role, addr, epoch } => {
+            p.push(K_REGISTER);
+            p.push(*role);
+            put_str(&mut p, addr);
+            p.extend_from_slice(&epoch.to_le_bytes());
+        }
+        Ctrl::Registered { id, generation } => {
+            p.push(K_REGISTERED);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&generation.to_le_bytes());
+        }
+        Ctrl::Heartbeat { id, generation, epoch } => {
+            p.push(K_HEARTBEAT);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&generation.to_le_bytes());
+            p.extend_from_slice(&epoch.to_le_bytes());
+        }
+        Ctrl::HeartbeatOk => p.push(K_HEARTBEAT_OK),
+        Ctrl::Refused { reason } => {
+            p.push(K_REFUSED);
+            put_str(&mut p, reason);
+        }
+        Ctrl::List => p.push(K_LIST),
+        Ctrl::NodeList { nodes } => {
+            p.push(K_NODE_LIST);
+            p.extend_from_slice(&(nodes.len() as u32).to_le_bytes());
+            for n in nodes {
+                put_node(&mut p, n);
+            }
+        }
+        Ctrl::FetchSnapshot { have_generation, have_epoch } => {
+            p.push(K_FETCH_SNAPSHOT);
+            p.extend_from_slice(&have_generation.to_le_bytes());
+            p.extend_from_slice(&have_epoch.to_le_bytes());
+        }
+        Ctrl::SnapshotFrame { generation, epoch, weights } => {
+            p.push(K_SNAPSHOT_FRAME);
+            p.extend_from_slice(&generation.to_le_bytes());
+            p.extend_from_slice(&epoch.to_le_bytes());
+            p.extend_from_slice(&(weights.len() as u32).to_le_bytes());
+            for w in weights {
+                p.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        Ctrl::NotModified => p.push(K_NOT_MODIFIED),
+    }
+    p
+}
+
+/// Bounds-checked cursor: every decode failure is an `Err`, never an
+/// out-of-bounds slice.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.buf.len() - self.pos >= n, "truncated control frame");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_FRAME, "string of {n} bytes exceeds the frame cap");
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn role(&mut self) -> Result<u8> {
+        let r = self.u8()?;
+        ensure!(r == ROLE_READER || r == ROLE_LEARNER, "unknown role {r}");
+        Ok(r)
+    }
+
+    fn node(&mut self) -> Result<NodeInfo> {
+        let id = self.u64()?;
+        let generation = self.u64()?;
+        let role = self.role()?;
+        let alive = match self.u8()? {
+            0 => false,
+            1 => true,
+            b => bail!("bad alive flag {b}"),
+        };
+        let epoch = self.u64()?;
+        let addr = self.str()?;
+        Ok(NodeInfo { id, generation, role, alive, epoch, addr })
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "{} trailing bytes", self.buf.len() - self.pos);
+        Ok(())
+    }
+}
+
+/// Decode a control frame payload. Total: malformed, truncated, or
+/// trailing-garbage input returns `Err`.
+pub fn decode_ctrl(payload: &[u8]) -> Result<Ctrl> {
+    let mut rd = Rd::new(payload);
+    let kind = rd.u8()?;
+    let c = match kind {
+        K_REGISTER => Ctrl::Register { role: rd.role()?, addr: rd.str()?, epoch: rd.u64()? },
+        K_REGISTERED => Ctrl::Registered { id: rd.u64()?, generation: rd.u64()? },
+        K_HEARTBEAT => Ctrl::Heartbeat { id: rd.u64()?, generation: rd.u64()?, epoch: rd.u64()? },
+        K_HEARTBEAT_OK => Ctrl::HeartbeatOk,
+        K_REFUSED => Ctrl::Refused { reason: rd.str()? },
+        K_LIST => Ctrl::List,
+        K_NODE_LIST => {
+            let count = rd.u32()? as usize;
+            // Each record is ≥ 30 bytes; an honest count is bounded by
+            // the bytes actually present, which caps allocation.
+            ensure!(count <= payload.len(), "node count {count} exceeds frame size");
+            let mut nodes = Vec::new();
+            for _ in 0..count {
+                nodes.push(rd.node()?);
+            }
+            Ctrl::NodeList { nodes }
+        }
+        K_FETCH_SNAPSHOT => {
+            Ctrl::FetchSnapshot { have_generation: rd.u64()?, have_epoch: rd.u64()? }
+        }
+        K_SNAPSHOT_FRAME => {
+            let generation = rd.u64()?;
+            let epoch = rd.u64()?;
+            let count = rd.u32()? as usize;
+            let bytes = count
+                .checked_mul(4)
+                .ok_or_else(|| anyhow::anyhow!("weight count {count} overflows"))?;
+            let raw = rd.take(bytes)?;
+            let weights = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ctrl::SnapshotFrame { generation, epoch, weights }
+        }
+        K_NOT_MODIFIED => Ctrl::NotModified,
+        k => bail!("unknown control kind {k:#04x}"),
+    };
+    rd.done()?;
+    Ok(c)
+}
+
+/// Every control-frame variant, with representative field values — the
+/// fuzz and round-trip suites iterate this instead of hand-listing kinds.
+pub fn sample_frames() -> Vec<Ctrl> {
+    vec![
+        Ctrl::Register { role: ROLE_READER, addr: "127.0.0.1:7071".to_string(), epoch: 3 },
+        Ctrl::Registered { id: 7, generation: 11 },
+        Ctrl::Heartbeat { id: 7, generation: 11, epoch: 42 },
+        Ctrl::HeartbeatOk,
+        Ctrl::Refused { reason: "stale generation 4 < 11".to_string() },
+        Ctrl::List,
+        Ctrl::NodeList {
+            nodes: vec![
+                NodeInfo {
+                    id: 1,
+                    generation: 2,
+                    role: ROLE_READER,
+                    alive: true,
+                    epoch: 9,
+                    addr: "127.0.0.1:7071".to_string(),
+                },
+                NodeInfo {
+                    id: 2,
+                    generation: 5,
+                    role: ROLE_LEARNER,
+                    alive: false,
+                    epoch: 0,
+                    addr: "[::1]:9000".to_string(),
+                },
+            ],
+        },
+        Ctrl::FetchSnapshot { have_generation: 2, have_epoch: 41 },
+        Ctrl::SnapshotFrame {
+            generation: 2,
+            epoch: 42,
+            // No NaN here: round-trip identity is asserted with
+            // `PartialEq`. Signed zero and infinities are the
+            // interesting representable edges that still compare equal
+            // to themselves.
+            weights: vec![0.0, -0.0, 1.5, f32::INFINITY, f32::NEG_INFINITY, -3.25],
+        },
+        Ctrl::NotModified,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        for c in sample_frames() {
+            let p = encode_ctrl(&c);
+            assert!(p[0] >= CTRL_BASE, "control kinds live above the data plane");
+            assert_eq!(decode_ctrl(&p).unwrap(), c, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_errors() {
+        for c in sample_frames() {
+            let p = encode_ctrl(&c);
+            for cut in 0..p.len() {
+                // Every strict prefix either decodes to a DIFFERENT
+                // frame (impossible: kinds are fixed-layout) or errors.
+                assert!(decode_ctrl(&p[..cut]).is_err(), "{c:?} cut at {cut}");
+            }
+            let mut long = p.clone();
+            long.push(0);
+            assert!(decode_ctrl(&long).is_err(), "{c:?} with a trailing byte");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_and_bad_fields_are_errors() {
+        assert!(decode_ctrl(&[]).is_err(), "empty payload");
+        assert!(decode_ctrl(&[0xFF]).is_err(), "unknown kind");
+        assert!(decode_ctrl(&[K_REGISTER, 9]).is_err(), "unknown role");
+        // Register with a non-utf8 address.
+        let mut p = vec![K_REGISTER, ROLE_READER];
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        p.extend_from_slice(&0u64.to_le_bytes());
+        assert!(decode_ctrl(&p).is_err(), "invalid utf-8 address");
+        // NodeList claiming more nodes than the frame could hold.
+        let mut p = vec![K_NODE_LIST];
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_ctrl(&p).is_err(), "node count exceeds frame");
+    }
+}

@@ -1,0 +1,331 @@
+//! Cluster registry: node discovery and generation-stamped liveness.
+//!
+//! One registry process (`tnngen registry`) tracks every serve node.
+//! Nodes [`Ctrl::Register`] on startup and [`Ctrl::Heartbeat`]
+//! periodically; routers [`Ctrl::List`] to discover data-plane addresses.
+//! Liveness is *pull-evaluated*: a node is alive iff its last heartbeat
+//! is within the TTL at the moment somebody asks — there is no background
+//! sweeper thread, which keeps the state machine a pure function of
+//! `(events, now_ms)` and lets the unit tests drive it with a fake clock
+//! and zero sleeps.
+//!
+//! **Generations.** Every (re-)registration stamps the node with a fresh
+//! value from a registry-global monotonic counter. A heartbeat carrying
+//! any other generation than the node's current one is refused: after a
+//! crash-restart the new incarnation registers (bumping the generation),
+//! and the zombie's heartbeats — or a partitioned twin's — can never
+//! resurrect stale state. Readers use the same generation to order
+//! snapshots across learner restarts (see [`super::node`]).
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::coordinator::jobs::spawn_worker;
+use crate::obs::log;
+
+use super::proto::{decode_ctrl, encode_ctrl, Ctrl, NodeInfo, ROLE_LEARNER};
+use super::tcp::{read_frame, write_frame};
+
+/// Default liveness TTL: a node missing heartbeats for this long is dead.
+pub const DEFAULT_TTL_MS: u64 = 2_500;
+
+#[derive(Debug, Clone)]
+struct NodeRecord {
+    id: u64,
+    generation: u64,
+    role: u8,
+    epoch: u64,
+    last_seen_ms: u64,
+    addr: String,
+}
+
+/// The registry's deterministic core: a pure state machine over
+/// registration/heartbeat events and an explicit millisecond clock.
+/// [`RegistryServer`] drives it from TCP with a real clock; the liveness
+/// tests drive it directly with a fake one.
+pub struct RegistryState {
+    ttl_ms: u64,
+    next_id: u64,
+    next_generation: u64,
+    // Keyed by data-plane address: a restarted node at the same address
+    // keeps its id but gets a fresh generation.
+    nodes: HashMap<String, NodeRecord>,
+}
+
+impl RegistryState {
+    /// Empty registry with the given liveness TTL.
+    pub fn new(ttl_ms: u64) -> Self {
+        RegistryState { ttl_ms, next_id: 1, next_generation: 1, nodes: HashMap::new() }
+    }
+
+    /// Register (or re-register) the node serving at `addr`. Returns the
+    /// node's `(id, generation)`; the id is stable across restarts at the
+    /// same address, the generation is freshly bumped every time.
+    pub fn register(&mut self, role: u8, addr: &str, epoch: u64, now_ms: u64) -> (u64, u64) {
+        let generation = self.next_generation;
+        self.next_generation += 1;
+        let id = match self.nodes.get(addr) {
+            Some(rec) => rec.id,
+            None => {
+                let id = self.next_id;
+                self.next_id += 1;
+                id
+            }
+        };
+        let rec = NodeRecord {
+            id,
+            generation,
+            role,
+            epoch,
+            last_seen_ms: now_ms,
+            addr: addr.to_string(),
+        };
+        self.nodes.insert(addr.to_string(), rec);
+        (id, generation)
+    }
+
+    /// Process a heartbeat. Refuses unknown ids and any generation other
+    /// than the node's current one (a refused node must re-register).
+    pub fn heartbeat(
+        &mut self,
+        id: u64,
+        generation: u64,
+        epoch: u64,
+        now_ms: u64,
+    ) -> Result<(), String> {
+        let rec = match self.nodes.values_mut().find(|r| r.id == id) {
+            Some(r) => r,
+            None => return Err(format!("unknown node id {id}")),
+        };
+        if generation != rec.generation {
+            return Err(format!(
+                "stale generation {generation} for node {id} (current {})",
+                rec.generation
+            ));
+        }
+        rec.last_seen_ms = now_ms;
+        rec.epoch = epoch;
+        Ok(())
+    }
+
+    /// The node table at `now_ms`, dead nodes included, sorted by id for
+    /// deterministic output.
+    pub fn nodes(&self, now_ms: u64) -> Vec<NodeInfo> {
+        let mut out: Vec<NodeInfo> = self
+            .nodes
+            .values()
+            .map(|r| NodeInfo {
+                id: r.id,
+                generation: r.generation,
+                role: r.role,
+                alive: now_ms.saturating_sub(r.last_seen_ms) <= self.ttl_ms,
+                epoch: r.epoch,
+                addr: r.addr.clone(),
+            })
+            .collect();
+        out.sort_by_key(|n| n.id);
+        out
+    }
+
+    /// Apply one decoded control frame, producing the reply frame — the
+    /// entire registry protocol in one deterministic function.
+    pub fn apply(&mut self, frame: &Ctrl, now_ms: u64) -> Ctrl {
+        match frame {
+            Ctrl::Register { role, addr, epoch } => {
+                let (id, generation) = self.register(*role, addr, *epoch, now_ms);
+                Ctrl::Registered { id, generation }
+            }
+            Ctrl::Heartbeat { id, generation, epoch } => {
+                match self.heartbeat(*id, *generation, *epoch, now_ms) {
+                    Ok(()) => Ctrl::HeartbeatOk,
+                    Err(reason) => Ctrl::Refused { reason },
+                }
+            }
+            Ctrl::List => Ctrl::NodeList { nodes: self.nodes(now_ms) },
+            other => Ctrl::Refused { reason: format!("unexpected frame {other:?}") },
+        }
+    }
+}
+
+/// The registry process: [`RegistryState`] behind a TCP accept loop on
+/// the shared length-prefixed transport.
+pub struct RegistryServer {
+    local_addr: SocketAddr,
+    state: Arc<Mutex<RegistryState>>,
+    start: Instant,
+}
+
+impl RegistryServer {
+    /// Bind `addr` (port 0 for ephemeral) and serve the registry
+    /// protocol; the accept loop and per-connection threads are detached.
+    pub fn spawn(addr: &str, ttl_ms: u64) -> crate::Result<RegistryServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding registry on {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let state = Arc::new(Mutex::new(RegistryState::new(ttl_ms)));
+        let start = Instant::now();
+        {
+            let state = Arc::clone(&state);
+            spawn_worker("tnn-registry-accept", move || {
+                for stream in listener.incoming() {
+                    match stream {
+                        Ok(s) => {
+                            let state = Arc::clone(&state);
+                            spawn_worker("tnn-registry-conn", move || {
+                                let _ = serve_conn(&state, start, s);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        Ok(RegistryServer { local_addr, state, start })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The node table as of now (what a `Ctrl::List` would return).
+    pub fn nodes(&self) -> Vec<NodeInfo> {
+        let now_ms = self.start.elapsed().as_millis() as u64;
+        self.state.lock().unwrap().nodes(now_ms)
+    }
+}
+
+fn serve_conn(
+    state: &Mutex<RegistryState>,
+    start: Instant,
+    mut stream: TcpStream,
+) -> std::io::Result<()> {
+    while let Some(payload) = read_frame(&mut stream)? {
+        let reply = match decode_ctrl(&payload) {
+            Ok(frame) => {
+                let now_ms = start.elapsed().as_millis() as u64;
+                state.lock().unwrap().apply(&frame, now_ms)
+            }
+            Err(e) => Ctrl::Refused { reason: format!("malformed frame: {e:#}") },
+        };
+        write_frame(&mut stream, &encode_ctrl(&reply))?;
+    }
+    Ok(())
+}
+
+/// One node's client handle on the registry: a lazily (re)connected
+/// control connection plus the identity the registry assigned.
+pub struct RegistryClient {
+    registry_addr: String,
+    conn: Option<TcpStream>,
+}
+
+impl RegistryClient {
+    /// Client for the registry at `registry_addr`; connects on first use.
+    pub fn new(registry_addr: &str) -> Self {
+        RegistryClient { registry_addr: registry_addr.to_string(), conn: None }
+    }
+
+    /// Send one control frame and read its reply, (re)connecting as
+    /// needed. A transport error drops the cached connection so the next
+    /// call dials fresh.
+    pub fn call(&mut self, frame: &Ctrl) -> anyhow::Result<Ctrl> {
+        if self.conn.is_none() {
+            let s = TcpStream::connect(&self.registry_addr)
+                .with_context(|| format!("connecting to registry {}", self.registry_addr))?;
+            self.conn = Some(s);
+        }
+        let r = self.try_call(frame);
+        if r.is_err() {
+            self.conn = None;
+        }
+        r
+    }
+
+    fn try_call(&mut self, frame: &Ctrl) -> anyhow::Result<Ctrl> {
+        let s = self.conn.as_mut().expect("connection established by call()");
+        write_frame(s, &encode_ctrl(frame))?;
+        match read_frame(s)? {
+            Some(payload) => decode_ctrl(&payload),
+            None => anyhow::bail!("registry {} closed the connection", self.registry_addr),
+        }
+    }
+
+    /// Register, returning the assigned `(id, generation)`.
+    pub fn register(&mut self, role: u8, addr: &str, epoch: u64) -> anyhow::Result<(u64, u64)> {
+        match self.call(&Ctrl::Register { role, addr: addr.to_string(), epoch })? {
+            Ctrl::Registered { id, generation } => Ok((id, generation)),
+            Ctrl::Refused { reason } => anyhow::bail!("registration refused: {reason}"),
+            other => anyhow::bail!("unexpected registration reply {other:?}"),
+        }
+    }
+
+    /// Heartbeat under the registered identity. `Ok(true)` = accepted,
+    /// `Ok(false)` = refused (stale generation — re-register).
+    pub fn heartbeat(&mut self, id: u64, generation: u64, epoch: u64) -> anyhow::Result<bool> {
+        match self.call(&Ctrl::Heartbeat { id, generation, epoch })? {
+            Ctrl::HeartbeatOk => Ok(true),
+            Ctrl::Refused { reason } => {
+                log::warn("serve.registry", format_args!("heartbeat refused: {reason}"));
+                Ok(false)
+            }
+            other => anyhow::bail!("unexpected heartbeat reply {other:?}"),
+        }
+    }
+
+    /// Fetch the current node table.
+    pub fn list(&mut self) -> anyhow::Result<Vec<NodeInfo>> {
+        match self.call(&Ctrl::List)? {
+            Ctrl::NodeList { nodes } => Ok(nodes),
+            other => anyhow::bail!("unexpected list reply {other:?}"),
+        }
+    }
+
+    /// The learner's data-plane address, if one is registered and alive.
+    pub fn learner_addr(&mut self) -> anyhow::Result<Option<String>> {
+        Ok(self
+            .list()?
+            .into_iter()
+            .filter(|n| n.role == ROLE_LEARNER && n.alive)
+            .max_by_key(|n| n.generation)
+            .map(|n| n.addr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::proto::ROLE_READER;
+    use super::*;
+
+    #[test]
+    fn registration_assigns_stable_ids_and_fresh_generations() {
+        let mut st = RegistryState::new(1_000);
+        let (id_a, gen_a) = st.register(ROLE_READER, "10.0.0.1:7071", 0, 0);
+        let (id_b, gen_b) = st.register(ROLE_LEARNER, "10.0.0.2:7072", 0, 0);
+        assert_ne!(id_a, id_b);
+        assert!(gen_b > gen_a, "generations are globally monotonic");
+        // Same address re-registers: same id, bumped generation.
+        let (id_a2, gen_a2) = st.register(ROLE_READER, "10.0.0.1:7071", 5, 10);
+        assert_eq!(id_a2, id_a);
+        assert!(gen_a2 > gen_b);
+    }
+
+    #[test]
+    fn registry_server_round_trips_over_tcp() {
+        let srv = RegistryServer::spawn("127.0.0.1:0", DEFAULT_TTL_MS).unwrap();
+        let mut client = RegistryClient::new(&srv.local_addr().to_string());
+        let (id, generation) = client.register(ROLE_READER, "127.0.0.1:9999", 3).unwrap();
+        assert!(client.heartbeat(id, generation, 4).unwrap());
+        assert!(!client.heartbeat(id, generation + 1, 4).unwrap(), "wrong generation refused");
+        let nodes = client.list().unwrap();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].id, id);
+        assert_eq!(nodes[0].epoch, 4, "heartbeat refreshes the reported epoch");
+        assert!(nodes[0].alive);
+        assert_eq!(srv.nodes(), nodes);
+    }
+}

@@ -1,0 +1,331 @@
+//! Client-side request router for a distributed serve cluster.
+//!
+//! The router is the client's only moving part: it discovers data-plane
+//! addresses from the registry ([`Ctrl::List`](super::proto::Ctrl)),
+//! round-robins inference over live reader nodes, pins learn traffic to
+//! the learner, and turns node loss into reroutes instead of errors —
+//! per-request socket timeouts, bounded exponential backoff between
+//! attempts, and a short quarantine for failed nodes so one dead address
+//! is not redialed on every request while the registry TTL catches up.
+//!
+//! Split into two pieces because server connections are synchronous (one
+//! in-flight request per connection, replies in order):
+//!
+//! * [`RouterCore`] — shared, thread-safe: the node table, quarantine
+//!   set, round-robin cursor, and router metrics.
+//! * [`RouterClient`] — per-thread: owns its cached `TcpStream` per node,
+//!   so N closed-loop client threads get N independent pipelines.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Context as _;
+
+use crate::obs::metrics::{labeled, Registry};
+
+use super::proto::{ROLE_LEARNER, ROLE_READER};
+use super::registry::RegistryClient;
+use super::tcp::{
+    decode_reply, encode_request, read_frame, write_frame, WireReply, KIND_LEARN, STATUS_CLOSED,
+    STATUS_REJECTED,
+};
+
+/// Router tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterOpts {
+    /// Per-request socket timeout (connect, send, and receive each).
+    pub timeout: Duration,
+    /// Maximum attempts per request before giving up.
+    pub retries: usize,
+    /// Backoff before the second attempt; doubles per retry.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Node-table refresh interval (failures force an early refresh).
+    pub refresh: Duration,
+    /// How long a failed node stays quarantined from routing.
+    pub quarantine: Duration,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts {
+            timeout: Duration::from_secs(2),
+            retries: 8,
+            backoff: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(200),
+            refresh: Duration::from_millis(250),
+            quarantine: Duration::from_millis(1_000),
+        }
+    }
+}
+
+struct CoreState {
+    client: RegistryClient,
+    readers: Vec<String>,
+    learner: Option<String>,
+    // addr -> quarantine expiry.
+    quarantined: HashMap<String, Instant>,
+    refreshed_at: Option<Instant>,
+}
+
+/// Shared router state: node table, health, metrics. Wrap in an `Arc`
+/// and hand one [`RouterClient`] to each client thread.
+pub struct RouterCore {
+    opts: RouterOpts,
+    metrics: Arc<Registry>,
+    cursor: AtomicUsize,
+    state: Mutex<CoreState>,
+}
+
+impl RouterCore {
+    /// Router against the registry at `registry_addr`; fetches the node
+    /// table on first use.
+    pub fn new(registry_addr: &str, opts: RouterOpts) -> Self {
+        let state = CoreState {
+            client: RegistryClient::new(registry_addr),
+            readers: Vec::new(),
+            learner: None,
+            quarantined: HashMap::new(),
+            refreshed_at: None,
+        };
+        RouterCore {
+            opts,
+            metrics: Arc::new(Registry::new()),
+            cursor: AtomicUsize::new(0),
+            state: Mutex::new(state),
+        }
+    }
+
+    /// The router's metrics registry (reroutes, retries, per-node
+    /// request/failure counters) for scraping or bench reports.
+    pub fn metrics(&self) -> Arc<Registry> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The options this router runs with.
+    pub fn opts(&self) -> RouterOpts {
+        self.opts
+    }
+
+    /// Refresh the node table from the registry if it is stale (or
+    /// unconditionally with `force`). Keeps the old table on errors.
+    pub fn refresh(&self, force: bool) {
+        let mut st = self.state.lock().unwrap();
+        if !force {
+            if let Some(t) = st.refreshed_at {
+                if t.elapsed() < self.opts.refresh {
+                    return;
+                }
+            }
+        }
+        match st.client.list() {
+            Ok(nodes) => {
+                st.readers = nodes
+                    .iter()
+                    .filter(|n| n.alive && n.role == ROLE_READER)
+                    .map(|n| n.addr.clone())
+                    .collect();
+                st.learner = nodes
+                    .iter()
+                    .filter(|n| n.alive && n.role == ROLE_LEARNER)
+                    .max_by_key(|n| n.generation)
+                    .map(|n| n.addr.clone());
+                self.metrics.counter("tnngen_router_refreshes_total").inc();
+            }
+            Err(_) => {
+                self.metrics.counter("tnngen_router_refresh_errors_total").inc();
+            }
+        }
+        st.refreshed_at = Some(Instant::now());
+    }
+
+    /// Next inference target: round-robin over live, non-quarantined
+    /// readers; the learner is the last-resort fallback.
+    pub fn pick_reader(&self) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        st.quarantined.retain(|_, until| *until > now);
+        let live: Vec<&String> =
+            st.readers.iter().filter(|a| !st.quarantined.contains_key(*a)).collect();
+        if live.is_empty() {
+            let learner = st.learner.clone();
+            return learner.filter(|a| !st.quarantined.contains_key(a));
+        }
+        let i = self.cursor.fetch_add(1, Relaxed) % live.len();
+        Some(live[i].clone())
+    }
+
+    /// The learn target (the live learner), if any.
+    pub fn learner_addr(&self) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        st.quarantined.retain(|_, until| *until > now);
+        let learner = st.learner.clone();
+        learner.filter(|a| !st.quarantined.contains_key(a))
+    }
+
+    /// Record a node failure: quarantine the address and count the
+    /// reroute. The next attempt picks a different node.
+    pub fn mark_failed(&self, addr: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.quarantined.insert(addr.to_string(), Instant::now() + self.opts.quarantine);
+        drop(st);
+        self.metrics.counter("tnngen_router_reroutes_total").inc();
+        self.metrics.counter(&labeled("tnngen_router_failures_total", "node", addr)).inc();
+    }
+}
+
+/// One thread's routing handle: picks targets through the shared
+/// [`RouterCore`] and keeps its own connection per node.
+pub struct RouterClient {
+    core: Arc<RouterCore>,
+    conns: HashMap<String, TcpStream>,
+}
+
+impl RouterClient {
+    /// A client over `core`; connections are dialed lazily per node.
+    pub fn new(core: Arc<RouterCore>) -> Self {
+        RouterClient { core, conns: HashMap::new() }
+    }
+
+    /// Route one inference request, retrying across nodes on failure.
+    pub fn infer(&mut self, window: &[f32]) -> anyhow::Result<WireReply> {
+        self.route(super::tcp::KIND_INFER, window)
+    }
+
+    /// Route one learn request to the learner.
+    pub fn learn(&mut self, window: &[f32]) -> anyhow::Result<WireReply> {
+        self.route(KIND_LEARN, window)
+    }
+
+    fn route(&mut self, kind: u8, window: &[f32]) -> anyhow::Result<WireReply> {
+        let opts = self.core.opts();
+        let attempts = opts.retries.max(1);
+        let mut backoff = opts.backoff;
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(opts.backoff_cap);
+                self.core.metrics().counter("tnngen_router_retries_total").inc();
+            }
+            // Failures force a registry re-read so a freshly dead node
+            // drops out within the retry budget, not a refresh period.
+            self.core.refresh(attempt > 0);
+            let target = if kind == KIND_LEARN {
+                self.core.learner_addr()
+            } else {
+                self.core.pick_reader()
+            };
+            let Some(addr) = target else {
+                last = Some(anyhow::anyhow!("no live node for request kind {kind}"));
+                continue;
+            };
+            match self.try_once(&addr, kind, window) {
+                Ok(r) if r.status == STATUS_REJECTED || r.status == STATUS_CLOSED => {
+                    // Backpressure or a draining node: back off, and for
+                    // a closing node stop routing to it.
+                    if r.status == STATUS_CLOSED {
+                        self.conns.remove(&addr);
+                        self.core.mark_failed(&addr);
+                    }
+                    last = Some(anyhow::anyhow!("node {addr} replied status {}", r.status));
+                }
+                Ok(r) => {
+                    let m = self.core.metrics();
+                    m.counter(&labeled("tnngen_router_requests_total", "node", &addr)).inc();
+                    return Ok(r);
+                }
+                Err(e) => {
+                    // Node loss: drop the cached connection, quarantine,
+                    // reroute on the next attempt.
+                    self.conns.remove(&addr);
+                    self.core.mark_failed(&addr);
+                    last = Some(e);
+                }
+            }
+        }
+        let e = last.unwrap_or_else(|| anyhow::anyhow!("request not attempted"));
+        Err(e.context(format!("request failed after {attempts} attempts")))
+    }
+
+    fn try_once(&mut self, addr: &str, kind: u8, window: &[f32]) -> anyhow::Result<WireReply> {
+        let timeout = self.core.opts().timeout;
+        if !self.conns.contains_key(addr) {
+            let sa: SocketAddr =
+                addr.parse().with_context(|| format!("bad node address {addr}"))?;
+            let s = TcpStream::connect_timeout(&sa, timeout)
+                .with_context(|| format!("connecting to node {addr}"))?;
+            s.set_read_timeout(Some(timeout))?;
+            s.set_write_timeout(Some(timeout))?;
+            self.conns.insert(addr.to_string(), s);
+        }
+        let s = self.conns.get_mut(addr).expect("connection cached above");
+        write_frame(s, &encode_request(kind, window))?;
+        let payload = read_frame(s)?
+            .ok_or_else(|| anyhow::anyhow!("node {addr} closed the connection"))?;
+        decode_reply(&payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::{NodeOpts, ServeNode};
+    use super::super::registry::{RegistryServer, DEFAULT_TTL_MS};
+    use super::super::tcp::STATUS_OK;
+    use super::super::{ServeOpts, TnnService};
+    use super::*;
+    use crate::config::ColumnConfig;
+
+    fn cfg() -> ColumnConfig {
+        ColumnConfig::new("RouterUnit", "synthetic", 10, 2)
+    }
+
+    fn spawn_node(registry: &str, role: u8) -> (Arc<TnnService>, ServeNode) {
+        let svc =
+            Arc::new(TnnService::start(cfg(), 7, ServeOpts { shards: 1, ..Default::default() }));
+        let node = ServeNode::spawn(
+            Arc::clone(&svc),
+            NodeOpts { role, registry: registry.to_string(), ..Default::default() },
+        )
+        .unwrap();
+        (svc, node)
+    }
+
+    #[test]
+    fn routes_spread_over_readers_and_survive_a_node_shutdown() {
+        let registry = RegistryServer::spawn("127.0.0.1:0", DEFAULT_TTL_MS).unwrap();
+        let reg_addr = registry.local_addr().to_string();
+        let (_svc_a, node_a) = spawn_node(&reg_addr, ROLE_READER);
+        let (_svc_b, node_b) = spawn_node(&reg_addr, ROLE_READER);
+        let (_svc_l, node_l) = spawn_node(&reg_addr, ROLE_LEARNER);
+
+        let core = Arc::new(RouterCore::new(&reg_addr, RouterOpts::default()));
+        let mut client = RouterClient::new(Arc::clone(&core));
+        let x: Vec<f32> = (0..10).map(|i| (i as f32 * 0.5).cos()).collect();
+        for _ in 0..6 {
+            assert_eq!(client.infer(&x).unwrap().status, STATUS_OK);
+        }
+        assert_eq!(client.learn(&x).unwrap().status, STATUS_OK);
+
+        // Round-robin touched both readers.
+        let text = core.metrics().render_prometheus();
+        for node in [&node_a, &node_b] {
+            let addr = node.local_addr().to_string();
+            let series = labeled("tnngen_router_requests_total", "node", &addr);
+            assert!(text.contains(&series), "missing {series} in:\n{text}");
+        }
+
+        // Shut one reader down; requests keep succeeding via the other.
+        node_a.shutdown();
+        for _ in 0..4 {
+            assert_eq!(client.infer(&x).unwrap().status, STATUS_OK, "reroute must absorb loss");
+        }
+        node_b.shutdown();
+        node_l.shutdown();
+    }
+}

@@ -69,6 +69,15 @@ impl SharedWeights {
         *cur = Arc::new(Snapshot { epoch, weights });
         epoch
     }
+
+    /// Swap in a snapshot under an externally assigned epoch (snapshot
+    /// replication: a reader node adopting the remote learner's epoch
+    /// verbatim). Readers adopt on epoch CHANGE, not increase, so a
+    /// restarted learner's restarted epoch sequence still propagates.
+    pub fn publish_versioned(&self, epoch: u64, weights: Vec<f32>) {
+        let mut cur = self.current.write().unwrap();
+        *cur = Arc::new(Snapshot { epoch, weights });
+    }
 }
 
 /// Reader-shard worker loop: pull micro-batches, adopt the newest weight

@@ -58,8 +58,18 @@ pub struct WireReply {
     pub latency_us: u32,
 }
 
-/// Write one length-prefixed frame.
+/// Write one length-prefixed frame. Payloads over [`MAX_FRAME`] are
+/// rejected *before* anything hits the wire: the length prefix is a
+/// `u32`, so an unchecked `payload.len() as u32` would silently truncate
+/// the prefix and desynchronise the stream (weight snapshots for large
+/// designs are the realistic way to get here).
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidInput,
+            format!("payload of {} bytes exceeds the {MAX_FRAME}-byte frame cap", payload.len()),
+        ));
+    }
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()
@@ -143,24 +153,31 @@ fn reject_reply(e: &SubmitError) -> WireReply {
     WireReply { status, winner: -1, epoch: 0, latency_us: 0 }
 }
 
+/// Serve one decoded request payload against the service. This is the
+/// single data-plane entry point, shared by the in-process [`TcpFront`]
+/// and the distributed [`super::node::ServeNode`] listener.
+pub fn serve_request(svc: &TnnService, payload: &[u8]) -> WireReply {
+    match decode_request(payload) {
+        Err(_) => WireReply { status: STATUS_BAD_REQUEST, winner: -1, epoch: 0, latency_us: 0 },
+        Ok((KIND_LEARN, window)) => match svc.submit_learn(window) {
+            Ok(()) => WireReply { status: STATUS_OK, winner: -1, epoch: 0, latency_us: 0 },
+            Err(e) => reject_reply(&e),
+        },
+        Ok((_, window)) => match svc.infer_blocking(window) {
+            Ok(r) => WireReply {
+                status: STATUS_OK,
+                winner: r.winner,
+                epoch: r.epoch,
+                latency_us: r.latency.as_micros().min(u32::MAX as u128) as u32,
+            },
+            Err(e) => reject_reply(&e),
+        },
+    }
+}
+
 fn handle_conn(svc: Arc<TnnService>, mut stream: TcpStream) -> std::io::Result<()> {
     while let Some(payload) = read_frame(&mut stream)? {
-        let reply = match decode_request(&payload) {
-            Err(_) => WireReply { status: STATUS_BAD_REQUEST, winner: -1, epoch: 0, latency_us: 0 },
-            Ok((KIND_LEARN, window)) => match svc.submit_learn(window) {
-                Ok(()) => WireReply { status: STATUS_OK, winner: -1, epoch: 0, latency_us: 0 },
-                Err(e) => reject_reply(&e),
-            },
-            Ok((_, window)) => match svc.infer_blocking(window) {
-                Ok(r) => WireReply {
-                    status: STATUS_OK,
-                    winner: r.winner,
-                    epoch: r.epoch,
-                    latency_us: r.latency.as_micros().min(u32::MAX as u128) as u32,
-                },
-                Err(e) => reject_reply(&e),
-            },
-        };
+        let reply = serve_request(&svc, &payload);
         write_frame(&mut stream, &encode_reply(&reply))?;
     }
     Ok(())
@@ -233,6 +250,20 @@ mod tests {
         buf.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
         let mut r = Cursor::new(buf);
         assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected_before_writing() {
+        // Regression: `payload.len() as u32` used to truncate silently,
+        // emitting a bogus length prefix and desynchronising the stream.
+        let big = vec![0u8; MAX_FRAME + 1];
+        let mut buf = Vec::new();
+        let err = write_frame(&mut buf, &big).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidInput);
+        assert!(buf.is_empty(), "nothing may reach the wire on rejection");
+        // The cap itself is still fine.
+        write_frame(&mut buf, &vec![0u8; 8]).unwrap();
+        assert_eq!(read_frame(&mut Cursor::new(buf)).unwrap(), Some(vec![0u8; 8]));
     }
 
     #[test]

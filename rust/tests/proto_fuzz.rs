@@ -1,0 +1,223 @@
+//! Protocol fuzz / property suite for the framed wire protocol — both
+//! the data plane (`serve::tcp`) and the control plane (`serve::proto`).
+//!
+//! The contract under test: decoders are TOTAL functions over arbitrary
+//! bytes. Random garbage, truncations, and bit flips must come back as
+//! `Err` (or a changed-but-valid value, for flips that land in value
+//! fields) — never a panic, never an unbounded allocation. All cases are
+//! seeded via `util::prop` (`TNNGEN_TEST_SEED` replays a failure).
+
+use std::io::Cursor;
+
+use tnngen::serve::proto::{
+    decode_ctrl, encode_ctrl, sample_frames, Ctrl, NodeInfo, CTRL_BASE, ROLE_LEARNER, ROLE_READER,
+};
+use tnngen::serve::tcp::{
+    decode_reply, decode_request, encode_reply, encode_request, read_frame, write_frame,
+    WireReply, KIND_INFER, KIND_LEARN, MAX_FRAME,
+};
+use tnngen::util::prop::{check, Gen};
+
+fn random_bytes(g: &mut Gen, max: usize) -> Vec<u8> {
+    let n = g.size(0, max);
+    (0..n).map(|_| g.rng.below(256) as u8).collect()
+}
+
+fn random_ascii(g: &mut Gen, max: usize) -> String {
+    let n = g.size(0, max);
+    (0..n).map(|_| (g.rng.below(94) as u8 + b' ') as char).collect()
+}
+
+fn random_node(g: &mut Gen) -> NodeInfo {
+    NodeInfo {
+        id: g.rng.next_u64(),
+        generation: g.rng.next_u64(),
+        role: if g.rng.chance(0.5) { ROLE_READER } else { ROLE_LEARNER },
+        alive: g.rng.chance(0.5),
+        epoch: g.rng.next_u64(),
+        addr: random_ascii(g, 32),
+    }
+}
+
+/// A random control frame. Weights/strings are built from finite values
+/// so `PartialEq` round-trip comparison is sound.
+fn random_ctrl(g: &mut Gen) -> Ctrl {
+    match g.rng.below(10) {
+        0 => Ctrl::Register {
+            role: if g.rng.chance(0.5) { ROLE_READER } else { ROLE_LEARNER },
+            addr: random_ascii(g, 32),
+            epoch: g.rng.next_u64(),
+        },
+        1 => Ctrl::Registered { id: g.rng.next_u64(), generation: g.rng.next_u64() },
+        2 => Ctrl::Heartbeat {
+            id: g.rng.next_u64(),
+            generation: g.rng.next_u64(),
+            epoch: g.rng.next_u64(),
+        },
+        3 => Ctrl::HeartbeatOk,
+        4 => Ctrl::Refused { reason: random_ascii(g, 48) },
+        5 => Ctrl::List,
+        6 => {
+            let n = g.size(0, 6);
+            Ctrl::NodeList { nodes: (0..n).map(|_| random_node(g)).collect() }
+        }
+        7 => Ctrl::FetchSnapshot {
+            have_generation: g.rng.next_u64(),
+            have_epoch: g.rng.next_u64(),
+        },
+        8 => {
+            let n = g.size(0, 64);
+            Ctrl::SnapshotFrame {
+                generation: g.rng.next_u64(),
+                epoch: g.rng.next_u64(),
+                weights: (0..n).map(|_| g.rng.f32() * 4.0 - 2.0).collect(),
+            }
+        }
+        _ => Ctrl::NotModified,
+    }
+}
+
+// ---------------------------------------------------------------- garbage
+
+#[test]
+fn random_bytes_never_panic_any_decoder() {
+    check("decoders are total over random bytes", 400, |g| {
+        let bytes = random_bytes(g, 256);
+        let _ = decode_request(&bytes);
+        let _ = decode_reply(&bytes);
+        let _ = decode_ctrl(&bytes);
+        let _ = read_frame(&mut Cursor::new(bytes));
+    });
+}
+
+#[test]
+fn read_frame_rejects_oversized_and_truncated_streams() {
+    // Length prefix over MAX_FRAME: refused without allocating the claim.
+    let mut huge = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+    huge.extend_from_slice(&[0u8; 16]);
+    assert!(read_frame(&mut Cursor::new(huge)).is_err());
+
+    // Clean EOF before any prefix byte is Ok(None); EOF mid-frame is Err.
+    assert!(matches!(read_frame(&mut Cursor::new(Vec::new())), Ok(None)));
+    check("truncated frames error, never hang or panic", 200, |g| {
+        let payload = random_bytes(g, 64);
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &payload).unwrap();
+        let cut = 1 + g.rng.below(stream.len().max(2) - 1);
+        match read_frame(&mut Cursor::new(stream[..cut.min(stream.len() - 1)].to_vec())) {
+            Ok(Some(_)) => panic!("truncated stream produced a full frame"),
+            Ok(None) | Err(_) => {}
+        }
+    });
+}
+
+// ------------------------------------------------------------ round trips
+
+#[test]
+fn data_plane_round_trips() {
+    check("request encode/decode is identity", 300, |g| {
+        let kind = if g.rng.chance(0.5) { KIND_INFER } else { KIND_LEARN };
+        let n = g.size(0, 128);
+        let window: Vec<f32> = (0..n).map(|_| g.rng.f32() * 2.0 - 1.0).collect();
+        let (k, w) = decode_request(&encode_request(kind, &window)).unwrap();
+        assert_eq!((k, w), (kind, window));
+    });
+    check("reply encode/decode is identity", 300, |g| {
+        let r = WireReply {
+            status: g.rng.below(4) as u8,
+            winner: g.rng.range(-1, 1 << 20) as i32,
+            epoch: g.rng.next_u64(),
+            latency_us: g.rng.next_u64() as u32,
+        };
+        assert_eq!(decode_reply(&encode_reply(&r)).unwrap(), r);
+    });
+}
+
+#[test]
+fn control_plane_round_trips_random_frames() {
+    check("ctrl encode/decode is identity", 300, |g| {
+        let c = random_ctrl(g);
+        let bytes = encode_ctrl(&c);
+        assert!(bytes[0] >= CTRL_BASE, "ctrl kind byte below CTRL_BASE");
+        assert_eq!(decode_ctrl(&bytes).unwrap(), c);
+    });
+}
+
+// ------------------------------------------------- truncations / bit flips
+
+#[test]
+fn every_strict_prefix_of_a_ctrl_frame_errors() {
+    for c in sample_frames() {
+        let bytes = encode_ctrl(&c);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_ctrl(&bytes[..cut]).is_err(),
+                "prefix {cut}/{} of {c:?} decoded",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_replies_and_misaligned_requests_error() {
+    let reply = encode_reply(&WireReply { status: 0, winner: 3, epoch: 9, latency_us: 11 });
+    for cut in 0..reply.len() {
+        assert!(decode_reply(&reply[..cut]).is_err(), "reply prefix {cut} decoded");
+    }
+    let req = encode_request(KIND_INFER, &[1.0, 2.0, 3.0]);
+    for cut in 0..req.len() {
+        // A cut that lands on a float boundary is a VALID shorter
+        // request; anything else must error.
+        let decoded = decode_request(&req[..cut]);
+        if cut >= 1 && (cut - 1) % 4 == 0 {
+            assert_eq!(decoded.unwrap().1.len(), (cut - 1) / 4);
+        } else {
+            assert!(decoded.is_err(), "misaligned request prefix {cut} decoded");
+        }
+    }
+}
+
+#[test]
+fn single_bit_flips_never_panic_decoders() {
+    check("bit-flipped frames decode to Err or a valid value", 300, |g| {
+        let c = random_ctrl(g);
+        let mut bytes = encode_ctrl(&c);
+        let bit = g.rng.below(bytes.len() * 8);
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        let _ = decode_ctrl(&bytes); // must return, Err or Ok
+    });
+    check("bit-flipped replies decode to Err or a valid value", 200, |g| {
+        let mut bytes = encode_reply(&WireReply {
+            status: 1,
+            winner: g.rng.range(-1, 100) as i32,
+            epoch: g.rng.next_u64(),
+            latency_us: 77,
+        });
+        let bit = g.rng.below(bytes.len() * 8);
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        let _ = decode_reply(&bytes);
+    });
+}
+
+// ----------------------------------------------------------- alloc bombs
+
+#[test]
+fn hostile_length_claims_error_before_allocating() {
+    // A SnapshotFrame header claiming u32::MAX weights in a tiny payload:
+    // the decoder must reject via arithmetic, not try to allocate 16 GiB.
+    let mut bytes = encode_ctrl(&Ctrl::SnapshotFrame {
+        generation: 1,
+        epoch: 1,
+        weights: vec![1.0],
+    });
+    let count_at = bytes.len() - 4 - 4; // u32 count sits before the one f32
+    bytes[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_ctrl(&bytes).is_err());
+
+    // Same for a NodeList record count.
+    let mut bytes = encode_ctrl(&Ctrl::NodeList { nodes: vec![] });
+    let n = bytes.len();
+    bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_ctrl(&bytes).is_err());
+}
