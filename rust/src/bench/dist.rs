@@ -92,6 +92,16 @@ pub struct DistOpts {
     pub worker_delay_us: u64,
     /// Chaos mode.
     pub chaos: Chaos,
+    /// Learner checkpoint directory (`serve --state-dir`): a restarted
+    /// learner resumes the prior epoch lineage instead of resetting to 0.
+    pub state_dir: Option<PathBuf>,
+    /// `TNNGEN_FAILPOINTS` spec injected into the learner child.
+    pub learner_failpoints: Option<String>,
+    /// `TNNGEN_FAILPOINTS` spec injected into reader 0 only (crash
+    /// scenarios target one node; the rest of the fleet stays healthy).
+    pub reader_failpoints: Option<String>,
+    /// `TNNGEN_FAILPOINTS` spec injected into the registry child.
+    pub registry_failpoints: Option<String>,
 }
 
 impl DistOpts {
@@ -112,6 +122,10 @@ impl DistOpts {
             replicate_ms: 50,
             worker_delay_us: 0,
             chaos: Chaos::None,
+            state_dir: None,
+            learner_failpoints: None,
+            reader_failpoints: None,
+            registry_failpoints: None,
         }
     }
 }
@@ -129,6 +143,12 @@ impl Proc {
         let _ = self.child.kill();
         let _ = self.child.wait();
     }
+
+    /// Has the process exited (e.g. via an `abort` failpoint)? Reaps it
+    /// if so; never blocks.
+    pub fn is_dead(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(Some(_)))
+    }
 }
 
 impl Drop for Proc {
@@ -137,13 +157,15 @@ impl Drop for Proc {
     }
 }
 
-/// Spawn `bin args...` and block until it announces its listen address
-/// on stdout with `prefix`.
-fn spawn_proc(bin: &Path, args: &[String], prefix: &str) -> Result<Proc> {
-    let mut child = Command::new(bin)
-        .args(args)
-        .stdout(Stdio::piped())
-        .stderr(Stdio::inherit())
+/// Spawn `bin args...` (with extra environment variables `env`) and
+/// block until it announces its listen address on stdout with `prefix`.
+fn spawn_proc(bin: &Path, args: &[String], env: &[(String, String)], prefix: &str) -> Result<Proc> {
+    let mut cmd = Command::new(bin);
+    cmd.args(args).stdout(Stdio::piped()).stderr(Stdio::inherit());
+    for (k, v) in env {
+        cmd.env(k, v);
+    }
+    let mut child = cmd
         .spawn()
         .with_context(|| format!("spawning {}", bin.display()))?;
     let stdout = child.stdout.take().expect("stdout is piped");
@@ -163,7 +185,7 @@ pub struct Cluster {
     /// The registry's control address.
     pub registry_addr: String,
     opts: DistOpts,
-    _registry: Proc,
+    registry: Proc,
     learner: Option<Proc>,
     readers: Vec<Proc>,
 }
@@ -172,20 +194,16 @@ impl Cluster {
     /// Spawn registry + learner + `opts.readers` reader processes and
     /// wait for each announce.
     pub fn launch(opts: &DistOpts) -> Result<Cluster> {
-        let registry = spawn_proc(
-            &opts.bin,
-            &["registry".to_string(), "--listen".to_string(), "127.0.0.1:0".to_string()],
-            ANNOUNCE_REGISTRY,
-        )?;
+        let registry = spawn_registry(opts, "127.0.0.1:0")?;
         let registry_addr = registry.addr.clone();
-        let learner = spawn_node(opts, &registry_addr, ROLE_LEARNER)?;
+        let learner = spawn_node(opts, &registry_addr, ROLE_LEARNER, 0)?;
         let readers = (0..opts.readers)
-            .map(|_| spawn_node(opts, &registry_addr, ROLE_READER))
+            .map(|i| spawn_node(opts, &registry_addr, ROLE_READER, i))
             .collect::<Result<Vec<_>>>()?;
         Ok(Cluster {
             registry_addr,
             opts: opts.clone(),
-            _registry: registry,
+            registry,
             learner: Some(learner),
             readers,
         })
@@ -205,17 +223,110 @@ impl Cluster {
     }
 
     /// SIGKILL the learner and spawn a replacement (fresh process, fresh
-    /// address, fresh registration generation, epoch counter back to 0).
+    /// address, fresh registration generation). Without a `state_dir` the
+    /// epoch counter resets to 0; with one, the replacement recovers its
+    /// checkpoint and continues the prior lineage.
     pub fn restart_learner(&mut self) -> Result<()> {
         if let Some(mut l) = self.learner.take() {
             l.kill();
         }
-        self.learner = Some(spawn_node(&self.opts, &self.registry_addr, ROLE_LEARNER)?);
+        self.learner = Some(spawn_node(&self.opts, &self.registry_addr, ROLE_LEARNER, 0)?);
         Ok(())
+    }
+
+    /// The learner's announced data-plane address, if one is running.
+    pub fn learner_addr(&self) -> Option<String> {
+        self.learner.as_ref().map(|l| l.addr.clone())
+    }
+
+    /// Reader `i`'s announced data-plane address.
+    pub fn reader_addr(&self, i: usize) -> Option<String> {
+        self.readers.get(i).map(|r| r.addr.clone())
+    }
+
+    /// Drop every failpoint spec from this cluster's options, so
+    /// processes spawned by later `restart_*` calls come up healthy.
+    pub fn clear_failpoints(&mut self) {
+        self.opts.learner_failpoints = None;
+        self.opts.reader_failpoints = None;
+        self.opts.registry_failpoints = None;
+    }
+
+    /// Block until the learner process has exited on its own (an `abort`
+    /// failpoint fired); `false` on timeout.
+    pub fn wait_learner_dead(&mut self, timeout: Duration) -> bool {
+        wait_dead(self.learner.as_mut(), timeout)
+    }
+
+    /// Block until reader `i` has exited on its own; `false` on timeout.
+    pub fn wait_reader_dead(&mut self, i: usize, timeout: Duration) -> bool {
+        wait_dead(self.readers.get_mut(i), timeout)
+    }
+
+    /// Block until the registry has exited on its own; `false` on timeout.
+    pub fn wait_registry_dead(&mut self, timeout: Duration) -> bool {
+        wait_dead(Some(&mut self.registry), timeout)
+    }
+
+    /// Reap reader `i` (already dead or SIGKILLed) and spawn a
+    /// replacement at a fresh address.
+    pub fn restart_reader(&mut self, i: usize) -> Result<()> {
+        if i < self.readers.len() {
+            self.readers.remove(i).kill();
+        }
+        let idx = self.readers.len();
+        self.readers.push(spawn_node(&self.opts, &self.registry_addr, ROLE_READER, idx + 1)?);
+        Ok(())
+    }
+
+    /// Respawn the registry at its ORIGINAL address so running nodes and
+    /// routers reconnect without re-configuration. The old port can
+    /// linger in TIME_WAIT briefly, so the bind is retried.
+    pub fn restart_registry(&mut self) -> Result<()> {
+        self.registry.kill();
+        let mut last = None;
+        for _ in 0..20 {
+            match spawn_registry(&self.opts, &self.registry_addr) {
+                Ok(p) => {
+                    self.registry = p;
+                    return Ok(());
+                }
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+        Err(last.unwrap().context(format!("rebinding registry on {}", self.registry_addr)))
     }
 }
 
-fn spawn_node(opts: &DistOpts, registry_addr: &str, role: u8) -> Result<Proc> {
+fn wait_dead(proc: Option<&mut Proc>, timeout: Duration) -> bool {
+    let Some(p) = proc else { return true };
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if p.is_dead() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    false
+}
+
+fn spawn_registry(opts: &DistOpts, listen: &str) -> Result<Proc> {
+    let args = vec!["registry".to_string(), "--listen".to_string(), listen.to_string()];
+    let env = failpoint_env(opts.registry_failpoints.as_deref());
+    spawn_proc(&opts.bin, &args, &env, ANNOUNCE_REGISTRY)
+}
+
+fn failpoint_env(spec: Option<&str>) -> Vec<(String, String)> {
+    match spec {
+        Some(s) => vec![("TNNGEN_FAILPOINTS".to_string(), s.to_string())],
+        None => Vec::new(),
+    }
+}
+
+fn spawn_node(opts: &DistOpts, registry_addr: &str, role: u8, index: usize) -> Result<Proc> {
     let role_s = if role == ROLE_LEARNER { "learner" } else { "reader" };
     let mut args: Vec<String> = vec![
         "serve".to_string(),
@@ -243,7 +354,21 @@ fn spawn_node(opts: &DistOpts, registry_addr: &str, role: u8) -> Result<Proc> {
         args.push("--worker-delay-us".to_string());
         args.push(opts.worker_delay_us.to_string());
     }
-    spawn_proc(&opts.bin, &args, ANNOUNCE_NODE)
+    if role == ROLE_LEARNER {
+        if let Some(dir) = &opts.state_dir {
+            args.push("--state-dir".to_string());
+            args.push(dir.display().to_string());
+        }
+    }
+    let spec = if role == ROLE_LEARNER {
+        opts.learner_failpoints.as_deref()
+    } else if index == 0 {
+        // Crash scenarios target ONE node; readers 1.. stay healthy.
+        opts.reader_failpoints.as_deref()
+    } else {
+        None
+    };
+    spawn_proc(&opts.bin, &args, &failpoint_env(spec), ANNOUNCE_NODE)
 }
 
 /// Outcome of one distributed run: the standard serve bench report (so

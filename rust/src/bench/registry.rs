@@ -21,6 +21,8 @@
 //!   q→q second layer): per layer encode → response → WTA, chained by
 //!   the sentinel-aware spike-time→intensity handoff.
 //! * `clustering` — the full Table-II pipeline (train + infer + score).
+//! * `failpoint_overhead` — warm batched inference with a failpoint site
+//!   evaluated per window, disarmed vs armed-but-never-firing
 //! * `obs_overhead` — warm batched inference with span tracing forced
 //!   off vs on (the report-only instrumentation-cost probe).
 //! * `gate_level` — gate-level functional simulation of a small column
@@ -64,6 +66,7 @@ use crate::sim::{
     engine_of, BatchSim, CycleSim, Engine, EngineKind, MultiLayerBatchSim, MultiLayerSim,
     SimScratch,
 };
+use crate::util::failpoint;
 
 /// Master seed shared by every entry: datasets, weight init and the serve
 /// service all derive from it, so two runs measure identical work.
@@ -498,6 +501,37 @@ pub fn default_registry(profile: Profile) -> Vec<BenchEntry> {
                 trace::set_enabled(traced);
                 batch.infer_winners_into(&xs, &mut winners);
                 trace::set_enabled(was);
+                std::hint::black_box(winners.len());
+            })
+        }));
+    }
+
+    // Failpoint-overhead probe, same shape as `obs_overhead`: warm
+    // batched inference plus one explicit failpoint evaluation per
+    // window, measured disarmed (one relaxed atomic load per site hit)
+    // vs armed with a rule that can never fire (probability 0.0 — the
+    // full rule-scan + RNG-draw slow path). `failpoint_overhead/*`
+    // matches no gate filter, so the rows stay report-only.
+    for (engine, armed) in [("off", false), ("armed", true)] {
+        let cfg = micro.clone();
+        entries.push(BenchEntry::new("failpoint_overhead", micro.tag(), engine, units, move || {
+            let (xs, _) = generate(&cfg.name, cfg.p, cfg.q, n, BENCH_SEED).all();
+            let batch = BatchSim::new(cfg.clone(), BENCH_SEED).with_workers(1);
+            let mut winners = Vec::new();
+            batch.infer_winners_into(&xs, &mut winners);
+            if armed {
+                // Install the rule now, but only enable it inside the
+                // timed closure so the paired `off` row stays clean.
+                failpoint::configure("serve.infer=drop@0.0").expect("static spec parses");
+                failpoint::set_enabled(false);
+            }
+            Box::new(move || {
+                failpoint::set_enabled(armed);
+                for _ in &xs {
+                    failpoint::pause("serve.infer");
+                }
+                batch.infer_winners_into(&xs, &mut winners);
+                failpoint::set_enabled(false);
                 std::hint::black_box(winners.len());
             })
         }));

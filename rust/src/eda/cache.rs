@@ -53,7 +53,6 @@ pub struct FlowCache {
     dir: PathBuf,
     hits: AtomicUsize,
     misses: AtomicUsize,
-    tmp_seq: AtomicUsize,
     // Process-wide mirrors of the per-cache counters, so `tnngen serve
     // --metrics` / trace consumers see cache traffic without holding a
     // cache reference.
@@ -72,7 +71,6 @@ impl FlowCache {
             dir,
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
-            tmp_seq: AtomicUsize::new(0),
             hits_metric: reg.counter("tnngen_flow_cache_hits_total"),
             misses_metric: reg.counter("tnngen_flow_cache_misses_total"),
         })
@@ -121,23 +119,22 @@ impl FlowCache {
     }
 
     fn try_read(&self, key: u64) -> Option<FlowReport> {
+        // Failpoint: an injected read fault degrades to a cache miss, the
+        // same self-heal path a corrupt or torn entry takes.
+        crate::util::failpoint::io("cache.read").ok()?;
         let text = std::fs::read_to_string(self.path_of(key)).ok()?;
         let doc = parse(&text).ok()?;
         report_from_json(&doc).ok()
     }
 
-    /// Persist a report under `key` (atomic write-then-rename so a
-    /// concurrent reader never sees a torn file).
+    /// Persist a report under `key` via [`crate::util::atomic_io`]
+    /// (temp + fsync + rename, so a concurrent reader or a crash mid-write
+    /// never leaves a torn entry at the final path).
     pub fn store(&self, key: u64, report: &FlowReport) -> Result<()> {
         let text = flow_report_json(report).pretty();
-        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
-        let tmp = self
-            .dir
-            .join(format!(".flow-{key:016x}.{}.{seq}.tmp", std::process::id()));
         let path = self.path_of(key);
-        std::fs::write(&tmp, text)
-            .with_context(|| format!("writing cache entry {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
+        crate::util::failpoint::io("cache.write")
+            .and_then(|()| crate::util::atomic_io::write_atomic(&path, text.as_bytes()))
             .with_context(|| format!("publishing cache entry {}", path.display()))?;
         Ok(())
     }

@@ -50,6 +50,7 @@ use tnngen::report::artifacts;
 use tnngen::report::experiments::{self, Effort};
 use tnngen::report::{f2, f3, Table};
 use tnngen::rtl::{generate_column, verilog::emit_verilog};
+use tnngen::serve::checkpoint::CheckpointStore;
 use tnngen::serve::node::{NodeOpts, ServeNode};
 use tnngen::serve::proto::{ROLE_LEARNER, ROLE_READER};
 use tnngen::serve::registry::{RegistryServer, DEFAULT_TTL_MS};
@@ -84,12 +85,12 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
         [--bench --rps R --duration S [--learn-every K] [--json]]
         [--tcp ADDR] [--metrics ADDR] [--samples N] [--seed N] [--ucr-dir DIR]
   serve <tag|name> --join REGISTRY_ADDR [--role reader|learner] [--listen ADDR]
-        [--heartbeat-ms MS] [--replicate-ms MS] [serve flags]
+        [--heartbeat-ms MS] [--replicate-ms MS] [--state-dir DIR] [serve flags]
   registry [--listen ADDR] [--ttl-ms MS]
   dbench <tag> [--readers N] [--requests N] [--clients N] [--learn-every K]
          [--chaos none|kill-reader|restart-learner] [--scaling] [--shards N]
          [--batch N] [--snapshot-every K] [--worker-delay-us US] [--seed N]
-         [--json]
+         [--state-dir DIR] [--json]
   bench [run|list] [--profile quick|full | --quick] [--filter PATTERNS]
         [--iters N] [--warmup N] [--json] [--out FILE]
   bench record [--out FILE] [run flags]       (defaults to BENCH_<profile>.json)
@@ -111,6 +112,18 @@ const USAGE: &str = "usage: tnngen <list|simulate|generate-rtl|flow|explore|fore
   exposition, /metrics.json a JSON snapshot. TNNGEN_LOG=error|warn|info|
   debug|off controls the structured stderr logger. All three are
   documented in docs/OBSERVABILITY.md.
+
+  --failpoints SPEC (any command) arms the deterministic fault-injection
+  registry: `site=action[@trigger]` rules joined by `;`, e.g.
+  `cache.write=io_err@3;tcp.read_frame=delay_ms(10);node.heartbeat=drop@0.5`
+  (actions io_err|delay_ms(N)|drop|abort; trigger N = Nth hit once, a
+  float = per-hit probability seeded by TNNGEN_TEST_SEED, absent = every
+  hit). TNNGEN_FAILPOINTS does the same from the environment. Disabled
+  failpoints cost one relaxed atomic load. serve --state-dir DIR makes a
+  learner durable: CRC-checked checkpoints written atomically on every
+  snapshot publish; a restarted learner resumes the prior epoch lineage,
+  and corrupt/torn checkpoints are rejected (loud fresh start). See
+  docs/RELIABILITY.md.
 
   simulate --sequential forces the per-sample reference path (the default
   native path runs the batched parallel engine; both are bit-exact).
@@ -247,6 +260,17 @@ fn dispatch(args: &Args) -> Result<()> {
     if trace_out.is_some() {
         obs::trace::enable();
     }
+    // --failpoints SPEC arms the deterministic fault-injection registry
+    // for the whole run; without the flag, TNNGEN_FAILPOINTS (if set) is
+    // honored so child processes and CI smoke runs can inject faults too.
+    // A bad spec is a usage error and must not half-arm the registry.
+    if let Some(spec) = args.flag("failpoints") {
+        tnngen::util::failpoint::configure(spec)
+            .map_err(|e| anyhow::anyhow!("bad --failpoints spec {spec:?}: {e}"))?;
+    } else {
+        tnngen::util::failpoint::configure_from_env()
+            .map_err(|e| anyhow::anyhow!("bad TNNGEN_FAILPOINTS spec: {e}"))?;
+    }
     let result = run_command(args);
     if let Some(path) = &trace_out {
         match obs::trace::write_chrome_trace(path) {
@@ -328,7 +352,7 @@ fn run_command(args: &Args) -> Result<()> {
                 );
                 println!("// (truncated; use --out file.v for the full netlist)");
             } else {
-                std::fs::write(out, &v)?;
+                tnngen::util::atomic_io::write_atomic(std::path::Path::new(out), v.as_bytes())?;
                 println!(
                     "wrote {out}: {} gates, {} flops",
                     rtl.netlist.gates.len(),
@@ -587,7 +611,15 @@ fn run_command(args: &Args) -> Result<()> {
                 worker_delay: Duration::from_micros(args.flag_u64("worker-delay-us", 0)?),
             };
             let seed = args.flag_u64("seed", 42)?;
-            let svc = std::sync::Arc::new(TnnService::start_stack(&cfgs, seed, opts)?);
+            // --state-dir DIR makes the learner durable: CRC-checked
+            // checkpoints are written atomically on every snapshot
+            // publish, and a restart resumes the prior epoch lineage.
+            let store = match args.flag("state-dir") {
+                Some(dir) => Some(CheckpointStore::new(dir)?),
+                None => None,
+            };
+            let svc =
+                std::sync::Arc::new(TnnService::start_stack_durable(&cfgs, seed, opts, store)?);
             if cfgs.len() > 1 {
                 let shape: Vec<String> =
                     cfgs.iter().map(|c| format!("{}x{}", c.p, c.q)).collect();
@@ -735,6 +767,7 @@ fn run_command(args: &Args) -> Result<()> {
             opts.learn_every = args.flag_usize("learn-every", 0)?;
             opts.snapshot_every = args.flag_usize("snapshot-every", 8)?;
             opts.worker_delay_us = args.flag_u64("worker-delay-us", 0)?;
+            opts.state_dir = args.flag("state-dir").map(std::path::PathBuf::from);
             opts.chaos = match args.flag("chaos").unwrap_or("none") {
                 "none" => Chaos::None,
                 "kill-reader" => Chaos::KillReader,
@@ -816,7 +849,11 @@ fn bench_cmd(args: &Args) -> Result<()> {
                 None => None,
             };
             if let Some(path) = out {
-                std::fs::write(&path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+                tnngen::util::atomic_io::write_atomic(
+                    std::path::Path::new(&path),
+                    doc.pretty().as_bytes(),
+                )
+                .with_context(|| format!("writing {path}"))?;
                 eprintln!(
                     "wrote {path}: {} entries ({} profile)",
                     artifact.entries.len(),

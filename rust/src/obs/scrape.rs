@@ -17,7 +17,7 @@
 use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
@@ -27,6 +27,12 @@ use crate::Result;
 
 /// Cap on the request head we are willing to buffer.
 const MAX_HEAD: usize = 4096;
+
+/// Total time budget for reading one request head. A per-read timeout
+/// alone is not enough: a peer trickling one byte per read keeps the
+/// connection (and its thread) alive indefinitely. The deadline bounds
+/// the WHOLE read, however the bytes arrive.
+const READ_DEADLINE: Duration = Duration::from_secs(2);
 
 /// Running metrics endpoint. The accept loop and per-connection
 /// threads are detached and live until process exit.
@@ -64,20 +70,53 @@ impl MetricsServer {
     }
 }
 
-fn serve_conn(mut stream: TcpStream, sources: &[Arc<Registry>]) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+/// Read a request head under the size cap and total deadline. `Ok(None)`
+/// means the request must be rejected (oversized, truncated, or stalled
+/// past the deadline).
+fn read_head(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+    let deadline = Instant::now() + READ_DEADLINE;
     let mut head = Vec::new();
     let mut buf = [0u8; 512];
     loop {
-        let n = stream.read(&mut buf)?;
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Ok(None);
+        }
+        stream.set_read_timeout(Some(remaining))?;
+        let n = match stream.read(&mut buf) {
+            Ok(n) => n,
+            // A stall past the deadline surfaces as WouldBlock/TimedOut
+            // depending on platform; both mean "reject", not "error".
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Ok(None);
+            }
+            Err(e) => return Err(e),
+        };
         if n == 0 {
-            break;
+            // EOF before the terminator: a truncated request.
+            return Ok(None);
         }
         head.extend_from_slice(&buf[..n]);
-        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > MAX_HEAD {
-            break;
+        if head.len() > MAX_HEAD {
+            return Ok(None);
+        }
+        if head.windows(4).any(|w| w == b"\r\n\r\n") {
+            return Ok(Some(head));
         }
     }
+}
+
+fn serve_conn(mut stream: TcpStream, sources: &[Arc<Registry>]) -> std::io::Result<()> {
+    let Some(head) = read_head(&mut stream)? else {
+        // Oversized, truncated, or stalled request: reject instead of
+        // rendering a 200 (the pre-fix behavior served anything).
+        let reply = "HTTP/1.0 400 Bad Request\r\nContent-Length: 0\r\nConnection: close\r\n\r\n";
+        stream.write_all(reply.as_bytes())?;
+        return stream.flush();
+    };
     let request = String::from_utf8_lossy(&head);
     let path = request.split_whitespace().nth(1).unwrap_or("/metrics");
     let (content_type, body) = if path.starts_with("/metrics.json") {
@@ -127,6 +166,37 @@ mod tests {
             doc.get("counters").and_then(|c| c.get("t_scrape_total")).and_then(|v| v.as_i64()),
             Some(6),
             "scrape must reflect live counter state"
+        );
+    }
+
+    #[test]
+    fn oversized_request_head_is_rejected_with_400() {
+        let srv = MetricsServer::spawn("127.0.0.1:0", vec![Arc::new(Registry::new())]).unwrap();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        // A request line that never ends and blows straight past the cap.
+        let junk = vec![b'a'; MAX_HEAD + 512];
+        s.write_all(b"GET /").unwrap();
+        s.write_all(&junk).unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.0 400"), "oversized head must be rejected, got: {raw}");
+    }
+
+    #[test]
+    fn stalled_or_truncated_request_is_bounded_and_rejected() {
+        let srv = MetricsServer::spawn("127.0.0.1:0", vec![Arc::new(Registry::new())]).unwrap();
+        let start = std::time::Instant::now();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        // Half a request head, then a stall: the server must give up at
+        // its total deadline, not hold the connection on per-read resets.
+        s.write_all(b"GET /metrics HT").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.0 400"), "stalled head must be rejected, got: {raw}");
+        let elapsed = start.elapsed();
+        assert!(
+            elapsed < READ_DEADLINE + Duration::from_secs(3),
+            "rejection must land near the {READ_DEADLINE:?} deadline, took {elapsed:?}"
         );
     }
 }

@@ -354,7 +354,7 @@ pub fn parse_trace(text: &str) -> Result<(Vec<TraceEvent>, u64)> {
 pub fn write_chrome_trace(path: &Path) -> Result<usize> {
     let (events, dropped) = snapshot();
     let doc = trace_json(&events, dropped);
-    std::fs::write(path, doc.pretty())
+    crate::util::atomic_io::write_atomic(path, doc.pretty().as_bytes())
         .with_context(|| format!("writing trace to {}", path.display()))?;
     Ok(events.len())
 }

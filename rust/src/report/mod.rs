@@ -135,7 +135,7 @@ pub fn save_report(name: &str, content: &str) -> std::io::Result<std::path::Path
     let dir = std::path::Path::new("target/reports");
     std::fs::create_dir_all(dir)?;
     let path = dir.join(name);
-    std::fs::write(&path, content)?;
+    crate::util::atomic_io::write_atomic(&path, content.as_bytes())?;
     Ok(path)
 }
 

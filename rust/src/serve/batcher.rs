@@ -68,9 +68,27 @@ impl<T> Batcher<T> {
         self.capacity
     }
 
+    /// Recover from a poisoned queue lock. A consumer or producer that
+    /// panicked while holding it means the service is dying; the queue
+    /// state itself cannot be torn (single push/drain critical
+    /// sections), so we mark the queue closed — subsequent submits get
+    /// the typed [`SubmitError::Closed`] and consumers drain then exit,
+    /// instead of the panic cascading through every thread that ever
+    /// touches the queue.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, State<T>> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let mut g = poisoned.into_inner();
+                g.closed = true;
+                g
+            }
+        }
+    }
+
     /// Items currently admitted and waiting (diagnostic; racy by nature).
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.lock_state().items.len()
     }
 
     /// Whether no admitted item is currently waiting (racy, like
@@ -84,7 +102,7 @@ impl<T> Batcher<T> {
     /// [`SubmitError::Closed`]. The item is dropped on rejection (the
     /// caller still owns the original data it cloned from).
     pub fn submit(&self, item: T) -> Result<(), SubmitError> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         if s.closed {
             return Err(SubmitError::Closed);
         }
@@ -103,7 +121,7 @@ impl<T> Batcher<T> {
     /// Stop admitting; wake every consumer. Items already admitted remain
     /// drainable via [`Batcher::next_batch`] (graceful shutdown).
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         s.closed = true;
         drop(s);
         self.not_empty.notify_all();
@@ -115,7 +133,7 @@ impl<T> Batcher<T> {
     /// Returns `None` only when the queue is closed AND fully drained — the
     /// consumer's signal to exit.
     pub fn next_batch(&self) -> Option<Vec<T>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         loop {
             loop {
                 if !s.items.is_empty() {
@@ -124,7 +142,14 @@ impl<T> Batcher<T> {
                 if s.closed {
                     return None;
                 }
-                s = self.not_empty.wait(s).unwrap();
+                s = match self.not_empty.wait(s) {
+                    Ok(g) => g,
+                    Err(poisoned) => {
+                        let mut g = poisoned.into_inner();
+                        g.closed = true;
+                        g
+                    }
+                };
             }
             if s.items.len() < self.max_batch && !s.closed {
                 let deadline = Instant::now() + self.max_wait;
@@ -133,10 +158,17 @@ impl<T> Batcher<T> {
                     if now >= deadline {
                         break;
                     }
-                    let (guard, timed_out) = self
+                    let (guard, timed_out) = match self
                         .not_empty
                         .wait_timeout(s, deadline.saturating_duration_since(now))
-                        .unwrap();
+                    {
+                        Ok(r) => r,
+                        Err(poisoned) => {
+                            let (mut g, t) = poisoned.into_inner();
+                            g.closed = true;
+                            (g, t)
+                        }
+                    };
                     s = guard;
                     if timed_out.timed_out() {
                         break;
@@ -227,6 +259,28 @@ mod tests {
         assert_eq!(b.next_batch(), Some(vec![0, 1, 2]));
         b.submit(9).unwrap();
         assert_eq!(g.get(), 3, "gauge keeps the high-water mark, not the current depth");
+    }
+
+    #[test]
+    fn poisoned_lock_reports_closed_and_drains() {
+        let b = Arc::new(batcher(8, 4, 50));
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        // Poison the queue mutex the way a real crash would: a thread
+        // panicking while holding it.
+        let poisoner = Arc::clone(&b);
+        let r = std::thread::spawn(move || {
+            let _g = poisoner.state.lock().unwrap();
+            panic!("deliberately poisoning the batcher mutex");
+        })
+        .join();
+        assert!(r.is_err());
+        // Producers see the typed Closed error, not a panic...
+        assert_eq!(b.submit(3), Err(SubmitError::Closed));
+        // ...and consumers drain what was admitted, then exit cleanly.
+        assert_eq!(b.next_batch(), Some(vec![1, 2]));
+        assert_eq!(b.next_batch(), None);
+        assert_eq!(b.len(), 0, "len must not panic on a poisoned lock either");
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Crash-safe learner checkpoints: CRC-framed weight snapshots on disk.
+//!
+//! A learner started with `serve --join --role learner --state-dir DIR`
+//! persists every published snapshot to `DIR/learner.ckpt` through
+//! [`CheckpointStore`]. On restart it loads the file, verifies the CRC,
+//! and **continues the prior epoch lineage** with the trained weights —
+//! instead of resetting to seed weights at epoch 0 and silently
+//! discarding everything the cluster learned (the PR-9 behavior this
+//! module replaces; see `docs/RELIABILITY.md`).
+//!
+//! Torn or corrupt files are impossible-by-construction in the common
+//! case (writes go through [`crate::util::atomic_io::write_atomic`], so
+//! a crash leaves either the old complete file or the new complete one)
+//! and are *detected* otherwise: any mismatch of magic, length, or CRC
+//! makes [`Checkpoint::decode`] fail, and the service degrades to a
+//! loudly-logged fresh start rather than serving from garbage.
+//!
+//! ## On-disk format (`tnngen.ckpt/v1`, little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic "TNNCKPT1"
+//!      8     8  epoch   (u64) — last published snapshot epoch
+//!     16     8  steps   (u64) — total STDP steps applied in this lineage
+//!     24     4  n       (u32) — weight count
+//!     28   4*n  weights (f32 × n, the MultiLayerSim flat layout)
+//! 28+4*n     4  crc     (u32) — IEEE CRC-32 over ALL preceding bytes
+//! ```
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::{atomic_io, failpoint};
+
+/// Format magic; the trailing `1` is the version.
+pub const MAGIC: &[u8; 8] = b"TNNCKPT1";
+
+/// Fixed bytes around the weight payload: magic + epoch + steps + count
+/// header, plus the trailing CRC.
+const HEADER_LEN: usize = 8 + 8 + 8 + 4;
+const TRAILER_LEN: usize = 4;
+
+/// IEEE 802.3 CRC-32 (the zlib/PNG polynomial, reflected form), table
+/// built once per process. Hand-rolled because the crate is
+/// dependency-free by design.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// One recoverable learner state: the last published epoch, the total
+/// STDP step count behind it, and the flat stack weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Snapshot epoch this state was published as; a resumed learner
+    /// continues the lineage from here.
+    pub epoch: u64,
+    /// Cumulative STDP steps applied across the whole lineage.
+    pub steps: u64,
+    /// Stack weights in the [`MultiLayerSim::flat_weights`]
+    /// (layer-concatenated row-major) layout.
+    ///
+    /// [`MultiLayerSim::flat_weights`]: crate::sim::MultiLayerSim::flat_weights
+    pub weights: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Serialize to the CRC-framed `tnngen.ckpt/v1` byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + 4 * self.weights.len() + TRAILER_LEN);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.steps.to_le_bytes());
+        out.extend_from_slice(&(self.weights.len() as u32).to_le_bytes());
+        for w in &self.weights {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and verify a checkpoint image. Total over arbitrary bytes:
+    /// wrong magic, impossible lengths, truncation, or any bit flip
+    /// (caught by the CRC) produce an error, never a panic or a
+    /// partially-filled checkpoint.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < HEADER_LEN + TRAILER_LEN {
+            bail!("checkpoint too short: {} bytes", bytes.len());
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("bad checkpoint magic (not a tnngen.ckpt/v1 file)");
+        }
+        let epoch = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let steps = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let n = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        let expected = HEADER_LEN + 4 * n + TRAILER_LEN;
+        if bytes.len() != expected {
+            bail!(
+                "checkpoint length mismatch: {} bytes for {} weights (want {expected})",
+                bytes.len(),
+                n
+            );
+        }
+        let body = &bytes[..bytes.len() - TRAILER_LEN];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - TRAILER_LEN..].try_into().unwrap());
+        let actual = crc32(body);
+        if stored != actual {
+            bail!("checkpoint CRC mismatch (stored {stored:#010x}, computed {actual:#010x})");
+        }
+        let mut weights = Vec::with_capacity(n);
+        for chunk in body[HEADER_LEN..].chunks_exact(4) {
+            weights.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Checkpoint { epoch, steps, weights })
+    }
+}
+
+/// Directory-backed checkpoint persistence for one learner
+/// (`--state-dir DIR`). Saves are atomic replacements of
+/// `DIR/learner.ckpt`; loads verify the CRC frame end to end.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Use (and create if needed) `dir` as the learner state directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        Ok(CheckpointStore { dir })
+    }
+
+    /// The checkpoint file path inside the state directory.
+    pub fn path(&self) -> PathBuf {
+        self.dir.join("learner.ckpt")
+    }
+
+    /// Atomically persist `ck` (temp + fsync + rename): a crash at any
+    /// instant leaves either the previous checkpoint or this one intact.
+    /// Failpoint site: `checkpoint.write`.
+    pub fn save(&self, ck: &Checkpoint) -> Result<()> {
+        let path = self.path();
+        failpoint::io("checkpoint.write")
+            .and_then(|()| atomic_io::write_atomic(&path, &ck.encode()))
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Load and verify the stored checkpoint. `Ok(None)` when no file
+    /// exists (a true fresh start); `Err` for unreadable or corrupt
+    /// files so the caller can log loudly before degrading. Failpoint
+    /// site: `checkpoint.read`.
+    pub fn load(&self) -> Result<Option<Checkpoint>> {
+        let path = self.path();
+        failpoint::io("checkpoint.read")
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading checkpoint {}", path.display()));
+            }
+        };
+        Checkpoint::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+            .map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        Checkpoint {
+            epoch: rng.next_u64() % 1000,
+            steps: rng.next_u64() % 100_000,
+            weights: (0..96).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let ck = sample(crate::util::prop::base_seed());
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back, ck);
+        // Empty weight vectors round-trip too.
+        let empty = Checkpoint { epoch: 0, steps: 0, weights: vec![] };
+        assert_eq!(Checkpoint::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn any_single_bit_flip_is_rejected() {
+        let base = crate::util::prop::base_seed();
+        let bytes = sample(base).encode();
+        let mut rng = Rng::new(base ^ 0xBADC_0DE);
+        for _ in 0..64 {
+            let mut evil = bytes.clone();
+            let bit = rng.below(evil.len() * 8);
+            evil[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                Checkpoint::decode(&evil).is_err(),
+                "flipped bit {bit} must be caught (base_seed={base:#x})"
+            );
+        }
+    }
+
+    #[test]
+    fn truncations_and_garbage_are_rejected() {
+        let bytes = sample(7).encode();
+        for cut in 0..bytes.len() {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        assert!(Checkpoint::decode(b"not a checkpoint at all....").is_err());
+        // Hostile length claim: header says huge n, body doesn't match.
+        let mut evil = bytes.clone();
+        evil[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Checkpoint::decode(&evil).is_err());
+    }
+
+    #[test]
+    fn store_saves_loads_and_reports_absence() {
+        let dir = std::env::temp_dir()
+            .join(format!("tnngen-ckpt-{}-{}", std::process::id(), line!()));
+        let store = CheckpointStore::new(&dir).unwrap();
+        assert!(store.load().unwrap().is_none(), "no file yet");
+        let ck = sample(11);
+        store.save(&ck).unwrap();
+        assert_eq!(store.load().unwrap(), Some(ck.clone()));
+        // Overwrite with a newer state; load sees the replacement.
+        let ck2 = Checkpoint { epoch: ck.epoch + 5, ..sample(12) };
+        store.save(&ck2).unwrap();
+        assert_eq!(store.load().unwrap().unwrap().epoch, ck.epoch + 5);
+        // Corrupt the file on disk: load errors instead of panicking.
+        std::fs::write(store.path(), b"torn garbage").unwrap();
+        assert!(store.load().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_failpoint_fails_save_without_touching_the_file() {
+        let _g = crate::util::failpoint::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let dir = std::env::temp_dir()
+            .join(format!("tnngen-ckpt-fp-{}-{}", std::process::id(), line!()));
+        let store = CheckpointStore::new(&dir).unwrap();
+        store.save(&sample(1)).unwrap();
+        crate::util::failpoint::configure_for_current_thread("checkpoint.write=io_err@1").unwrap();
+        let r = store.save(&sample(2));
+        crate::util::failpoint::clear_current_thread();
+        assert!(r.is_err());
+        assert_eq!(store.load().unwrap().unwrap(), sample(1), "old checkpoint intact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -24,6 +24,11 @@
 //!   closed-loop with bounded in-flight) producing the
 //!   [`BenchReport`](loadgen::BenchReport) behind `tnngen serve --bench`.
 //!
+//! * [`checkpoint`] — crash-safe learner durability: every published
+//!   snapshot is persisted as a CRC-framed, atomically-replaced file
+//!   under `--state-dir`, and a restarted learner resumes the prior
+//!   epoch lineage with its trained weights (`docs/RELIABILITY.md`).
+//!
 //! Four more pieces scale the service across OS processes (see
 //! `docs/DISTRIBUTED.md` and `rust/tests/{proto_fuzz,distributed}.rs`):
 //!
@@ -50,6 +55,7 @@
 //! serial [`CycleSim`](crate::sim::CycleSim) STDP.
 
 pub mod batcher;
+pub mod checkpoint;
 pub mod loadgen;
 pub mod metrics;
 pub mod node;
@@ -216,9 +222,69 @@ impl TnnService {
         seed: u64,
         opts: ServeOpts,
     ) -> anyhow::Result<Self> {
+        Self::start_stack_durable(cfgs, seed, opts, None)
+    }
+
+    /// [`Self::start_stack`] plus learner durability: with a
+    /// [`checkpoint::CheckpointStore`] (`serve --state-dir DIR`), the
+    /// learner persists every published snapshot crash-safely and, when
+    /// a valid checkpoint exists at startup, **resumes the prior epoch
+    /// lineage** — trained weights and epoch counter recovered, so
+    /// readers replicating from a restarted learner never observe a
+    /// silent reset to seed weights. A corrupt or geometry-mismatched
+    /// checkpoint is rejected (CRC/shape check) and loudly degraded to
+    /// a fresh start; it never panics and never serves torn weights.
+    pub fn start_stack_durable(
+        cfgs: &[ColumnConfig],
+        seed: u64,
+        opts: ServeOpts,
+        store: Option<checkpoint::CheckpointStore>,
+    ) -> anyhow::Result<Self> {
         let shards = opts.shards.max(1);
-        let learner_stack = MultiLayerSim::new(cfgs, seed)?;
-        let weights = Arc::new(SharedWeights::new(learner_stack.flat_weights()));
+        let mut learner_stack = MultiLayerSim::new(cfgs, seed)?;
+        let expected: usize = cfgs.iter().map(|c| c.q * c.p).sum();
+        let mut epoch0 = 0u64;
+        let mut steps0 = 0u64;
+        if let Some(st) = &store {
+            match st.load() {
+                Ok(Some(ck)) if ck.weights.len() == expected => {
+                    crate::obs::log::info(
+                        "serve.checkpoint",
+                        format_args!(
+                            "resuming learner from {} (epoch {}, {} steps)",
+                            st.path().display(),
+                            ck.epoch,
+                            ck.steps
+                        ),
+                    );
+                    learner_stack.load_flat_weights(&ck.weights);
+                    epoch0 = ck.epoch;
+                    steps0 = ck.steps;
+                }
+                Ok(Some(ck)) => {
+                    crate::obs::log::warn(
+                        "serve.checkpoint",
+                        format_args!(
+                            "checkpoint {} has {} weights but the stack expects {expected}; \
+                             DISCARDING it and starting fresh from seed weights",
+                            st.path().display(),
+                            ck.weights.len()
+                        ),
+                    );
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    crate::obs::log::warn(
+                        "serve.checkpoint",
+                        format_args!(
+                            "checkpoint rejected ({e:#}); starting fresh from seed weights — \
+                             prior learned state is LOST"
+                        ),
+                    );
+                }
+            }
+        }
+        let weights = Arc::new(SharedWeights::new_at(epoch0, learner_stack.flat_weights()));
         let metrics = Arc::new(ServeMetrics::new());
         let infer_q = Arc::new(
             Batcher::new(opts.queue_capacity, opts.max_batch, opts.max_wait)
@@ -239,7 +305,7 @@ impl TnnService {
             let (q, w, m) = (learn_q.clone(), weights.clone(), metrics.clone());
             let every = opts.snapshot_every;
             workers.push(spawn_worker("tnn-serve-learner", move || {
-                learner_loop(learner_stack, q, w, m, every);
+                learner_loop(learner_stack, q, w, m, every, store, steps0);
             }));
         }
         Ok(TnnService {
@@ -363,7 +429,10 @@ impl TnnService {
     pub fn shutdown(&self) {
         self.infer_q.close();
         self.learn_q.close();
-        let mut handles = self.workers.lock().unwrap();
+        // A worker that panicked while this lock was held would poison
+        // it; shutdown must still drain and join rather than panic in
+        // Drop (drain-only critical section, nothing can be torn).
+        let mut handles = self.workers.lock().unwrap_or_else(|p| p.into_inner());
         for h in handles.drain(..) {
             let _ = h.join();
         }
@@ -430,6 +499,57 @@ mod tests {
             ColumnConfig::new("BadL2", "synthetic", 5, 2),
         ];
         assert!(TnnService::start_stack(&bad, 9, ServeOpts::default()).is_err());
+    }
+
+    #[test]
+    fn learner_resumes_checkpoint_lineage_and_rejects_corruption() {
+        let dir = std::env::temp_dir()
+            .join(format!("tnngen-serve-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = checkpoint::CheckpointStore::new(&dir).unwrap();
+        let opts = ServeOpts { shards: 1, snapshot_every: 2, ..Default::default() };
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.3).sin()).collect();
+
+        let svc =
+            TnnService::start_stack_durable(&[cfg()], 5, opts, Some(store.clone())).unwrap();
+        for _ in 0..6 {
+            svc.submit_learn(x.clone()).unwrap();
+        }
+        svc.shutdown();
+        let trained = svc.snapshot();
+        assert!(trained.epoch >= 1, "learning must have published");
+        drop(svc);
+
+        // Restart with the same state dir: same epoch, same weights — the
+        // lineage continues instead of resetting to seed state.
+        let svc2 =
+            TnnService::start_stack_durable(&[cfg()], 5, opts, Some(store.clone())).unwrap();
+        assert_eq!(svc2.snapshot().epoch, trained.epoch, "epoch lineage must continue");
+        assert_eq!(svc2.snapshot().weights, trained.weights, "trained weights must survive");
+        for _ in 0..2 {
+            svc2.submit_learn(x.clone()).unwrap();
+        }
+        svc2.shutdown();
+        assert_eq!(
+            svc2.snapshot().epoch,
+            trained.epoch + 1,
+            "post-restart publishes continue the counter"
+        );
+        drop(svc2);
+
+        // A corrupt checkpoint is rejected by the CRC frame and degrades
+        // to a fresh start (epoch 0, seed weights) — never a panic.
+        std::fs::write(store.path(), b"definitely not a checkpoint").unwrap();
+        let svc3 =
+            TnnService::start_stack_durable(&[cfg()], 5, opts, Some(store.clone())).unwrap();
+        assert_eq!(svc3.snapshot().epoch, 0);
+        assert_eq!(
+            svc3.snapshot().weights,
+            crate::sim::CycleSim::new(cfg(), 5).weights,
+            "fresh start must serve seed weights"
+        );
+        svc3.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -148,7 +148,9 @@ impl ServeNode {
     /// Stop the background loops, then shut the service down gracefully.
     pub fn shutdown(&self) {
         self.stop.store(true, Relaxed);
-        let mut loops = self.loops.lock().unwrap();
+        // Recover rather than panic if a loop died poisoned: shutdown
+        // must still stop the service (drain-only critical section).
+        let mut loops = self.loops.lock().unwrap_or_else(|p| p.into_inner());
         for h in loops.drain(..) {
             let _ = h.join();
         }
@@ -199,6 +201,12 @@ fn heartbeat_loop(
     let beats: Arc<Counter> = reg.counter("tnngen_node_heartbeats_total");
     let refused: Arc<Counter> = reg.counter("tnngen_node_heartbeats_refused_total");
     while !stop.load(Relaxed) {
+        // Failpoint: a dropped heartbeat (or a crash here) looks to the
+        // registry exactly like a stalled node — the TTL catches it.
+        if crate::util::failpoint::drop_message("node.heartbeat") {
+            sleep_unless_stopped(stop, interval);
+            continue;
+        }
         let epoch = svc.snapshot().epoch;
         let (id, generation) = (ident.id.load(Relaxed), ident.generation.load(Relaxed));
         match client.heartbeat(id, generation, epoch) {
@@ -232,6 +240,11 @@ fn replicate_loop(svc: &TnnService, stop: &AtomicBool, registry: &str, interval:
         sleep_unless_stopped(stop, interval);
         if stop.load(Relaxed) {
             break;
+        }
+        // Failpoint: a dropped poll only delays convergence — the next
+        // round fetches the whole image (pull replication is stateless).
+        if crate::util::failpoint::drop_message("node.replicate") {
+            continue;
         }
         let learner = match client.learner_addr() {
             Ok(Some(addr)) => addr,

@@ -195,7 +195,11 @@ impl RegistryServer {
     /// The node table as of now (what a `Ctrl::List` would return).
     pub fn nodes(&self) -> Vec<NodeInfo> {
         let now_ms = self.start.elapsed().as_millis() as u64;
-        self.state.lock().unwrap().nodes(now_ms)
+        // Poison recovery: `RegistryState::apply` mutates behind `&mut
+        // self` but a panicking connection thread can still poison the
+        // mutex; the directory keeps answering rather than wedging the
+        // whole cluster on one bad connection.
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).nodes(now_ms)
     }
 }
 
@@ -205,10 +209,13 @@ fn serve_conn(
     mut stream: TcpStream,
 ) -> std::io::Result<()> {
     while let Some(payload) = read_frame(&mut stream)? {
+        // Failpoint: fault the registry per processed frame (the crash
+        // harness aborts here to kill the directory mid-cluster).
+        crate::util::failpoint::io("registry.serve")?;
         let reply = match decode_ctrl(&payload) {
             Ok(frame) => {
                 let now_ms = start.elapsed().as_millis() as u64;
-                state.lock().unwrap().apply(&frame, now_ms)
+                state.lock().unwrap_or_else(|p| p.into_inner()).apply(&frame, now_ms)
             }
             Err(e) => Ctrl::Refused { reason: format!("malformed frame: {e:#}") },
         };

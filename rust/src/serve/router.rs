@@ -111,10 +111,17 @@ impl RouterCore {
         self.opts
     }
 
+    /// Lock the core state, recovering from poisoning: a panicking
+    /// client thread must not wedge every other client of this router.
+    /// The table is a cache of registry state and is safe to reuse.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, CoreState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Refresh the node table from the registry if it is stale (or
     /// unconditionally with `force`). Keeps the old table on errors.
     pub fn refresh(&self, force: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         if !force {
             if let Some(t) = st.refreshed_at {
                 if t.elapsed() < self.opts.refresh {
@@ -146,7 +153,7 @@ impl RouterCore {
     /// Next inference target: round-robin over live, non-quarantined
     /// readers; the learner is the last-resort fallback.
     pub fn pick_reader(&self) -> Option<String> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         let now = Instant::now();
         st.quarantined.retain(|_, until| *until > now);
         let live: Vec<&String> =
@@ -161,7 +168,7 @@ impl RouterCore {
 
     /// The learn target (the live learner), if any.
     pub fn learner_addr(&self) -> Option<String> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         let now = Instant::now();
         st.quarantined.retain(|_, until| *until > now);
         let learner = st.learner.clone();
@@ -171,7 +178,7 @@ impl RouterCore {
     /// Record a node failure: quarantine the address and count the
     /// reroute. The next attempt picks a different node.
     pub fn mark_failed(&self, addr: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.quarantined.insert(addr.to_string(), Instant::now() + self.opts.quarantine);
         drop(st);
         self.metrics.counter("tnngen_router_reroutes_total").inc();

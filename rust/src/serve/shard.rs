@@ -23,11 +23,13 @@ use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::config::ColumnConfig;
-use crate::obs::trace;
+use crate::obs::{log, trace};
 use crate::sim::engine::default_kind;
 use crate::sim::{MultiLayerBatchSim, MultiLayerScratch, MultiLayerSim};
+use crate::util::failpoint;
 
 use super::batcher::Batcher;
+use super::checkpoint::{Checkpoint, CheckpointStore};
 use super::metrics::ServeMetrics;
 use super::{InferReply, InferRequest, LearnRequest};
 
@@ -52,19 +54,33 @@ pub struct SharedWeights {
 impl SharedWeights {
     /// Start at epoch 0 with the given initial weights.
     pub fn new(weights: Vec<f32>) -> Self {
-        SharedWeights { current: RwLock::new(Arc::new(Snapshot { epoch: 0, weights })) }
+        Self::new_at(0, weights)
     }
+
+    /// Start at an arbitrary epoch — the checkpoint-resume path: a
+    /// learner recovering from `--state-dir` continues its prior epoch
+    /// lineage instead of restarting the sequence at 0.
+    pub fn new_at(epoch: u64, weights: Vec<f32>) -> Self {
+        SharedWeights { current: RwLock::new(Arc::new(Snapshot { epoch, weights })) }
+    }
+
+    // Lock-poison note: the critical sections below are single `Arc`
+    // swaps (or reads) that cannot leave the cell torn — a panicking
+    // holder either completed its assignment or never started it. The
+    // poison flag therefore carries no integrity information here, and
+    // recovering with `into_inner` keeps shutdown paths and surviving
+    // shards serving instead of cascading the panic.
 
     /// Cheap read-side access: clones the `Arc`, never the weights.
     pub fn load(&self) -> Arc<Snapshot> {
-        self.current.read().unwrap().clone()
+        self.current.read().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// Swap in a new weight snapshot; returns its epoch. Must only be
     /// called from the single learner thread (the epoch sequence assumes
     /// one writer).
     pub fn publish(&self, weights: Vec<f32>) -> u64 {
-        let mut cur = self.current.write().unwrap();
+        let mut cur = self.current.write().unwrap_or_else(|p| p.into_inner());
         let epoch = cur.epoch + 1;
         *cur = Arc::new(Snapshot { epoch, weights });
         epoch
@@ -75,7 +91,7 @@ impl SharedWeights {
     /// verbatim). Readers adopt on epoch CHANGE, not increase, so a
     /// restarted learner's restarted epoch sequence still propagates.
     pub fn publish_versioned(&self, epoch: u64, weights: Vec<f32>) {
-        let mut cur = self.current.write().unwrap();
+        let mut cur = self.current.write().unwrap_or_else(|p| p.into_inner());
         *cur = Arc::new(Snapshot { epoch, weights });
     }
 }
@@ -150,6 +166,9 @@ pub(crate) fn reader_loop(
         }
         {
             let _s = trace::span_cat("serve.infer", "serve");
+            // Failpoint: latency injection / crash-at-site for the shard
+            // hot path (one relaxed load when disarmed; see tests/alloc.rs).
+            failpoint::pause("serve.infer");
             engine.infer_winners_into(&windows, &mut winners);
         }
         {
@@ -168,6 +187,25 @@ pub(crate) fn reader_loop(
     }
 }
 
+/// Persist the just-published learner state if a checkpoint store is
+/// attached. A failed save is loud but non-fatal: the service keeps
+/// learning and serving (durability degrades, correctness doesn't).
+fn persist_checkpoint(
+    store: Option<&CheckpointStore>,
+    epoch: u64,
+    steps: u64,
+    stack: &MultiLayerSim,
+) {
+    let Some(store) = store else { return };
+    let ck = Checkpoint { epoch, steps, weights: stack.flat_weights() };
+    if let Err(e) = store.save(&ck) {
+        log::warn(
+            "serve.checkpoint",
+            format_args!("checkpoint save failed at epoch {epoch} (still serving): {e:#}"),
+        );
+    }
+}
+
 /// Learner worker loop: apply greedy layer-wise online STDP steps in
 /// strict arrival order through one reused [`MultiLayerScratch`] (zero
 /// steady-state allocations beyond the published snapshots), publish a
@@ -175,12 +213,19 @@ pub(crate) fn reader_loop(
 /// shutdown if steps are pending — so after a drained shutdown the
 /// published snapshot is exactly the serial STDP trajectory over every
 /// accepted learn request.
+///
+/// With a [`CheckpointStore`] attached (`--state-dir`), every published
+/// snapshot is also persisted crash-safely, so a restarted learner
+/// resumes at most `snapshot_every` steps behind the published lineage
+/// — `steps0` carries the recovered cumulative step count.
 pub(crate) fn learner_loop(
     mut stack: MultiLayerSim,
     queue: Arc<Batcher<LearnRequest>>,
     weights: Arc<SharedWeights>,
     metrics: Arc<ServeMetrics>,
     snapshot_every: usize,
+    store: Option<CheckpointStore>,
+    steps0: u64,
 ) {
     let every = snapshot_every.max(1);
     // STDP runs on the process-default backend too; the learner trajectory
@@ -198,15 +243,17 @@ pub(crate) fn learner_loop(
             metrics.learned.inc();
             if steps % every == 0 {
                 let _s = trace::span_cat("serve.snapshot_publish", "serve");
-                weights.publish(stack.flat_weights());
+                let epoch = weights.publish(stack.flat_weights());
                 metrics.snapshots_published.inc();
                 dirty = false;
+                persist_checkpoint(store.as_ref(), epoch, steps0 + steps as u64, &stack);
             }
         }
     }
     if dirty {
-        weights.publish(stack.flat_weights());
+        let epoch = weights.publish(stack.flat_weights());
         metrics.snapshots_published.inc();
+        persist_checkpoint(store.as_ref(), epoch, steps0 + steps as u64, &stack);
     }
 }
 
@@ -235,5 +282,28 @@ mod tests {
         let a = sw.load();
         let b = sw.load();
         assert!(Arc::ptr_eq(&a, &b), "load must clone the Arc, not the weights");
+    }
+
+    #[test]
+    fn new_at_continues_a_lineage() {
+        let sw = SharedWeights::new_at(41, vec![1.0]);
+        assert_eq!(sw.load().epoch, 41);
+        assert_eq!(sw.publish(vec![2.0]), 42, "publish continues from the resumed epoch");
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_instead_of_cascading() {
+        let sw = Arc::new(SharedWeights::new(vec![1.0]));
+        let poisoner = Arc::clone(&sw);
+        let r = std::thread::spawn(move || {
+            let _guard = poisoner.current.write().unwrap();
+            panic!("deliberately poisoning the snapshot lock");
+        })
+        .join();
+        assert!(r.is_err(), "poisoner thread must have panicked");
+        // Readers and the learner keep working: the cell can't be torn.
+        assert_eq!(sw.load().weights, vec![1.0]);
+        assert_eq!(sw.publish(vec![2.0]), 1);
+        assert_eq!(sw.load().weights, vec![2.0]);
     }
 }

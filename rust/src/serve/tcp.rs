@@ -64,6 +64,9 @@ pub struct WireReply {
 /// the prefix and desynchronise the stream (weight snapshots for large
 /// designs are the realistic way to get here).
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    // Failpoint: inject an I/O error, delay, or crash on any frame send
+    // (both planes ride this seam — data, heartbeats, snapshots).
+    crate::util::failpoint::io("tcp.write_frame")?;
     if payload.len() > MAX_FRAME {
         return Err(std::io::Error::new(
             ErrorKind::InvalidInput,
@@ -78,6 +81,8 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
 /// Read one length-prefixed frame. `Ok(None)` on clean EOF before a
 /// length prefix (the peer hung up between requests).
 pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
+    // Failpoint: see `write_frame`.
+    crate::util::failpoint::io("tcp.read_frame")?;
     let mut len4 = [0u8; 4];
     match r.read_exact(&mut len4) {
         Ok(()) => {}

@@ -1,0 +1,124 @@
+//! Torn-write-free file replacement: temp file + fsync + rename.
+//!
+//! `std::fs::write` straight onto a destination path can tear: a crash
+//! mid-write leaves a half-written file that *parses as garbage* at the
+//! final path. Every artifact writer in the crate (bench records,
+//! campaign reports, Chrome traces, RTL output, the flow cache, learner
+//! checkpoints) instead goes through [`write_atomic`]: the bytes land in
+//! a uniquely-named temp file in the *same directory*, are fsynced, and
+//! only then renamed over the destination. POSIX `rename(2)` within one
+//! filesystem is atomic, so a reader (or a post-crash restart) sees
+//! either the complete old file or the complete new file — never a mix.
+//! A crash mid-write leaves only a stale `.*.tmp` file beside the
+//! intact destination.
+//!
+//! The `artifact.write` failpoint (`util::failpoint`) is checked in the
+//! tear window — after the temp file is durable, before the rename — so
+//! the crash harness can prove the "temp but never torn" guarantee.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Process-wide uniquifier so concurrent writers (campaign worker
+/// threads, serve loops) never collide on a temp name.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_path_for(path: &Path) -> PathBuf {
+    let file = path
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "out".to_string());
+    let tmp_name = format!(
+        ".{file}.{}.{}.tmp",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Relaxed)
+    );
+    match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => dir.join(tmp_name),
+        _ => PathBuf::from(tmp_name),
+    }
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// `fsync`, then rename over the destination. On any error the temp
+/// file is removed and the destination is left untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = tmp_path_for(path);
+    let write_then_rename = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // Durable before visible: without this, rename can promote a
+        // file whose data blocks are still only in the page cache.
+        f.sync_all()?;
+        drop(f);
+        // The tear window: a crash here (exercised via the
+        // `artifact.write` failpoint) must leave only the temp file.
+        crate::util::failpoint::io("artifact.write")?;
+        std::fs::rename(&tmp, path)
+    })();
+    if write_then_rename.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    write_then_rename
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tnngen-atomicio-{tag}-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let d = tmp_dir("replace");
+        let p = d.join("out.json");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer payload");
+        // No temp droppings after success.
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn error_leaves_destination_intact() {
+        let _g = crate::util::failpoint::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let d = tmp_dir("err");
+        let p = d.join("out.json");
+        write_atomic(&p, b"good").unwrap();
+        // Writing into a directory that does not exist fails...
+        let bad = d.join("missing-subdir").join("out.json");
+        assert!(write_atomic(&bad, b"x").is_err());
+        // ...and an injected failure in the tear window cleans up the
+        // temp file and leaves the old contents visible.
+        crate::util::failpoint::configure_for_current_thread("artifact.write=io_err@1").unwrap();
+        let r = write_atomic(&p, b"evil");
+        crate::util::failpoint::clear_current_thread();
+        assert!(r.is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,503 @@
+//! Deterministic failpoint injection for crash and fault testing.
+//!
+//! A **failpoint** is a named site compiled into an I/O seam (frame
+//! read/write, heartbeat send, cache store, checkpoint save, …) where a
+//! test run can deterministically inject a fault: an I/O error, a fixed
+//! delay, a dropped message, or a hard `abort` that simulates a crash at
+//! exactly that point. Sites are inert by default — the disabled cost is
+//! **one relaxed atomic load**, the same discipline as `obs::trace` —
+//! and are armed for a whole process via `--failpoints SPEC` or the
+//! `TNNGEN_FAILPOINTS` env var (the crash harness sets the env var on
+//! individual cluster children).
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec    := rule (';' rule)*
+//! rule    := site '=' action ('@' trigger)?
+//! action  := 'io_err' | 'delay_ms(' INT ')' | 'drop' | 'abort'
+//! trigger := INT        -- fire exactly once, on the Nth hit (1-based)
+//!          | FLOAT      -- fire per-hit with this probability (has a '.')
+//!                       -- (no trigger: fire on every hit)
+//! ```
+//!
+//! Example: `cache.write=io_err@3;tcp.read_frame=delay_ms(10);node.heartbeat=drop@0.5`
+//!
+//! Probabilistic triggers draw from a per-rule xorshift stream seeded
+//! from [`crate::util::prop`]'s base seed (`TNNGEN_TEST_SEED`) XOR a
+//! hash of the site name, so every fault schedule is replayable.
+//! Site names are validated against the compiled-in [`SITES`] registry:
+//! a typo in a spec is a configuration error, not a silent no-op.
+//!
+//! See `docs/RELIABILITY.md` for the site list and the crash-consistency
+//! harness (`rust/tests/crash.rs`) that exercises every site.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::RwLock;
+
+/// Every failpoint site compiled into the binary. The crash harness
+/// iterates this list and asserts each entry has a crash scenario;
+/// [`configure`] rejects spec rules naming anything else.
+pub const SITES: &[&str] = &[
+    "tcp.read_frame",
+    "tcp.write_frame",
+    "node.heartbeat",
+    "node.replicate",
+    "registry.serve",
+    "serve.infer",
+    "checkpoint.read",
+    "checkpoint.write",
+    "cache.read",
+    "cache.write",
+    "artifact.write",
+];
+
+/// Global arm flag. `false` (the default) short-circuits every site to a
+/// single relaxed load before any rule lookup.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Installed rules. Read-locked per *armed* hit only; reconfiguration is
+/// rare (process start, tests) so writer contention is irrelevant.
+static RULES: RwLock<Vec<Rule>> = RwLock::new(Vec::new());
+
+/// What an armed rule injects when its trigger fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    /// Return an `io::Error` (kind `Other`) from the site.
+    IoErr,
+    /// Sleep this many milliseconds, then proceed normally.
+    DelayMs(u64),
+    /// Silently drop the message / treat the operation as failed.
+    Drop,
+    /// `std::process::abort()` — simulate a crash at exactly this site.
+    Abort,
+}
+
+/// When a rule's action fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Trigger {
+    /// Every hit.
+    Always,
+    /// Exactly once, on the Nth hit (1-based).
+    Nth(u64),
+    /// Independently per hit with probability `p`, seeded via
+    /// `TNNGEN_TEST_SEED ^ fnv(site)`.
+    Prob(f64),
+}
+
+struct Rule {
+    site: &'static str,
+    action: Action,
+    trigger: Trigger,
+    /// `Some(id)`: only fires on that thread ([`configure_for_current_thread`],
+    /// the unit-test form). `None`: process-wide (CLI / env form).
+    thread: Option<std::thread::ThreadId>,
+    /// Total times the site was evaluated against this rule.
+    hits: AtomicU64,
+    /// Total times the action fired.
+    fires: AtomicU64,
+    /// xorshift64* state for `Trigger::Prob`.
+    rng: AtomicU64,
+}
+
+/// FNV-1a over the site name, used only for seed derivation (private
+/// copy so `util` stays independent of `eda::cache`).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger, String> {
+    if s.contains('.') {
+        let p: f64 = s.parse().map_err(|_| format!("bad probability {s:?}"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("probability {p} outside [0, 1]"));
+        }
+        Ok(Trigger::Prob(p))
+    } else {
+        let n: u64 = s.parse().map_err(|_| format!("bad hit count {s:?}"))?;
+        if n == 0 {
+            return Err("hit counts are 1-based; @0 never fires".into());
+        }
+        Ok(Trigger::Nth(n))
+    }
+}
+
+fn parse_action(s: &str) -> Result<Action, String> {
+    if let Some(rest) = s.strip_prefix("delay_ms(") {
+        let ms = rest
+            .strip_suffix(')')
+            .and_then(|v| v.parse::<u64>().ok())
+            .ok_or_else(|| format!("bad delay spec {s:?} (want delay_ms(INT))"))?;
+        return Ok(Action::DelayMs(ms));
+    }
+    match s {
+        "io_err" => Ok(Action::IoErr),
+        "drop" => Ok(Action::Drop),
+        "abort" => Ok(Action::Abort),
+        other => Err(format!(
+            "unknown action {other:?} (want io_err | delay_ms(INT) | drop | abort)"
+        )),
+    }
+}
+
+fn parse_rule(rule: &str) -> Result<Rule, String> {
+    let (site, rhs) = rule
+        .split_once('=')
+        .ok_or_else(|| format!("rule {rule:?} missing '=' (want site=action[@trigger])"))?;
+    let site = site.trim();
+    let site = SITES
+        .iter()
+        .find(|s| **s == site)
+        .copied()
+        .ok_or_else(|| format!("unknown failpoint site {site:?} (see util::failpoint::SITES)"))?;
+    let rhs = rhs.trim();
+    let (action_s, trigger) = match rhs.rsplit_once('@') {
+        Some((a, t)) => (a, parse_trigger(t)?),
+        None => (rhs, Trigger::Always),
+    };
+    let action = parse_action(action_s.trim())?;
+    // A fixed non-zero stream per (base seed, site): replaying with the
+    // same TNNGEN_TEST_SEED reproduces every probabilistic fire.
+    let seed = (crate::util::prop::base_seed() ^ fnv1a64(site.as_bytes())) | 1;
+    Ok(Rule {
+        site,
+        action,
+        trigger,
+        thread: None,
+        hits: AtomicU64::new(0),
+        fires: AtomicU64::new(0),
+        rng: AtomicU64::new(seed),
+    })
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Rule>, String> {
+    let mut rules = Vec::new();
+    for rule in spec.split(';') {
+        let rule = rule.trim();
+        if rule.is_empty() {
+            continue;
+        }
+        rules.push(parse_rule(rule)?);
+    }
+    Ok(rules)
+}
+
+/// Install the failpoint rules described by `spec` (see the module docs
+/// for the grammar), replacing any previous configuration, and arm the
+/// registry process-wide. An empty/blank spec clears and disarms.
+/// Unknown sites or malformed rules are rejected wholesale — nothing is
+/// installed.
+pub fn configure(spec: &str) -> Result<(), String> {
+    let rules = parse_spec(spec)?;
+    let armed = !rules.is_empty();
+    *RULES.write().unwrap_or_else(|p| p.into_inner()) = rules;
+    ENABLED.store(armed, Relaxed);
+    Ok(())
+}
+
+/// Like [`configure`], but the installed rules fire only on the calling
+/// thread and are *appended* to whatever is already installed. This is
+/// the form in-crate unit tests use: libtest runs tests on parallel
+/// threads, and a thread-scoped rule can never make an unrelated test
+/// observe an injected fault. Pair with [`clear_current_thread`].
+pub fn configure_for_current_thread(spec: &str) -> Result<(), String> {
+    let mut rules = parse_spec(spec)?;
+    let id = std::thread::current().id();
+    for r in &mut rules {
+        r.thread = Some(id);
+    }
+    let mut installed = RULES.write().unwrap_or_else(|p| p.into_inner());
+    installed.append(&mut rules);
+    ENABLED.store(!installed.is_empty(), Relaxed);
+    Ok(())
+}
+
+/// Remove only the rules scoped to the calling thread; disarms if no
+/// rules remain.
+pub fn clear_current_thread() {
+    let id = std::thread::current().id();
+    let mut installed = RULES.write().unwrap_or_else(|p| p.into_inner());
+    installed.retain(|r| r.thread != Some(id));
+    ENABLED.store(!installed.is_empty(), Relaxed);
+}
+
+/// Arm from the `TNNGEN_FAILPOINTS` env var if it is set (no-op
+/// otherwise). This is how cluster child processes receive injection.
+pub fn configure_from_env() -> Result<(), String> {
+    match std::env::var("TNNGEN_FAILPOINTS") {
+        Ok(spec) => configure(&spec),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Remove all rules and disarm.
+pub fn clear() {
+    ENABLED.store(false, Relaxed);
+    RULES.write().unwrap_or_else(|p| p.into_inner()).clear();
+}
+
+/// Whether any failpoint rules are armed. One relaxed atomic load —
+/// this is the entire disabled cost of a compiled-in site (pinned by
+/// the `failpoint_overhead` bench pair and `tests/alloc.rs`).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Re-arm or disarm without touching the installed rules (bench probes
+/// toggle this around a hot loop, mirroring `obs::trace::set_enabled`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+/// The compiled-in site registry (for harnesses that must cover it).
+pub fn sites() -> &'static [&'static str] {
+    SITES
+}
+
+/// Times the rule for `site` has fired so far (0 when unconfigured);
+/// lets tests assert a schedule actually triggered.
+pub fn fire_count(site: &str) -> u64 {
+    let rules = RULES.read().unwrap_or_else(|p| p.into_inner());
+    rules
+        .iter()
+        .filter(|r| r.site == site)
+        .map(|r| r.fires.load(Relaxed))
+        .sum()
+}
+
+/// xorshift64* step via `fetch_update`; uniform in [0, 1).
+fn next_unit(state: &AtomicU64) -> f64 {
+    let mut x = 0u64;
+    let _ = state.fetch_update(Relaxed, Relaxed, |s| {
+        let mut v = s;
+        v ^= v << 13;
+        v ^= v >> 7;
+        v ^= v << 17;
+        x = v;
+        Some(v)
+    });
+    (x.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Evaluate `site` against the armed rules; `Some(action)` if one fired.
+#[inline]
+fn eval(site: &str) -> Option<Action> {
+    if !enabled() {
+        return None;
+    }
+    eval_slow(site)
+}
+
+#[cold]
+fn eval_slow(site: &str) -> Option<Action> {
+    let rules = RULES.read().unwrap_or_else(|p| p.into_inner());
+    let here = std::thread::current().id();
+    let rule = rules
+        .iter()
+        .find(|r| r.site == site && r.thread.is_none_or(|t| t == here))?;
+    let hit = rule.hits.fetch_add(1, Relaxed) + 1;
+    let fire = match rule.trigger {
+        Trigger::Always => true,
+        Trigger::Nth(n) => hit == n,
+        Trigger::Prob(p) => next_unit(&rule.rng) < p,
+    };
+    if !fire {
+        return None;
+    }
+    rule.fires.fetch_add(1, Relaxed);
+    if rule.action == Action::Abort {
+        // The whole point is to die here, pre-destructor, like a crash;
+        // log first so harnesses can see which site killed the process.
+        crate::obs::log::warn(
+            "failpoint",
+            format_args!("aborting at failpoint {site} (hit {hit})"),
+        );
+        std::process::abort();
+    }
+    crate::obs::log::debug(
+        "failpoint",
+        format_args!("failpoint {site} fired {:?} (hit {hit})", rule.action),
+    );
+    Some(rule.action)
+}
+
+/// Failpoint check for a fallible I/O operation. Returns the injected
+/// error for `io_err`/`drop`, sleeps through `delay_ms`, aborts for
+/// `abort`, and is a no-op (one atomic load) when disarmed.
+#[inline]
+pub fn io(site: &str) -> std::io::Result<()> {
+    match eval(site) {
+        None => Ok(()),
+        Some(Action::DelayMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(Action::IoErr) | Some(Action::Drop) => Err(std::io::Error::other(format!(
+            "injected failpoint error at {site}"
+        ))),
+        Some(Action::Abort) => unreachable!("abort terminates the process"),
+    }
+}
+
+/// Failpoint check for a droppable message (heartbeat, replication
+/// poll). `true` means "drop it"; `io_err` counts as a drop here.
+#[inline]
+pub fn drop_message(site: &str) -> bool {
+    match eval(site) {
+        None => false,
+        Some(Action::DelayMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            false
+        }
+        Some(Action::Drop) | Some(Action::IoErr) => true,
+        Some(Action::Abort) => unreachable!("abort terminates the process"),
+    }
+}
+
+/// Failpoint check for an infallible spot in a hot path (e.g. just
+/// before a batch infer). Only `delay_ms` and `abort` are meaningful
+/// here; error-like actions are ignored.
+#[inline]
+pub fn pause(site: &str) {
+    if let Some(Action::DelayMs(ms)) = eval(site) {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// Serializes unit tests that mutate the global registry — libtest runs
+/// tests on parallel threads, and `configure`/`clear` are process-wide.
+/// Shared by every in-crate test module that arms failpoints.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_by_default_and_free() {
+        let _g = locked();
+        assert!(io("cache.write").is_ok());
+        assert!(!drop_message("node.heartbeat"));
+        pause("serve.infer");
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let _g = locked();
+        configure_for_current_thread("cache.write=io_err@3").unwrap();
+        assert!(io("cache.write").is_ok());
+        assert!(io("cache.write").is_ok());
+        assert!(io("cache.write").is_err());
+        assert!(io("cache.write").is_ok());
+        assert_eq!(fire_count("cache.write"), 1);
+        clear_current_thread();
+    }
+
+    #[test]
+    fn always_fires_every_hit_and_other_sites_unaffected() {
+        let _g = locked();
+        configure_for_current_thread("tcp.read_frame=io_err").unwrap();
+        assert!(io("tcp.read_frame").is_err());
+        assert!(io("tcp.read_frame").is_err());
+        assert!(io("tcp.write_frame").is_ok());
+        clear_current_thread();
+    }
+
+    #[test]
+    fn thread_scoped_rules_do_not_fire_elsewhere() {
+        let _g = locked();
+        configure_for_current_thread("tcp.read_frame=io_err").unwrap();
+        let other = std::thread::spawn(|| io("tcp.read_frame").is_ok());
+        assert!(other.join().unwrap(), "another thread must not see the fault");
+        assert!(io("tcp.read_frame").is_err(), "this thread must");
+        clear_current_thread();
+    }
+
+    #[test]
+    fn probabilistic_trigger_is_seeded_and_reproducible() {
+        let _g = locked();
+        let run = || -> Vec<bool> {
+            configure_for_current_thread("node.heartbeat=drop@0.5").unwrap();
+            let fires: Vec<bool> = (0..64).map(|_| drop_message("node.heartbeat")).collect();
+            clear_current_thread();
+            fires
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        let n = a.iter().filter(|f| **f).count();
+        assert!((8..=56).contains(&n), "p=0.5 fired {n}/64 times");
+    }
+
+    #[test]
+    fn zero_probability_never_fires() {
+        let _g = locked();
+        configure_for_current_thread("node.heartbeat=drop@0.0").unwrap();
+        assert!((0..256).all(|_| !drop_message("node.heartbeat")));
+        clear_current_thread();
+    }
+
+    #[test]
+    fn delay_passes_through() {
+        let _g = locked();
+        configure_for_current_thread("tcp.write_frame=delay_ms(1)").unwrap();
+        let t = std::time::Instant::now();
+        assert!(io("tcp.write_frame").is_ok());
+        assert!(t.elapsed() >= std::time::Duration::from_millis(1));
+        clear_current_thread();
+    }
+
+    #[test]
+    fn multi_rule_spec_arms_and_clears() {
+        let _g = locked();
+        configure_for_current_thread(
+            "cache.write=io_err@3; tcp.read_frame=delay_ms(10) ;node.heartbeat=drop@0.5",
+        )
+        .unwrap();
+        assert!(enabled());
+        clear_current_thread();
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = locked();
+        assert!(configure("no.such.site=io_err").is_err());
+        assert!(configure("cache.write=explode").is_err());
+        assert!(configure("cache.write=io_err@0").is_err());
+        assert!(configure("cache.write=io_err@1.5").is_err());
+        assert!(configure("cache.write").is_err());
+        assert!(configure("cache.write=delay_ms(x)").is_err());
+        assert!(!enabled(), "rejected specs must not arm anything");
+    }
+
+    #[test]
+    fn empty_spec_is_a_clear() {
+        let _g = locked();
+        configure("").unwrap();
+        assert!(!enabled());
+        assert!(io("cache.write").is_ok());
+    }
+
+    #[test]
+    fn every_site_is_registered_exactly_once() {
+        let mut sorted: Vec<_> = SITES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), SITES.len(), "duplicate site names");
+        for s in SITES {
+            assert!(s.contains('.'), "site {s:?} should be component.operation");
+        }
+    }
+}

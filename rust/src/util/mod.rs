@@ -1,7 +1,11 @@
-//! Utility substrate: PRNG, statistics, linear algebra, timers, and the
+//! Utility substrate: PRNG, statistics, linear algebra, timers, the
 //! in-repo property-testing helper (offline substitutes for the `rand`,
-//! `proptest` and `criterion` crates — see DESIGN.md §3).
+//! `proptest` and `criterion` crates — see DESIGN.md §3), atomic file
+//! replacement ([`atomic_io`]) and deterministic failpoint injection
+//! ([`failpoint`], see docs/RELIABILITY.md).
 
+pub mod atomic_io;
+pub mod failpoint;
 pub mod linalg;
 pub mod prop;
 pub mod rng;

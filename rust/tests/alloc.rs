@@ -15,7 +15,9 @@
 //! The same binary also pins the observability contract: with span
 //! tracing compiled in but DISABLED (the default), an instrumented hot
 //! path costs one relaxed atomic load per span — no ring registration,
-//! no event, ZERO allocations.
+//! no event, ZERO allocations. Failpoints carry the identical contract:
+//! a compiled-in but disarmed site is one relaxed atomic load, nothing
+//! more.
 //!
 //! This file is its own test binary with a single #[test] so no sibling
 //! test pollutes the allocation counter (or flips the global trace flag).
@@ -165,5 +167,29 @@ fn steady_state_batched_inference_does_not_allocate() {
         }
         let delta = ALLOC_CALLS.load(Relaxed) - before;
         assert_eq!(delta, 0, "disabled tracing must keep the hot path allocation-free");
+    }
+
+    // Failpoint pin: the same contract for fault injection — sites are
+    // compiled into the serve/I-O paths, and a DISABLED site must stay
+    // at one relaxed atomic load: no rule scan, no RNG draw, and no
+    // allocation on a hot path that evaluates one.
+    assert!(
+        !tnngen::util::failpoint::enabled(),
+        "failpoints must be disarmed by default in the alloc test binary"
+    );
+    {
+        let cfg = ColumnConfig::new("AllocFp", "synthetic", 24, 3);
+        let xs = windows(24, 40, 7);
+        let batch = BatchSim::new(cfg, 7).with_workers(1);
+        let mut winners = Vec::new();
+        batch.infer_winners_into(&xs, &mut winners);
+        batch.infer_winners_into(&xs, &mut winners);
+        let before = ALLOC_CALLS.load(Relaxed);
+        for _ in &xs {
+            tnngen::util::failpoint::pause("serve.infer");
+        }
+        batch.infer_winners_into(&xs, &mut winners);
+        let delta = ALLOC_CALLS.load(Relaxed) - before;
+        assert_eq!(delta, 0, "disabled failpoints must keep the hot path allocation-free");
     }
 }

@@ -95,9 +95,9 @@ fn registry_is_deterministic_and_covers_the_paper_matrix() {
         b.iter().map(|e| e.units_per_iter).collect::<Vec<_>>()
     );
     // 7 designs x (3 full_column engines + 2 full_stack engines +
-    // clustering) + 7 micro + 4 response + 2 obs_overhead + gate_level
-    // + 2 EDA stages + 2 campaigns.
-    assert_eq!(names.len(), 7 * 4 + 7 * 2 + 7 + 4 + 2 + 1 + 2 + 2);
+    // clustering) + 7 micro + 4 response + 2 obs_overhead +
+    // 2 failpoint_overhead + gate_level + 2 EDA stages + 2 campaigns.
+    assert_eq!(names.len(), 7 * 4 + 7 * 2 + 7 + 4 + 2 + 2 + 1 + 2 + 2);
     for cfg in tnngen::config::presets::paper_configs() {
         let tag = cfg.tag();
         for engine in ["cyclesim", "batchsim", "serve"] {
@@ -113,6 +113,8 @@ fn registry_is_deterministic_and_covers_the_paper_matrix() {
     assert!(names.contains(&"flow_campaign/paper-fast/campaign".to_string()));
     assert!(names.contains(&"flow_campaign/paper-fast-warm/campaign".to_string()));
     assert!(names.contains(&"gate_level/12x2/gatesim".to_string()));
+    assert!(names.contains(&"failpoint_overhead/96x2/off".to_string()));
+    assert!(names.contains(&"failpoint_overhead/96x2/armed".to_string()));
     assert!(names.contains(&"synthesis/65x2/eda".to_string()));
     assert!(names.contains(&"placement/65x2/eda".to_string()));
 }
@@ -282,6 +284,46 @@ fn check_with_missing_or_corrupt_baseline_is_an_operational_error() {
         cur.to_str().unwrap(),
     ]);
     assert_eq!(out.status.code(), Some(1), "corrupt baseline must exit 1: {out:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_or_garbage_baseline_exits_1_without_panicking() {
+    use tnngen::util::{prop, Rng};
+    let dir = scratch("torn");
+    let cur = dir.join("cur.json");
+    write_artifact(&cur, &artifact(vec![entry("a/1x1/e", 0.010)]));
+    // A valid artifact truncated at seeded offsets (torn mid-write), and
+    // seeded binary garbage: both are operational errors (exit 1), never
+    // a panic. Reproduce any failure with the printed TNNGEN_TEST_SEED.
+    let seed = prop::base_seed();
+    let mut rng = Rng::new(seed ^ 0x7061_7274);
+    let full = bench_json(&artifact(vec![entry("a/1x1/e", 0.010)])).pretty();
+    for case in 0..4 {
+        let bad = dir.join(format!("bad_{case}.json"));
+        if case < 2 {
+            let cut = 1 + (rng.f32() * (full.len() - 2) as f32) as usize;
+            std::fs::write(&bad, &full.as_bytes()[..cut]).unwrap();
+        } else {
+            let garbage: Vec<u8> = (0..256).map(|_| (rng.f32() * 255.0) as u8).collect();
+            std::fs::write(&bad, garbage).unwrap();
+        }
+        let out = tnngen(&[
+            "bench",
+            "check",
+            "--against",
+            bad.to_str().unwrap(),
+            "--current",
+            cur.to_str().unwrap(),
+        ]);
+        assert_eq!(
+            out.status.code(),
+            Some(1),
+            "corrupt baseline case {case} (seed {seed}) must exit 1: {out:?}"
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(!stderr.contains("panicked"), "case {case} (seed {seed}) panicked:\n{stderr}");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 

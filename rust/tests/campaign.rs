@@ -116,6 +116,45 @@ fn corrupt_cache_entry_is_treated_as_a_miss() {
 }
 
 #[test]
+fn truncated_or_garbage_cache_entries_self_heal_on_store() {
+    use tnngen::util::{prop, Rng};
+    let dir = tempdir("tnngen_campaign_torn");
+    let cache = FlowCache::new(&dir).unwrap();
+    let cfg = ColumnConfig::new("Torn", "synthetic", 8, 2);
+    let lib = tnn7();
+    let opts = FlowOpts::default();
+    let good = run_flow(&cfg, &lib, &opts).unwrap();
+    let key = FlowCache::key(&cfg, &lib, &opts);
+    cache.store(key, &good).unwrap();
+    let full = std::fs::read(cache.path_of(key)).unwrap();
+
+    // Seeded torn/garbage entries (reproduce with the printed
+    // TNNGEN_TEST_SEED): every one must read as a miss — never a panic,
+    // never a half-decoded report — and a clean store must heal it.
+    let seed = prop::base_seed();
+    let mut rng = Rng::new(seed ^ 0x636163);
+    for case in 0..4 {
+        if case < 2 {
+            let cut = 1 + (rng.f32() * (full.len() - 2) as f32) as usize;
+            std::fs::write(cache.path_of(key), &full[..cut]).unwrap();
+        } else {
+            let garbage: Vec<u8> = (0..512).map(|_| (rng.f32() * 255.0) as u8).collect();
+            std::fs::write(cache.path_of(key), garbage).unwrap();
+        }
+        assert!(
+            cache.lookup(key).is_none(),
+            "case {case} (seed {seed}): corrupt entry must miss"
+        );
+        cache.store(key, &good).unwrap();
+        let healed = cache.lookup(key).unwrap_or_else(|| {
+            panic!("case {case} (seed {seed}): store must heal the entry")
+        });
+        assert_eq!(flow_report_json(&good).pretty(), flow_report_json(&healed).pretty());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn forecaster_errors_exact_on_known_inputs() {
     // Hand-build a training set on the paper's published TNN7 line, then
     // craft actuals at exact binary ratios of the prediction so the
